@@ -1,0 +1,60 @@
+//! Mixed-precision accelerator walkthrough: one GRAU instance per layer
+//! of a 1/2/4/8-bit mixed-precision MLP, showing how the SAME hardware
+//! reconfigures across precisions — including the 1/2-bit MT-compatible
+//! bypass (paper §III-2) — and what each instance costs.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mixed_precision_accelerator
+//! ```
+
+use std::path::Path;
+
+use grau::coordinator::fitting::{fit_model_with_ranges, SweepOptions};
+use grau::coordinator::trainer::{dataset_for, train_config};
+use grau::fit::ApproxKind;
+use grau::hw::pipeline::PipelinedGrau;
+use grau::qnn::{ActMode, Engine};
+use grau::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    let config = "t1_mlp_mixed"; // layer precisions 1 / 2 / 4 / 8
+    let rt = Runtime::cpu()?;
+    let steps: usize = std::env::var("GRAU_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(400);
+    let tr = train_config(&rt, artifacts, config, steps, true, true)?;
+    let splits = dataset_for(config);
+
+    let exact = Engine::new(tr.graph.clone(), &tr.bundle, ActMode::Exact)?;
+    let opts = SweepOptions { segments: 6, n_shifts: 8, ..Default::default() };
+    let ranges = exact.calibrate(&splits.train, opts.calib_samples);
+    let fits = fit_model_with_ranges(&exact, &ranges, opts);
+
+    println!("mixed-precision activation plan ({config}):");
+    println!("{:<8} {:>6} {:>10} {:>12} {:>14}", "layer", "bits", "channels", "pipe depth", "mode");
+    for (site, regs_per_ch) in fits.apot.iter().enumerate() {
+        let regs = &regs_per_ch[0];
+        let hw = PipelinedGrau::new(regs.clone(), ApproxKind::Apot);
+        println!(
+            "{:<8} {:>6} {:>10} {:>12} {:>14}",
+            format!("fc{site}"),
+            regs.n_bits,
+            regs_per_ch.len(),
+            hw.depth(),
+            if regs.n_bits <= 2 && regs.mask[..regs.n_segments].iter().all(|&m| m == 0) {
+                "MT bypass"
+            } else {
+                "shift-add"
+            }
+        );
+    }
+
+    // accuracy stays close under the approximated path
+    let orig = exact.evaluate(&splits.test, opts.eval_samples, opts.threads);
+    let apot = Engine::new(tr.graph.clone(), &tr.bundle, fits.act_mode(ApproxKind::Apot))?
+        .evaluate(&splits.test, opts.eval_samples, opts.threads);
+    println!(
+        "\naccuracy: exact {:.2}% -> APoT-PWLF {:.2}% ({:+.2} pts)",
+        100.0 * orig.top1, 100.0 * apot.top1, 100.0 * (apot.top1 - orig.top1)
+    );
+    Ok(())
+}

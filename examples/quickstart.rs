@@ -1,0 +1,54 @@
+//! Quickstart: fit one folded activation, inspect the GRAU register
+//! file, run the cycle-accurate hardware, and price the instance.
+//!
+//! ```bash
+//! cargo run --example quickstart
+//! ```
+
+use grau::act::{Activation, FoldedActivation};
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::hw::cost::{estimate, UnitKind};
+use grau::hw::pipeline::PipelinedGrau;
+
+fn main() {
+    // 1. The black box GRAU replaces: BatchNorm + SiLU + re-quantization
+    //    folded into one scalar map over integer MAC outputs.
+    let folded = FoldedActivation::new(0.004, 0.05, Activation::Silu, 1.0 / 120.0, 8);
+    println!("folded SiLU: F(0) = {}, F(1000) = {}", folded.eval(0), folded.eval(1000));
+
+    // 2. Fit it: greedy integer-aware PWLF (paper Algorithm 1), then
+    //    round slopes to APoT within the best 8-exponent window.
+    let fit = fit_folded(&folded, -1000, 1000, FitOptions { segments: 6, n_shifts: 8, ..Default::default() });
+    println!(
+        "fit rmse: pwlf {:.3}  pot {:.3}  apot {:.3} (LSB), apot window {}",
+        fit.rmse_pwlf, fit.rmse_pot, fit.rmse_apot, fit.apot.regs.exponent_range()
+    );
+    let regs = fit.apot.regs.clone();
+    for j in 0..regs.n_segments {
+        println!(
+            "  segment {j}: x0 {:>6} y0 {:>4} slope {:+.5} mask {:#010b}",
+            regs.x0[j], regs.y0[j], regs.slope(j), regs.mask[j]
+        );
+    }
+
+    // 3. Replay through the cycle-accurate pipelined GRAU and check it
+    //    matches the functional register-file model bit-for-bit.
+    let mut hw = PipelinedGrau::new(regs.clone(), ApproxKind::Apot);
+    let inputs: Vec<i32> = (-1500..1500).step_by(3).collect();
+    let (outputs, stats) = hw.process_stream(&inputs);
+    assert!(inputs.iter().zip(&outputs).all(|(&x, &y)| y == regs.eval(x)));
+    println!(
+        "pipelined GRAU: depth {} cycles, {} elements in {} cycles (1/cycle steady-state)",
+        hw.depth(), stats.outputs, stats.cycles
+    );
+
+    // 4. Price it against the Multi-Threshold baseline (Table VI).
+    let grau_cost = estimate(UnitKind::GrauPipelined { kind: ApproxKind::Apot, segments: 6, exponents: 8 });
+    let mt_cost = estimate(UnitKind::MtPipelined { n_bits: 8 });
+    println!(
+        "cost: GRAU {} LUTs vs MT {} LUTs -> {:.1}% reduction (paper: >90%)",
+        grau_cost.lut, mt_cost.lut,
+        100.0 * (1.0 - grau_cost.lut as f64 / mt_cost.lut as f64)
+    );
+}

@@ -1,0 +1,301 @@
+"""AOT entry point: lower every model/kernel to HLO *text* artifacts.
+
+Run ONCE at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and executes via PJRT.  HLO
+text — NOT ``.serialize()`` — is the interchange format: jax>=0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts per model config ``name``:
+  artifacts/{name}.init.hlo.txt      ()                     -> leaves
+  artifacts/{name}.train.hlo.txt     (leaves..., x, y)      -> (leaves..., loss)
+  artifacts/{name}.predict.hlo.txt   (leaves..., x)         -> logits
+  artifacts/{name}.export.hlo.txt    (leaves...)            -> export arrays
+  artifacts/{name}.manifest.json     graph IR + leaf/export layout
+
+``leaves`` is the flattening of {"opt", "params", "state"} (sorted dict
+order — deterministic); the manifest records every leaf's path/shape so
+the Rust side can sanity-check.
+
+Plus standalone service kernels:
+  artifacts/grau_act_service.hlo.txt  the L1 GRAU kernel over an 8192-wide
+                                      stream (the L3 activation service's
+                                      PJRT offload path)
+  artifacts/mt_act_service.hlo.txt    the MT baseline kernel (255 thresholds)
+  artifacts/qpredict_sfc.hlo.txt      full integer MLP forward composed
+                                      from quant_matmul + grau_act
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .specs import MAX_SEGMENTS
+
+SEED = 42
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+SERVICE_N = 8192
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(arr) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+# --------------------------------------------------------------------------
+# Config registry — every model the evaluation section needs.
+# --------------------------------------------------------------------------
+
+
+def registry() -> dict[str, dict]:
+    cfgs: dict[str, dict] = {}
+
+    def add(name, spec, lr, input_shape, n_classes):
+        cfgs[name] = {
+            "spec": spec,
+            "lr": lr,
+            "input_shape": list(input_shape),
+            "n_classes": n_classes,
+        }
+
+    # ---- Table I: unified vs mixed precision (MNIST-like) -----------------
+    # MLP mixes 1/2/4/8 with precision increasing with depth; the CNN
+    # mixes 2/4/4/8 (low-bit early features, high-precision head) — in
+    # our width-scaled CNV, 1-bit blocks and 1-bit heads fail to train
+    # within the step budget, so the CNN's mixed schedule bottoms out at
+    # 2 bits (still exercising the 1/2/4/8 GRAU bypass paths).
+    for tag, mlp_bits, cnn_bits in [
+        ("full1", [1, 1, 1, 1], [1, 1, 1, 1]),
+        ("mixed", [1, 2, 4, 8], [2, 4, 4, 8]),
+        ("full8", [8, 8, 8, 8], [8, 8, 8, 8]),
+    ]:
+        add(f"t1_mlp_{tag}", M.mlp_spec(f"t1_mlp_{tag}", mlp_bits, in_dim=768),
+            2e-3, (768,), 10)
+        add(f"t1_cnn_{tag}",
+            M.cnv_spec(f"t1_cnn_{tag}", cnn_bits, chans=(8, 16, 32)),
+            1e-3, (32, 32, 3), 10)
+
+    # ---- Table III: pwlf-era baseline (SFC + CNV, three activations) ------
+    for act in ("relu", "sigmoid", "silu"):
+        add(f"t3_sfc_{act}",
+            M.mlp_spec(f"t3_sfc_{act}", [8] * 4, act=act, in_dim=768),
+            2e-3, (768,), 10)
+        add(f"t3_cnv_{act}",
+            M.cnv_spec(f"t3_cnv_{act}", [8] * 4, act=act, chans=(16, 32, 64)),
+            1e-3, (32, 32, 3), 10)
+
+    # ---- Table IV: VGG16 on CIFAR-like ------------------------------------
+    for act in ("relu", "sigmoid", "silu"):
+        for tag, sb in [("q4", [4] * 5), ("q8", [8] * 5),
+                        ("mixed", [8, 4, 2, 4, 8])]:
+            add(f"t4_vgg_{act}_{tag}",
+                M.vgg16s_spec(f"t4_vgg_{act}_{tag}", sb, act),
+                1e-3, (32, 32, 3), 10)
+
+    # ---- Table V: ResNet18 on ImageNet-like (100 classes) -----------------
+    for act_tag, silu4 in [("relu", False), ("relusilu", True)]:
+        for tag, sb in [("q8", [8] * 5), ("mixed", [8, 4, 2, 4, 8])]:
+            add(f"t5_rn_{act_tag}_{tag}",
+                M.resnet18s_spec(f"t5_rn_{act_tag}_{tag}", sb, silu4,
+                                 n_classes=100),
+                1e-3, (32, 32, 3), 100)
+    return cfgs
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+
+
+def lower_config(name: str, cfg: dict, outdir: str) -> None:
+    spec: M.ModelSpec = cfg["spec"]
+    lr = cfg["lr"]
+    key = jax.random.PRNGKey(SEED)
+    params, state = M.init_model(spec, key)
+    opt = M.adam_init(params)
+    bundle = {"opt": opt, "params": params, "state": state}
+    leaves, treedef = jax.tree_util.tree_flatten(bundle)
+    paths = [
+        jax.tree_util.keystr(kp)
+        for kp, _ in jax.tree_util.tree_flatten_with_path(bundle)[0]
+    ]
+    n_leaves = len(leaves)
+    # predict/export take only (params, state) — lowering with the full
+    # bundle would DCE the unused optimizer leaves out of the HLO
+    # signature, breaking the runtime's positional argument passing.
+    # NOTE: sorted dict order guarantees the opt leaves are the first
+    # n_opt entries of the full flattening ("opt" < "params" < "state").
+    ps_bundle = {"params": params, "state": state}
+    ps_leaves, ps_treedef = jax.tree_util.tree_flatten(ps_bundle)
+    n_ps = len(ps_leaves)
+    n_opt = n_leaves - n_ps
+    assert [id(l) for l in leaves[n_opt:]] == [id(l) for l in ps_leaves]
+
+    xs = jax.ShapeDtypeStruct((TRAIN_BATCH, *cfg["input_shape"]), jnp.float32)
+    ys = jax.ShapeDtypeStruct((TRAIN_BATCH,), jnp.int32)
+    xe = jax.ShapeDtypeStruct((EVAL_BATCH, *cfg["input_shape"]), jnp.float32)
+    leaf_specs = [_spec_of(l) for l in leaves]
+    ps_specs = [_spec_of(l) for l in ps_leaves]
+
+    step = M.make_train_step(spec, lr)
+    predict = M.make_predict(spec)
+    export = M.make_export(spec)
+
+    def init_flat():
+        p, s = M.init_model(spec, jax.random.PRNGKey(SEED))
+        o = M.adam_init(p)
+        lv, _ = jax.tree_util.tree_flatten({"opt": o, "params": p, "state": s})
+        return tuple(lv)
+
+    def train_flat(*args):
+        lv, x, y = args[:n_leaves], args[-2], args[-1]
+        b = jax.tree_util.tree_unflatten(treedef, lv)
+        np_, ns, no, loss = step(b["params"], b["state"], b["opt"], x, y)
+        out, _ = jax.tree_util.tree_flatten(
+            {"opt": no, "params": np_, "state": ns})
+        return tuple(out) + (loss,)
+
+    def predict_flat(*args):
+        lv, x = args[:n_ps], args[-1]
+        b = jax.tree_util.tree_unflatten(ps_treedef, lv)
+        return predict(b["params"], b["state"], x)
+
+    def export_flat(*args):
+        b = jax.tree_util.tree_unflatten(ps_treedef, args)
+        d = export(b["params"], b["state"])
+        return tuple(d[k] for k in sorted(d))
+
+    files = {}
+    for fn_name, fn, in_specs in [
+        ("init", init_flat, []),
+        ("train", train_flat, leaf_specs + [xs, ys]),
+        ("predict", predict_flat, ps_specs + [xe]),
+        ("export", export_flat, ps_specs),
+    ]:
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{fn_name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        files[fn_name] = fname
+
+    # export key layout (sorted order == output tuple order)
+    d = jax.eval_shape(export_flat, *ps_specs)
+    exp_shapes = [list(t.shape) for t in d]
+    p0, s0 = M.init_model(spec, jax.random.PRNGKey(SEED))
+    exp_dict = M.export_layers(spec, p0, s0)
+    exp_keys = sorted(exp_dict)
+
+    manifest = {
+        "name": name,
+        "model": spec.to_json(),
+        "lr": lr,
+        "seed": SEED,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "input_shape": cfg["input_shape"],
+        "n_classes": cfg["n_classes"],
+        "n_leaves": n_leaves,
+        "n_opt_leaves": n_opt,
+        "leaves": [
+            {"path": p, "shape": list(l.shape), "dtype": str(l.dtype)}
+            for p, l in zip(paths, leaves)
+        ],
+        "artifacts": files,
+        "export_keys": [
+            {"key": k, "shape": sh} for k, sh in zip(exp_keys, exp_shapes)
+        ],
+    }
+    with open(os.path.join(outdir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] {name}: {n_leaves} leaves, {len(exp_keys)} export arrays")
+
+
+def lower_service_kernels(outdir: str) -> None:
+    from .kernels import grau_act, mt_act, quant_matmul
+
+    i32 = jnp.int32
+    s = lambda *sh: jax.ShapeDtypeStruct(sh, i32)  # noqa: E731
+
+    # GRAU service kernel: 8-bit, 16-shift window starting at 0.
+    def grau_service(x, th, x0, y0, sg, mk):
+        return grau_act(x, th, x0, y0, sg, mk, n_bits=8, shift_lo=0,
+                        n_shifts=16)
+
+    lowered = jax.jit(grau_service).lower(
+        s(SERVICE_N), s(MAX_SEGMENTS - 1), s(MAX_SEGMENTS), s(MAX_SEGMENTS),
+        s(MAX_SEGMENTS), s(MAX_SEGMENTS))
+    with open(os.path.join(outdir, "grau_act_service.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    def mt_service(x, th):
+        return mt_act(x, th, n_bits=8)
+
+    lowered = jax.jit(mt_service).lower(s(SERVICE_N), s(255))
+    with open(os.path.join(outdir, "mt_act_service.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    # Integer SFC forward composed from the L1 kernels (768-256-256-256-10,
+    # head padded to 32 columns for the matmul tiling; consumer slices 10).
+    spec = M.mlp_spec("qp", [8] * 4, in_dim=768)
+
+    def qpredict(x_int, w0, w1, w2, w3, regs_flat, head_a, head_b):
+        regs = [
+            tuple(regs_flat[i * 5 + j] for j in range(5)) for i in range(3)
+        ]
+        qp = M.make_qpredict_mlp(spec)
+        return qp(x_int, [w0, w1, w2, w3], regs, head_a, head_b)
+
+    reg_specs = []
+    for _ in range(3):
+        reg_specs += [s(MAX_SEGMENTS - 1), s(MAX_SEGMENTS), s(MAX_SEGMENTS),
+                      s(MAX_SEGMENTS), s(MAX_SEGMENTS)]
+    lowered = jax.jit(qpredict).lower(
+        s(64, 768), s(768, 256), s(256, 256), s(256, 256), s(256, 32),
+        reg_specs,
+        jax.ShapeDtypeStruct((32,), jnp.float32),
+        jax.ShapeDtypeStruct((32,), jnp.float32))
+    with open(os.path.join(outdir, "qpredict_sfc.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    print("[aot] service kernels done")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="substring filter on config names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfgs = registry()
+    index = sorted(cfgs)
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"configs": index}, f, indent=1)
+
+    if not args.only or args.only in "service":
+        lower_service_kernels(args.out)
+    for name in index:
+        if args.only and args.only not in name:
+            continue
+        lower_config(name, cfgs[name], args.out)
+    print(f"[aot] wrote artifacts to {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

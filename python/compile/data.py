@@ -1,0 +1,52 @@
+"""Synthetic datasets (python side — used by pytest only).
+
+Mirrors `rust/src/util/dataset.rs`: class-prototype mixtures.  Each class
+has a fixed random prototype; a sample is ``alpha * proto[y] + noise``
+(images use box-smoothed patterns and smoothed noise, giving the local
+spatial correlation of natural images).  ``alpha`` is calibrated so
+trained QNNs land in the paper's accuracy regime — high but unsaturated,
+leaving headroom for approximation-induced degradation (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def teacher_dataset(
+    n: int, dim: int, n_classes: int, seed: int = 7, alpha: float = 0.18
+) -> tuple[np.ndarray, np.ndarray]:
+    """Flat-vector prototype mixture (the MNIST-like task)."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0, 1, (n_classes, dim)).astype(np.float32)
+    y = rng.integers(0, n_classes, n).astype(np.int32)
+    x = alpha * protos[y] + rng.normal(0, 1, (n, dim)).astype(np.float32)
+    return x.astype(np.float32), y
+
+
+def _smooth(img: np.ndarray) -> np.ndarray:
+    """3x3 box smoothing with edge padding (NHWC)."""
+    hw = img.shape[1]
+    p = np.pad(img, ((0, 0), (1, 1), (1, 1), (0, 0)), mode="edge")
+    return sum(
+        p[:, dy : dy + hw, dx : dx + hw, :] for dy in range(3) for dx in range(3)
+    ) / 9.0
+
+
+def teacher_images(
+    n: int,
+    hw: int,
+    chans: int,
+    n_classes: int,
+    seed: int = 11,
+    alpha: float | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Image prototype mixture (the CIFAR/ImageNet-like tasks)."""
+    if alpha is None:
+        alpha = 0.25 if n_classes > 10 else 0.2
+    rng = np.random.default_rng(seed)
+    protos = _smooth(rng.normal(0, 3, (n_classes, hw, hw, chans))).astype(np.float32)
+    y = rng.integers(0, n_classes, n).astype(np.int32)
+    noise = _smooth(rng.normal(0, 1, (n, hw, hw, chans))).astype(np.float32)
+    x = alpha * protos[y] + noise
+    return x.astype(np.float32), y

@@ -1,0 +1,10 @@
+"""Pallas kernels (L1) + pure-jnp oracles.
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls) and are called from the L2 model so they lower into
+the same HLO the Rust runtime loads.
+"""
+
+from .grau_act import grau_act, grau_act_cfg  # noqa: F401
+from .mt_act import mt_act  # noqa: F401
+from .quant_matmul import quant_matmul  # noqa: F401

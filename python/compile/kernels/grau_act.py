@@ -1,0 +1,152 @@
+"""L1 Pallas kernel: the GRAU datapath over a tile of MAC outputs.
+
+TPU adaptation of the paper's FPGA shifter pipeline (DESIGN.md
+§Hardware-Adaptation): the reconfigurable register state (thresholds,
+anchors, shift masks, biases) is a handful of tiny int32 arrays resident
+in VMEM; the per-element work is (a) a comparison tree against at most 7
+thresholds and (b) a sum of ``n_shifts`` conditional arithmetic right
+shifts — a *multiplierless* slope multiply, exactly the paper's insight,
+expressed as VPU-friendly vector ops instead of a netlist of 1-bit
+shifter stages.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same computation
+executes inside the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..specs import MAX_SEGMENTS, GrauConfig, qrange
+
+# One VMEM tile of MAC outputs processed per grid step. 512 int32 = 2 KiB,
+# leaving essentially all of VMEM for the surrounding layer's tiles.
+TILE = 512
+
+
+def _grau_kernel(
+    x_ref,
+    th_ref,
+    x0_ref,
+    y0_ref,
+    sign_ref,
+    mask_ref,
+    o_ref,
+    *,
+    n_shifts: int,
+    shift_lo: int,
+    qmin: int,
+    qmax: int,
+):
+    """Kernel body: one tile of x against one register file."""
+    x = x_ref[...]
+    th = th_ref[...]
+    x0 = x0_ref[...]
+    y0 = y0_ref[...]
+    sign = sign_ref[...]
+    mask = mask_ref[...]
+
+    # Stage 1 — segment select (the hardware's threshold comparators).
+    seg = jnp.zeros_like(x)
+    for i in range(MAX_SEGMENTS - 1):
+        seg = seg + (x >= th[i]).astype(jnp.int32)
+
+    # Stage 2 — setting load (mux tree over the register file).
+    sel_x0 = jnp.zeros_like(x)
+    sel_y0 = jnp.zeros_like(x)
+    sel_sign = jnp.zeros_like(x)
+    sel_mask = jnp.zeros_like(x)
+    for j in range(MAX_SEGMENTS):
+        hit = (seg == j).astype(jnp.int32)
+        sel_x0 = sel_x0 + hit * x0[j]
+        sel_y0 = sel_y0 + hit * y0[j]
+        sel_sign = sel_sign + hit * sign[j]
+        sel_mask = sel_mask + hit * mask[j]
+
+    # Stage 3 — shifter pipeline: multiplierless slope product as a sum of
+    # conditional arithmetic right shifts (one term per pipeline stage).
+    dx = x - sel_x0
+    acc = jnp.zeros_like(x)
+    for k in range(n_shifts):
+        bit = (sel_mask >> k) & 1
+        acc = acc + bit * (dx >> (shift_lo + k))
+
+    # Stage 4 — sign, bias, clamp (the output requantization stage).
+    o_ref[...] = jnp.clip(sel_y0 + sel_sign * acc, qmin, qmax)
+
+
+def grau_act(
+    x: jnp.ndarray,
+    thresholds: jnp.ndarray,
+    x0: jnp.ndarray,
+    y0: jnp.ndarray,
+    sign: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    n_bits: int,
+    shift_lo: int,
+    n_shifts: int,
+) -> jnp.ndarray:
+    """Apply the GRAU datapath to a 1-D int32 vector of MAC outputs.
+
+    The register-file operands are broadcast to every grid step (their
+    BlockSpec index map pins them to block 0), mirroring hardware where
+    the setting buffer is written once per reconfiguration and read by
+    every element.
+    """
+    assert x.ndim == 1, "flatten MAC outputs before the activation unit"
+    n = x.shape[0]
+    assert n % TILE == 0, f"pad the stream to a multiple of {TILE}"
+    qmin, qmax = qrange(n_bits)
+
+    kernel = functools.partial(
+        _grau_kernel,
+        n_shifts=n_shifts,
+        shift_lo=shift_lo,
+        qmin=qmin,
+        qmax=qmax,
+    )
+    grid = (n // TILE,)
+    reg = lambda m: pl.BlockSpec((m,), lambda i: (0,))  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            reg(MAX_SEGMENTS - 1),
+            reg(MAX_SEGMENTS),
+            reg(MAX_SEGMENTS),
+            reg(MAX_SEGMENTS),
+            reg(MAX_SEGMENTS),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(
+        x.astype(jnp.int32),
+        thresholds.astype(jnp.int32),
+        x0.astype(jnp.int32),
+        y0.astype(jnp.int32),
+        sign.astype(jnp.int32),
+        mask.astype(jnp.int32),
+    )
+
+
+def grau_act_cfg(x: jnp.ndarray, cfg: GrauConfig) -> jnp.ndarray:
+    """Convenience wrapper taking a `specs.GrauConfig`."""
+    return grau_act(
+        x,
+        jnp.asarray(cfg.thresholds),
+        jnp.asarray(cfg.x0),
+        jnp.asarray(cfg.y0),
+        jnp.asarray(cfg.sign),
+        jnp.asarray(cfg.mask),
+        n_bits=cfg.n_bits,
+        shift_lo=cfg.shift_lo,
+        n_shifts=cfg.n_shifts,
+    )

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: the Multi-Threshold (FINN-R) baseline activation.
+
+``y = qmin + #{i : x >= T_i}`` with 2^n - 1 thresholds.  Kept as a kernel
+(not just an oracle) so the accuracy *and* the runtime cost of the
+baseline flow through the same AOT path as GRAU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..specs import qrange
+
+TILE = 512
+
+
+def _mt_kernel(x_ref, th_ref, o_ref, *, n_thresholds: int, qmin: int):
+    x = x_ref[...]
+    th = th_ref[...]
+    acc = jnp.zeros_like(x)
+    # One comparator per threshold — the hardware's 2^n - 1 stage pipeline.
+    for i in range(n_thresholds):
+        acc = acc + (x >= th[i]).astype(jnp.int32)
+    o_ref[...] = qmin + acc
+
+
+def mt_act(x: jnp.ndarray, thresholds: jnp.ndarray, *, n_bits: int) -> jnp.ndarray:
+    """Apply the MT unit to a 1-D int32 vector of MAC outputs."""
+    assert x.ndim == 1
+    n = x.shape[0]
+    assert n % TILE == 0
+    n_th = thresholds.shape[0]
+    assert n_th == (1 << n_bits) - 1, "MT needs 2^n - 1 thresholds"
+    qmin, _ = qrange(n_bits)
+
+    kernel = functools.partial(_mt_kernel, n_thresholds=n_th, qmin=qmin)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((n_th,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), thresholds.astype(jnp.int32))

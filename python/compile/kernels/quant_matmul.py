@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: integer MAC (quantized matmul) feeding the GRAU unit.
+
+int8-range operands, int32 accumulation — the Multiply-Accumulate array
+whose outputs are the GRAU unit's inputs.  Tiled for VMEM: (TM, TK) x
+(TK, TN) blocks with an accumulator revisited across the K grid axis.
+On a real TPU the inner product would target the MXU with bf16 operands;
+on the CPU interpret path the same BlockSpec schedule runs under numpy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM, TK, TN = 32, 64, 32
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.matmul(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+def quant_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """``int32[M,N] = int8-range x_q[M,K] @ w_q[K,N]`` (int32 accumulate)."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2
+    assert m % TM == 0 and k % TK == 0 and n % TN == 0, (
+        f"shapes must tile by ({TM},{TK},{TN})"
+    )
+    grid = (m // TM, n // TN, k // TK)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TK, TN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x_q.astype(jnp.int32), w_q.astype(jnp.int32))

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness anchors: ``pytest python/tests`` asserts the
+Pallas kernels (interpret mode) match these exactly (integer kernels must
+be bit-identical; float kernels allclose).  The Rust hardware simulators
+are in turn validated against vectors generated from
+``specs.grau_eval_scalar``, closing the python<->rust loop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..specs import MAX_SEGMENTS, GrauConfig, qrange
+
+
+def grau_act_ref(x: jnp.ndarray, cfg: GrauConfig) -> jnp.ndarray:
+    """Vectorized jnp reference of the GRAU datapath (int32 in/out)."""
+    x = x.astype(jnp.int32)
+    # Segment index: count of thresholds passed. Padded thresholds are
+    # INT32_MAX so they never fire.
+    th = jnp.asarray(cfg.thresholds, dtype=jnp.int32)
+    seg = jnp.zeros_like(x)
+    for i in range(MAX_SEGMENTS - 1):
+        seg = seg + (x >= th[i]).astype(jnp.int32)
+
+    # Gather per-segment registers via one-hot selects (mirrors the
+    # hardware mux tree; avoids dynamic gather so the same code lowers
+    # cleanly inside pallas too).
+    x0 = jnp.asarray(cfg.x0, dtype=jnp.int32)
+    y0 = jnp.asarray(cfg.y0, dtype=jnp.int32)
+    sign = jnp.asarray(cfg.sign, dtype=jnp.int32)
+    mask = jnp.asarray(cfg.mask, dtype=jnp.int32)
+
+    sel_x0 = jnp.zeros_like(x)
+    sel_y0 = jnp.zeros_like(x)
+    sel_sign = jnp.zeros_like(x)
+    sel_mask = jnp.zeros_like(x)
+    for j in range(MAX_SEGMENTS):
+        hit = (seg == j).astype(jnp.int32)
+        sel_x0 = sel_x0 + hit * x0[j]
+        sel_y0 = sel_y0 + hit * y0[j]
+        sel_sign = sel_sign + hit * sign[j]
+        sel_mask = sel_mask + hit * mask[j]
+
+    dx = x - sel_x0
+    acc = jnp.zeros_like(x)
+    for k in range(cfg.n_shifts):
+        bit = (sel_mask >> k) & 1
+        acc = acc + bit * (dx >> (cfg.shift_lo + k))
+
+    qmin, qmax = qrange(cfg.n_bits)
+    y = sel_y0 + sel_sign * acc
+    return jnp.clip(y, qmin, qmax)
+
+
+def mt_act_ref(x: jnp.ndarray, thresholds: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Multi-Threshold baseline: y = qmin + #{i : x >= T_i}."""
+    x = x.astype(jnp.int32)
+    qmin, _ = qrange(n_bits)
+    hits = (x[..., None] >= thresholds[None, :].astype(jnp.int32)).astype(jnp.int32)
+    return qmin + hits.sum(axis=-1)
+
+
+def quant_matmul_ref(
+    x_q: jnp.ndarray, w_q: jnp.ndarray, bias: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Integer MAC reference: int32 accumulate of int8-range operands."""
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)
+    return acc
+
+
+def folded_activation_ref(
+    mac: np.ndarray,
+    a: float,
+    b: float,
+    act: str,
+    out_scale: float,
+    n_bits: int,
+) -> np.ndarray:
+    """Float reference of the *folded nonlinearity* GRAU approximates.
+
+    ``F(m) = quantize( act(a*m + b) / out_scale )`` clamped to the n-bit
+    signed range — BatchNorm (affine ``a,b`` per channel), nonlinear
+    activation and output re-quantization folded into one scalar map,
+    exactly the black box the paper extracts from Brevitas models.
+    """
+    z = a * mac.astype(np.float64) + b
+    if act == "relu":
+        f = np.maximum(z, 0.0)
+    elif act == "sigmoid":
+        f = 1.0 / (1.0 + np.exp(-z))
+    elif act == "silu":
+        f = z / (1.0 + np.exp(-z))
+    elif act == "tanh":
+        f = np.tanh(z)
+    elif act == "identity":
+        f = z
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    qmin, qmax = qrange(n_bits)
+    return np.clip(np.rint(f / out_scale), qmin, qmax)

@@ -1,0 +1,550 @@
+"""L2: quantization-aware-training QNN models in JAX (build-time only).
+
+This is the Brevitas substitute (DESIGN.md §Substitutions): per-layer
+weight/activation bit-widths with straight-through-estimator fake
+quantization, BatchNorm with running statistics, and an `export` function
+that folds BN + scales into the per-channel affine map ``z = a*mac + b``
+— the black box the GRAU fitting pipeline approximates.
+
+Everything here is lowered ONCE by ``aot.py`` to HLO text and executed by
+the Rust runtime; Python is never on the request path.
+
+Model IR
+--------
+A model is a list of ops (``ModelSpec.ops``).  Op kinds:
+
+  input    — declares input shape (NHWC for images, (D,) for flat)
+  conv     — 3x3/1x1 conv + BN + activation + output fake-quant
+  linear   — dense + optional BN + activation + output fake-quant
+  maxpool  — 2x2/2 max pool
+  gap      — global average pool
+  add      — residual add of two earlier ops' outputs (re-quantized)
+  flatten  — NHWC -> (N, H*W*C)
+
+Each conv/linear op carries ``w_bits`` / ``a_bits`` (mixed precision) and
+``act`` in {relu, sigmoid, silu, none}.  The same IR is serialized into
+the artifact manifest and re-instantiated by the Rust integer engine
+(rust/src/qnn), so both sides agree on the graph structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# IR
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Op:
+    kind: str
+    name: str
+    # conv/linear
+    out_ch: int = 0
+    ksize: int = 0
+    stride: int = 1
+    pad: str = "SAME"
+    w_bits: int = 8
+    a_bits: int = 8
+    act: str = "relu"
+    bn: bool = True
+    # add
+    lhs: int = -1
+    rhs: int = -1
+    # input
+    shape: tuple[int, ...] = ()
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["shape"] = list(self.shape)
+        return d
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    name: str
+    ops: list[Op]
+    n_classes: int
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "n_classes": self.n_classes,
+            "ops": [op.to_json() for op in self.ops],
+        }
+
+
+# --------------------------------------------------------------------------
+# Model builders (the paper's model zoo, width-scaled — DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+
+def mlp_spec(name: str, bits: list[int], act: str = "relu", in_dim: int = 784,
+             hidden: int = 256, n_hidden: int = 3, n_classes: int = 10) -> ModelSpec:
+    """SFC from FINN: in_dim-256-256-256-10. ``bits[i]`` = layer i precision."""
+    assert len(bits) == n_hidden + 1
+    ops = [Op(kind="input", name="in", shape=(in_dim,))]
+    for i in range(n_hidden):
+        ops.append(Op(kind="linear", name=f"fc{i}", out_ch=hidden,
+                      w_bits=bits[i], a_bits=bits[i], act=act, bn=True))
+    ops.append(Op(kind="linear", name="head", out_ch=n_classes,
+                  w_bits=bits[-1], a_bits=8, act="none", bn=False))
+    return ModelSpec(name, ops, n_classes)
+
+
+def cnv_spec(name: str, bits: list[int], act: str = "relu",
+             chans: tuple[int, int, int] = (32, 64, 128),
+             n_classes: int = 10) -> ModelSpec:
+    """CNV from FINN (width-scaled): 3 conv blocks (2x conv3x3 + maxpool),
+    then FC + head.  ``bits`` has 4 entries: one per block + FC."""
+    assert len(bits) == 4
+    ops = [Op(kind="input", name="in", shape=(32, 32, 3))]
+    for b, ch in enumerate(chans):
+        for i in range(2):
+            ops.append(Op(kind="conv", name=f"b{b}c{i}", out_ch=ch, ksize=3,
+                          w_bits=bits[b], a_bits=bits[b], act=act, bn=True))
+        if b < 2:
+            ops.append(Op(kind="maxpool", name=f"b{b}p"))
+    ops.append(Op(kind="gap", name="gap"))
+    ops.append(Op(kind="flatten", name="flat"))
+    ops.append(Op(kind="linear", name="fc0", out_ch=128,
+                  w_bits=bits[3], a_bits=bits[3], act=act, bn=True))
+    ops.append(Op(kind="linear", name="head", out_ch=n_classes,
+                  w_bits=bits[3], a_bits=8, act="none", bn=False))
+    return ModelSpec(name, ops, n_classes)
+
+
+VGG16_PLAN = [(8, 2), (16, 2), (32, 3), (64, 3), (64, 3)]  # (width/8, convs)
+
+
+def vgg16s_spec(name: str, stage_bits: list[int], act: str,
+                n_classes: int = 10) -> ModelSpec:
+    """VGG16, width/8: stage structure and stride schedule preserved;
+    ``stage_bits`` (5 entries, e.g. [8,4,2,4,8]) = per-stage precision."""
+    assert len(stage_bits) == 5
+    ops = [Op(kind="input", name="in", shape=(32, 32, 3))]
+    for s, (ch, n) in enumerate(VGG16_PLAN):
+        for i in range(n):
+            ops.append(Op(kind="conv", name=f"s{s}c{i}", out_ch=ch, ksize=3,
+                          w_bits=stage_bits[s], a_bits=stage_bits[s],
+                          act=act, bn=True))
+        ops.append(Op(kind="maxpool", name=f"s{s}p"))
+    ops.append(Op(kind="flatten", name="flat"))
+    ops.append(Op(kind="linear", name="fc0", out_ch=128,
+                  w_bits=stage_bits[4], a_bits=stage_bits[4], act=act, bn=True))
+    ops.append(Op(kind="linear", name="head", out_ch=n_classes,
+                  w_bits=stage_bits[4], a_bits=8, act="none", bn=False))
+    return ModelSpec(name, ops, n_classes)
+
+
+RESNET18_PLAN = [(16, 2, 1), (32, 2, 2), (64, 2, 2), (128, 2, 2)]
+
+
+def resnet18s_spec(name: str, stage_bits: list[int], silu_stage4: bool,
+                   n_classes: int = 100) -> ModelSpec:
+    """ResNet18, width/4: 4 stages x 2 basic blocks, residual wiring and
+    stride schedule preserved.  ``silu_stage4`` switches stage-4 blocks to
+    SiLU (the paper's ReLU+SiLU variant).  ``stage_bits`` has 5 entries
+    (stem uses [0], stages use [1..4], head uses [4])."""
+    assert len(stage_bits) == 5
+    ops = [Op(kind="input", name="in", shape=(32, 32, 3))]
+    ops.append(Op(kind="conv", name="stem", out_ch=16, ksize=3,
+                  w_bits=stage_bits[0], a_bits=stage_bits[0], act="relu", bn=True))
+    for s, (ch, blocks, stride0) in enumerate(RESNET18_PLAN):
+        act = "silu" if (silu_stage4 and s == 3) else "relu"
+        bits = stage_bits[min(s + 1, 4)]
+        for blk in range(blocks):
+            stride = stride0 if blk == 0 else 1
+            block_in = len(ops) - 1  # index of the block's input op
+            ops.append(Op(kind="conv", name=f"s{s}b{blk}c0", out_ch=ch, ksize=3,
+                          stride=stride, w_bits=bits, a_bits=bits, act=act, bn=True))
+            ops.append(Op(kind="conv", name=f"s{s}b{blk}c1", out_ch=ch, ksize=3,
+                          w_bits=bits, a_bits=bits, act="none", bn=True))
+            main = len(ops) - 1
+            # projection shortcut whenever shape changes
+            in_ch_changes = blk == 0 and (stride != 1 or s > 0)
+            if in_ch_changes:
+                ops.append(Op(kind="conv", name=f"s{s}b{blk}sc", out_ch=ch,
+                              ksize=1, stride=stride, w_bits=bits, a_bits=bits,
+                              act="none", bn=True, lhs=block_in))
+                skip = len(ops) - 1
+            else:
+                skip = block_in
+            ops.append(Op(kind="add", name=f"s{s}b{blk}add", lhs=main, rhs=skip,
+                          a_bits=bits, act=act))
+    ops.append(Op(kind="gap", name="gap"))
+    ops.append(Op(kind="flatten", name="flat"))
+    ops.append(Op(kind="linear", name="head", out_ch=n_classes,
+                  w_bits=stage_bits[4], a_bits=8, act="none", bn=False))
+    return ModelSpec(name, ops, n_classes)
+
+
+# --------------------------------------------------------------------------
+# Fake quantization (STE)
+# --------------------------------------------------------------------------
+
+
+def _qrange(bits: int) -> tuple[int, int]:
+    if bits == 1:  # binary-network convention: two levels {-1, +1}
+        return -1, 1
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    return x + jax.lax.stop_gradient(jnp.rint(x) - x)
+
+
+def fake_quant(x: jnp.ndarray, step: jnp.ndarray, bits: int) -> jnp.ndarray:
+    s = jnp.maximum(step, 1e-8)
+    if bits == 1:  # sign quantization (BNN/BWN style), STE gradient
+        q = jnp.where(x >= 0, 1.0, -1.0) * s
+        return x + jax.lax.stop_gradient(q - x)
+    qmin, qmax = _qrange(bits)
+    q = jnp.clip(ste_round(x / s), qmin, qmax)
+    return q * s
+
+
+def weight_step(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if bits == 1:  # BWN: scale = mean |w|
+        return jnp.maximum(jnp.mean(jnp.abs(w)), 1e-8)
+    _, qmax = _qrange(bits)
+    return jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / qmax
+
+
+def act_step(scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantization step for an activation with EMA abs-max ``scale``.
+
+    1-bit uses sign quantization; the useful magnitude is ~mean|z|, which
+    for roughly half-normal activations is ~0.3 of the abs-max.
+    """
+    if bits == 1:
+        return scale * 0.3
+    _, qmax = _qrange(bits)
+    return scale / qmax
+
+
+def apply_act(z: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "relu":
+        return jax.nn.relu(z)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(z)
+    if act == "silu":
+        return jax.nn.silu(z)
+    if act == "none":
+        return z
+    raise ValueError(act)
+
+
+# --------------------------------------------------------------------------
+# Init / forward
+# --------------------------------------------------------------------------
+
+BN_EPS = 1e-5
+EMA = 0.99
+
+
+def _conv_out_hw(h: int, stride: int) -> int:
+    return -(-h // stride)  # SAME padding
+
+
+def init_model(spec: ModelSpec, key: jax.Array) -> tuple[Params, Params]:
+    """Returns (params, state). State = BN running stats + act-scale EMAs."""
+    params: Params = {}
+    state: Params = {"in_scale": jnp.float32(0.0)}
+    shapes: list[tuple[int, ...]] = []
+    shape: tuple[int, ...] = ()
+    for op in spec.ops:
+        if op.kind == "input":
+            shape = op.shape
+        elif op.kind == "conv":
+            in_shape = shape if op.lhs < 0 else shapes[op.lhs]
+            in_ch = in_shape[-1]
+            key, k1 = jax.random.split(key)
+            fan_in = op.ksize * op.ksize * in_ch
+            params[f"{op.name}/w"] = (
+                jax.random.normal(k1, (op.ksize, op.ksize, in_ch, op.out_ch),
+                                  jnp.float32) * (2.0 / fan_in) ** 0.5)
+            h = _conv_out_hw(in_shape[0], op.stride)
+            shape = (h, h, op.out_ch)
+        elif op.kind == "linear":
+            in_dim = shape[0]
+            key, k1 = jax.random.split(key)
+            params[f"{op.name}/w"] = (
+                jax.random.normal(k1, (in_dim, op.out_ch), jnp.float32)
+                * (2.0 / in_dim) ** 0.5)
+            shape = (op.out_ch,)
+        elif op.kind == "maxpool":
+            shape = (shape[0] // 2, shape[1] // 2, shape[2])
+        elif op.kind == "gap":
+            shape = (1, 1, shape[2])
+        elif op.kind == "flatten":
+            n = 1
+            for d in shape:
+                n *= d
+            shape = (n,)
+        elif op.kind == "add":
+            shape = shapes[op.lhs]
+
+        if op.kind in ("conv", "linear"):
+            if op.bn:
+                params[f"{op.name}/gamma"] = jnp.ones(op.out_ch, jnp.float32)
+                params[f"{op.name}/beta"] = jnp.zeros(op.out_ch, jnp.float32)
+                state[f"{op.name}/mu"] = jnp.zeros(op.out_ch, jnp.float32)
+                state[f"{op.name}/var"] = jnp.ones(op.out_ch, jnp.float32)
+            else:
+                params[f"{op.name}/bias"] = jnp.zeros(op.out_ch, jnp.float32)
+            if op.name != "head":
+                state[f"{op.name}/a_scale"] = jnp.float32(0.0)
+        if op.kind == "add":
+            state[f"{op.name}/a_scale"] = jnp.float32(0.0)
+        shapes.append(shape)
+    return params, state
+
+
+def forward(spec: ModelSpec, params: Params, state: Params, x: jnp.ndarray,
+            train: bool) -> tuple[jnp.ndarray, Params]:
+    """Fake-quant forward pass. Returns (logits, new_state)."""
+    new_state = dict(state)
+
+    def scale_of(name: str, v: jnp.ndarray) -> jnp.ndarray:
+        """EMA abs-max used as the activation quant range."""
+        amax = jnp.maximum(jnp.max(jnp.abs(v)), 1e-8)
+        old = state[name]
+        if train:
+            upd = jnp.where(old == 0.0, amax, EMA * old + (1 - EMA) * amax)
+            new_state[name] = upd
+            return upd
+        return jnp.maximum(old, 1e-8)
+
+    qmin8, qmax8 = _qrange(8)
+    s_in = scale_of("in_scale", x)
+    h = fake_quant(x, s_in / qmax8, 8)
+
+    outs: list[jnp.ndarray] = []
+    for op in spec.ops:
+        if op.kind == "input":
+            outs.append(h)
+            continue
+        if op.kind in ("conv", "linear"):
+            src = h if op.lhs < 0 else outs[op.lhs]
+            w = params[f"{op.name}/w"]
+            wq = fake_quant(w, weight_step(w, op.w_bits), op.w_bits)
+            if op.kind == "conv":
+                z = jax.lax.conv_general_dilated(
+                    src, wq, (op.stride, op.stride), op.pad,
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            else:
+                z = src @ wq
+            if op.bn:
+                axes = tuple(range(z.ndim - 1))
+                if train:
+                    mu = jnp.mean(z, axis=axes)
+                    var = jnp.var(z, axis=axes)
+                    new_state[f"{op.name}/mu"] = (
+                        EMA * state[f"{op.name}/mu"] + (1 - EMA) * mu)
+                    new_state[f"{op.name}/var"] = (
+                        EMA * state[f"{op.name}/var"] + (1 - EMA) * var)
+                else:
+                    mu = state[f"{op.name}/mu"]
+                    var = state[f"{op.name}/var"]
+                z = (params[f"{op.name}/gamma"] * (z - mu)
+                     / jnp.sqrt(var + BN_EPS) + params[f"{op.name}/beta"])
+            else:
+                z = z + params[f"{op.name}/bias"]
+            # 1-bit sites are binary-network style: sign of the BN
+            # output (the nonlinearity folds into the threshold), else
+            # activation followed by fake-quant.
+            if op.a_bits != 1 or f"{op.name}/a_scale" not in state:
+                z = apply_act(z, op.act)
+            if f"{op.name}/a_scale" in state:
+                sa = scale_of(f"{op.name}/a_scale", z)
+                z = fake_quant(z, act_step(sa, op.a_bits), op.a_bits)
+            h = z
+        elif op.kind == "maxpool":
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        elif op.kind == "gap":
+            h = jnp.mean(h, axis=(1, 2), keepdims=True)
+        elif op.kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+        elif op.kind == "add":
+            z = outs[op.lhs] + outs[op.rhs]
+            if op.a_bits != 1:
+                z = apply_act(z, op.act)
+            sa = scale_of(f"{op.name}/a_scale", z)
+            h = fake_quant(z, act_step(sa, op.a_bits), op.a_bits)
+        else:
+            raise ValueError(op.kind)
+        outs.append(h)
+    return h, new_state
+
+
+# --------------------------------------------------------------------------
+# Loss / Adam / train step
+# --------------------------------------------------------------------------
+
+
+def loss_fn(spec: ModelSpec, params: Params, state: Params,
+            x: jnp.ndarray, y: jnp.ndarray) -> tuple[jnp.ndarray, Params]:
+    logits, new_state = forward(spec, params, state, x, train=True)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return ce, new_state
+
+
+def adam_init(params: Params) -> Params:
+    return {
+        "t": jnp.float32(0.0),
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+    }
+
+
+def adam_update(params: Params, grads: Params, opt: Params, lr: float,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    t = opt["t"] + 1.0
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               opt["v"], grads)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** t))
+        / (jnp.sqrt(v_ / (1 - b2 ** t)) + eps),
+        params, m, v)
+    return new, {"t": t, "m": m, "v": v}
+
+
+def make_train_step(spec: ModelSpec, lr: float):
+    """(params, state, opt, x, y) -> (params, state, opt, loss)."""
+
+    def step(params, state, opt, x, y):
+        (loss, new_state), grads = jax.value_and_grad(
+            functools.partial(loss_fn, spec), has_aux=True)(params, state, x, y)
+        new_params, new_opt = adam_update(params, grads, opt, lr)
+        return new_params, new_state, new_opt, loss
+
+    return step
+
+
+def make_predict(spec: ModelSpec):
+    def predict(params, state, x):
+        logits, _ = forward(spec, params, state, x, train=False)
+        return logits
+
+    return predict
+
+
+# --------------------------------------------------------------------------
+# Export: fold BN + scales into the integer-engine form
+# --------------------------------------------------------------------------
+
+
+def export_layers(spec: ModelSpec, params: Params, state: Params) -> dict[str, jnp.ndarray]:
+    """Fold everything into the Rust integer engine's form.
+
+    Per conv/linear op ``L``:
+      ``L/w_int``   integer weights (carried as f32),
+      ``L/a``       per-channel float: pre-activation = a*mac + b,
+      ``L/b``       per-channel float,
+      ``L/s_out``   output activation quant step, scalar.
+    Plus ``in_step`` — the input quantization step.
+    For ``add`` ops: the input/output steps, so the engine can realise the
+    re-quantization as fixed-point multipliers.
+    """
+    out: dict[str, jnp.ndarray] = {}
+    _, qmax8 = _qrange(8)
+    in_step = jnp.maximum(state["in_scale"], 1e-8) / qmax8
+    out["in_step"] = in_step
+
+    steps: list[jnp.ndarray] = []  # output quant step per op
+    for op in spec.ops:
+        if op.kind == "input":
+            steps.append(in_step)
+            continue
+        if op.kind in ("conv", "linear"):
+            src_step = steps[-1] if op.lhs < 0 else steps[op.lhs]
+            w = params[f"{op.name}/w"]
+            _, wqmax = _qrange(op.w_bits)
+            sw = weight_step(w, op.w_bits)
+            if op.w_bits == 1:
+                w_int = jnp.where(w >= 0, 1.0, -1.0)
+            else:
+                w_int = jnp.clip(jnp.rint(w / sw), -wqmax - 1, wqmax)
+            pre = sw * src_step  # float value of one MAC unit
+            if op.bn:
+                inv = params[f"{op.name}/gamma"] / jnp.sqrt(
+                    state[f"{op.name}/var"] + BN_EPS)
+                a = inv * pre
+                b = params[f"{op.name}/beta"] - inv * state[f"{op.name}/mu"]
+            else:
+                a = jnp.full((op.out_ch,), pre, jnp.float32)
+                b = params[f"{op.name}/bias"]
+            if f"{op.name}/a_scale" in state:
+                s_out = act_step(
+                    jnp.maximum(state[f"{op.name}/a_scale"], 1e-8), op.a_bits)
+            else:
+                s_out = jnp.float32(1.0)  # head: logits = a*mac + b directly
+            out[f"{op.name}/w_int"] = w_int.astype(jnp.float32)
+            out[f"{op.name}/a"] = a.astype(jnp.float32)
+            out[f"{op.name}/b"] = b.astype(jnp.float32)
+            out[f"{op.name}/s_out"] = s_out
+            steps.append(s_out)
+        elif op.kind == "add":
+            s_out = act_step(
+                jnp.maximum(state[f"{op.name}/a_scale"], 1e-8), op.a_bits)
+            out[f"{op.name}/s_lhs"] = steps[op.lhs]
+            out[f"{op.name}/s_rhs"] = steps[op.rhs]
+            out[f"{op.name}/s_out"] = s_out
+            steps.append(s_out)
+        else:
+            steps.append(steps[-1])
+    return out
+
+
+def make_export(spec: ModelSpec):
+    def export(params, state):
+        return export_layers(spec, params, state)
+
+    return export
+
+
+# --------------------------------------------------------------------------
+# Integer predict built from the L1 Pallas kernels (MLP only — this is the
+# demonstration that the kernels compose into a full network; conv models
+# go through the Rust integer engine instead).
+# --------------------------------------------------------------------------
+
+
+def make_qpredict_mlp(spec: ModelSpec, n_shifts: int = 16):
+    """Integer MLP forward: quant_matmul + grau_act per layer.
+
+    Inputs: x_int (int32), per-layer w_int (int32), per-layer GRAU register
+    files (fitted by the Rust pipeline, fed back through the runtime), and
+    the head's affine map.  Output: float logits.
+    """
+    from .kernels import grau_act, quant_matmul
+
+    lins = [op for op in spec.ops if op.kind == "linear"]
+
+    def qpredict(x_int, weights, regs, head_a, head_b):
+        h = x_int
+        for i, op in enumerate(lins[:-1]):
+            mac = quant_matmul(h, weights[i])
+            th, x0, y0, sg, mk = regs[i]
+            flat = mac.reshape(-1)
+            act = grau_act(flat, th, x0, y0, sg, mk,
+                           n_bits=op.a_bits, shift_lo=0, n_shifts=n_shifts)
+            h = act.reshape(mac.shape)
+        mac = quant_matmul(h, weights[-1])
+        return mac.astype(jnp.float32) * head_a + head_b
+
+    return qpredict

@@ -1,0 +1,150 @@
+"""Canonical integer semantics of the GRAU datapath.
+
+This file is the single source of truth for the *bit-exact* behaviour that
+three independent implementations must agree on:
+
+  * the Pallas kernel (``kernels/grau_act.py``),
+  * the pure-jnp oracle (``kernels/ref.py``),
+  * the Rust hardware simulators (``rust/src/hw/``).
+
+GRAU configuration (one "activation kernel", i.e. one output channel of one
+layer, mirroring FINN's per-channel thresholds):
+
+  * ``n_bits``            output precision, quantized range is the signed
+                          interval [-2^(n-1), 2^(n-1)-1].
+  * ``thresholds[S-1]``   ascending integers; segment(x) = #{i : x >= t_i}.
+  * per segment j:
+      ``x0[j]``           left anchor (integer breakpoint),
+      ``y0[j]``           integer output at the anchor,
+      ``sign[j]``         +1 / -1,
+      ``mask[j]``         bitmask over the shift window: bit k set means the
+                          term ``(x - x0) >> (shift_lo + k)`` participates.
+  * ``shift_lo``          smallest shift amount in the window,
+  * ``n_shifts``          window length (4 / 8 / 16 — the paper's
+                          "exponent number").
+
+Evaluation (all in two's-complement integer arithmetic; ``>>`` is an
+*arithmetic* right shift, i.e. floor division by a power of two):
+
+    j   = segment(x)
+    dx  = x - x0[j]
+    acc = sum_{k : mask[j] bit k} (dx >> (shift_lo + k))
+    y   = clamp(y0[j] + sign[j] * acc, qmin, qmax)
+
+PoT-PWLF restricts ``popcount(mask) <= 1``; APoT-PWLF allows any subset of
+the window (each power used at most once — exactly the paper's encoding of
+Figure 3, where every pipeline stage owns one power of two).
+
+The Multi-Threshold (MT) baseline (FINN-R):
+
+    y = qmin + #{i : x >= T_i}          (2^n - 1 thresholds, monotone)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+MAX_SEGMENTS = 8
+SHIFT_WINDOWS = (4, 8, 16)
+
+
+def qrange(n_bits: int) -> tuple[int, int]:
+    """Signed quantized range for ``n_bits`` outputs.
+
+    1-bit is special-cased to the binary-network convention {-1, +1}
+    (one threshold, two levels — the paper's 1-bit MT row), so the clamp
+    range is [-1, 1]; all other widths are two's-complement signed.
+    """
+    if n_bits == 1:
+        return -1, 1
+    return -(1 << (n_bits - 1)), (1 << (n_bits - 1)) - 1
+
+
+@dataclasses.dataclass
+class GrauConfig:
+    """Reconfigurable register state of one GRAU instance.
+
+    Arrays are padded to ``MAX_SEGMENTS`` so a fixed-shape kernel can be
+    AOT-compiled once and reconfigured at runtime, exactly like the
+    hardware's setting buffer.
+    """
+
+    n_bits: int
+    n_segments: int
+    shift_lo: int
+    n_shifts: int
+    thresholds: np.ndarray  # int32[MAX_SEGMENTS-1], padded with +inf-like
+    x0: np.ndarray  # int32[MAX_SEGMENTS]
+    y0: np.ndarray  # int32[MAX_SEGMENTS]
+    sign: np.ndarray  # int32[MAX_SEGMENTS], +1/-1
+    mask: np.ndarray  # int32[MAX_SEGMENTS], bitmask over window
+
+    PAD_THRESHOLD = np.int32(2**31 - 1)
+
+    @classmethod
+    def padded(
+        cls,
+        n_bits: int,
+        thresholds: Sequence[int],
+        x0: Sequence[int],
+        y0: Sequence[int],
+        sign: Sequence[int],
+        mask: Sequence[int],
+        shift_lo: int,
+        n_shifts: int,
+    ) -> "GrauConfig":
+        s = len(x0)
+        assert len(thresholds) == s - 1, "S segments need S-1 thresholds"
+        assert 1 <= s <= MAX_SEGMENTS
+        th = np.full(MAX_SEGMENTS - 1, cls.PAD_THRESHOLD, dtype=np.int32)
+        th[: s - 1] = np.asarray(thresholds, dtype=np.int32)
+
+        def pad(v, fill):
+            out = np.full(MAX_SEGMENTS, fill, dtype=np.int32)
+            out[:s] = np.asarray(v, dtype=np.int32)
+            return out
+
+        return cls(
+            n_bits=n_bits,
+            n_segments=s,
+            shift_lo=shift_lo,
+            n_shifts=n_shifts,
+            thresholds=th,
+            x0=pad(x0, 0),
+            y0=pad(y0, 0),
+            sign=pad(sign, 1),
+            mask=pad(mask, 0),
+        )
+
+    def slope(self, j: int) -> float:
+        """Real-valued slope this segment's shift mask encodes."""
+        m = int(self.mask[j])
+        mag = sum(
+            2.0 ** -(self.shift_lo + k)
+            for k in range(self.n_shifts)
+            if (m >> k) & 1
+        )
+        return float(self.sign[j]) * mag
+
+
+def grau_eval_scalar(cfg: GrauConfig, x: int) -> int:
+    """Bit-exact scalar reference (pure python ints — no overflow)."""
+    j = sum(1 for i in range(cfg.n_segments - 1) if x >= int(cfg.thresholds[i]))
+    dx = x - int(cfg.x0[j])
+    acc = 0
+    m = int(cfg.mask[j])
+    for k in range(cfg.n_shifts):
+        if (m >> k) & 1:
+            acc += dx >> (cfg.shift_lo + k)  # python >> is arithmetic
+    y = int(cfg.y0[j]) + int(cfg.sign[j]) * acc
+    qmin, qmax = qrange(cfg.n_bits)
+    return max(qmin, min(qmax, y))
+
+
+def mt_eval_scalar(thresholds: Sequence[int], x: int, n_bits: int) -> int:
+    """Multi-Threshold baseline, scalar reference."""
+    qmin, _ = qrange(n_bits)
+    return qmin + sum(1 for t in thresholds if x >= t)

@@ -1,0 +1,128 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Integer kernels must be *bit-identical* to the pure-jnp oracle AND to the
+scalar spec (python big-int arithmetic, no overflow) — three independent
+implementations of the same datapath.  Hypothesis sweeps shapes, register
+contents and precisions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.specs import MAX_SEGMENTS, GrauConfig, grau_eval_scalar, mt_eval_scalar, qrange
+from compile.kernels import grau_act_cfg, mt_act, quant_matmul
+from compile.kernels.ref import grau_act_ref, mt_act_ref, quant_matmul_ref
+
+
+def make_cfg(rng: np.random.Generator, n_bits: int, n_segments: int,
+             shift_lo: int, n_shifts: int, pot_only: bool = False) -> GrauConfig:
+    bps = np.sort(rng.choice(np.arange(-4000, 4000), size=n_segments - 1,
+                             replace=False)).tolist()
+    qmin, qmax = qrange(n_bits)
+    x0 = [-5000] + bps
+    y0 = rng.integers(qmin, qmax + 1, size=n_segments).tolist()
+    sign = rng.choice([-1, 1], size=n_segments).tolist()
+    if pot_only:
+        mask = [1 << int(rng.integers(0, n_shifts)) if rng.random() > 0.2 else 0
+                for _ in range(n_segments)]
+    else:
+        mask = rng.integers(0, 1 << n_shifts, size=n_segments).tolist()
+    return GrauConfig.padded(n_bits, bps, x0, y0, sign, mask, shift_lo, n_shifts)
+
+
+class TestGrauKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_bits=st.sampled_from([1, 2, 4, 8]),
+        n_segments=st.integers(1, MAX_SEGMENTS),
+        n_shifts=st.sampled_from([4, 8, 16]),
+        shift_lo=st.integers(0, 8),
+        pot_only=st.booleans(),
+    )
+    def test_kernel_matches_ref_and_scalar(self, seed, n_bits, n_segments,
+                                           n_shifts, shift_lo, pot_only):
+        rng = np.random.default_rng(seed)
+        cfg = make_cfg(rng, n_bits, n_segments, shift_lo, n_shifts, pot_only)
+        x = rng.integers(-100_000, 100_000, size=1024).astype(np.int32)
+        ker = np.asarray(grau_act_cfg(jnp.asarray(x), cfg))
+        ref = np.asarray(grau_act_ref(jnp.asarray(x), cfg))
+        np.testing.assert_array_equal(ker, ref)
+        # scalar spec on a subsample (python ints, no overflow)
+        idx = rng.choice(len(x), size=64, replace=False)
+        sca = np.array([grau_eval_scalar(cfg, int(x[i])) for i in idx])
+        np.testing.assert_array_equal(ker[idx], sca)
+
+    def test_negative_dx_arithmetic_shift(self):
+        """dx < 0 must floor-divide (arithmetic shift), not truncate."""
+        cfg = GrauConfig.padded(8, [], [0], [0], [1], [0b1], shift_lo=3,
+                                n_shifts=4)
+        x = jnp.asarray(np.array([-8, -7, -1, 0, 7, 8], np.int32))
+        out = np.asarray(grau_act_cfg(jnp.tile(x, 512 // 6 * 6)[:512 * 1], cfg)) \
+            if False else np.asarray(grau_act_cfg(jnp.resize(x, (512,)), cfg))
+        exp = np.resize(np.array([-1, -1, -1, 0, 0, 1]), 512)
+        np.testing.assert_array_equal(out, exp)
+
+    def test_clamp_to_precision(self):
+        for n_bits in (2, 4, 8):
+            qmin, qmax = qrange(n_bits)
+            cfg = GrauConfig.padded(n_bits, [], [0], [0], [1], [0b1],
+                                    shift_lo=0, n_shifts=4)
+            x = jnp.asarray(np.linspace(-1e6, 1e6, 512).astype(np.int32))
+            out = np.asarray(grau_act_cfg(x, cfg))
+            assert out.min() == qmin and out.max() == qmax
+
+    def test_zero_mask_is_constant_segment(self):
+        cfg = GrauConfig.padded(8, [], [0], [42], [1], [0], 0, 16)
+        x = jnp.asarray(np.random.default_rng(0)
+                        .integers(-9999, 9999, 512).astype(np.int32))
+        np.testing.assert_array_equal(np.asarray(grau_act_cfg(x, cfg)), 42)
+
+
+class TestMtKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n_bits=st.sampled_from([1, 2, 4, 8]))
+    def test_matches_ref(self, seed, n_bits):
+        rng = np.random.default_rng(seed)
+        n_th = (1 << n_bits) - 1
+        th = np.sort(rng.choice(np.arange(-30000, 30000), n_th,
+                                replace=False)).astype(np.int32)
+        x = rng.integers(-50_000, 50_000, 1024).astype(np.int32)
+        ker = np.asarray(mt_act(jnp.asarray(x), jnp.asarray(th), n_bits=n_bits))
+        ref = np.asarray(mt_act_ref(jnp.asarray(x), jnp.asarray(th), n_bits))
+        np.testing.assert_array_equal(ker, ref)
+        sca = np.array([mt_eval_scalar(th.tolist(), int(v), n_bits)
+                        for v in x[:64]])
+        np.testing.assert_array_equal(ker[:64], sca)
+
+    def test_monotone_output(self):
+        """MT output is monotone in x — the paper's Figure 1 limitation."""
+        th = np.sort(np.random.default_rng(3).choice(
+            np.arange(-1000, 1000), 15, replace=False)).astype(np.int32)
+        x = np.sort(np.random.default_rng(4)
+                    .integers(-2000, 2000, 512)).astype(np.int32)
+        out = np.asarray(mt_act(jnp.asarray(x), jnp.asarray(th), n_bits=4))
+        assert (np.diff(out) >= 0).all()
+
+
+class TestQuantMatmul:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        m=st.sampled_from([32, 64]),
+        k=st.sampled_from([64, 128, 192]),
+        n=st.sampled_from([32, 64]),
+        bits=st.sampled_from([2, 4, 8]),
+    )
+    def test_matches_ref(self, seed, m, k, n, bits):
+        rng = np.random.default_rng(seed)
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        a = rng.integers(lo, hi + 1, (m, k)).astype(np.int32)
+        b = rng.integers(lo, hi + 1, (k, n)).astype(np.int32)
+        ker = np.asarray(quant_matmul(jnp.asarray(a), jnp.asarray(b)))
+        ref = np.asarray(quant_matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(ker, ref)

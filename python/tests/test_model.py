@@ -1,0 +1,124 @@
+"""L2 model sanity: shapes, training signal, export folding correctness."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    spec = M.mlp_spec("sfc_t", [8, 8, 8, 8], in_dim=768)
+    params, state = M.init_model(spec, jax.random.PRNGKey(0))
+    return spec, params, state
+
+
+def test_forward_shapes(mlp):
+    spec, params, state = mlp
+    x = jnp.zeros((4, 768), jnp.float32)
+    logits, _ = M.forward(spec, params, state, x, train=True)
+    assert logits.shape == (4, 10)
+
+
+def test_loss_decreases(mlp):
+    spec, params, state = mlp
+    x_np, y_np = D.teacher_dataset(512, 768, 10)
+    x, y = jnp.asarray(x_np), jnp.asarray(y_np)
+    step = jax.jit(M.make_train_step(spec, 2e-3))
+    opt = M.adam_init(params)
+    losses = []
+    for i in range(30):
+        b = slice((i * 64) % 512, (i * 64) % 512 + 64)
+        params, state, opt, loss = step(params, state, opt, x[b], y[b])
+        losses.append(float(loss))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.8
+
+
+def test_mixed_precision_memory_ordering():
+    """Quantized weight bytes: full1 < mixed < full8 (Table I's premise)."""
+
+    def nbytes(bits):
+        spec = M.mlp_spec("m", bits, in_dim=768)
+        total = 0
+        for op in spec.ops:
+            if op.kind == "linear":
+                total += op.out_ch * (768 if op.name == "fc0" else
+                                      256 if op.name != "head" else 256) \
+                    * op.w_bits / 8
+        return total
+
+    assert nbytes([1, 1, 1, 1]) < nbytes([1, 2, 4, 8]) < nbytes([8] * 4)
+
+
+def test_export_fold_matches_forward(mlp):
+    """The folded integer path must reproduce the fake-quant forward.
+
+    Quantize input -> integer MAC (layer 0) -> folded float z = a*mac + b
+    must equal BN(conv(x_q, w_q)) from the float fake-quant forward.
+    """
+    spec, params, state = mlp
+    # give state non-trivial statistics
+    x_np, y_np = D.teacher_dataset(256, 768, 10)
+    step = jax.jit(M.make_train_step(spec, 2e-3))
+    opt = M.adam_init(params)
+    for i in range(10):
+        params, state, opt, _ = step(params, state, opt,
+                                     jnp.asarray(x_np[:64]),
+                                     jnp.asarray(y_np[:64]))
+    exp = M.export_layers(spec, params, state)
+    in_step = float(exp["in_step"])
+    w_int = np.asarray(exp["fc0/w_int"]).astype(np.int64)
+    a = np.asarray(exp["fc0/a"], np.float64)
+    b = np.asarray(exp["fc0/b"], np.float64)
+
+    x = x_np[:8]
+    x_q = np.clip(np.rint(x / in_step), -128, 127).astype(np.int64)
+    mac = x_q @ w_int
+    z_folded = a * mac + b
+
+    # reference: float fake-quant forward up to fc0's BN output
+    w = params["fc0/w"]
+    wq = np.asarray(M.fake_quant(w, M.weight_step(w, 8), 8), np.float64)
+    z = (x_q * in_step) @ wq
+    mu = np.asarray(state["fc0/mu"], np.float64)
+    var = np.asarray(state["fc0/var"], np.float64)
+    gamma = np.asarray(params["fc0/gamma"], np.float64)
+    beta = np.asarray(params["fc0/beta"], np.float64)
+    z_ref = gamma * (z - mu) / np.sqrt(var + M.BN_EPS) + beta
+
+    np.testing.assert_allclose(z_folded, z_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_resnet_residual_graph_wiring():
+    spec = M.resnet18s_spec("rn_t", [8, 8, 8, 8, 8], silu_stage4=True,
+                            n_classes=100)
+    adds = [op for op in spec.ops if op.kind == "add"]
+    assert len(adds) == 8  # 4 stages x 2 blocks
+    for op in adds:
+        assert 0 <= op.rhs < len(spec.ops) and 0 <= op.lhs < len(spec.ops)
+        assert spec.ops[op.lhs].kind == "conv"
+    # stage-4 blocks use silu
+    assert all(op.act == "silu" for op in adds[-2:])
+    assert all(op.act == "relu" for op in adds[:6])
+    p, s = M.init_model(spec, jax.random.PRNGKey(0))
+    logits, _ = M.forward(spec, p, s, jnp.zeros((2, 32, 32, 3)), train=True)
+    assert logits.shape == (2, 100)
+
+
+def test_one_bit_weights_are_binary():
+    spec = M.mlp_spec("b", [1, 1, 1, 1], in_dim=768)
+    p, s = M.init_model(spec, jax.random.PRNGKey(0))
+    exp = M.export_layers(spec, p, s)
+    w = np.asarray(exp["fc0/w_int"])
+    assert set(np.unique(w)) <= {-1.0, 1.0}
+
+
+def test_vgg_stage_bits_assignment():
+    spec = M.vgg16s_spec("v", [8, 4, 2, 4, 8], "silu")
+    convs = [op for op in spec.ops if op.kind == "conv"]
+    assert [op.w_bits for op in convs] == [8, 8, 4, 4, 2, 2, 2, 4, 4, 4, 8, 8, 8]

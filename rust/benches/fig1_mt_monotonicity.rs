@@ -1,0 +1,18 @@
+//! Regenerates paper Figure 1: Multi-Threshold 2-bit quantization is
+//! exact on monotone folded functions and mis-quantizes non-monotone
+//! ones (SiLU).  Emits both data series as CSV under results/.
+
+use grau::coordinator::experiments::{fig1, Ctx};
+use grau::util::bench::bench_header;
+use std::path::Path;
+
+fn main() {
+    bench_header(
+        "fig1_mt_monotonicity",
+        "Figure 1 — MT unit on monotone vs non-monotone activations",
+    );
+    let ctx = Ctx::new(Path::new("artifacts")).expect("ctx");
+    let summary = fig1::run(&ctx).expect("fig1");
+    assert!(summary.contains("exact"), "sigmoid case must be exact");
+    assert!(summary.contains("MIS-QUANTIZED"), "silu case must fail");
+}

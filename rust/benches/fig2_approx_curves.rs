@@ -1,0 +1,16 @@
+//! Regenerates paper Figure 2: original vs PWLF vs PoT-PWLF vs
+//! APoT-PWLF curves for folded Sigmoid and SiLU (6 segments, 8-bit),
+//! including the output-rail clamp visible in the paper's SiLU plots.
+
+use grau::coordinator::experiments::{fig2, Ctx};
+use grau::util::bench::bench_header;
+use std::path::Path;
+
+fn main() {
+    bench_header(
+        "fig2_approx_curves",
+        "Figure 2 — PWLF / PoT / APoT approximation curves",
+    );
+    let ctx = Ctx::new(Path::new("artifacts")).expect("ctx");
+    fig2::run(&ctx).expect("fig2");
+}

@@ -1,0 +1,143 @@
+//! §Perf hot-path benches: the numbers EXPERIMENTS.md §Perf records.
+//!
+//! Covers every layer the optimization pass touches:
+//!   L3 service  — end-to-end activation service throughput (functional
+//!                 and cycle-sim backends, single + multi worker);
+//!   engine      — integer conv/linear MAC throughput;
+//!   fitting     — greedy Algorithm 1 vs the LSQ (pwlf-substitute)
+//!                 fitter, the paper's "4 minutes per fit -> fast" claim;
+//!   ablations   — APoT vs PoT at equal budget, segments vs exponents.
+
+use grau::act::{Activation, FoldedActivation};
+use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
+use grau::fit::greedy::{select_breakpoints, GreedyOptions};
+use grau::fit::lsq::fit_lsq;
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::qnn::engine::conv2d_i32;
+use grau::util::bench::{bench_header, Bencher};
+use grau::util::rng::Rng;
+
+fn main() {
+    bench_header("perf_hot_paths", "EXPERIMENTS.md §Perf — per-layer hot paths");
+
+    let f = FoldedActivation::new(0.004, 0.05, Activation::Silu, 1.0 / 120.0, 8);
+    let samples = f.sample(-2000, 2000, 1000);
+
+    // --- fitting ---------------------------------------------------------
+    Bencher::new("greedy Algorithm-1 breakpoints (1000 samples, S=6)")
+        .run(|| select_breakpoints(&samples, GreedyOptions::default()));
+    Bencher::new("LSQ pwlf-substitute fit (1000 samples, S=6)")
+        .samples(5)
+        .run(|| fit_lsq(&samples, 6, 8));
+    Bencher::new("full fit_folded incl. window search (S=6, E=8)")
+        .samples(5)
+        .run(|| fit_folded(&f, -1000, 1000, FitOptions::default()));
+
+    // --- integer engine MAC ----------------------------------------------
+    let mut rng = Rng::new(3);
+    let src: Vec<i32> = (0..32 * 32 * 16).map(|_| rng.range_i64(-128, 128) as i32).collect();
+    let w: Vec<i32> = (0..3 * 3 * 16 * 32).map(|_| rng.range_i64(-128, 128) as i32).collect();
+    let macs = (32 * 32 * 32) as u64 * (3 * 3 * 16) as u64;
+    Bencher::new("conv2d_i32 32x32x16 -> 32ch k3 (MACs/s)")
+        .elements(macs)
+        .run(|| conv2d_i32(&src, &[32, 32, 16], &w, &[3, 3, 16, 32], 1));
+
+    // --- L3 service -------------------------------------------------------
+    let fit = fit_folded(&f, -1000, 1000, FitOptions::default());
+    for (label, backend, workers) in [
+        ("service functional 1w", Backend::Functional, 1usize),
+        ("service functional 4w", Backend::Functional, 4),
+        ("service cycle-sim 1w", Backend::CycleSim, 1),
+    ] {
+        let svc = ActivationService::start(ServiceConfig {
+            workers,
+            backend,
+            ..Default::default()
+        });
+        svc.register(0, fit.apot.regs.clone(), ApproxKind::Apot);
+        svc.register(1, fit.pot.regs.clone(), ApproxKind::Pot);
+        let data: Vec<i32> = (0..4096).map(|i| (i as i32 % 6000) - 3000).collect();
+        let rep = Bencher::new(label).elements(8 * 4096).min_time_ms(500).run(|| {
+            let pend: Vec<_> = (0..8).map(|i| svc.submit(i % 2, data.clone())).collect();
+            for p in pend {
+                p.recv().unwrap();
+            }
+        });
+        let _ = rep;
+        svc.shutdown();
+    }
+
+    // --- ablations ---------------------------------------------------------
+    println!("\nablation: APoT vs PoT RMSE at equal exponent budget");
+    for e in [4u8, 8, 16] {
+        let r = fit_folded(&f, -1000, 1000, FitOptions { n_shifts: e, ..Default::default() });
+        println!(
+            "  E={e:<2} rmse pot {:.3}  apot {:.3}  (LSB)",
+            r.rmse_pot, r.rmse_apot
+        );
+    }
+    println!("\nablation: segments vs exponents (error at equal hardware growth)");
+    for (s, e) in [(4usize, 8u8), (8, 8), (4, 16)] {
+        let r = fit_folded(&f, -1000, 1000, FitOptions { segments: s, n_shifts: e, ..Default::default() });
+        let lut = grau::hw::cost::estimate(grau::hw::cost::UnitKind::GrauPipelined {
+            kind: ApproxKind::Apot,
+            segments: s as u32,
+            exponents: e as u32,
+        })
+        .lut;
+        println!("  S={s} E={e:<2} apot rmse {:.3} LSB at {lut} LUTs", r.rmse_apot);
+    }
+
+    // --- DSE Pareto front: the "6-8 segments is the best trade-off" claim
+    println!("\nablation: (segments x exponents) Pareto front (APoT, mixed workload)");
+    let workload: Vec<FoldedActivation> = [
+        Activation::Relu,
+        Activation::Sigmoid,
+        Activation::Silu,
+        Activation::Tanh,
+    ]
+    .iter()
+    .map(|&a| FoldedActivation::new(0.004, 0.0, a, 1.0 / 120.0, 8))
+    .collect();
+    let pts = grau::hw::dse::sweep(&workload, (-1000, 1000), &[2, 4, 6, 8], &[4, 8, 16]);
+    for p in grau::hw::dse::pareto(&pts) {
+        println!(
+            "  S={} E={:<2} rmse {:.3} LSB  {} LUTs  depth {}",
+            p.segments, p.exponents, p.rmse, p.lut, p.depth
+        );
+    }
+
+    // --- §Perf L3 optimization: stream-affinity routing vs shared queue
+    println!("\nperf: service reconfigs — shared queue vs stream affinity (12 streams, 4 workers)");
+    for affinity in [false, true] {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 4,
+            affinity,
+            ..Default::default()
+        });
+        for i in 0..12u64 {
+            svc.register(i, fit.apot.regs.clone(), ApproxKind::Apot);
+        }
+        let data: Vec<i32> = (0..2048).collect();
+        let t0 = std::time::Instant::now();
+        let mut pend = Vec::new();
+        for i in 0..600u64 {
+            pend.push(svc.submit(i % 12, data.clone()));
+        }
+        for p in pend {
+            p.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let m = svc.shutdown();
+        println!(
+            "  affinity={affinity:<5} reconfigs {:>4} ({} cycles)  {:.2} Melem/s",
+            m.reconfigs,
+            m.reconfig_cycles,
+            m.elements as f64 / dt / 1e6
+        );
+    }
+}
+
+// appended: DSE + service-affinity ablations are invoked from main() via
+// the helper below (kept separate to keep main() readable).

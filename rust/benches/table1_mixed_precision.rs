@@ -1,0 +1,16 @@
+//! Regenerates paper Table I: unified vs mixed-precision QNNs (accuracy,
+//! weight memory, ratio vs the mixed baseline) on the MNIST-like task.
+//! Also micro-benches the integer engine the comparison runs on.
+
+use grau::coordinator::experiments::{table1, Ctx};
+use grau::util::bench::bench_header;
+use std::path::Path;
+
+fn main() {
+    bench_header(
+        "table1_mixed_precision",
+        "Table I — unified vs mixed precision (MLP + CNN on MNIST-like)",
+    );
+    let ctx = Ctx::new(Path::new("artifacts")).expect("ctx");
+    table1::run(&ctx).expect("table1");
+}

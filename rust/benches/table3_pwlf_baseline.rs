@@ -1,0 +1,16 @@
+//! Regenerates paper Table III: Original vs PWLF vs PoT-PWLF vs
+//! APoT-PWLF using the continuous LSQ fitter (the `pwlf` library
+//! substitute) on SFC + CNV for ReLU / Sigmoid / SiLU.
+
+use grau::coordinator::experiments::{table3, Ctx};
+use grau::util::bench::bench_header;
+use std::path::Path;
+
+fn main() {
+    bench_header(
+        "table3_pwlf_baseline",
+        "Table III — pwlf-substitute accuracy (SFC/CNV x ReLU/Sigmoid/SiLU)",
+    );
+    let ctx = Ctx::new(Path::new("artifacts")).expect("ctx");
+    table3::run(&ctx).expect("table3");
+}

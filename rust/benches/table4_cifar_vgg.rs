@@ -1,0 +1,16 @@
+//! Regenerates paper Table IV: the greedy-PWLF sweep on CIFAR-like /
+//! VGG16 (precisions x activations x segments x exponent windows).
+//! Full sweep is large; set GRAU_QUICK=1 to trim axes.
+
+use grau::coordinator::experiments::{table4, Ctx};
+use grau::util::bench::bench_header;
+use std::path::Path;
+
+fn main() {
+    bench_header(
+        "table4_cifar_vgg",
+        "Table IV — greedy-PWLF on CIFAR-like with VGG16",
+    );
+    let ctx = Ctx::new(Path::new("artifacts")).expect("ctx");
+    table4::run(&ctx).expect("table4");
+}

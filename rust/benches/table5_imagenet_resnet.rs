@@ -1,0 +1,15 @@
+//! Regenerates paper Table V: greedy-PWLF on ImageNet-like / ResNet18
+//! (8-bit + mixed precision, ReLU and ReLU+SiLU, Top-1/Top-5).
+
+use grau::coordinator::experiments::{table5, Ctx};
+use grau::util::bench::bench_header;
+use std::path::Path;
+
+fn main() {
+    bench_header(
+        "table5_imagenet_resnet",
+        "Table V — greedy-PWLF on ImageNet-like with ResNet18",
+    );
+    let ctx = Ctx::new(Path::new("artifacts")).expect("ctx");
+    table5::run(&ctx).expect("table5");
+}

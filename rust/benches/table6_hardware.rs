@@ -1,0 +1,50 @@
+//! Regenerates paper Table VI: LUT/FF/Fmax/delay/power/PDP/ADP and
+//! pipeline depth for all 16 activation-unit instances, cross-checked
+//! against the cycle-accurate simulators; plus throughput micro-benches
+//! of the three hardware models.
+
+use grau::act::{Activation, FoldedActivation};
+use grau::coordinator::experiments::{table6, Ctx};
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::hw::mt::MtUnit;
+use grau::hw::pipeline::PipelinedGrau;
+use grau::hw::serial::SerialGrau;
+use grau::util::bench::{bench_header, Bencher};
+use grau::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    bench_header(
+        "table6_hardware",
+        "Table VI — hardware results of MT, PoT-PWLF and APoT-PWLF units",
+    );
+    let ctx = Ctx::new(Path::new("artifacts")).expect("ctx");
+    table6::run(&ctx).expect("table6");
+
+    // simulator throughput micro-benches
+    let f = FoldedActivation::new(0.004, 0.05, Activation::Silu, 1.0 / 120.0, 8);
+    let fit = fit_folded(&f, -2000, 2000, FitOptions::default());
+    let mut rng = Rng::new(5);
+    let xs: Vec<i32> = (0..10_000).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
+
+    let regs = fit.apot.regs.clone();
+    Bencher::new("functional GrauRegisters::eval x10k")
+        .elements(10_000)
+        .run(|| xs.iter().map(|&x| regs.eval(x)).sum::<i32>());
+
+    let mut hw = PipelinedGrau::new(fit.apot.regs.clone(), ApproxKind::Apot);
+    Bencher::new("cycle-accurate PipelinedGrau x10k")
+        .elements(10_000)
+        .run(|| hw.process_stream(&xs).1.cycles);
+
+    let ser = SerialGrau::new(fit.apot.regs.clone(), ApproxKind::Apot);
+    Bencher::new("cycle-accurate SerialGrau x10k")
+        .elements(10_000)
+        .run(|| ser.process_stream(&xs).1.cycles);
+
+    let mt = MtUnit::from_folded(&f, -4000, 4000);
+    Bencher::new("functional MtUnit::eval (255 thresholds) x10k")
+        .elements(10_000)
+        .run(|| xs.iter().map(|&x| mt.eval(x)).sum::<i32>());
+}

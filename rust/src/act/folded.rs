@@ -1,0 +1,117 @@
+//! The folded nonlinearity: BN + activation + re-quantization in one map.
+
+use crate::act::{qrange, Activation};
+
+/// One output channel's folded activation black box (paper §II-A):
+///
+/// `F(m) = clamp(round(act(a*m + b) / s_out), qmin, qmax)`
+///
+/// where `m` is the integer MAC output, `(a, b)` folds the weight/input
+/// quantization steps and BatchNorm, and `s_out` is the next layer's
+/// activation quantization step.
+#[derive(Clone, Debug)]
+pub struct FoldedActivation {
+    pub a: f64,
+    pub b: f64,
+    pub act: Activation,
+    pub s_out: f64,
+    pub n_bits: u8,
+}
+
+impl FoldedActivation {
+    pub fn new(a: f64, b: f64, act: Activation, s_out: f64, n_bits: u8) -> Self {
+        assert!(s_out > 0.0, "output step must be positive");
+        FoldedActivation {
+            a,
+            b,
+            act,
+            s_out,
+            n_bits,
+        }
+    }
+
+    /// Continuous (pre-quantization) value at MAC output `m`.
+    #[inline]
+    pub fn real(&self, m: f64) -> f64 {
+        self.act.eval(self.a * m + self.b) / self.s_out
+    }
+
+    /// The exact quantized output the hardware must reproduce.
+    #[inline]
+    pub fn eval(&self, m: i64) -> i32 {
+        let (qmin, qmax) = qrange(self.n_bits);
+        let v = self.real(m as f64).round_ties_even();
+        (v as i64).clamp(qmin as i64, qmax as i64) as i32
+    }
+
+    /// Sample `n` evenly spaced integer points over `[lo, hi]` (the paper
+    /// doubles the observed MAC range and takes 1000 samples).  The
+    /// values are clamped to the quantized output rails — the hardware
+    /// must reproduce the *clamped* black box (the visible saturation in
+    /// the paper's Figure 2 SiLU plots).
+    pub fn sample(&self, lo: i64, hi: i64, n: usize) -> Vec<(i64, f64)> {
+        assert!(hi > lo && n >= 2);
+        let (qmin, qmax) = qrange(self.n_bits);
+        let mut pts = Vec::with_capacity(n);
+        let span = (hi - lo) as f64;
+        let mut last_x = i64::MIN;
+        for i in 0..n {
+            let x = lo + (span * i as f64 / (n - 1) as f64).round() as i64;
+            if x == last_x {
+                continue; // dedupe when range < n
+            }
+            last_x = x;
+            let y = self.real(x as f64).clamp(qmin as f64, qmax as f64);
+            pts.push((x, y));
+        }
+        pts
+    }
+
+    /// Doubled-range sampling exactly as the paper describes.
+    pub fn sample_doubled(&self, mac_lo: i64, mac_hi: i64, n: usize) -> Vec<(i64, f64)> {
+        let mid = (mac_lo + mac_hi) / 2;
+        let half = ((mac_hi - mac_lo) / 2).max(1);
+        self.sample(mid - 2 * half, mid + 2 * half, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_fold_quantizes() {
+        let f = FoldedActivation::new(0.01, 0.5, Activation::Relu, 0.05, 8);
+        assert_eq!(f.eval(-1000), 0); // act(-9.5) = 0
+        assert_eq!(f.eval(0), 10); // 0.5/0.05
+        assert_eq!(f.eval(100_000), 127); // clamp
+    }
+
+    #[test]
+    fn eval_matches_real_rounding() {
+        let f = FoldedActivation::new(0.002, -0.3, Activation::Silu, 0.01, 8);
+        for m in [-4000i64, -100, 0, 55, 999, 12345] {
+            let r = f.real(m as f64).round_ties_even();
+            let e = f.eval(m) as f64;
+            if (-128.0..=127.0).contains(&r) {
+                assert_eq!(e, r, "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_covers_doubled_range() {
+        let f = FoldedActivation::new(0.001, 0.0, Activation::Sigmoid, 0.004, 8);
+        let pts = f.sample_doubled(-1000, 1000, 101);
+        assert_eq!(pts.first().unwrap().0, -2000);
+        assert_eq!(pts.last().unwrap().0, 2000);
+        assert!(pts.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn one_bit_binary_range() {
+        let f = FoldedActivation::new(0.01, 0.0, Activation::Identity, 1.0, 1);
+        assert_eq!(f.eval(-100_000), -1);
+        assert_eq!(f.eval(100_000), 1);
+    }
+}

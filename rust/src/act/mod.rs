@@ -1,0 +1,110 @@
+//! Nonlinear activation library and the *folded* scalar map GRAU
+//! approximates in hardware.
+//!
+//! In a QNN accelerator the activation unit sits between the integer MAC
+//! array and the next layer's quantized input: BatchNorm, the nonlinear
+//! activation and output re-quantization fold into one scalar function
+//! `F(m) = quantize(act(a*m + b) / s_out)` per output channel (paper
+//! §II-A).  [`FoldedActivation`] is that black box; the fitting pipeline
+//! samples it and the hardware units replay it.
+
+pub mod folded;
+
+pub use folded::FoldedActivation;
+
+/// The nonlinear activations the paper evaluates (plus a few extras from
+/// its related-work section, used in the ablation benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Relu,
+    Sigmoid,
+    Silu,
+    Tanh,
+    Softsign,
+    Identity,
+}
+
+impl Activation {
+    pub fn eval(self, z: f64) -> f64 {
+        match self {
+            Activation::Relu => z.max(0.0),
+            Activation::Sigmoid => 1.0 / (1.0 + (-z).exp()),
+            Activation::Silu => z / (1.0 + (-z).exp()),
+            Activation::Tanh => z.tanh(),
+            Activation::Softsign => z / (1.0 + z.abs()),
+            Activation::Identity => z,
+        }
+    }
+
+    /// Monotonically increasing on all of R?  (SiLU is not — the property
+    /// behind the paper's Figure 1 MT failure.)
+    pub fn monotone(self) -> bool {
+        !matches!(self, Activation::Silu)
+    }
+
+    pub fn parse(name: &str) -> Option<Activation> {
+        Some(match name {
+            "relu" => Activation::Relu,
+            "sigmoid" => Activation::Sigmoid,
+            "silu" => Activation::Silu,
+            "tanh" => Activation::Tanh,
+            "softsign" => Activation::Softsign,
+            "none" | "identity" => Activation::Identity,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Silu => "silu",
+            Activation::Tanh => "tanh",
+            Activation::Softsign => "softsign",
+            Activation::Identity => "identity",
+        }
+    }
+}
+
+/// Signed quantized range for `n`-bit outputs; 1-bit is the binary
+/// convention {-1, +1} (matches `python/compile/specs.py::qrange`).
+pub fn qrange(n_bits: u8) -> (i32, i32) {
+    if n_bits == 1 {
+        (-1, 1)
+    } else {
+        (-(1 << (n_bits - 1)), (1 << (n_bits - 1)) - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activation_values() {
+        assert_eq!(Activation::Relu.eval(-2.0), 0.0);
+        assert_eq!(Activation::Relu.eval(3.0), 3.0);
+        assert!((Activation::Sigmoid.eval(0.0) - 0.5).abs() < 1e-12);
+        assert!(Activation::Silu.eval(-1.0) < 0.0); // non-monotone dip
+        assert!((Activation::Tanh.eval(100.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn silu_is_non_monotone() {
+        // SiLU has a minimum near z = -1.278
+        let a = Activation::Silu.eval(-3.0);
+        let b = Activation::Silu.eval(-1.278);
+        let c = Activation::Silu.eval(0.0);
+        assert!(b < a && b < c);
+        assert!(!Activation::Silu.monotone());
+        assert!(Activation::Sigmoid.monotone());
+    }
+
+    #[test]
+    fn qrange_widths() {
+        assert_eq!(qrange(8), (-128, 127));
+        assert_eq!(qrange(4), (-8, 7));
+        assert_eq!(qrange(2), (-2, 1));
+        assert_eq!(qrange(1), (-1, 1));
+    }
+}

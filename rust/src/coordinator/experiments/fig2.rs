@@ -1,0 +1,39 @@
+//! Figure 2: original folded nonlinearity vs PWLF vs PoT-PWLF vs
+//! APoT-PWLF (Sigmoid and SiLU, 6 segments, 8-bit outputs).  Emits the
+//! four curves per activation as CSV plus per-curve RMSE.
+
+use anyhow::Result;
+
+use crate::act::{Activation, FoldedActivation};
+use crate::coordinator::experiments::Ctx;
+use crate::fit::pipeline::{fit_folded, FitOptions};
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut summary = String::new();
+    for (name, act, s_out) in [
+        ("sigmoid", Activation::Sigmoid, 1.0 / 120.0),
+        ("silu", Activation::Silu, 1.0 / 30.0), // drives outputs past the rail -> visible clamp
+    ] {
+        let f = FoldedActivation::new(0.004, 0.0, act, s_out, 8);
+        let r = fit_folded(&f, -1000, 1000, FitOptions { segments: 6, n_shifts: 16, ..Default::default() });
+        let mut csv = String::from("x,original,pwlf,pot,apot\n");
+        for x in (-2000i64..=2000).step_by(4) {
+            csv.push_str(&format!(
+                "{x},{},{},{},{}\n",
+                f.eval(x),
+                r.pwlf.eval(x),
+                r.pot.regs.eval(x as i32),
+                r.apot.regs.eval(x as i32),
+            ));
+        }
+        ctx.write_result(&format!("fig2_{name}.csv"), &csv)?;
+        summary.push_str(&format!(
+            "fig2 {name}: rmse pwlf={:.3} pot={:.3} apot={:.3} (LSB), pot window {}, apot window {}\n",
+            r.rmse_pwlf, r.rmse_pot, r.rmse_apot,
+            r.pot.regs.exponent_range(), r.apot.regs.exponent_range(),
+        ));
+    }
+    println!("{summary}");
+    ctx.write_result("fig2_summary.txt", &summary)?;
+    Ok(summary)
+}

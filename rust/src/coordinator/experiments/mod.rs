@@ -1,0 +1,79 @@
+//! Experiment harness: one module per paper table/figure.  Each `run`
+//! returns the rendered table(s) and writes CSV/markdown into
+//! `results/`; the bench targets under `rust/benches/` and the CLI both
+//! call straight into these.
+
+pub mod fig1;
+pub mod fig2;
+pub mod table1;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    /// training steps override (env GRAU_STEPS); 0 = per-config default
+    pub steps_override: usize,
+    /// quick mode trims sweep axes (env GRAU_QUICK=1 or --quick)
+    pub quick: bool,
+    pub threads: usize,
+    pub eval_samples: usize,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &Path) -> Result<Ctx> {
+        let quick = std::env::var("GRAU_QUICK").map(|v| v == "1").unwrap_or(false);
+        let steps_override = std::env::var("GRAU_STEPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        let results = artifacts
+            .parent()
+            .unwrap_or(Path::new("."))
+            .join("results");
+        std::fs::create_dir_all(&results)?;
+        Ok(Ctx {
+            rt: Runtime::cpu()?,
+            artifacts: artifacts.to_path_buf(),
+            results,
+            steps_override,
+            quick,
+            threads: crate::util::threadpool::default_threads(),
+            eval_samples: if quick { 256 } else { 500 },
+        })
+    }
+
+    pub fn steps_for(&self, config: &str) -> usize {
+        if self.steps_override > 0 {
+            self.steps_override
+        } else {
+            crate::coordinator::trainer::default_steps(config)
+        }
+    }
+
+    pub fn write_result(&self, name: &str, content: &str) -> Result<()> {
+        let path = self.results.join(name);
+        std::fs::write(&path, content)?;
+        println!("[results] wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Format an accuracy as the paper prints them.
+pub fn acc(v: f64) -> String {
+    if v.is_nan() {
+        "-".into()
+    } else {
+        format!("{:.2}%", 100.0 * v)
+    }
+}

@@ -1,0 +1,62 @@
+//! Table I: unified-precision vs mixed-precision QNNs (MLP + CNN,
+//! MNIST-like) — accuracy, accuracy loss vs the mixed baseline, weight
+//! memory, and memory ratio.
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{acc, Ctx};
+use crate::coordinator::trainer::{dataset_for, train_config};
+use crate::qnn::{ActMode, Engine};
+use crate::util::table::Table;
+
+pub struct Row {
+    pub config: String,
+    pub top1: f64,
+    pub mem_bytes: f64,
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut out = String::new();
+    for family in ["t1_mlp", "t1_cnn"] {
+        let mut rows = Vec::new();
+        for tag in ["full1", "mixed", "full8"] {
+            let name = format!("{family}_{tag}");
+            let tr = train_config(
+                &ctx.rt,
+                &ctx.artifacts,
+                &name,
+                ctx.steps_for(&name),
+                true,
+                true,
+            )?;
+            let splits = dataset_for(&name);
+            let eng = Engine::new(tr.graph.clone(), &tr.bundle, ActMode::Exact)?;
+            let res = eng.evaluate(&splits.test, ctx.eval_samples, ctx.threads);
+            rows.push(Row {
+                config: tag.to_string(),
+                top1: res.top1,
+                mem_bytes: tr.graph.weight_bytes(),
+            });
+        }
+        let base = &rows[1]; // mixed = baseline, as in the paper
+        let base_acc = base.top1;
+        let base_mem = base.mem_bytes;
+        let mut t = Table::new(
+            &format!("Table I ({family}) — unified vs mixed precision"),
+            &["Precision", "Accuracy", "Loss vs mixed", "Memory/Bytes", "Baseline ratio"],
+        );
+        for r in &rows {
+            t.row(vec![
+                r.config.clone(),
+                acc(r.top1),
+                format!("{:+.2}%", 100.0 * (base_acc - r.top1)),
+                format!("{:.0}", r.mem_bytes),
+                format!("{:.2}", r.mem_bytes / base_mem),
+            ]);
+        }
+        out.push_str(&t.to_string());
+    }
+    println!("{out}");
+    ctx.write_result("table1.md", &out)?;
+    Ok(out)
+}

@@ -1,0 +1,65 @@
+//! Table III: the `pwlf`-library-era comparison — Original vs PWLF vs
+//! PoT-PWLF vs APoT-PWLF on SFC (MNIST-like) and CNV (CIFAR-like) for
+//! ReLU / Sigmoid / SiLU, using the continuous LSQ fitter (the library
+//! substitute) with 6 segments.
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{acc, Ctx};
+use crate::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};
+use crate::coordinator::trainer::{dataset_for, train_config};
+use crate::fit::pipeline::Fitter;
+use crate::fit::ApproxKind;
+use crate::qnn::{ActMode, Engine};
+use crate::util::table::Table;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut t = Table::new(
+        "Table III — pwlf-substitute (LSQ) fitting, 6 segments, 16-exponent window",
+        &["Model", "Activation", "Original", "PWLF", "PoT-PWLF", "APoT-PWLF"],
+    );
+    for family in ["t3_sfc", "t3_cnv"] {
+        for act in ["relu", "sigmoid", "silu"] {
+            let name = format!("{family}_{act}");
+            let tr = train_config(
+                &ctx.rt,
+                &ctx.artifacts,
+                &name,
+                ctx.steps_for(&name),
+                true,
+                true,
+            )?;
+            let splits = dataset_for(&name);
+            let opts = SweepOptions {
+                fitter: Fitter::Lsq,
+                segments: 6,
+                n_shifts: 16,
+                eval_samples: ctx.eval_samples,
+                threads: ctx.threads,
+                fit_samples: if ctx.quick { 300 } else { 600 },
+                ..Default::default()
+            };
+            let exact = Engine::new(tr.graph.clone(), &tr.bundle, ActMode::Exact)?;
+            let orig = exact.evaluate(&splits.test, opts.eval_samples, opts.threads);
+            let ranges = exact.calibrate(&splits.train, opts.calib_samples);
+            let fits = fit_model_with_ranges(&exact, &ranges, opts);
+            let mut cells = vec![acc(orig.top1)];
+            for kind in [ApproxKind::Pwlf, ApproxKind::Pot, ApproxKind::Apot] {
+                let r = eval_mode(&tr.graph, &tr.bundle, fits.act_mode(kind), &splits.test, opts);
+                cells.push(acc(r.top1));
+            }
+            t.row(vec![
+                family.to_string(),
+                act.to_string(),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+                cells[3].clone(),
+            ]);
+        }
+    }
+    let out = t.to_string();
+    println!("{out}");
+    ctx.write_result("table3.md", &out)?;
+    Ok(out)
+}

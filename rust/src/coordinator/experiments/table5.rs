@@ -1,0 +1,69 @@
+//! Table V: greedy-PWLF on ImageNet-like / ResNet18 — 8-bit and
+//! mixed-precision, ReLU and ReLU+SiLU, Top-1 / Top-5 for PWLF and
+//! APoT-PWLF over segments {4,6,8}.
+
+use anyhow::Result;
+
+use crate::coordinator::experiments::{acc, Ctx};
+use crate::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};
+use crate::coordinator::trainer::{dataset_for, train_config};
+use crate::fit::ApproxKind;
+use crate::qnn::{ActMode, Engine};
+use crate::util::table::Table;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let segments: &[usize] = if ctx.quick { &[4, 8] } else { &[4, 6, 8] };
+    let mut out = String::new();
+    for prec in ["q8", "mixed"] {
+        for act in ["relu", "relusilu"] {
+            let name = format!("t5_rn_{act}_{prec}");
+            let tr = train_config(
+                &ctx.rt,
+                &ctx.artifacts,
+                &name,
+                ctx.steps_for(&name),
+                true,
+                true,
+            )?;
+            let splits = dataset_for(&name);
+            let opts = SweepOptions {
+                eval_samples: ctx.eval_samples,
+                threads: ctx.threads,
+                fit_samples: if ctx.quick { 300 } else { 600 },
+                n_shifts: 8,
+                ..Default::default()
+            };
+            let exact = Engine::new(tr.graph.clone(), &tr.bundle, ActMode::Exact)?;
+            let orig = exact.evaluate(&splits.test, opts.eval_samples, opts.threads);
+            let ranges = exact.calibrate(&splits.train, opts.calib_samples);
+
+            let mut t = Table::new(
+                &format!(
+                    "Table V cell — ResNet18 {act} {prec} (original top1 {} top5 {})",
+                    acc(orig.top1),
+                    acc(orig.top5)
+                ),
+                &["Segments", "PWLF top1", "PWLF top5", "APoT(win)", "APoT top1", "APoT top5"],
+            );
+            for &seg in segments {
+                let o = SweepOptions { segments: seg, ..opts };
+                let fits = fit_model_with_ranges(&exact, &ranges, o);
+                let p = eval_mode(&tr.graph, &tr.bundle, fits.act_mode(ApproxKind::Pwlf), &splits.test, o);
+                let a = eval_mode(&tr.graph, &tr.bundle, fits.act_mode(ApproxKind::Apot), &splits.test, o);
+                t.row(vec![
+                    seg.to_string(),
+                    acc(p.top1),
+                    acc(p.top5),
+                    fits.apot_window.clone(),
+                    acc(a.top1),
+                    acc(a.top5),
+                ]);
+            }
+            let s = t.to_string();
+            println!("{s}");
+            out.push_str(&s);
+        }
+    }
+    ctx.write_result("table5.md", &out)?;
+    Ok(out)
+}

@@ -1,0 +1,123 @@
+//! Table VI: hardware results for all 16 activation-unit instances —
+//! LUT / FF / Fmax / delay / power / PDP / ADP from the calibrated cost
+//! model, plus *measured* pipeline depth and cycle counts from the
+//! cycle-accurate simulators (the Vivado-substitute validation loop).
+
+use anyhow::Result;
+
+use crate::act::{Activation, FoldedActivation};
+use crate::coordinator::experiments::Ctx;
+use crate::fit::pipeline::{fit_folded, FitOptions};
+use crate::fit::ApproxKind;
+use crate::hw::cost::{estimate, table_vi_instances, UnitKind};
+use crate::hw::mt::MtUnit;
+use crate::hw::pipeline::PipelinedGrau;
+use crate::hw::serial::SerialGrau;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut t = Table::new(
+        "Table VI — hardware results (cost model + cycle-accurate sim)",
+        &[
+            "Activation Unit",
+            "LUT",
+            "FF",
+            "Fmax",
+            "Delay ns",
+            "Power W",
+            "PDP",
+            "ADP",
+            "depth@8b (model)",
+            "depth@8b (sim)",
+            "cycles/1k elems (sim)",
+        ],
+    );
+
+    // A representative fitted workload drives the simulators.
+    let f = FoldedActivation::new(0.004, 0.05, Activation::Silu, 1.0 / 120.0, 8);
+    let mut rng = Rng::new(99);
+    let inputs: Vec<i32> = (0..1000).map(|_| rng.range_i64(-3000, 3000) as i32).collect();
+
+    for (label, kind) in table_vi_instances() {
+        let c = estimate(kind);
+        let (sim_depth, sim_cycles) = match kind {
+            UnitKind::MtPipelined { .. } => {
+                let mt = MtUnit::from_folded(&f, -4000, 4000);
+                let (_, st) = mt.process_stream_pipelined(&inputs);
+                (mt.pipelined_depth() as u64, st.cycles)
+            }
+            UnitKind::MtSerial { .. } => {
+                let mt = MtUnit::from_folded(&f, -4000, 4000);
+                let (_, st) = mt.process_stream_serial(&inputs);
+                (st.first_latency, st.cycles)
+            }
+            UnitKind::GrauPipelined {
+                kind: k,
+                segments,
+                exponents,
+            } => {
+                let r = fit_folded(
+                    &f,
+                    -2000,
+                    2000,
+                    FitOptions {
+                        segments: segments as usize,
+                        n_shifts: exponents as u8,
+                        ..Default::default()
+                    },
+                );
+                let regs = if k == ApproxKind::Pot { r.pot.regs } else { r.apot.regs };
+                let mut hw = PipelinedGrau::new(regs, k);
+                let (_, st) = hw.process_stream(&inputs);
+                (hw.depth() as u64, st.cycles)
+            }
+            UnitKind::GrauSerial { kind: k } => {
+                let r = fit_folded(&f, -2000, 2000, FitOptions::default());
+                let regs = if k == ApproxKind::Pot { r.pot.regs } else { r.apot.regs };
+                let ser = SerialGrau::new(regs, k);
+                let (_, st) = ser.process_stream(&inputs);
+                (ser.cycles_per_element(), st.cycles)
+            }
+            UnitKind::DirectLut { .. } => (1, 1000),
+        };
+        t.row(vec![
+            label,
+            c.lut.to_string(),
+            c.ff.to_string(),
+            format!("{:.0}MHz", c.fmax_mhz),
+            format!("{:.3}", c.delay_ns),
+            format!("{:.3}", c.power_w),
+            format!("{:.4}", c.pdp()),
+            format!("{:.1}", c.adp()),
+            c.depth_8bit.to_string(),
+            sim_depth.to_string(),
+            sim_cycles.to_string(),
+        ]);
+    }
+
+    // headline summary
+    let mt = estimate(UnitKind::MtPipelined { n_bits: 8 });
+    let best = estimate(UnitKind::GrauPipelined {
+        kind: ApproxKind::Pot,
+        segments: 4,
+        exponents: 8,
+    });
+    let worst = estimate(UnitKind::GrauPipelined {
+        kind: ApproxKind::Apot,
+        segments: 8,
+        exponents: 16,
+    });
+    let mut out = t.to_string();
+    out.push_str(&format!(
+        "\nheadline: GRAU LUT range {}..{} vs MT {} -> reduction {:.1}%..{:.1}% (paper: >90%)\n",
+        best.lut,
+        worst.lut,
+        mt.lut,
+        100.0 * (1.0 - worst.lut as f64 / mt.lut as f64),
+        100.0 * (1.0 - best.lut as f64 / mt.lut as f64),
+    ));
+    println!("{out}");
+    ctx.write_result("table6.md", &out)?;
+    Ok(out)
+}

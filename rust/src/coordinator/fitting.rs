@@ -1,0 +1,187 @@
+//! Per-model fitting pipeline: calibrate MAC ranges, fit every
+//! activation site/channel, and build the engine's activation backends —
+//! the paper's §II-A model-conversion flow, parallelized.
+
+use crate::fit::pipeline::{fit_samples, FitOptions, Fitter};
+use crate::fit::{ApproxKind, Pwlf};
+use crate::hw::mt::MtUnit;
+use crate::hw::GrauRegisters;
+use crate::qnn::engine::MacRanges;
+use crate::qnn::{ActMode, Engine, ExportBundle, ModelGraph};
+use crate::util::dataset::Dataset;
+use crate::util::threadpool::parallel_map;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    pub fitter: Fitter,
+    pub segments: usize,
+    pub n_shifts: u8,
+    pub fit_samples: usize,
+    pub calib_samples: usize,
+    pub eval_samples: usize,
+    pub threads: usize,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            fitter: Fitter::Greedy,
+            segments: 6,
+            n_shifts: 8,
+            fit_samples: 1000,
+            calib_samples: 64,
+            eval_samples: 500,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+/// All per-channel fits of one model, reusable across ApproxKinds.
+pub struct ModelFits {
+    /// [site][channel]
+    pub pwlf: Vec<Vec<Pwlf>>,
+    pub pot: Vec<Vec<GrauRegisters>>,
+    pub apot: Vec<Vec<GrauRegisters>>,
+    /// modal shift window per kind, as the paper's `(2^-a ~ 2^-b)` label
+    pub pot_window: String,
+    pub apot_window: String,
+}
+
+/// Calibrate and fit every activation site of a model.
+pub fn fit_model(
+    engine_exact: &Engine,
+    calib: &Dataset,
+    opts: SweepOptions,
+) -> ModelFits {
+    let ranges = engine_exact.calibrate(calib, opts.calib_samples);
+    fit_model_with_ranges(engine_exact, &ranges, opts)
+}
+
+pub fn fit_model_with_ranges(
+    engine_exact: &Engine,
+    ranges: &MacRanges,
+    opts: SweepOptions,
+) -> ModelFits {
+    let n_sites = engine_exact.site_channels().len();
+    let fit_opts = FitOptions {
+        fitter: opts.fitter,
+        segments: opts.segments,
+        n_shifts: opts.n_shifts,
+        samples: opts.fit_samples,
+        ..Default::default()
+    };
+
+    let mut pwlf = Vec::with_capacity(n_sites);
+    let mut pot = Vec::with_capacity(n_sites);
+    let mut apot = Vec::with_capacity(n_sites);
+    let mut window_votes_pot: Vec<u8> = Vec::new();
+    let mut window_votes_apot: Vec<u8> = Vec::new();
+
+    for site in 0..n_sites {
+        let chans = engine_exact.site_channels()[site];
+        let fits = parallel_map(chans, opts.threads, |ch| {
+            let f = engine_exact.folded(site, ch);
+            let (lo, hi) = ranges.ranges[site][ch];
+            let (lo, hi) = if lo > hi {
+                (-1000i64, 1000i64) // channel never observed: default span
+            } else if lo as i64 == hi as i64 {
+                (lo as i64 - 500, hi as i64 + 500)
+            } else {
+                (lo as i64, hi as i64)
+            };
+            let samples = f.sample_doubled(lo, hi, fit_opts.samples);
+            fit_samples(&samples, f.n_bits, fit_opts)
+        });
+        let mut site_pwlf = Vec::with_capacity(chans);
+        let mut site_pot = Vec::with_capacity(chans);
+        let mut site_apot = Vec::with_capacity(chans);
+        for r in fits {
+            window_votes_pot.push(r.pot.shift_lo);
+            window_votes_apot.push(r.apot.shift_lo);
+            site_pwlf.push(r.pwlf);
+            site_pot.push(r.pot.regs);
+            site_apot.push(r.apot.regs);
+        }
+        pwlf.push(site_pwlf);
+        pot.push(site_pot);
+        apot.push(site_apot);
+    }
+
+    let win = |votes: &[u8], n_shifts: u8| -> String {
+        if votes.is_empty() {
+            return "-".into();
+        }
+        let mut counts = [0usize; 32];
+        for &v in votes {
+            counts[v as usize] += 1;
+        }
+        let modal = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .unwrap()
+            .0 as i32;
+        format!("(2^-{} ~ 2^-{})", modal + n_shifts as i32 - 1, modal)
+    };
+    ModelFits {
+        pot_window: win(&window_votes_pot, opts.n_shifts),
+        apot_window: win(&window_votes_apot, opts.n_shifts),
+        pwlf,
+        pot,
+        apot,
+    }
+}
+
+impl ModelFits {
+    pub fn act_mode(&self, kind: ApproxKind) -> ActMode {
+        match kind {
+            ApproxKind::Pwlf => ActMode::Pwlf(self.pwlf.clone()),
+            ApproxKind::Pot => ActMode::Grau(self.pot.clone()),
+            ApproxKind::Apot => ActMode::Grau(self.apot.clone()),
+        }
+    }
+
+    pub fn window(&self, kind: ApproxKind) -> &str {
+        match kind {
+            ApproxKind::Pwlf => "-",
+            ApproxKind::Pot => &self.pot_window,
+            ApproxKind::Apot => &self.apot_window,
+        }
+    }
+}
+
+/// Build the MT-baseline activation mode (FINN-style per-channel
+/// threshold units) from calibrated ranges.
+pub fn mt_mode(engine_exact: &Engine, ranges: &MacRanges) -> ActMode {
+    let n_sites = engine_exact.site_channels().len();
+    let mut sites = Vec::with_capacity(n_sites);
+    for site in 0..n_sites {
+        let chans = engine_exact.site_channels()[site];
+        let units = (0..chans)
+            .map(|ch| {
+                let f = engine_exact.folded(site, ch);
+                let (lo, hi) = ranges.ranges[site][ch];
+                let (lo, hi) = if lo > hi {
+                    (-1000i64, 1000i64)
+                } else {
+                    (lo as i64 * 2 - 1, hi as i64 * 2 + 1)
+                };
+                MtUnit::from_folded(&f, lo, hi.max(lo + 2))
+            })
+            .collect();
+        sites.push(units);
+    }
+    ActMode::Mt(sites)
+}
+
+/// Evaluate a (graph, bundle) pair under one activation mode.
+pub fn eval_mode(
+    graph: &ModelGraph,
+    bundle: &ExportBundle,
+    mode: ActMode,
+    test: &Dataset,
+    opts: SweepOptions,
+) -> crate::qnn::EvalResult {
+    let eng = Engine::new(graph.clone(), bundle, mode).expect("engine");
+    eng.evaluate(test, opts.eval_samples, opts.threads)
+}

@@ -1,0 +1,9 @@
+//! L3 coordinator: the training orchestrator, the per-model fitting
+//! pipeline, the activation *service* (router + dynamic batcher +
+//! reconfiguration scheduler over a bank of GRAU units), and the
+//! experiment harness that regenerates every table and figure.
+
+pub mod experiments;
+pub mod fitting;
+pub mod service;
+pub mod trainer;

@@ -1,0 +1,475 @@
+//! The activation service — L3's vLLM-router-style substrate.
+//!
+//! Models the activation subsystem of a QNN accelerator as a service: a
+//! request is a stream of MAC outputs tagged with a *stream id* (one per
+//! layer/channel-group configuration).  Requests are routed by stream
+//! affinity to worker threads; each worker owns ONE GRAU instance and
+//! must *reconfigure* it (reload thresholds + shifter settings — the
+//! paper's runtime reconfiguration) whenever consecutive batches carry
+//! different stream ids.  A dynamic batcher coalesces same-stream
+//! requests up to `max_batch` elements to amortize reconfiguration.
+//!
+//! Backends: `Functional` (bit-exact register-file model, the fast
+//! path), `CycleSim` (the cycle-accurate pipelined simulator — used to
+//! validate that service outputs equal hardware outputs bit-for-bit and
+//! to account cycles), and `Pjrt` (offload through the AOT-compiled L1
+//! Pallas kernel via the runtime — Python never involved).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::fit::ApproxKind;
+use crate::hw::pipeline::PipelinedGrau;
+use crate::hw::GrauRegisters;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Functional,
+    CycleSim,
+    /// PJRT offload (single worker; the executable lives on the worker)
+    Pjrt,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub backend: Backend,
+    /// Route each stream to a fixed worker (hash affinity).  Keeps a
+    /// stream's register file resident in "its" unit, so reconfiguration
+    /// only happens when a worker's stream set collides — the §Perf
+    /// optimization that removed per-batch reconfigs (EXPERIMENTS.md).
+    pub affinity: bool,
+    /// artifacts dir (needed for the Pjrt backend)
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 4,
+            max_batch: 8192,
+            backend: Backend::Functional,
+            affinity: true,
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+        }
+    }
+}
+
+pub struct ActRequest {
+    pub stream_id: u64,
+    pub data: Vec<i32>,
+    pub resp: Sender<ActResponse>,
+    pub t_submit: Instant,
+}
+
+#[derive(Debug)]
+pub struct ActResponse {
+    pub data: Vec<i32>,
+    pub latency_us: u64,
+}
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub elements: AtomicU64,
+    pub batches: AtomicU64,
+    pub reconfigs: AtomicU64,
+    pub reconfig_cycles: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    pub latency_us_sum: AtomicU64,
+    pub latency_us_max: AtomicU64,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            elements: self.elements.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            reconfigs: self.reconfigs.load(Ordering::Relaxed),
+            reconfig_cycles: self.reconfig_cycles.load(Ordering::Relaxed),
+            sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
+            latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub elements: u64,
+    pub batches: u64,
+    pub reconfigs: u64,
+    pub reconfig_cycles: u64,
+    pub sim_cycles: u64,
+    pub latency_us_sum: u64,
+    pub latency_us_max: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.latency_us_sum as f64 / self.requests as f64
+        }
+    }
+}
+
+type Registry = Arc<RwLock<HashMap<u64, (GrauRegisters, ApproxKind)>>>;
+
+pub struct ActivationService {
+    /// shared queue (affinity = false)
+    tx: Option<Sender<ActRequest>>,
+    /// per-worker queues (affinity = true)
+    worker_tx: Vec<Sender<ActRequest>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    registry: Registry,
+    pub metrics: Arc<Metrics>,
+    pub config: ServiceConfig,
+}
+
+impl ActivationService {
+    pub fn start(config: ServiceConfig) -> ActivationService {
+        let registry: Registry = Arc::new(RwLock::new(HashMap::new()));
+        let metrics = Arc::new(Metrics::default());
+        let n = if config.backend == Backend::Pjrt {
+            1
+        } else {
+            config.workers.max(1)
+        };
+        let mut workers = Vec::with_capacity(n);
+        let mut worker_tx = Vec::new();
+        let mut shared_tx = None;
+        if config.affinity {
+            // one queue per worker; the submit path routes by stream hash
+            for wid in 0..n {
+                let (tx, rx) = channel::<ActRequest>();
+                worker_tx.push(tx);
+                let rx = Arc::new(Mutex::new(rx));
+                let registry = Arc::clone(&registry);
+                let metrics = Arc::clone(&metrics);
+                let cfg = config.clone();
+                workers.push(std::thread::spawn(move || {
+                    worker_loop(wid, rx, registry, metrics, cfg);
+                }));
+            }
+        } else {
+            let (tx, rx) = channel::<ActRequest>();
+            shared_tx = Some(tx);
+            let rx = Arc::new(Mutex::new(rx));
+            for wid in 0..n {
+                let rx = Arc::clone(&rx);
+                let registry = Arc::clone(&registry);
+                let metrics = Arc::clone(&metrics);
+                let cfg = config.clone();
+                workers.push(std::thread::spawn(move || {
+                    worker_loop(wid, rx, registry, metrics, cfg);
+                }));
+            }
+        }
+        ActivationService {
+            tx: shared_tx,
+            worker_tx,
+            workers,
+            registry,
+            metrics,
+            config,
+        }
+    }
+
+    /// Register / replace a stream's GRAU configuration.
+    pub fn register(&self, stream_id: u64, regs: GrauRegisters, kind: ApproxKind) {
+        self.registry
+            .write()
+            .unwrap()
+            .insert(stream_id, (regs, kind));
+    }
+
+    /// Submit asynchronously; returns the response receiver.
+    pub fn submit(&self, stream_id: u64, data: Vec<i32>) -> Receiver<ActResponse> {
+        let (rtx, rrx) = channel();
+        let req = ActRequest {
+            stream_id,
+            data,
+            resp: rtx,
+            t_submit: Instant::now(),
+        };
+        if self.config.affinity {
+            // stream -> worker hash affinity (fibonacci hashing)
+            let w = (stream_id.wrapping_mul(0x9e3779b97f4a7c15) >> 32) as usize
+                % self.worker_tx.len();
+            self.worker_tx[w].send(req).ok();
+        } else {
+            self.tx.as_ref().expect("service running").send(req).ok();
+        }
+        rrx
+    }
+
+    /// Blocking convenience call.
+    pub fn call(&self, stream_id: u64, data: Vec<i32>) -> Result<ActResponse> {
+        let rx = self.submit(stream_id, data);
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        drop(self.tx.take());
+        self.worker_tx.clear();
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn worker_loop(
+    _wid: usize,
+    rx: Arc<Mutex<Receiver<ActRequest>>>,
+    registry: Registry,
+    metrics: Arc<Metrics>,
+    cfg: ServiceConfig,
+) {
+    // per-worker state: ONE hardware unit, reconfigured on stream switch
+    let mut current_stream: Option<u64> = None;
+    let mut unit: Option<PipelinedGrau> = None;
+    // PJRT backend state (created on this thread; executables are !Send)
+    let mut pjrt: Option<PjrtOffload> = if cfg.backend == Backend::Pjrt {
+        PjrtOffload::new(&cfg.artifacts_dir).ok()
+    } else {
+        None
+    };
+
+    loop {
+        // Take one request, then opportunistically coalesce same-stream
+        // requests up to max_batch elements.  NOTE: never block in recv()
+        // while holding the shared mutex — that starves the other
+        // workers' try_recv (deadlock); poll with a short timeout
+        // instead.
+        let first = {
+            let guard = rx.lock().unwrap();
+            match guard.recv_timeout(std::time::Duration::from_millis(1)) {
+                Ok(r) => Some(r),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        let Some(first) = first else { continue };
+        let mut batch: Vec<ActRequest> = vec![first];
+        let mut elems = batch[0].data.len();
+        {
+            let guard = rx.lock().unwrap();
+            while elems < cfg.max_batch {
+                match guard.try_recv() {
+                    Ok(r) => {
+                        elems += r.data.len();
+                        batch.push(r);
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // group by stream id to batch reconfigurations
+        batch.sort_by_key(|r| r.stream_id);
+        let mut i = 0usize;
+        while i < batch.len() {
+            let sid = batch[i].stream_id;
+            let mut j = i;
+            while j < batch.len() && batch[j].stream_id == sid {
+                j += 1;
+            }
+            let group = &batch[i..j];
+
+            // reconfigure if the unit holds a different stream's settings
+            let (regs, kind) = match registry.read().unwrap().get(&sid) {
+                Some((r, k)) => (r.clone(), *k),
+                None => {
+                    // unknown stream: identity passthrough
+                    for r in group {
+                        respond(r, r.data.clone(), &metrics);
+                    }
+                    i = j;
+                    continue;
+                }
+            };
+            if current_stream != Some(sid) {
+                let cost = match unit.as_mut() {
+                    Some(u) => u.reconfigure(regs.clone(), kind),
+                    None => {
+                        unit = Some(PipelinedGrau::new(regs.clone(), kind));
+                        (regs.n_segments as u64 - 1) + regs.n_segments as u64 + 2
+                    }
+                };
+                metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
+                metrics.reconfig_cycles.fetch_add(cost, Ordering::Relaxed);
+                current_stream = Some(sid);
+            }
+
+            for r in group {
+                let out = match cfg.backend {
+                    Backend::Functional => r.data.iter().map(|&x| regs.eval(x)).collect(),
+                    Backend::CycleSim => {
+                        let u = unit.as_mut().unwrap();
+                        let (out, stats) = u.process_stream(&r.data);
+                        metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
+                        out
+                    }
+                    Backend::Pjrt => match pjrt.as_mut() {
+                        Some(p) => p
+                            .run(&regs, &r.data)
+                            .unwrap_or_else(|_| r.data.iter().map(|&x| regs.eval(x)).collect()),
+                        None => r.data.iter().map(|&x| regs.eval(x)).collect(),
+                    },
+                };
+                respond(r, out, &metrics);
+            }
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            i = j;
+        }
+    }
+}
+
+fn respond(req: &ActRequest, data: Vec<i32>, metrics: &Metrics) {
+    let lat = req.t_submit.elapsed().as_micros() as u64;
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .elements
+        .fetch_add(data.len() as u64, Ordering::Relaxed);
+    metrics.latency_us_sum.fetch_add(lat, Ordering::Relaxed);
+    metrics.latency_us_max.fetch_max(lat, Ordering::Relaxed);
+    req.resp
+        .send(ActResponse {
+            data,
+            latency_us: lat,
+        })
+        .ok();
+}
+
+/// PJRT offload: the AOT-compiled L1 GRAU kernel (8-bit, 16-shift window
+/// anchored at 0) executed through the runtime.
+struct PjrtOffload {
+    rt: crate::runtime::Runtime,
+    exe: crate::runtime::Executable,
+}
+
+const SERVICE_N: usize = 8192;
+
+impl PjrtOffload {
+    fn new(artifacts_dir: &std::path::Path) -> Result<PjrtOffload> {
+        let rt = crate::runtime::Runtime::cpu()?;
+        let exe = rt.load(&artifacts_dir.join("grau_act_service.hlo.txt"))?;
+        Ok(PjrtOffload { rt, exe })
+    }
+
+    fn run(&mut self, regs: &GrauRegisters, data: &[i32]) -> Result<Vec<i32>> {
+        use crate::runtime::lit_i32;
+        // the artifact is fixed-shape: shift_lo 0, 16 shifts, 8-bit
+        anyhow::ensure!(
+            regs.shift_lo == 0 && regs.n_shifts == 16 && regs.n_bits == 8,
+            "PJRT offload kernel is compiled for (shift_lo=0, 16 shifts, 8-bit)"
+        );
+        let mut out = Vec::with_capacity(data.len());
+        for chunk in data.chunks(SERVICE_N) {
+            let mut x = chunk.to_vec();
+            x.resize(SERVICE_N, 0);
+            let masks: Vec<i32> = regs.mask.iter().map(|&m| m as i32).collect();
+            let args = [
+                lit_i32(&x, &[SERVICE_N as i64])?,
+                lit_i32(&regs.thresholds, &[7])?,
+                lit_i32(&regs.x0, &[8])?,
+                lit_i32(&regs.y0, &[8])?,
+                lit_i32(&regs.sign, &[8])?,
+                lit_i32(&masks, &[8])?,
+            ];
+            let lits = self.exe.run(&args)?;
+            let y = lits
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("no output"))?
+                .to_vec::<i32>()?;
+            out.extend_from_slice(&y[..chunk.len()]);
+        }
+        let _ = &self.rt;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::{Activation, FoldedActivation};
+    use crate::fit::pipeline::{fit_folded, FitOptions};
+
+    fn demo_regs(seed_act: Activation) -> GrauRegisters {
+        let f = FoldedActivation::new(0.004, 0.0, seed_act, 1.0 / 120.0, 8);
+        fit_folded(&f, -1000, 1000, FitOptions::default()).apot.regs
+    }
+
+    #[test]
+    fn service_roundtrip_functional() {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        let regs = demo_regs(Activation::Sigmoid);
+        svc.register(1, regs.clone(), ApproxKind::Apot);
+        let data: Vec<i32> = (-500..500).collect();
+        let resp = svc.call(1, data.clone()).unwrap();
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x));
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.elements, 1000);
+    }
+
+    #[test]
+    fn cycle_sim_backend_bit_exact_and_counts_cycles() {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            backend: Backend::CycleSim,
+            ..Default::default()
+        });
+        let regs = demo_regs(Activation::Silu);
+        svc.register(9, regs.clone(), ApproxKind::Apot);
+        let data: Vec<i32> = (-200..200).collect();
+        let resp = svc.call(9, data.clone()).unwrap();
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x));
+        }
+        let m = svc.shutdown();
+        assert!(m.sim_cycles >= 400, "cycles {}", m.sim_cycles);
+    }
+
+    #[test]
+    fn stream_switching_counts_reconfigs() {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        svc.register(1, demo_regs(Activation::Sigmoid), ApproxKind::Apot);
+        svc.register(2, demo_regs(Activation::Silu), ApproxKind::Apot);
+        for i in 0..10 {
+            svc.call(1 + (i % 2), vec![1, 2, 3]).unwrap();
+        }
+        let m = svc.shutdown();
+        assert!(m.reconfigs >= 2, "reconfigs {}", m.reconfigs);
+        assert!(m.reconfig_cycles > 0);
+        assert_eq!(m.requests, 10);
+    }
+
+    #[test]
+    fn unknown_stream_passthrough() {
+        let svc = ActivationService::start(ServiceConfig::default());
+        let resp = svc.call(777, vec![5, -5]).unwrap();
+        assert_eq!(resp.data, vec![5, -5]);
+        svc.shutdown();
+    }
+}

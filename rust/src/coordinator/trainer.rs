@@ -1,0 +1,128 @@
+//! Training orchestrator: drives the AOT train-step executables through
+//! the PJRT runtime, logs the loss curve, exports the integer bundle and
+//! caches it on disk so the fitting sweeps can re-run without
+//! re-training.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::qnn::engine::validate_bundle;
+use crate::qnn::{ExportBundle, ModelGraph};
+use crate::runtime::{Manifest, ModelSession, Runtime};
+use crate::util::dataset::{self, Splits};
+use crate::util::stats::accuracy_from_logits;
+
+/// Which synthetic dataset a config trains on (by naming convention).
+pub fn dataset_for(config: &str) -> Splits {
+    if config.starts_with("t1_mlp") || config.starts_with("t3_sfc") {
+        dataset::mnist_like(7)
+    } else if config.starts_with("t5_") {
+        dataset::imagenet_like(13)
+    } else {
+        dataset::cifar_like(11)
+    }
+}
+
+/// Default step budget per config family (enough for the synthetic tasks
+/// to converge to their plateau on CPU in seconds-to-minutes).
+pub fn default_steps(config: &str) -> usize {
+    if config.starts_with("t1_mlp") || config.starts_with("t3_sfc") {
+        400
+    } else if config.starts_with("t5_") {
+        350
+    } else {
+        350
+    }
+}
+
+pub struct TrainOutcome {
+    pub name: String,
+    pub graph: ModelGraph,
+    pub bundle: ExportBundle,
+    /// loss every step (empty when loaded from cache)
+    pub losses: Vec<f32>,
+    /// float-path (runtime predict) test accuracy; NaN when cached
+    pub float_top1: f64,
+    pub from_cache: bool,
+}
+
+pub fn weights_cache_path(artifacts_dir: &Path, name: &str, steps: usize) -> PathBuf {
+    artifacts_dir
+        .join("weights")
+        .join(format!("{name}.s{steps}.grwb"))
+}
+
+/// Train (or load from cache) one config.
+pub fn train_config(
+    rt: &Runtime,
+    artifacts_dir: &Path,
+    name: &str,
+    steps: usize,
+    use_cache: bool,
+    verbose: bool,
+) -> Result<TrainOutcome> {
+    let manifest = Manifest::load(artifacts_dir, name)?;
+    let cache = weights_cache_path(artifacts_dir, name, steps);
+    if use_cache && cache.exists() {
+        let bundle = ExportBundle::load(&cache)?;
+        validate_bundle(&manifest.graph, &bundle)?;
+        return Ok(TrainOutcome {
+            name: name.to_string(),
+            graph: manifest.graph,
+            bundle,
+            losses: Vec::new(),
+            float_top1: f64::NAN,
+            from_cache: true,
+        });
+    }
+
+    let mut sess = ModelSession::open(rt, artifacts_dir, name)
+        .with_context(|| format!("open session {name}"))?;
+    let splits = dataset_for(name);
+    let b = sess.manifest.train_batch;
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        splits.train.batch(step * b, b, &mut x, &mut y);
+        let loss = sess.train_step(&x, &y)?;
+        losses.push(loss);
+        if verbose && (step % 50 == 0 || step + 1 == steps) {
+            log::info!("[{name}] step {step:>4} loss {loss:.4}");
+            println!("[{name}] step {step:>4} loss {loss:.4}");
+        }
+    }
+
+    let float_top1 = float_accuracy(&sess, &splits, 512)?;
+    let bundle = sess.export_bundle()?;
+    validate_bundle(&sess.manifest.graph, &bundle)?;
+    std::fs::create_dir_all(cache.parent().unwrap())?;
+    bundle.save(&cache)?;
+    Ok(TrainOutcome {
+        name: name.to_string(),
+        graph: sess.manifest.graph.clone(),
+        bundle,
+        losses,
+        float_top1,
+        from_cache: false,
+    })
+}
+
+/// Float-path accuracy through the runtime predict executable.
+pub fn float_accuracy(sess: &ModelSession, splits: &Splits, limit: usize) -> Result<f64> {
+    let eb = sess.manifest.eval_batch;
+    let classes = sess.manifest.n_classes;
+    let n = limit.min(splits.test.n) / eb * eb;
+    if n == 0 {
+        return Ok(f64::NAN);
+    }
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    let mut logits = Vec::with_capacity(n * classes);
+    let mut labels = Vec::with_capacity(n);
+    for c in 0..n / eb {
+        splits.test.batch(c * eb, eb, &mut x, &mut y);
+        logits.extend(sess.predict_batch(&x)?);
+        labels.extend_from_slice(&y);
+    }
+    Ok(accuracy_from_logits(&logits, n, classes, &labels))
+}

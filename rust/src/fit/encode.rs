@@ -1,0 +1,113 @@
+//! Figure 3: the shifter-control encoding.
+//!
+//! The hardware's setting buffer stores, per segment, a `1 + n_shifts`
+//! bit word: the sign bit followed by one enable bit per pipeline stage.
+//! For PoT the enable bits must be a *prefix run of ones* (the input
+//! ripples right through consecutive shifters, so shifting by `p` means
+//! stages `1..=p` are enabled); for APoT each set bit taps that stage's
+//! shifted value into the running sum.  This module converts between the
+//! semantic mask in [`GrauRegisters`](crate::hw::GrauRegisters) (bit k ↔
+//! term `2^-(shift_lo+k)`) and the wire encoding.
+
+use crate::fit::ApproxKind;
+
+/// Wire-format setting word for one segment (Figure 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SettingWord {
+    /// total bits = 1 (sign) + n_shifts
+    pub bits: u32,
+    pub n_shifts: u8,
+}
+
+/// Encode a semantic (sign, mask) pair into the wire word.
+///
+/// * APoT (Figure 3 up): enable bit per tapped power — the mask verbatim.
+/// * PoT (Figure 3 down): the single power `2^-(shift_lo+k)` becomes a
+///   run of `k+1` consecutive ones — the input passes through that many
+///   1-bit right shifters.  (The +1 accounts for the stage owning the
+///   window's first power.)
+pub fn encode(sign: i32, mask: u32, n_shifts: u8, kind: ApproxKind) -> SettingWord {
+    let sign_bit = if sign < 0 { 1u32 << n_shifts } else { 0 };
+    let body = match kind {
+        ApproxKind::Apot | ApproxKind::Pwlf => mask,
+        ApproxKind::Pot => {
+            debug_assert!(mask.count_ones() <= 1, "PoT needs a single power");
+            if mask == 0 {
+                0
+            } else {
+                let k = mask.trailing_zeros();
+                (1u32 << (k + 1)) - 1 // k+1 consecutive ones
+            }
+        }
+    };
+    SettingWord {
+        bits: sign_bit | body,
+        n_shifts,
+    }
+}
+
+/// Decode a wire word back to (sign, semantic mask).
+pub fn decode(word: SettingWord, kind: ApproxKind) -> (i32, u32) {
+    let sign = if word.bits >> word.n_shifts & 1 == 1 { -1 } else { 1 };
+    let body = word.bits & ((1u32 << word.n_shifts) - 1);
+    let mask = match kind {
+        ApproxKind::Apot | ApproxKind::Pwlf => body,
+        ApproxKind::Pot => {
+            if body == 0 {
+                0
+            } else {
+                debug_assert!(
+                    (body + 1).is_power_of_two(),
+                    "PoT wire word must be a run of ones, got {body:#b}"
+                );
+                1 << (body.count_ones() - 1)
+            }
+        }
+    };
+    (sign, mask)
+}
+
+/// Validity check for a PoT wire body: consecutive ones from bit 0.
+pub fn is_valid_pot_body(body: u32) -> bool {
+    body == 0 || (body + 1).is_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pot_run_of_ones() {
+        // slope 2^-(shift_lo+3) -> 4 consecutive ones
+        let w = encode(1, 1 << 3, 16, ApproxKind::Pot);
+        assert_eq!(w.bits, 0b1111);
+        assert!(is_valid_pot_body(w.bits));
+        let (sign, mask) = decode(w, ApproxKind::Pot);
+        assert_eq!((sign, mask), (1, 1 << 3));
+    }
+
+    #[test]
+    fn apot_verbatim_with_sign() {
+        let w = encode(-1, 0b1010_0110, 8, ApproxKind::Apot);
+        assert_eq!(w.bits, (1 << 8) | 0b1010_0110);
+        let (sign, mask) = decode(w, ApproxKind::Apot);
+        assert_eq!((sign, mask), (-1, 0b1010_0110));
+    }
+
+    #[test]
+    fn zero_slope_is_all_zero() {
+        for kind in [ApproxKind::Pot, ApproxKind::Apot] {
+            let w = encode(1, 0, 16, kind);
+            assert_eq!(w.bits, 0);
+            assert_eq!(decode(w, kind), (1, 0));
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_pot_positions() {
+        for k in 0..16u32 {
+            let w = encode(-1, 1 << k, 16, ApproxKind::Pot);
+            assert_eq!(decode(w, ApproxKind::Pot), (-1, 1 << k));
+        }
+    }
+}

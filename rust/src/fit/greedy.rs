@@ -1,0 +1,178 @@
+//! Algorithm 1: Greedy Integer-Aware PWLF Breakpoint Selection.
+//!
+//! Direct implementation of the paper's pseudocode: start from one
+//! segment spanning the whole sampled range; repeatedly find, per
+//! segment, the sample with maximum vertical distance to the chord
+//! joining the segment endpoints; round it to the nearest integer;
+//! accept it if it is strictly inside the segment, improves by more than
+//! `eps`, and respects the minimum gap `g`; split the segment with the
+//! best accepted candidate.  Stop at `S` segments or when no candidate
+//! qualifies.
+
+/// Parameters of Algorithm 1.
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyOptions {
+    /// target segment count `S`
+    pub segments: usize,
+    /// minimum gap `g` between breakpoints (integer domain)
+    pub min_gap: i64,
+    /// minimum improvement `eps` (vertical distance, output units)
+    pub eps: f64,
+}
+
+impl Default for GreedyOptions {
+    fn default() -> Self {
+        GreedyOptions {
+            segments: 6,
+            min_gap: 1,
+            eps: 1e-3,
+        }
+    }
+}
+
+/// Select breakpoints on `samples` (must be sorted by x, distinct x).
+/// Returns ascending interior breakpoints (at most `segments - 1`).
+pub fn select_breakpoints(samples: &[(i64, f64)], opts: GreedyOptions) -> Vec<i64> {
+    assert!(samples.len() >= 2, "need at least two samples");
+    debug_assert!(samples.windows(2).all(|w| w[0].0 < w[1].0));
+    let mut breakpoints: Vec<i64> = Vec::new();
+    // segments as (start, end) *sample index* ranges, end inclusive
+    let mut segs: Vec<(usize, usize)> = vec![(0, samples.len() - 1)];
+
+    while breakpoints.len() < opts.segments.saturating_sub(1) {
+        // candidate = (distance, x̂, segment index, sample index)
+        let mut best: Option<(f64, i64, usize, usize)> = None;
+        for (si, &(a, b)) in segs.iter().enumerate() {
+            if b - a < 2 {
+                continue; // no interior samples
+            }
+            let (xa, ya) = samples[a];
+            let (xb, yb) = samples[b];
+            let dx = (xb - xa) as f64;
+            let slope = (yb - ya) / dx;
+            // max vertical distance to chord over interior samples
+            let mut max_d = 0.0;
+            let mut max_i = a;
+            for i in a + 1..b {
+                let (x, y) = samples[i];
+                let chord = ya + slope * (x - xa) as f64;
+                let d = (y - chord).abs();
+                if d > max_d {
+                    max_d = d;
+                    max_i = i;
+                }
+            }
+            if max_d <= opts.eps {
+                continue;
+            }
+            // round to nearest integer (x is already integer — the
+            // rounding matters when samples are sparse: snap to the
+            // sample's integer x), then check interior + gap constraints
+            let xh = samples[max_i].0;
+            if xh <= xa + opts.min_gap - 1 || xh >= xb - opts.min_gap + 1 {
+                continue;
+            }
+            if breakpoints
+                .iter()
+                .any(|&bp| (bp - xh).abs() < opts.min_gap)
+            {
+                continue;
+            }
+            if best.map(|(d, ..)| max_d > d).unwrap_or(true) {
+                best = Some((max_d, xh, si, max_i));
+            }
+        }
+        let Some((_, xh, si, mi)) = best else {
+            break; // no valid candidate provides sufficient improvement
+        };
+        breakpoints.push(xh);
+        let (a, b) = segs[si];
+        segs[si] = (a, mi);
+        segs.push((mi, b));
+    }
+    breakpoints.sort_unstable();
+    breakpoints
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::{Activation, FoldedActivation};
+
+    fn sigmoid_samples() -> Vec<(i64, f64)> {
+        let f = FoldedActivation::new(0.004, 0.0, Activation::Sigmoid, 1.0 / 127.0, 8);
+        f.sample(-2000, 2000, 1001)
+    }
+
+    #[test]
+    fn finds_breakpoints_near_curvature() {
+        let samples = sigmoid_samples();
+        let bps = select_breakpoints(
+            &samples,
+            GreedyOptions {
+                segments: 6,
+                min_gap: 1,
+                eps: 1e-3,
+            },
+        );
+        assert_eq!(bps.len(), 5);
+        assert!(bps.windows(2).all(|w| w[0] < w[1]));
+        // sigmoid curvature is symmetric around 0: expect breakpoints on
+        // both sides
+        assert!(bps.iter().any(|&b| b < 0) && bps.iter().any(|&b| b > 0));
+    }
+
+    #[test]
+    fn respects_min_gap() {
+        let samples = sigmoid_samples();
+        let bps = select_breakpoints(
+            &samples,
+            GreedyOptions {
+                segments: 8,
+                min_gap: 100,
+                eps: 1e-4,
+            },
+        );
+        for w in bps.windows(2) {
+            assert!(w[1] - w[0] >= 100, "{bps:?}");
+        }
+    }
+
+    #[test]
+    fn linear_function_needs_no_breakpoints() {
+        let samples: Vec<(i64, f64)> = (-100..=100).map(|x| (x, 0.5 * x as f64)).collect();
+        let bps = select_breakpoints(&samples, GreedyOptions::default());
+        assert!(bps.is_empty(), "{bps:?}");
+    }
+
+    #[test]
+    fn relu_gets_breakpoint_at_kink() {
+        let samples: Vec<(i64, f64)> =
+            (-500..=500).map(|x| (x, (x as f64).max(0.0) * 0.1)).collect();
+        let bps = select_breakpoints(
+            &samples,
+            GreedyOptions {
+                segments: 2,
+                min_gap: 1,
+                eps: 1e-6,
+            },
+        );
+        assert_eq!(bps.len(), 1);
+        assert!(bps[0].abs() <= 2, "kink at 0, got {bps:?}");
+    }
+
+    #[test]
+    fn stops_when_no_improvement() {
+        // large eps: even sigmoid needs no splits
+        let samples = sigmoid_samples();
+        let bps = select_breakpoints(
+            &samples,
+            GreedyOptions {
+                segments: 8,
+                min_gap: 1,
+                eps: 1e9,
+            },
+        );
+        assert!(bps.is_empty());
+    }
+}

@@ -1,0 +1,248 @@
+//! Continuous least-squares segmented fitting — the `pwlf` library
+//! substitute (Table III baseline; DESIGN.md §Substitutions).
+//!
+//! Model: continuous piecewise-linear function with free (float)
+//! breakpoints, f(x) = β₀ + β₁(x-x₀) + Σⱼ γⱼ·max(0, x-bⱼ).  Given
+//! breakpoints the coefficients solve a small linear least-squares
+//! system; breakpoints are optimized by coordinate descent with local
+//! line search (the same continuous, float-oriented behaviour as `pwlf`:
+//! differential evolution there, coordinate descent here — both yield
+//! float breakpoints that can *collapse* when rounded to integers, the
+//! pathology §II-A documents).
+
+use crate::fit::{Pwlf, PwlfSegment};
+
+/// Solve the dense normal equations `A^T A c = A^T y` (Gaussian
+/// elimination with partial pivoting).  `a` is row-major `n x k`.
+fn lstsq(a: &[f64], y: &[f64], n: usize, k: usize) -> Vec<f64> {
+    // build ata (k x k) and aty (k)
+    let mut ata = vec![0.0; k * k];
+    let mut aty = vec![0.0; k];
+    for i in 0..n {
+        let row = &a[i * k..(i + 1) * k];
+        for p in 0..k {
+            aty[p] += row[p] * y[i];
+            for q in p..k {
+                ata[p * k + q] += row[p] * row[q];
+            }
+        }
+    }
+    for p in 0..k {
+        for q in 0..p {
+            ata[p * k + q] = ata[q * k + p];
+        }
+        ata[p * k + p] += 1e-9; // ridge for degenerate segments
+    }
+    // gaussian elimination
+    let mut m = ata;
+    let mut b = aty;
+    for col in 0..k {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..k {
+            if m[r * k + col].abs() > m[piv * k + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..k {
+                m.swap(col * k + c, piv * k + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = m[col * k + col];
+        if d.abs() < 1e-30 {
+            continue;
+        }
+        for r in col + 1..k {
+            let f = m[r * k + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..k {
+                m[r * k + c] -= f * m[col * k + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; k];
+    for col in (0..k).rev() {
+        let mut s = b[col];
+        for c in col + 1..k {
+            s -= m[col * k + c] * x[c];
+        }
+        let d = m[col * k + col];
+        x[col] = if d.abs() < 1e-30 { 0.0 } else { s / d };
+    }
+    x
+}
+
+/// Fit coefficients for fixed float breakpoints; returns (coeffs, sse).
+fn fit_coeffs(samples: &[(i64, f64)], bps: &[f64]) -> (Vec<f64>, f64) {
+    let n = samples.len();
+    let k = 2 + bps.len();
+    let x0 = samples[0].0 as f64;
+    let mut a = vec![0.0; n * k];
+    let mut y = vec![0.0; n];
+    for (i, &(x, yv)) in samples.iter().enumerate() {
+        let xf = x as f64;
+        a[i * k] = 1.0;
+        a[i * k + 1] = xf - x0;
+        for (j, &b) in bps.iter().enumerate() {
+            a[i * k + 2 + j] = (xf - b).max(0.0);
+        }
+        y[i] = yv;
+    }
+    let c = lstsq(&a, &y, n, k);
+    let mut sse = 0.0;
+    for (i, &(x, yv)) in samples.iter().enumerate() {
+        let _ = i;
+        let xf = x as f64;
+        let mut pred = c[0] + c[1] * (xf - x0);
+        for (j, &b) in bps.iter().enumerate() {
+            pred += c[2 + j] * (xf - b).max(0.0);
+        }
+        let d = pred - yv;
+        sse += d * d;
+    }
+    (c, sse)
+}
+
+/// Continuous segmented least-squares fit with `segments` pieces.
+/// Returns the fitted function with breakpoints rounded to integers at
+/// the very end (exactly where `pwlf`-based flows hit the collapse
+/// pathology — duplicated rounded breakpoints are merged, reducing the
+/// effective segment count, as §II-A describes).
+pub fn fit_lsq(samples: &[(i64, f64)], segments: usize, n_bits: u8) -> Pwlf {
+    assert!(samples.len() >= 4 && segments >= 1);
+    let x_min = samples[0].0 as f64;
+    let x_max = samples[samples.len() - 1].0 as f64;
+    let span = x_max - x_min;
+
+    // init: evenly spaced interior breakpoints
+    let nb = segments - 1;
+    let mut bps: Vec<f64> = (1..=nb)
+        .map(|i| x_min + span * i as f64 / segments as f64)
+        .collect();
+    let (_, mut sse) = fit_coeffs(samples, &bps);
+
+    // coordinate descent with shrinking step
+    let mut step = span / (2.0 * segments as f64);
+    for _round in 0..24 {
+        let mut improved = false;
+        for j in 0..nb {
+            for dir in [-1.0, 1.0] {
+                let mut cand = bps.clone();
+                cand[j] += dir * step;
+                let lo = if j == 0 { x_min } else { cand[j - 1] };
+                let hi = if j + 1 == nb { x_max } else { cand[j + 1] };
+                if cand[j] <= lo || cand[j] >= hi {
+                    continue;
+                }
+                let (_, s) = fit_coeffs(samples, &cand);
+                if s + 1e-12 < sse {
+                    sse = s;
+                    bps = cand;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            step *= 0.5;
+            if step < 0.5 {
+                break;
+            }
+        }
+    }
+
+    // final coefficients at the optimized float breakpoints
+    let (c, _) = fit_coeffs(samples, &bps);
+
+    // round breakpoints to integers and MERGE duplicates (the pathology)
+    let mut int_bps: Vec<i64> = bps.iter().map(|b| b.round() as i64).collect();
+    int_bps.dedup();
+    int_bps.retain(|&b| b > samples[0].0 && b < samples[samples.len() - 1].0);
+
+    // derive segment (x0, y0, slope) from the hinge representation
+    let eval = |x: f64| {
+        let mut v = c[0] + c[1] * (x - x_min);
+        for (j, &b) in bps.iter().enumerate() {
+            v += c[2 + j] * (x - b).max(0.0);
+        }
+        v
+    };
+    let mut segs = Vec::with_capacity(int_bps.len() + 1);
+    let starts: Vec<i64> = std::iter::once(samples[0].0)
+        .chain(int_bps.iter().copied())
+        .collect();
+    for (si, &sx) in starts.iter().enumerate() {
+        let ex = starts
+            .get(si + 1)
+            .copied()
+            .unwrap_or(samples[samples.len() - 1].0);
+        let mid_lo = sx as f64;
+        let mid_hi = (ex as f64).max(mid_lo + 1.0);
+        // slope from the continuous model inside the segment
+        let slope = (eval(mid_hi) - eval(mid_lo)) / (mid_hi - mid_lo);
+        segs.push(PwlfSegment {
+            x0: sx,
+            y0: eval(sx as f64),
+            slope,
+        });
+    }
+    Pwlf {
+        breakpoints: int_bps,
+        segments: segs,
+        n_bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::{Activation, FoldedActivation};
+
+    #[test]
+    fn recovers_exact_pwl_function() {
+        // ground truth: kinks at -20 and 30
+        let truth = |x: f64| {
+            if x < -20.0 {
+                -2.0
+            } else if x < 30.0 {
+                -2.0 + 0.1 * (x + 20.0)
+            } else {
+                3.0 + 0.5 * (x - 30.0)
+            }
+        };
+        let samples: Vec<(i64, f64)> = (-100..=100).map(|x| (x, truth(x as f64))).collect();
+        let p = fit_lsq(&samples, 3, 8);
+        assert!(p.sse(&samples) < 1.0, "sse {}", p.sse(&samples));
+        assert_eq!(p.n_segments(), 3);
+        assert!((p.breakpoints[0] + 20).abs() <= 3, "{:?}", p.breakpoints);
+        assert!((p.breakpoints[1] - 30).abs() <= 3, "{:?}", p.breakpoints);
+    }
+
+    #[test]
+    fn sigmoid_fit_quality() {
+        let f = FoldedActivation::new(0.004, 0.0, Activation::Sigmoid, 1.0 / 127.0, 8);
+        let samples = f.sample(-2000, 2000, 501);
+        let p = fit_lsq(&samples, 6, 8);
+        let rmse = (p.sse(&samples) / samples.len() as f64).sqrt();
+        assert!(rmse < 2.0, "rmse {rmse} in output LSBs");
+    }
+
+    #[test]
+    fn collapse_pathology_on_narrow_range() {
+        // Narrow integer range: optimizer pushes float breakpoints close
+        // together; rounding must dedupe, shrinking segment count —
+        // exactly the §II-A pwlf limitation.
+        let f = FoldedActivation::new(0.5, 0.0, Activation::Sigmoid, 1.0 / 127.0, 8);
+        let samples = f.sample(-3, 3, 7);
+        let p = fit_lsq(&samples, 8, 8);
+        assert!(
+            p.n_segments() < 8,
+            "expected collapsed segments, got {}",
+            p.n_segments()
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Piecewise-linear fitting: from a folded activation black box to a GRAU
+//! register file.
+//!
+//! * [`greedy`] — the paper's Algorithm 1 (greedy integer-aware
+//!   breakpoint selection) — the fast fitter used for Tables IV/V.
+//! * [`lsq`] — a continuous least-squares segmented fitter, the `pwlf`
+//!   library substitute used for Table III (reproduces both its accuracy
+//!   and its integer-collapse pathology).
+//! * [`slope`] — per-segment line fitting + PoT/APoT slope rounding.
+//! * [`search`] — exponent-window search (the paper's 4/8/16 contiguous
+//!   `2^n` ranges, reported as `(2^-lo ~ 2^-hi)` annotations).
+//! * [`encode`] — the Figure 3 shifter-control encoding.
+//! * [`pipeline`] — end-to-end: `FoldedActivation` → PWLF / PoT-PWLF /
+//!   APoT-PWLF artifacts.
+
+pub mod encode;
+pub mod greedy;
+pub mod lsq;
+pub mod pipeline;
+pub mod search;
+pub mod slope;
+
+use crate::act::qrange;
+
+/// One fitted linear segment (continuous domain, before PoT rounding):
+/// `y(x) = y0 + slope * (x - x0)` for `x` in `[x0, next breakpoint)`.
+#[derive(Clone, Copy, Debug)]
+pub struct PwlfSegment {
+    pub x0: i64,
+    pub y0: f64,
+    pub slope: f64,
+}
+
+/// A fitted piecewise-linear function with integer breakpoints.
+#[derive(Clone, Debug)]
+pub struct Pwlf {
+    /// ascending interior breakpoints (`S-1` entries for `S` segments)
+    pub breakpoints: Vec<i64>,
+    /// `S` segments; `segments[j]` applies when
+    /// `breakpoints[j-1] <= x < breakpoints[j]`
+    pub segments: Vec<PwlfSegment>,
+    pub n_bits: u8,
+}
+
+impl Pwlf {
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    #[inline]
+    pub fn segment_of(&self, x: i64) -> usize {
+        self.breakpoints.iter().filter(|&&b| x >= b).count()
+    }
+
+    /// Continuous value (in quantized-output units).
+    #[inline]
+    pub fn real(&self, x: i64) -> f64 {
+        let s = &self.segments[self.segment_of(x)];
+        s.y0 + s.slope * (x - s.x0) as f64
+    }
+
+    /// Quantized output (round + clamp) — the float-PWLF accuracy model.
+    #[inline]
+    pub fn eval(&self, x: i64) -> i32 {
+        let (qmin, qmax) = qrange(self.n_bits);
+        let v = self.real(x).round_ties_even();
+        (v as i64).clamp(qmin as i64, qmax as i64) as i32
+    }
+
+    /// Sum of squared errors against samples.
+    pub fn sse(&self, samples: &[(i64, f64)]) -> f64 {
+        samples
+            .iter()
+            .map(|&(x, y)| {
+                let d = self.real(x) - y;
+                d * d
+            })
+            .sum()
+    }
+}
+
+/// Which approximation family (paper Figure 2 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApproxKind {
+    /// float-slope PWLF (the fitting baseline)
+    Pwlf,
+    /// slopes rounded to a single power of two
+    Pot,
+    /// slopes rounded to sums of powers of two (each power used once)
+    Apot,
+}
+
+impl ApproxKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ApproxKind::Pwlf => "PWLF",
+            ApproxKind::Pot => "PoT-PWLF",
+            ApproxKind::Apot => "APoT-PWLF",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Pwlf {
+        Pwlf {
+            breakpoints: vec![0, 100],
+            segments: vec![
+                PwlfSegment { x0: -100, y0: -10.0, slope: 0.1 },
+                PwlfSegment { x0: 0, y0: 0.0, slope: 0.5 },
+                PwlfSegment { x0: 100, y0: 50.0, slope: 0.0 },
+            ],
+            n_bits: 8,
+        }
+    }
+
+    #[test]
+    fn segment_lookup() {
+        let p = demo();
+        assert_eq!(p.segment_of(-1), 0);
+        assert_eq!(p.segment_of(0), 1);
+        assert_eq!(p.segment_of(99), 1);
+        assert_eq!(p.segment_of(100), 2);
+    }
+
+    #[test]
+    fn eval_rounds_and_clamps() {
+        let p = demo();
+        assert_eq!(p.eval(-100), -10);
+        assert_eq!(p.eval(50), 25);
+        assert_eq!(p.eval(10_000), 50);
+        assert_eq!(p.eval(-100_000), -128); // clamped
+    }
+}

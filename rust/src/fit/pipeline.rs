@@ -1,0 +1,229 @@
+//! End-to-end fitting pipeline: folded activation black box → PWLF /
+//! PoT-PWLF / APoT-PWLF artifacts (paper §II-A, the four columns of
+//! Figure 2).
+
+use crate::act::FoldedActivation;
+use crate::fit::greedy::{select_breakpoints, GreedyOptions};
+use crate::fit::lsq::fit_lsq;
+use crate::fit::search::{registers_sse, search_window, WindowSearchResult};
+use crate::fit::slope::pwlf_from_breakpoints;
+use crate::fit::{ApproxKind, Pwlf};
+use crate::hw::GrauRegisters;
+
+/// Which fitter produces the float PWLF.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fitter {
+    /// Algorithm 1 (integer-aware greedy) — the paper's contribution.
+    Greedy,
+    /// Continuous least-squares — the `pwlf` library substitute.
+    Lsq,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct FitOptions {
+    pub fitter: Fitter,
+    /// target segments (paper: 4 / 6 / 8)
+    pub segments: usize,
+    /// shift-window length (paper "exponent number": 4 / 8 / 16)
+    pub n_shifts: u8,
+    /// samples over the doubled MAC range (paper: 1000)
+    pub samples: usize,
+    pub min_gap: i64,
+    pub eps: f64,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions {
+            fitter: Fitter::Greedy,
+            segments: 6,
+            n_shifts: 8,
+            samples: 1000,
+            min_gap: 1,
+            eps: 1e-3,
+        }
+    }
+}
+
+/// Everything the pipeline produces for one channel.
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    pub pwlf: Pwlf,
+    pub pot: WindowSearchResult,
+    pub apot: WindowSearchResult,
+    /// RMS errors (output LSBs) against the sampled black box
+    pub rmse_pwlf: f64,
+    pub rmse_pot: f64,
+    pub rmse_apot: f64,
+}
+
+impl FitResult {
+    pub fn registers(&self, kind: ApproxKind) -> &GrauRegisters {
+        match kind {
+            ApproxKind::Pot => &self.pot.regs,
+            ApproxKind::Apot => &self.apot.regs,
+            ApproxKind::Pwlf => panic!("PWLF has no register file (float slopes)"),
+        }
+    }
+
+    pub fn rmse(&self, kind: ApproxKind) -> f64 {
+        match kind {
+            ApproxKind::Pwlf => self.rmse_pwlf,
+            ApproxKind::Pot => self.rmse_pot,
+            ApproxKind::Apot => self.rmse_apot,
+        }
+    }
+}
+
+/// Fit one folded activation over its (doubled) MAC range.
+pub fn fit_folded(
+    f: &FoldedActivation,
+    mac_lo: i64,
+    mac_hi: i64,
+    opts: FitOptions,
+) -> FitResult {
+    let samples = f.sample_doubled(mac_lo, mac_hi, opts.samples);
+    fit_samples(&samples, f.n_bits, opts)
+}
+
+/// Fit from explicit samples (used by tests and the service demos).
+pub fn fit_samples(samples: &[(i64, f64)], n_bits: u8, opts: FitOptions) -> FitResult {
+    let pwlf = match opts.fitter {
+        Fitter::Greedy => {
+            let bps = select_breakpoints(
+                samples,
+                GreedyOptions {
+                    segments: opts.segments,
+                    min_gap: opts.min_gap,
+                    eps: opts.eps,
+                },
+            );
+            pwlf_from_breakpoints(samples, &bps, n_bits)
+        }
+        Fitter::Lsq => fit_lsq(samples, opts.segments, n_bits),
+    };
+    let pot = search_window(&pwlf, opts.n_shifts, ApproxKind::Pot, samples);
+    let apot = search_window(&pwlf, opts.n_shifts, ApproxKind::Apot, samples);
+    let n = samples.len() as f64;
+    FitResult {
+        rmse_pwlf: (pwlf.sse(samples) / n).sqrt(),
+        rmse_pot: (pot.sse / n).sqrt(),
+        rmse_apot: (apot.sse / n).sqrt(),
+        pwlf,
+        pot,
+        apot,
+    }
+}
+
+/// Re-validate a register file against the *exact* quantized black box
+/// (round-trip check used by the QNN engine): fraction of integer points
+/// in `[lo, hi]` where the hardware output differs from `f.eval`.
+pub fn mismatch_rate(regs: &GrauRegisters, f: &FoldedActivation, lo: i64, hi: i64, n: usize) -> f64 {
+    let samples = f.sample(lo, hi, n);
+    let mut bad = 0usize;
+    for &(x, _) in &samples {
+        let x32 = x.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        if regs.eval(x32) != f.eval(x) {
+            bad += 1;
+        }
+    }
+    bad as f64 / samples.len() as f64
+}
+
+/// MT threshold derivation for the baseline unit: for a *monotone*
+/// folded activation, threshold `i` is the smallest integer x with
+/// `f.eval(x) >= qmin + i + 1` (binary search).  For non-monotone
+/// functions this produces the wrong unit — exactly Figure 1's failure —
+/// which `hw::mt` demonstrates.
+pub fn mt_thresholds(f: &FoldedActivation, lo: i64, hi: i64) -> Vec<i32> {
+    let (qmin, qmax) = crate::act::qrange(f.n_bits);
+    let mut out = Vec::with_capacity((qmax - qmin) as usize);
+    for level in qmin + 1..=qmax {
+        // smallest x in [lo,hi] with eval(x) >= level (monotone assumed)
+        let (mut a, mut b) = (lo, hi);
+        if f.eval(b) < level {
+            out.push(i32::MAX); // level never reached: threshold never fires
+            continue;
+        }
+        if f.eval(a) >= level {
+            out.push(a.clamp(i32::MIN as i64, i32::MAX as i64) as i32);
+            continue;
+        }
+        while b - a > 1 {
+            let m = a + (b - a) / 2;
+            if f.eval(m) >= level {
+                b = m;
+            } else {
+                a = m;
+            }
+        }
+        out.push(b.clamp(i32::MIN as i64, i32::MAX as i64) as i32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::Activation;
+
+    fn folded(act: Activation) -> FoldedActivation {
+        FoldedActivation::new(0.004, 0.05, act, 1.0 / 120.0, 8)
+    }
+
+    #[test]
+    fn pipeline_error_ordering() {
+        // PWLF <= APoT <= PoT (in RMSE) for a smooth nonlinearity
+        for act in [Activation::Sigmoid, Activation::Silu] {
+            let r = fit_folded(&folded(act), -1000, 1000, FitOptions::default());
+            assert!(r.rmse_pwlf <= r.rmse_apot + 1e-9, "{act:?}");
+            assert!(r.rmse_apot <= r.rmse_pot + 1e-9, "{act:?}");
+        }
+    }
+
+    #[test]
+    fn relu_fit_is_tight() {
+        let r = fit_folded(&folded(Activation::Relu), -1000, 1000, FitOptions::default());
+        assert!(r.rmse_apot < 1.0, "rmse {}", r.rmse_apot);
+        // hardware mismatch rate vs exact black box should be small
+        let rate = mismatch_rate(&r.apot.regs, &folded(Activation::Relu), -2000, 2000, 2000);
+        assert!(rate < 0.35, "mismatch {rate}");
+    }
+
+    #[test]
+    fn more_segments_reduce_error() {
+        let f = folded(Activation::Silu);
+        let e4 = fit_folded(&f, -1000, 1000, FitOptions { segments: 4, ..Default::default() });
+        let e8 = fit_folded(&f, -1000, 1000, FitOptions { segments: 8, ..Default::default() });
+        assert!(e8.rmse_pwlf <= e4.rmse_pwlf + 1e-9);
+    }
+
+    #[test]
+    fn mt_thresholds_monotone_inverse() {
+        let f = folded(Activation::Sigmoid);
+        let th = mt_thresholds(&f, -2000, 2000, );
+        assert_eq!(th.len(), 255);
+        // thresholds ascending (where finite)
+        let finite: Vec<i32> = th.iter().copied().filter(|&t| t != i32::MAX).collect();
+        assert!(finite.windows(2).all(|w| w[0] <= w[1]));
+        // MT unit built from them reproduces the black box on monotone f
+        for x in (-2000i64..2000).step_by(97) {
+            let mt: i32 = -128 + th.iter().filter(|&&t| (x as i32) >= t).count() as i32;
+            assert_eq!(mt, f.eval(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn lsq_fitter_also_works_end_to_end() {
+        let r = fit_folded(
+            &folded(Activation::Sigmoid),
+            -1000,
+            1000,
+            FitOptions {
+                fitter: Fitter::Lsq,
+                ..Default::default()
+            },
+        );
+        assert!(r.rmse_pwlf < 3.0, "rmse {}", r.rmse_pwlf);
+    }
+}

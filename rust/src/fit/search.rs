@@ -1,0 +1,148 @@
+//! Exponent-window search (paper §II-A / the `(2^-lo ~ 2^-hi)`
+//! annotations in Tables IV/V).
+//!
+//! The hardware fixes a window of 4/8/16 *contiguous* powers of two; the
+//! fitter slides that window over the shift-amount axis and keeps the
+//! position minimizing the quantized-output SSE over the samples.
+
+use crate::fit::slope::quantize_slope;
+use crate::fit::{ApproxKind, Pwlf};
+use crate::hw::{GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+
+/// Largest shift amount considered (the paper's widest range reaches
+/// 2^-24).
+pub const MAX_SHIFT: u8 = 24;
+
+/// Convert a fitted PWLF + window position into a GRAU register file with
+/// quantized slopes.
+pub fn registers_from_pwlf(
+    pwlf: &Pwlf,
+    shift_lo: u8,
+    n_shifts: u8,
+    kind: ApproxKind,
+) -> GrauRegisters {
+    assert!(pwlf.n_segments() <= MAX_SEGMENTS);
+    let mut r = GrauRegisters::new(pwlf.n_bits, pwlf.n_segments(), shift_lo, n_shifts);
+    r.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
+    for (i, &bp) in pwlf.breakpoints.iter().enumerate() {
+        r.thresholds[i] = clamp_i32(bp);
+    }
+    for (j, seg) in pwlf.segments.iter().enumerate() {
+        r.x0[j] = clamp_i32(seg.x0);
+        // anchor bias: quantized output at the left breakpoint
+        r.y0[j] = clamp_i32(seg.y0.round_ties_even() as i64);
+        let q = quantize_slope(seg.slope, shift_lo, n_shifts, kind);
+        r.sign[j] = q.sign;
+        r.mask[j] = q.mask;
+    }
+    r
+}
+
+fn clamp_i32(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Quantized-output SSE of a register file against float samples.
+pub fn registers_sse(regs: &GrauRegisters, samples: &[(i64, f64)]) -> f64 {
+    samples
+        .iter()
+        .map(|&(x, y)| {
+            let d = regs.eval(clamp_i32(x)) as f64 - y;
+            d * d
+        })
+        .sum()
+}
+
+/// Result of the window search.
+#[derive(Clone, Debug)]
+pub struct WindowSearchResult {
+    pub regs: GrauRegisters,
+    pub shift_lo: u8,
+    pub sse: f64,
+}
+
+/// Slide the window and keep the SSE-minimizing position.
+pub fn search_window(
+    pwlf: &Pwlf,
+    n_shifts: u8,
+    kind: ApproxKind,
+    samples: &[(i64, f64)],
+) -> WindowSearchResult {
+    let mut best: Option<WindowSearchResult> = None;
+    for shift_lo in 0..=(MAX_SHIFT - n_shifts) {
+        let regs = registers_from_pwlf(pwlf, shift_lo, n_shifts, kind);
+        let sse = registers_sse(&regs, samples);
+        if best.as_ref().map(|b| sse < b.sse).unwrap_or(true) {
+            best = Some(WindowSearchResult {
+                regs,
+                shift_lo,
+                sse,
+            });
+        }
+    }
+    best.expect("window range is non-empty")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::{Activation, FoldedActivation};
+    use crate::fit::greedy::{select_breakpoints, GreedyOptions};
+    use crate::fit::slope::pwlf_from_breakpoints;
+
+    fn fitted(act: Activation, n_bits: u8, segments: usize) -> (Pwlf, Vec<(i64, f64)>) {
+        let f = FoldedActivation::new(0.004, 0.1, act, 1.0 / 120.0, n_bits);
+        let samples = f.sample(-2000, 2000, 1001);
+        let bps = select_breakpoints(
+            &samples,
+            GreedyOptions {
+                segments,
+                min_gap: 1,
+                eps: 1e-4,
+            },
+        );
+        (pwlf_from_breakpoints(&samples, &bps, n_bits), samples)
+    }
+
+    #[test]
+    fn window_search_beats_fixed_extreme() {
+        let (pwlf, samples) = fitted(Activation::Sigmoid, 8, 6);
+        let best = search_window(&pwlf, 8, ApproxKind::Apot, &samples);
+        let worst = registers_sse(
+            &registers_from_pwlf(&pwlf, MAX_SHIFT - 8, 8, ApproxKind::Apot),
+            &samples,
+        );
+        assert!(best.sse <= worst);
+    }
+
+    #[test]
+    fn apot_window_no_worse_than_pot() {
+        let (pwlf, samples) = fitted(Activation::Silu, 8, 6);
+        let pot = search_window(&pwlf, 8, ApproxKind::Pot, &samples);
+        let apot = search_window(&pwlf, 8, ApproxKind::Apot, &samples);
+        assert!(
+            apot.sse <= pot.sse * 1.001,
+            "apot {} vs pot {}",
+            apot.sse,
+            pot.sse
+        );
+    }
+
+    #[test]
+    fn more_shifts_no_worse() {
+        let (pwlf, samples) = fitted(Activation::Sigmoid, 8, 6);
+        let w4 = search_window(&pwlf, 4, ApproxKind::Apot, &samples).sse;
+        let w16 = search_window(&pwlf, 16, ApproxKind::Apot, &samples).sse;
+        assert!(w16 <= w4 * 1.001, "w16 {w16} vs w4 {w4}");
+    }
+
+    #[test]
+    fn registers_mirror_breakpoints() {
+        let (pwlf, _) = fitted(Activation::Relu, 8, 4);
+        let regs = registers_from_pwlf(&pwlf, 2, 8, ApproxKind::Apot);
+        assert_eq!(regs.n_segments, pwlf.n_segments());
+        for (i, &bp) in pwlf.breakpoints.iter().enumerate() {
+            assert_eq!(regs.thresholds[i], bp as i32);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Per-segment line fitting and PoT / APoT slope rounding (paper §II-A,
+//! step 2 of the three-step approximation).
+
+use crate::fit::{ApproxKind, Pwlf, PwlfSegment};
+
+/// Least-squares line over `samples[a..=b]`, anchored at the segment's
+/// left breakpoint: returns (y0 at x0, slope).
+pub fn fit_segment_line(samples: &[(i64, f64)], x0: i64) -> (f64, f64) {
+    let n = samples.len() as f64;
+    if samples.len() == 1 {
+        return (samples[0].1, 0.0);
+    }
+    let mean_x = samples.iter().map(|&(x, _)| x as f64).sum::<f64>() / n;
+    let mean_y = samples.iter().map(|&(_, y)| y).sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for &(x, y) in samples {
+        let dx = x as f64 - mean_x;
+        sxx += dx * dx;
+        sxy += dx * (y - mean_y);
+    }
+    let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let y0 = mean_y + slope * (x0 as f64 - mean_x);
+    (y0, slope)
+}
+
+/// Build a [`Pwlf`] from samples + interior breakpoints: independent
+/// per-segment least-squares lines anchored at the left breakpoints
+/// (the greedy pipeline's step 3: "create a new linear function from the
+/// left rounded breaking point").
+pub fn pwlf_from_breakpoints(
+    samples: &[(i64, f64)],
+    breakpoints: &[i64],
+    n_bits: u8,
+) -> Pwlf {
+    assert!(!samples.is_empty());
+    let mut segments = Vec::with_capacity(breakpoints.len() + 1);
+    let mut lo_idx = 0usize;
+    let x_min = samples[0].0;
+    for (j, seg_lo) in std::iter::once(x_min)
+        .chain(breakpoints.iter().copied())
+        .enumerate()
+    {
+        let seg_hi = breakpoints.get(j).copied().unwrap_or(i64::MAX);
+        let mut hi_idx = lo_idx;
+        while hi_idx < samples.len() && samples[hi_idx].0 < seg_hi {
+            hi_idx += 1;
+        }
+        let slice = &samples[lo_idx..hi_idx.max(lo_idx + 1).min(samples.len())];
+        let (y0, slope) = fit_segment_line(slice, seg_lo);
+        segments.push(PwlfSegment {
+            x0: seg_lo,
+            y0,
+            slope,
+        });
+        lo_idx = hi_idx;
+    }
+    Pwlf {
+        breakpoints: breakpoints.to_vec(),
+        segments,
+        n_bits,
+    }
+}
+
+/// A slope rounded to the shift window: sign + bitmask (bit k ↔ term
+/// `2^-(shift_lo + k)`), plus the realized real value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantizedSlope {
+    pub sign: i32,
+    pub mask: u32,
+    pub value: f64,
+}
+
+/// Round `slope` to a PoT (single power) or APoT (subset of powers)
+/// value within the window `[2^-(shift_lo+n_shifts-1), 2^-shift_lo]`.
+pub fn quantize_slope(
+    slope: f64,
+    shift_lo: u8,
+    n_shifts: u8,
+    kind: ApproxKind,
+) -> QuantizedSlope {
+    assert!(kind != ApproxKind::Pwlf, "PWLF keeps float slopes");
+    let sign = if slope < 0.0 { -1 } else { 1 };
+    let mag = slope.abs();
+    let pw = |k: u32| (2.0f64).powi(-((shift_lo as u32 + k) as i32));
+
+    if mag == 0.0 {
+        return QuantizedSlope {
+            sign: 1,
+            mask: 0,
+            value: 0.0,
+        };
+    }
+
+    match kind {
+        ApproxKind::Pot => {
+            // nearest single power (or zero) by absolute error
+            let mut best = QuantizedSlope {
+                sign: 1,
+                mask: 0,
+                value: 0.0,
+            };
+            let mut best_err = mag;
+            for k in 0..n_shifts as u32 {
+                let v = pw(k);
+                let err = (mag - v).abs();
+                if err < best_err {
+                    best_err = err;
+                    best = QuantizedSlope {
+                        sign,
+                        mask: 1 << k,
+                        value: sign as f64 * v,
+                    };
+                }
+            }
+            best
+        }
+        ApproxKind::Apot | ApproxKind::Pwlf => {
+            // (Pwlf excluded by the assert above.)
+            // Optimal subset within the window = binary expansion of the
+            // magnitude in units of the smallest power: round to the
+            // fixed-point grid, clamp to the field width, then map bit
+            // positions back to window indices (bit k of the mask is the
+            // term 2^-(shift_lo+k), i.e. the (n_shifts-1-k)-th bit of the
+            // fixed-point value).
+            let unit = pw(n_shifts as u32 - 1); // smallest power
+            let q = (mag / unit).round_ties_even();
+            let q = if q >= (1u64 << n_shifts) as f64 {
+                (1u64 << n_shifts) - 1 // clamp: slope exceeds the window
+            } else {
+                q as u64
+            };
+            let mut mask = 0u32;
+            let mut acc = 0.0;
+            for k in 0..n_shifts as u32 {
+                if q >> (n_shifts as u32 - 1 - k) & 1 == 1 {
+                    mask |= 1 << k;
+                    acc += pw(k);
+                }
+            }
+            QuantizedSlope {
+                sign: if mask == 0 { 1 } else { sign },
+                mask,
+                value: if mask == 0 { 0.0 } else { sign as f64 * acc },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_fit_exact_on_linear_data() {
+        let samples: Vec<(i64, f64)> = (0..100).map(|x| (x, 3.0 + 0.25 * x as f64)).collect();
+        let (y0, slope) = fit_segment_line(&samples, 0);
+        assert!((slope - 0.25).abs() < 1e-12);
+        assert!((y0 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pot_picks_nearest_power() {
+        // window shift_lo=0, 8 shifts: 1, 1/2, ..., 1/128
+        let q = quantize_slope(0.13, 0, 8, ApproxKind::Pot);
+        assert_eq!(q.mask.count_ones(), 1);
+        assert!((q.value - 0.125).abs() < 1e-12, "{q:?}");
+        let q = quantize_slope(-0.6, 0, 8, ApproxKind::Pot);
+        assert!((q.value + 0.5).abs() < 1e-12);
+        assert_eq!(q.sign, -1);
+    }
+
+    #[test]
+    fn pot_can_choose_zero() {
+        // far below the smallest representable power -> zero
+        let q = quantize_slope(1e-9, 4, 4, ApproxKind::Pot);
+        assert_eq!(q.mask, 0);
+        assert_eq!(q.value, 0.0);
+    }
+
+    #[test]
+    fn apot_is_binary_expansion() {
+        // 0.6875 = 1/2 + 1/8 + 1/16
+        let q = quantize_slope(0.6875, 0, 8, ApproxKind::Apot);
+        assert!((q.value - 0.6875).abs() < 1e-12, "{q:?}");
+    }
+
+    #[test]
+    fn apot_mask_bits() {
+        let q = quantize_slope(0.6875, 0, 8, ApproxKind::Apot);
+        // bits: k=1 (2^-1), k=3 (2^-3), k=4 (2^-4)
+        assert_eq!(q.mask, (1 << 1) | (1 << 3) | (1 << 4));
+    }
+
+    #[test]
+    fn apot_at_least_as_good_as_pot() {
+        for &s in &[0.01, 0.07, 0.3, 0.77, 1.0, 0.51, 0.124] {
+            let p = quantize_slope(s, 0, 8, ApproxKind::Pot);
+            let a = quantize_slope(s, 0, 8, ApproxKind::Apot);
+            assert!(
+                (a.value - s).abs() <= (p.value - s).abs() + 1e-12,
+                "s={s} pot={p:?} apot={a:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn pwlf_from_breakpoints_covers_range() {
+        let samples: Vec<(i64, f64)> =
+            (-100..=100).map(|x| (x, (x as f64 * 0.05).max(0.0))).collect();
+        let p = pwlf_from_breakpoints(&samples, &[0], 8);
+        assert_eq!(p.n_segments(), 2);
+        assert!((p.real(-50)).abs() < 0.5);
+        assert!((p.real(60) - 3.0).abs() < 0.5);
+    }
+}

@@ -1,0 +1,368 @@
+//! FPGA resource / timing / power cost model — the Vivado substitute
+//! behind Table VI (DESIGN.md §Substitutions).
+//!
+//! The model is *semi-structural*: per-family resource counts follow the
+//! unit's structural composition (comparators scale with segments or
+//! thresholds, shifter/mux datapaths scale with the exponent window),
+//! with coefficients calibrated by least squares against the paper's
+//! published Vivado post-implementation anchors on the Ultra96-V2
+//! (Table VI).  Calibration residuals are ≤ 1.3% on every anchor, so the
+//! model *predicts* the anchors and, more importantly, extrapolates the
+//! scaling *shape* the paper argues: MT grows with `2^n - 1` thresholds,
+//! GRAU with `segments × exponents`; adding segments is cheaper than
+//! adding exponents; APoT costs slightly more than PoT.
+//!
+//! Timing: the paper's per-instance delay spread (1.57–1.95 ns across
+//! GRAU variants, non-monotone in S and E) is place-and-route noise, not
+//! structure; we model per-family critical-path constants (the paper's
+//! family means) and the catalog Fmax (250 MHz GRAU / 200 MHz pipelined
+//! MT / 100 MHz serialized MT).
+//!
+//! Power: `P = P0 + c · (LUT + FF) · f_MHz` fitted on three anchors
+//! (pipelined MT, smallest and largest GRAU); reproduces every published
+//! power number within ~15%.
+
+use crate::fit::ApproxKind;
+
+/// Post-implementation estimate for one activation-unit instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwCost {
+    pub lut: u32,
+    pub ff: u32,
+    pub fmax_mhz: f64,
+    /// critical-path total delay (ns)
+    pub delay_ns: f64,
+    /// dynamic power (W)
+    pub power_w: f64,
+    /// pipeline depth in cycles at 8-bit precision (0 = n/a for serial)
+    pub depth_8bit: u32,
+}
+
+impl HwCost {
+    /// Area-Delay product (LUT × ns), Table VI's ADP column.
+    pub fn adp(&self) -> f64 {
+        self.lut as f64 * self.delay_ns
+    }
+    /// Power-Delay product (W × ns), Table VI's PDP column.
+    pub fn pdp(&self) -> f64 {
+        self.power_w * self.delay_ns
+    }
+}
+
+/// The 16 instance families of Table VI (+ the LUT unit for Table II).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnitKind {
+    MtPipelined {
+        n_bits: u8,
+    },
+    MtSerial {
+        n_bits: u8,
+    },
+    GrauPipelined {
+        kind: ApproxKind,
+        segments: u32,
+        exponents: u32,
+    },
+    GrauSerial {
+        kind: ApproxKind,
+    },
+    /// direct LUT over a `2^addr_bits` window, n-bit outputs
+    DirectLut {
+        addr_bits: u32,
+        n_bits: u8,
+    },
+}
+
+// power model: P = P0 + C_P * (LUT + FF) * f_MHz  (fitted, see module doc)
+const P0: f64 = 0.0058;
+const C_P: f64 = 2.05e-8;
+
+fn power(lut: u32, ff: u32, fmax: f64) -> f64 {
+    P0 + C_P * (lut + ff) as f64 * fmax
+}
+
+/// Estimate the post-implementation cost of a unit instance.
+pub fn estimate(kind: UnitKind) -> HwCost {
+    match kind {
+        UnitKind::MtPipelined { n_bits } => {
+            // per-threshold stage: 24-bit comparator + carried count/x regs
+            let th = (1u32 << n_bits) - 1;
+            let lut = 24 + (39.93 * th as f64).round() as u32;
+            let ff = 4 + (72.8 * th as f64).round() as u32;
+            let fmax = 200.0;
+            HwCost {
+                lut,
+                ff,
+                fmax_mhz: fmax,
+                delay_ns: 2.848,
+                power_w: power(lut, ff, fmax),
+                depth_8bit: th,
+            }
+        }
+        UnitKind::MtSerial { n_bits } => {
+            // one comparator + FSM + threshold register file (LUTRAM)
+            let th = (1u32 << n_bits) - 1;
+            let lut = 246 + 10 * th;
+            let ff = 104 + 32 * th;
+            let fmax = 100.0;
+            HwCost {
+                lut,
+                ff,
+                fmax_mhz: fmax,
+                delay_ns: 5.777,
+                power_w: power(lut, ff, fmax),
+                depth_8bit: 0,
+            }
+        }
+        UnitKind::GrauPipelined {
+            kind,
+            segments: s,
+            exponents: e,
+        } => {
+            assert!(kind != ApproxKind::Pwlf);
+            let (s, e) = (s as f64, e as f64);
+            // least-squares calibration on the six published (S,E) points
+            // per family; basis [1, S, E, S*E]; max residual 1.3%.
+            let (lut, ff, delay) = if kind == ApproxKind::Pot {
+                (
+                    -84.5 + 42.75 * s + 27.875 * e + 0.375 * s * e,
+                    -138.667 + 80.5 * s + 35.5 * e + 1.0 * s * e,
+                    1.677, // PoT pipelined family mean
+                )
+            } else {
+                (
+                    -117.333 + 42.0 * s + 38.542 * e + 0.437 * s * e,
+                    -160.667 + 80.5 * s + 42.5 * e + 1.0 * s * e,
+                    1.758, // APoT pipelined family mean
+                )
+            };
+            let (lut, ff) = (lut.round() as u32, ff.round() as u32);
+            let fmax = 250.0;
+            HwCost {
+                lut,
+                ff,
+                fmax_mhz: fmax,
+                delay_ns: delay,
+                power_w: power(lut, ff, fmax),
+                depth_8bit: (s as u32 - 1) + 1 + e as u32 + 2,
+            }
+        }
+        UnitKind::GrauSerial { kind } => {
+            assert!(kind != ApproxKind::Pwlf);
+            // published anchors: one shifter unit + FSM + setting buffer
+            let (lut, ff, delay) = if kind == ApproxKind::Pot {
+                (270, 456, 2.338)
+            } else {
+                (283, 463, 2.352)
+            };
+            let fmax = 250.0;
+            HwCost {
+                lut,
+                ff,
+                fmax_mhz: fmax,
+                delay_ns: delay,
+                power_w: power(lut, ff, fmax),
+                depth_8bit: 0,
+            }
+        }
+        UnitKind::DirectLut { addr_bits, n_bits } => {
+            // BRAM-less estimate: distributed LUTRAM, 64 bits / LUT6
+            let bits = (1u64 << addr_bits) * n_bits as u64;
+            let lut = (bits / 64).max(1) as u32 + 40;
+            let ff = 2 * 24 + 8;
+            let fmax = 250.0;
+            HwCost {
+                lut,
+                ff,
+                fmax_mhz: fmax,
+                delay_ns: 1.9,
+                power_w: power(lut, ff, fmax),
+                depth_8bit: 1,
+            }
+        }
+    }
+}
+
+/// The 16 Table VI instances in row order.
+pub fn table_vi_instances() -> Vec<(String, UnitKind)> {
+    let mut rows: Vec<(String, UnitKind)> = vec![
+        (
+            "Multi-Threshold / Pipelined".into(),
+            UnitKind::MtPipelined { n_bits: 8 },
+        ),
+        (
+            "Multi-Threshold / Serialized".into(),
+            UnitKind::MtSerial { n_bits: 8 },
+        ),
+    ];
+    for kind in [ApproxKind::Pot, ApproxKind::Apot] {
+        for (s, e) in [(4, 8), (4, 16), (6, 8), (6, 16), (8, 8), (8, 16)] {
+            rows.push((
+                format!("{} / Pipelined {}seg {}exp", kind.name(), s, e),
+                UnitKind::GrauPipelined {
+                    kind,
+                    segments: s,
+                    exponents: e,
+                },
+            ));
+        }
+        rows.push((
+            format!("{} / Serialized", kind.name()),
+            UnitKind::GrauSerial { kind },
+        ));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() / b.abs() <= tol
+    }
+
+    #[test]
+    fn reproduces_mt_anchors() {
+        let p = estimate(UnitKind::MtPipelined { n_bits: 8 });
+        assert_eq!(p.lut, 10206);
+        assert_eq!(p.ff, 18568);
+        assert!(close(p.power_w, 0.129, 0.10), "{}", p.power_w);
+        let s = estimate(UnitKind::MtSerial { n_bits: 8 });
+        assert_eq!(s.lut, 2796);
+        assert_eq!(s.ff, 8264);
+        assert!(close(s.power_w, 0.032, 0.15), "{}", s.power_w);
+    }
+
+    #[test]
+    fn reproduces_grau_anchors_within_2pct() {
+        for (kind, s, e, lut, ff) in [
+            (ApproxKind::Pot, 4, 8, 324, 500),
+            (ApproxKind::Pot, 6, 16, 647, 1007),
+            (ApproxKind::Pot, 8, 8, 507, 854),
+            (ApproxKind::Apot, 4, 16, 699, 906),
+            (ApproxKind::Apot, 6, 8, 458, 709),
+            (ApproxKind::Apot, 8, 16, 895, 1292),
+        ] {
+            let c = estimate(UnitKind::GrauPipelined {
+                kind,
+                segments: s,
+                exponents: e,
+            });
+            assert!(close(c.lut as f64, lut as f64, 0.02), "{kind:?} {s} {e}: {c:?}");
+            assert!(close(c.ff as f64, ff as f64, 0.02), "{kind:?} {s} {e}: {c:?}");
+        }
+    }
+
+    #[test]
+    fn headline_lut_reduction_over_90pct() {
+        let mt = estimate(UnitKind::MtPipelined { n_bits: 8 });
+        for kind in [ApproxKind::Pot, ApproxKind::Apot] {
+            for (s, e) in [(4, 8), (6, 8), (8, 8), (4, 16), (6, 16), (8, 16)] {
+                let g = estimate(UnitKind::GrauPipelined {
+                    kind,
+                    segments: s,
+                    exponents: e,
+                });
+                let reduction = 1.0 - g.lut as f64 / mt.lut as f64;
+                assert!(reduction > 0.90, "{kind:?} {s}seg {e}exp: {reduction}");
+            }
+        }
+    }
+
+    #[test]
+    fn segments_cheaper_than_exponents() {
+        // §III-1: doubling segments costs less than doubling exponents
+        let base = estimate(UnitKind::GrauPipelined {
+            kind: ApproxKind::Pot,
+            segments: 4,
+            exponents: 8,
+        });
+        let more_seg = estimate(UnitKind::GrauPipelined {
+            kind: ApproxKind::Pot,
+            segments: 8,
+            exponents: 8,
+        });
+        let more_exp = estimate(UnitKind::GrauPipelined {
+            kind: ApproxKind::Pot,
+            segments: 4,
+            exponents: 16,
+        });
+        assert!(more_seg.lut - base.lut < more_exp.lut - base.lut);
+    }
+
+    #[test]
+    fn apot_slightly_more_expensive_than_pot() {
+        for (s, e) in [(4, 8), (6, 16), (8, 8)] {
+            let p = estimate(UnitKind::GrauPipelined {
+                kind: ApproxKind::Pot,
+                segments: s,
+                exponents: e,
+            });
+            let a = estimate(UnitKind::GrauPipelined {
+                kind: ApproxKind::Apot,
+                segments: s,
+                exponents: e,
+            });
+            assert!(a.lut > p.lut && a.ff > p.ff);
+            assert!((a.lut as f64) < p.lut as f64 * 1.35, "still same order");
+        }
+    }
+
+    #[test]
+    fn adp_pdp_favor_grau() {
+        let mt = estimate(UnitKind::MtPipelined { n_bits: 8 });
+        let g = estimate(UnitKind::GrauPipelined {
+            kind: ApproxKind::Apot,
+            segments: 6,
+            exponents: 8,
+        });
+        assert!(g.adp() < mt.adp() / 10.0);
+        assert!(g.pdp() < mt.pdp() / 5.0);
+        assert!(g.fmax_mhz > mt.fmax_mhz);
+    }
+
+    #[test]
+    fn direct_lut_explodes_with_address_width() {
+        let small = estimate(UnitKind::DirectLut {
+            addr_bits: 10,
+            n_bits: 8,
+        });
+        let big = estimate(UnitKind::DirectLut {
+            addr_bits: 18,
+            n_bits: 8,
+        });
+        assert!(big.lut > 100 * small.lut / 4, "exponential blowup");
+        let grau = estimate(UnitKind::GrauPipelined {
+            kind: ApproxKind::Apot,
+            segments: 6,
+            exponents: 8,
+        });
+        assert!(big.lut > 30 * grau.lut);
+    }
+
+    #[test]
+    fn sixteen_table_instances() {
+        let rows = table_vi_instances();
+        assert_eq!(rows.len(), 16);
+        // depth column spot checks (Table VI)
+        let d = |k| estimate(k).depth_8bit;
+        assert_eq!(d(UnitKind::MtPipelined { n_bits: 8 }), 255);
+        assert_eq!(
+            d(UnitKind::GrauPipelined {
+                kind: ApproxKind::Pot,
+                segments: 6,
+                exponents: 8
+            }),
+            16
+        );
+        assert_eq!(
+            d(UnitKind::GrauPipelined {
+                kind: ApproxKind::Apot,
+                segments: 8,
+                exponents: 16
+            }),
+            26
+        );
+    }
+}

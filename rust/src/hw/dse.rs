@@ -1,0 +1,118 @@
+//! Design-space exploration over (segments × exponent-window) — the
+//! quantitative backing for the paper's abstract claim that "the best
+//! trade-off is usually achieved with 6–8 segments".
+//!
+//! For a set of folded activations, each (S, E) point gets an
+//! approximation-error score (mean APoT RMSE in output LSBs) and a
+//! hardware cost (pipelined APoT LUTs from the calibrated model); the
+//! Pareto front identifies the non-dominated configurations.
+
+use crate::act::FoldedActivation;
+use crate::fit::pipeline::{fit_folded, FitOptions};
+use crate::fit::ApproxKind;
+use crate::hw::cost::{estimate, UnitKind};
+
+#[derive(Clone, Debug)]
+pub struct DsePoint {
+    pub segments: usize,
+    pub exponents: u8,
+    /// mean APoT RMSE over the workload (output LSBs)
+    pub rmse: f64,
+    pub lut: u32,
+    pub depth: u32,
+}
+
+/// Sweep the design space for a workload of folded activations.
+pub fn sweep(
+    workload: &[FoldedActivation],
+    mac_range: (i64, i64),
+    segments: &[usize],
+    exponents: &[u8],
+) -> Vec<DsePoint> {
+    let mut points = Vec::new();
+    for &s in segments {
+        for &e in exponents {
+            let mut rmse_sum = 0.0;
+            for f in workload {
+                let r = fit_folded(
+                    f,
+                    mac_range.0,
+                    mac_range.1,
+                    FitOptions {
+                        segments: s,
+                        n_shifts: e,
+                        samples: 500,
+                        ..Default::default()
+                    },
+                );
+                rmse_sum += r.rmse_apot;
+            }
+            let cost = estimate(UnitKind::GrauPipelined {
+                kind: ApproxKind::Apot,
+                segments: s as u32,
+                exponents: e as u32,
+            });
+            points.push(DsePoint {
+                segments: s,
+                exponents: e,
+                rmse: rmse_sum / workload.len() as f64,
+                lut: cost.lut,
+                depth: cost.depth_8bit,
+            });
+        }
+    }
+    points
+}
+
+/// Non-dominated subset (minimize rmse AND lut), sorted by LUT.
+pub fn pareto(points: &[DsePoint]) -> Vec<DsePoint> {
+    let mut front: Vec<DsePoint> = points
+        .iter()
+        .filter(|p| {
+            !points
+                .iter()
+                .any(|q| q.lut <= p.lut && q.rmse < p.rmse - 1e-12 && (q.lut < p.lut || q.rmse < p.rmse))
+        })
+        .cloned()
+        .collect();
+    front.sort_by_key(|p| p.lut);
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::Activation;
+
+    fn workload() -> Vec<FoldedActivation> {
+        [Activation::Relu, Activation::Sigmoid, Activation::Silu]
+            .iter()
+            .map(|&a| FoldedActivation::new(0.004, 0.0, a, 1.0 / 120.0, 8))
+            .collect()
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_error_falls_with_budget() {
+        let pts = sweep(&workload(), (-1000, 1000), &[4, 6, 8], &[4, 8, 16]);
+        assert_eq!(pts.len(), 9);
+        let at = |s: usize, e: u8| pts.iter().find(|p| p.segments == s && p.exponents == e).unwrap();
+        assert!(at(8, 16).rmse <= at(4, 4).rmse + 1e-9);
+        assert!(at(8, 16).lut > at(4, 4).lut);
+    }
+
+    #[test]
+    fn pareto_front_contains_mid_segment_points() {
+        // the paper's claim: 6-8 segments dominate the trade-off region
+        let pts = sweep(&workload(), (-1000, 1000), &[2, 4, 6, 8], &[4, 8, 16]);
+        let front = pareto(&pts);
+        assert!(!front.is_empty());
+        assert!(
+            front.iter().any(|p| p.segments >= 6),
+            "front {front:?} should reach 6+ segments"
+        );
+        // front must be monotone: lut up => rmse down
+        for w in front.windows(2) {
+            assert!(w[1].rmse <= w[0].rmse + 1e-12);
+        }
+    }
+}

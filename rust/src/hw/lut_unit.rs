@@ -1,0 +1,80 @@
+//! Direct lookup-table activation unit (Table II's LUT design paradigm).
+//!
+//! Functionally exact within its address window, but storage grows
+//! exponentially with the input address width — the paper's §I-B
+//! argument for why direct LUTs don't scale to 18-bit MAC ranges.
+
+use crate::act::FoldedActivation;
+
+pub struct LutUnit {
+    pub lo: i64,
+    pub table: Vec<i32>,
+    pub n_bits: u8,
+    /// outputs for out-of-window inputs
+    pub under: i32,
+    pub over: i32,
+}
+
+impl LutUnit {
+    pub fn from_folded(f: &FoldedActivation, lo: i64, hi: i64) -> Self {
+        assert!(hi > lo);
+        let table: Vec<i32> = (lo..=hi).map(|x| f.eval(x)).collect();
+        LutUnit {
+            lo,
+            under: f.eval(lo),
+            over: f.eval(hi),
+            table,
+            n_bits: f.n_bits,
+        }
+    }
+
+    #[inline]
+    pub fn eval(&self, x: i32) -> i32 {
+        let idx = x as i64 - self.lo;
+        if idx < 0 {
+            self.under
+        } else if idx >= self.table.len() as i64 {
+            self.over
+        } else {
+            self.table[idx as usize]
+        }
+    }
+
+    /// Storage bits = entries × output width (the exponential cost).
+    pub fn storage_bits(&self) -> u64 {
+        self.table.len() as u64 * self.n_bits as u64
+    }
+
+    /// Address width needed for the window.
+    pub fn address_bits(&self) -> u32 {
+        64 - (self.table.len() as u64).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::Activation;
+
+    #[test]
+    fn exact_within_window() {
+        let f = FoldedActivation::new(0.01, 0.0, Activation::Silu, 0.02, 8);
+        let lut = LutUnit::from_folded(&f, -500, 500);
+        for x in -500i64..=500 {
+            assert_eq!(lut.eval(x as i32), f.eval(x));
+        }
+        // clamps outside
+        assert_eq!(lut.eval(-10_000), f.eval(-500));
+        assert_eq!(lut.eval(10_000), f.eval(500));
+    }
+
+    #[test]
+    fn storage_grows_linearly_with_window() {
+        let f = FoldedActivation::new(0.001, 0.0, Activation::Relu, 0.01, 8);
+        let small = LutUnit::from_folded(&f, -1000, 1000);
+        let big = LutUnit::from_folded(&f, -100_000, 100_000);
+        assert_eq!(small.storage_bits(), 2001 * 8);
+        assert_eq!(big.storage_bits(), 200_001 * 8);
+        assert!(big.address_bits() >= 18, "paper's ~18-bit address argument");
+    }
+}

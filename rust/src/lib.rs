@@ -1,0 +1,44 @@
+//! # GRAU — Generic Reconfigurable Activation Unit
+//!
+//! Full-system reproduction of *"GRAU: Generic Reconfigurable Activation
+//! Unit Design for Neural Network Hardware Accelerators"* (Liu, Ullah,
+//! Kumar — CS.AR 2026).
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — offline-environment substrates: JSON codec, CLI parser,
+//!   deterministic PRNG, statistics, synthetic dataset generators, and a
+//!   criterion-style benchmark harness.
+//! * [`act`] — nonlinear activation library and the *folded* form
+//!   (BatchNorm + activation + output re-quantization folded into one
+//!   scalar map), which is what GRAU approximates in hardware.
+//! * [`fit`] — piecewise-linear fitting: the paper's greedy integer-aware
+//!   breakpoint selection (Algorithm 1), a least-squares `pwlf`-style
+//!   baseline, PoT/APoT slope approximation and exponent-window search,
+//!   and the shifter-control encoding of Figure 3.
+//! * [`hw`] — bit-accurate and cycle-accurate hardware models: the 1-bit
+//!   right-shifter units (Figure 4), serialized and pipelined GRAU
+//!   (Figures 5/6), the Multi-Threshold baseline (FINN-R style), a direct
+//!   LUT unit, and the Vivado-calibrated resource/power/timing cost model
+//!   behind Table VI.
+//! * [`qnn`] — the quantized-neural-network substrate: integer tensors,
+//!   quantized linear/conv/pool layers, BN folding, mixed-precision
+//!   configuration, and the paper's model zoo (SFC, CNV, VGG16, ResNet18).
+//! * [`runtime`] — PJRT runtime: loads `artifacts/*.hlo.txt` produced by
+//!   the Python AOT path (`python/compile/aot.py`) and executes them from
+//!   Rust; Python is never on the request path.
+//! * [`coordinator`] — the L3 driver: an activation *service* (request
+//!   router, dynamic batcher, runtime-reconfiguration scheduler over a
+//!   bank of GRAU units), the QAT training orchestrator, and the
+//!   experiment harness that regenerates every table and figure.
+
+pub mod act;
+pub mod coordinator;
+pub mod fit;
+pub mod hw;
+pub mod qnn;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,198 @@
+//! `grau` — the GRAU reproduction launcher.
+//!
+//! ```text
+//! grau train  --config t1_mlp_full8 [--steps N] [--no-cache]
+//! grau fit    --config t3_sfc_silu  [--segments 6] [--shifts 8] [--kind apot]
+//! grau eval   --config ...          (original vs PWLF/PoT/APoT accuracy)
+//! grau serve  [--workers 4] [--backend functional|cyclesim|pjrt] [--requests N]
+//! grau hw-report                    (Table VI)
+//! grau table1|table3|table4|table5|table6|fig1|fig2 [--quick]
+//! grau e2e                          (full pipeline on CNV-mixed)
+//! grau list                         (available artifact configs)
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use grau::coordinator::experiments::{self, Ctx};
+use grau::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};
+use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
+use grau::coordinator::trainer::{dataset_for, train_config};
+use grau::fit::pipeline::Fitter;
+use grau::fit::ApproxKind;
+use grau::qnn::{ActMode, Engine};
+use grau::runtime::Manifest;
+use grau::util::cli::Args;
+use grau::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse_with_flags(std::env::args().skip(1), &["quick", "no-cache", "verbose"]);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    if args.flag("quick") {
+        std::env::set_var("GRAU_QUICK", "1");
+    }
+    match cmd {
+        "list" => {
+            for c in Manifest::list_configs(&artifacts_dir(&args))? {
+                println!("{c}");
+            }
+        }
+        "train" => {
+            let ctx = Ctx::new(&artifacts_dir(&args))?;
+            let config = args.get("config").context("--config required")?;
+            let steps = args.get_usize("steps", ctx.steps_for(config));
+            let tr = train_config(&ctx.rt, &ctx.artifacts, config, steps, !args.flag("no-cache"), true)?;
+            println!(
+                "trained {} ({} steps cached={}) float top1 {:.4}",
+                tr.name,
+                steps,
+                tr.from_cache,
+                tr.float_top1
+            );
+        }
+        "fit" | "eval" => {
+            let ctx = Ctx::new(&artifacts_dir(&args))?;
+            let config = args.get("config").context("--config required")?;
+            let tr = train_config(&ctx.rt, &ctx.artifacts, config, ctx.steps_for(config), true, true)?;
+            let splits = dataset_for(config);
+            let opts = SweepOptions {
+                fitter: match args.get_or("fitter", "greedy") {
+                    "lsq" => Fitter::Lsq,
+                    _ => Fitter::Greedy,
+                },
+                segments: args.get_usize("segments", 6),
+                n_shifts: args.get_usize("shifts", 8) as u8,
+                eval_samples: args.get_usize("eval-samples", 500),
+                ..Default::default()
+            };
+            let exact = Engine::new(tr.graph.clone(), &tr.bundle, ActMode::Exact)?;
+            let orig = exact.evaluate(&splits.test, opts.eval_samples, opts.threads);
+            let ranges = exact.calibrate(&splits.train, opts.calib_samples);
+            let fits = fit_model_with_ranges(&exact, &ranges, opts);
+            println!("config {config}: original top1 {:.4} top5 {:.4}", orig.top1, orig.top5);
+            for kind in [ApproxKind::Pwlf, ApproxKind::Pot, ApproxKind::Apot] {
+                let r = eval_mode(&tr.graph, &tr.bundle, fits.act_mode(kind), &splits.test, opts);
+                println!(
+                    "  {:<10} top1 {:.4} top5 {:.4}  window {}",
+                    kind.name(),
+                    r.top1,
+                    r.top5,
+                    fits.window(kind)
+                );
+            }
+        }
+        "serve" => {
+            let backend = match args.get_or("backend", "functional") {
+                "cyclesim" => Backend::CycleSim,
+                "pjrt" => Backend::Pjrt,
+                _ => Backend::Functional,
+            };
+            let svc = ActivationService::start(ServiceConfig {
+                workers: args.get_usize("workers", 4),
+                max_batch: args.get_usize("max-batch", 8192),
+                backend,
+                affinity: args.get_or("affinity", "on") != "off",
+                artifacts_dir: artifacts_dir(&args),
+            });
+            // register a bank of demo streams (fitted sigmoid/silu/relu)
+            use grau::act::{Activation, FoldedActivation};
+            use grau::fit::pipeline::{fit_folded, FitOptions};
+            for (i, act) in [Activation::Relu, Activation::Sigmoid, Activation::Silu]
+                .iter()
+                .enumerate()
+            {
+                let f = FoldedActivation::new(0.004, 0.0, *act, 1.0 / 120.0, 8);
+                let fr = fit_folded(
+                    &f,
+                    -1000,
+                    1000,
+                    FitOptions {
+                        n_shifts: 16,
+                        // the PJRT offload kernel is compiled for shift_lo=0
+                        ..Default::default()
+                    },
+                );
+                svc.register(i as u64, fr.apot.regs, ApproxKind::Apot);
+            }
+            let n_req = args.get_usize("requests", 1000);
+            let chunk = args.get_usize("chunk", 4096);
+            let mut rng = Rng::new(1);
+            let t0 = std::time::Instant::now();
+            let mut pend = Vec::new();
+            for i in 0..n_req {
+                let data: Vec<i32> =
+                    (0..chunk).map(|_| rng.range_i64(-3000, 3000) as i32).collect();
+                pend.push(svc.submit((i % 3) as u64, data));
+            }
+            for p in pend {
+                p.recv()?;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let m = svc.shutdown();
+            println!(
+                "served {} requests / {} elements in {:.3}s -> {:.2} Melem/s; \
+                 batches {} reconfigs {} (cycles {}), mean latency {:.0}µs max {}µs",
+                m.requests,
+                m.elements,
+                dt,
+                m.elements as f64 / dt / 1e6,
+                m.batches,
+                m.reconfigs,
+                m.reconfig_cycles,
+                m.mean_latency_us(),
+                m.latency_us_max
+            );
+        }
+        "hw-report" | "table6" => {
+            let ctx = Ctx::new(&artifacts_dir(&args))?;
+            experiments::table6::run(&ctx)?;
+        }
+        "table1" => {
+            experiments::table1::run(&Ctx::new(&artifacts_dir(&args))?)?;
+        }
+        "table3" => {
+            experiments::table3::run(&Ctx::new(&artifacts_dir(&args))?)?;
+        }
+        "table4" => {
+            experiments::table4::run(&Ctx::new(&artifacts_dir(&args))?)?;
+        }
+        "table5" => {
+            experiments::table5::run(&Ctx::new(&artifacts_dir(&args))?)?;
+        }
+        "fig1" => {
+            experiments::fig1::run(&Ctx::new(&artifacts_dir(&args))?)?;
+        }
+        "fig2" => {
+            experiments::fig2::run(&Ctx::new(&artifacts_dir(&args))?)?;
+        }
+        "help" | _ => {
+            if cmd != "help" {
+                bail!("unknown command {cmd:?} — run `grau help`");
+            }
+            println!("{}", HELP);
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+grau — GRAU reproduction launcher
+  list                      list artifact configs
+  train --config NAME       train one config through the PJRT runtime
+  eval  --config NAME       original vs PWLF/PoT/APoT accuracy
+  serve [--backend ...]     run the activation service demo
+  table1|table3|table4|table5|table6|fig1|fig2 [--quick]
+  hw-report                 alias of table6
+flags: --artifacts DIR --steps N --segments S --shifts E --quick";

@@ -1,0 +1,620 @@
+//! The integer inference engine: executes the exported QNN with int8-range
+//! operands / int32 MACs, applying the activation path through a pluggable
+//! backend — the component GRAU replaces in hardware.
+
+use anyhow::{bail, Context, Result};
+
+use crate::act::{qrange, Activation, FoldedActivation};
+use crate::fit::Pwlf;
+use crate::hw::mt::MtUnit;
+use crate::hw::GrauRegisters;
+use crate::qnn::graph::{GraphOp, ModelGraph, OpKind};
+use crate::qnn::weights::ExportBundle;
+use crate::util::dataset::Dataset;
+use crate::util::stats::{accuracy_from_logits, topk_accuracy};
+use crate::util::threadpool::parallel_map;
+
+/// Which activation implementation every quantization site uses.
+/// Per-site vectors are indexed like [`ModelGraph::activation_sites`],
+/// inner vectors per output channel (FINN-style per-channel units).
+pub enum ActMode {
+    Exact,
+    Pwlf(Vec<Vec<Pwlf>>),
+    Grau(Vec<Vec<GrauRegisters>>),
+    Mt(Vec<Vec<MtUnit>>),
+}
+
+impl ActMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActMode::Exact => "exact",
+            ActMode::Pwlf(_) => "pwlf",
+            ActMode::Grau(_) => "grau",
+            ActMode::Mt(_) => "mt",
+        }
+    }
+}
+
+/// Per-op precomputed execution data.
+#[derive(Clone, Debug, Default)]
+struct LayerData {
+    w_shape: Vec<usize>,
+    w: Vec<i32>,
+    /// folded per-channel affine (gap-corrected): pre-act = a*mac + b
+    a: Vec<f64>,
+    b: Vec<f64>,
+    s_out: f64,
+    /// fixed-point Q16 multipliers for add ops
+    m_l: i64,
+    m_r: i64,
+    /// output spatial/vector shape
+    out_shape: Vec<usize>,
+}
+
+/// Per-site per-channel observed MAC ranges (for fitting).
+#[derive(Clone, Debug, Default)]
+pub struct MacRanges {
+    /// [site][channel] -> (min, max)
+    pub ranges: Vec<Vec<(i32, i32)>>,
+}
+
+impl MacRanges {
+    fn new(channels: &[usize]) -> Self {
+        MacRanges {
+            ranges: channels.iter().map(|&c| vec![(i32::MAX, i32::MIN); c]).collect(),
+        }
+    }
+    fn update(&mut self, site: usize, ch: usize, v: i32) {
+        let r = &mut self.ranges[site][ch];
+        r.0 = r.0.min(v);
+        r.1 = r.1.max(v);
+    }
+    pub fn merge(&mut self, other: &MacRanges) {
+        for (s, o) in self.ranges.iter_mut().zip(&other.ranges) {
+            for (r, q) in s.iter_mut().zip(o) {
+                r.0 = r.0.min(q.0);
+                r.1 = r.1.max(q.1);
+            }
+        }
+    }
+}
+
+/// Accuracy evaluation outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+pub struct Engine {
+    pub graph: ModelGraph,
+    pub in_step: f64,
+    layers: Vec<LayerData>,
+    /// op index -> activation-site index
+    site_of_op: Vec<Option<usize>>,
+    /// per-site channel counts
+    site_channels: Vec<usize>,
+    pub act_mode: ActMode,
+}
+
+impl Engine {
+    pub fn new(graph: ModelGraph, bundle: &ExportBundle, act_mode: ActMode) -> Result<Engine> {
+        let in_step = bundle.scalar("in_step")? as f64;
+        let sites = graph.activation_sites();
+        let mut site_of_op = vec![None; graph.ops.len()];
+        for (si, &oi) in sites.iter().enumerate() {
+            site_of_op[oi] = Some(si);
+        }
+
+        let mut layers = Vec::with_capacity(graph.ops.len());
+        let mut shape: Vec<usize> = Vec::new();
+        let mut shapes: Vec<Vec<usize>> = Vec::new();
+        // correction accumulated by ops that rescale without requantizing
+        // (gap divides by the pooled element count)
+        let mut corr = 1.0f64;
+        let mut site_channels = vec![0usize; sites.len()];
+
+        for op in &graph.ops {
+            let mut ld = LayerData::default();
+            match op.kind {
+                OpKind::Input => {
+                    shape = op.shape.clone();
+                }
+                OpKind::Conv | OpKind::Linear => {
+                    let name = &op.name;
+                    let (w_shape, w) = bundle.w_int(name)?;
+                    let a = bundle.get(&format!("{name}/a"))?.data.clone();
+                    let b = bundle.get(&format!("{name}/b"))?.data.clone();
+                    let s_out = bundle.scalar(&format!("{name}/s_out"))? as f64;
+                    ld.a = a.iter().map(|&v| v as f64 * corr).collect();
+                    ld.b = b.iter().map(|&v| v as f64).collect();
+                    ld.s_out = s_out;
+                    ld.w_shape = w_shape;
+                    ld.w = w;
+                    corr = 1.0;
+                    if op.kind == OpKind::Conv {
+                        let in_shape = if op.lhs >= 0 {
+                            shapes[op.lhs as usize].clone()
+                        } else {
+                            shape.clone()
+                        };
+                        let h = in_shape[0].div_ceil(op.stride);
+                        shape = vec![h, h, op.out_ch];
+                    } else {
+                        shape = vec![op.out_ch];
+                    }
+                }
+                OpKind::MaxPool => {
+                    shape = vec![shape[0] / 2, shape[1] / 2, shape[2]];
+                }
+                OpKind::Gap => {
+                    corr /= (shape[0] * shape[1]) as f64;
+                    shape = vec![1, 1, shape[2]];
+                }
+                OpKind::Flatten => {
+                    shape = vec![shape.iter().product()];
+                }
+                OpKind::Add => {
+                    let s_l = bundle.scalar(&format!("{}/s_lhs", op.name))? as f64;
+                    let s_r = bundle.scalar(&format!("{}/s_rhs", op.name))? as f64;
+                    let s_out = bundle.scalar(&format!("{}/s_out", op.name))? as f64;
+                    // Q16 fixed-point requant multipliers (the standard
+                    // integer-accelerator residual realignment)
+                    ld.m_l = ((s_l / s_out) * 65536.0).round() as i64;
+                    ld.m_r = ((s_r / s_out) * 65536.0).round() as i64;
+                    ld.s_out = s_out;
+                    shape = shapes[op.lhs as usize].clone();
+                }
+            }
+            ld.out_shape = shape.clone();
+            shapes.push(shape.clone());
+            layers.push(ld);
+        }
+        for (si, &oi) in sites.iter().enumerate() {
+            site_channels[si] = match graph.ops[oi].kind {
+                OpKind::Add => *shapes[oi].last().unwrap(),
+                _ => graph.ops[oi].out_ch,
+            };
+        }
+        Ok(Engine {
+            graph,
+            in_step,
+            layers,
+            site_of_op,
+            site_channels,
+            act_mode,
+        })
+    }
+
+    pub fn site_channels(&self) -> &[usize] {
+        &self.site_channels
+    }
+
+    pub fn empty_ranges(&self) -> MacRanges {
+        MacRanges::new(&self.site_channels)
+    }
+
+    /// The folded activation black box at (site, channel) — what the
+    /// fitting pipeline approximates.  For `Add` sites the "MAC domain"
+    /// is the Q16 pre-activation sum.
+    pub fn folded(&self, site: usize, channel: usize) -> FoldedActivation {
+        let oi = self
+            .site_of_op
+            .iter()
+            .position(|s| *s == Some(site))
+            .expect("site index");
+        let op = &self.graph.ops[oi];
+        let ld = &self.layers[oi];
+        // 1-bit sites quantize the BN output directly (sign) — the
+        // nonlinearity folds into the threshold (see model.py forward)
+        let act = if op.a_bits == 1 {
+            Activation::Identity
+        } else {
+            Activation::parse(&op.act).unwrap_or(Activation::Identity)
+        };
+        match op.kind {
+            OpKind::Add => {
+                // pre-act value = q16_sum * s_out / 65536... the add path
+                // applies act on the float sum s_l*l + s_r*r; in Q16 the
+                // integer x maps to value x * s_out / 65536.
+                FoldedActivation::new(ld.s_out / 65536.0, 0.0, act, ld.s_out, op.a_bits)
+            }
+            _ => FoldedActivation::new(ld.a[channel], ld.b[channel], act, ld.s_out, op.a_bits),
+        }
+    }
+
+    #[inline]
+    fn apply_act(&self, site: usize, ch: usize, mac: i32, f: &FoldedActivation) -> i32 {
+        match &self.act_mode {
+            ActMode::Exact => f.eval(mac as i64),
+            ActMode::Pwlf(v) => v[site][ch].eval(mac as i64),
+            ActMode::Grau(v) => v[site][ch].eval(mac),
+            ActMode::Mt(v) => v[site][ch].eval(mac),
+        }
+    }
+
+    /// Run one sample; returns logits. `ranges` records per-site MAC
+    /// extents when provided (calibration pass).
+    pub fn forward_sample(&self, x: &[f32], mut ranges: Option<&mut MacRanges>) -> Vec<f32> {
+        let n_ops = self.graph.ops.len();
+        let mut outs: Vec<Vec<i32>> = Vec::with_capacity(n_ops);
+        let mut logits: Vec<f32> = Vec::new();
+        let (in_qmin, in_qmax) = qrange(8);
+
+        for (oi, op) in self.graph.ops.iter().enumerate() {
+            let ld = &self.layers[oi];
+            let out: Vec<i32> = match op.kind {
+                OpKind::Input => x
+                    .iter()
+                    .map(|&v| {
+                        ((v as f64 / self.in_step).round_ties_even() as i64)
+                            .clamp(in_qmin as i64, in_qmax as i64) as i32
+                    })
+                    .collect(),
+                OpKind::Linear => {
+                    let src = &outs[oi - 1];
+                    let (in_dim, out_dim) = (ld.w_shape[0], ld.w_shape[1]);
+                    debug_assert_eq!(src.len(), in_dim);
+                    let mut mac = vec![0i32; out_dim];
+                    for (d, &xv) in src.iter().enumerate() {
+                        if xv == 0 {
+                            continue;
+                        }
+                        let row = &ld.w[d * out_dim..(d + 1) * out_dim];
+                        for (c, &wv) in row.iter().enumerate() {
+                            mac[c] += xv * wv;
+                        }
+                    }
+                    self.finish_macs(oi, op, ld, &mac, &mut ranges, &mut logits)
+                }
+                OpKind::Conv => {
+                    let src_oi = if op.lhs >= 0 { op.lhs as usize } else { oi - 1 };
+                    let src = &outs[src_oi];
+                    let in_shape = &self.layers[src_oi].out_shape;
+                    let mac = conv2d_i32(
+                        src,
+                        in_shape,
+                        &ld.w,
+                        &ld.w_shape,
+                        op.stride,
+                    );
+                    self.finish_macs(oi, op, ld, &mac, &mut ranges, &mut logits)
+                }
+                OpKind::MaxPool => {
+                    let src = &outs[oi - 1];
+                    let in_shape = &self.layers[oi - 1].out_shape;
+                    maxpool2(src, in_shape)
+                }
+                OpKind::Gap => {
+                    let src = &outs[oi - 1];
+                    let in_shape = &self.layers[oi - 1].out_shape;
+                    let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+                    let mut sums = vec![0i32; c];
+                    for p in 0..h * w {
+                        for ch in 0..c {
+                            sums[ch] += src[p * c + ch];
+                        }
+                    }
+                    sums
+                }
+                OpKind::Flatten => outs[oi - 1].clone(),
+                OpKind::Add => {
+                    let l = &outs[op.lhs as usize];
+                    let r = &outs[op.rhs as usize];
+                    debug_assert_eq!(l.len(), r.len());
+                    let site = self.site_of_op[oi];
+                    let act = if op.a_bits == 1 {
+                        Activation::Identity
+                    } else {
+                        Activation::parse(&op.act).unwrap_or(Activation::Identity)
+                    };
+                    let f = FoldedActivation::new(
+                        ld.s_out / 65536.0,
+                        0.0,
+                        act,
+                        ld.s_out,
+                        op.a_bits,
+                    );
+                    let chans = *ld.out_shape.last().unwrap();
+                    l.iter()
+                        .zip(r)
+                        .enumerate()
+                        .map(|(idx, (&a, &b))| {
+                            let q16 = ld.m_l * a as i64 + ld.m_r * b as i64;
+                            let q = q16.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+                            let ch = idx % chans;
+                            if let (Some(s), Some(rg)) = (site, ranges.as_deref_mut()) {
+                                rg.update(s, ch, q);
+                            }
+                            match site {
+                                Some(s) => self.apply_act(s, ch, q, &f),
+                                None => q,
+                            }
+                        })
+                        .collect()
+                }
+            };
+            outs.push(out);
+        }
+        logits
+    }
+
+    /// Shared conv/linear epilogue: per-channel activation (or head
+    /// logits).  `mac` is laid out position-major [pos][channel].
+    fn finish_macs(
+        &self,
+        oi: usize,
+        op: &GraphOp,
+        ld: &LayerData,
+        mac: &[i32],
+        ranges: &mut Option<&mut MacRanges>,
+        logits: &mut Vec<f32>,
+    ) -> Vec<i32> {
+        let chans = op.out_ch;
+        if op.name == "head" {
+            *logits = mac
+                .iter()
+                .enumerate()
+                .map(|(i, &m)| (ld.a[i % chans] * m as f64 + ld.b[i % chans]) as f32)
+                .collect();
+            return mac.to_vec();
+        }
+        let site = self.site_of_op[oi].expect("non-head conv/linear is a site");
+        let act = if op.a_bits == 1 {
+            Activation::Identity
+        } else {
+            Activation::parse(&op.act).unwrap_or(Activation::Identity)
+        };
+        let mut out = Vec::with_capacity(mac.len());
+        for (i, &m) in mac.iter().enumerate() {
+            let ch = i % chans;
+            if let Some(rg) = ranges.as_deref_mut() {
+                rg.update(site, ch, m);
+            }
+            let f = FoldedActivation::new(ld.a[ch], ld.b[ch], act, ld.s_out, op.a_bits);
+            out.push(self.apply_act(site, ch, m, &f));
+        }
+        out
+    }
+
+    /// Calibration pass: run `n` samples in Exact mode semantics,
+    /// recording MAC ranges (single-threaded, deterministic).
+    pub fn calibrate(&self, data: &Dataset, n: usize) -> MacRanges {
+        let mut ranges = self.empty_ranges();
+        for i in 0..n.min(data.n) {
+            self.forward_sample(data.sample(i), Some(&mut ranges));
+        }
+        ranges
+    }
+
+    /// Accuracy over the first `limit` samples, `threads`-way parallel.
+    pub fn evaluate(&self, data: &Dataset, limit: usize, threads: usize) -> EvalResult {
+        let n = limit.min(data.n);
+        let c = data.n_classes;
+        let rows = parallel_map(n, threads, |i| self.forward_sample(data.sample(i), None));
+        let mut logits = Vec::with_capacity(n * c);
+        for r in rows {
+            assert_eq!(r.len(), c, "head width");
+            logits.extend_from_slice(&r);
+        }
+        EvalResult {
+            top1: accuracy_from_logits(&logits, n, c, &data.y),
+            top5: topk_accuracy(&logits, n, c, &data.y, 5),
+            n,
+        }
+    }
+}
+
+/// SAME-padded stride-s conv: input [H,W,Cin], weights [kh,kw,Cin,Cout],
+/// output position-major [oh*ow][Cout] int32 MACs.
+pub fn conv2d_i32(
+    src: &[i32],
+    in_shape: &[usize],
+    w: &[i32],
+    w_shape: &[usize],
+    stride: usize,
+) -> Vec<i32> {
+    let (h, wd, cin) = (in_shape[0], in_shape[1], in_shape[2]);
+    let (kh, kw, cin2, cout) = (w_shape[0], w_shape[1], w_shape[2], w_shape[3]);
+    debug_assert_eq!(cin, cin2);
+    let oh = h.div_ceil(stride);
+    let ow = wd.div_ceil(stride);
+    // SAME padding offsets (match XLA: pad_total = (o-1)*s + k - i)
+    let pad_h = (((oh - 1) * stride + kh).saturating_sub(h)) / 2;
+    let pad_w = (((ow - 1) * stride + kw).saturating_sub(wd)) / 2;
+    let mut out = vec![0i32; oh * ow * cout];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let acc = &mut out[(oy * ow + ox) * cout..(oy * ow + ox + 1) * cout];
+            for ky in 0..kh {
+                let iy = (oy * stride + ky) as i64 - pad_h as i64;
+                if iy < 0 || iy >= h as i64 {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * stride + kx) as i64 - pad_w as i64;
+                    if ix < 0 || ix >= wd as i64 {
+                        continue;
+                    }
+                    let px = &src[((iy as usize) * wd + ix as usize) * cin..][..cin];
+                    let wbase = ((ky * kw + kx) * cin) * cout;
+                    for (c, &xv) in px.iter().enumerate() {
+                        if xv == 0 {
+                            continue;
+                        }
+                        let wrow = &w[wbase + c * cout..][..cout];
+                        for (co, &wv) in wrow.iter().enumerate() {
+                            acc[co] += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn maxpool2(src: &[i32], in_shape: &[usize]) -> Vec<i32> {
+    let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![i32::MIN; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for dy in 0..2 {
+                for dx in 0..2 {
+                    let base = ((oy * 2 + dy) * w + ox * 2 + dx) * c;
+                    let obase = (oy * ow + ox) * c;
+                    for ch in 0..c {
+                        out[obase + ch] = out[obase + ch].max(src[base + ch]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Sanity check a bundle covers the graph.
+pub fn validate_bundle(graph: &ModelGraph, bundle: &ExportBundle) -> Result<()> {
+    for op in &graph.ops {
+        match op.kind {
+            OpKind::Conv | OpKind::Linear => {
+                for suffix in ["w_int", "a", "b", "s_out"] {
+                    let k = format!("{}/{}", op.name, suffix);
+                    if !bundle.arrays.contains_key(&k) {
+                        bail!("bundle missing {k}");
+                    }
+                }
+            }
+            OpKind::Add => {
+                for suffix in ["s_lhs", "s_rhs", "s_out"] {
+                    let k = format!("{}/{}", op.name, suffix);
+                    if !bundle.arrays.contains_key(&k) {
+                        bail!("bundle missing {k}");
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if !bundle.arrays.contains_key("in_step") {
+        bail!("bundle missing in_step");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::weights::ExportArray;
+    use crate::util::json::Json;
+
+    /// Hand-built 2-layer MLP: 4 -> 3 (relu) -> 2 (head).
+    fn tiny() -> (ModelGraph, ExportBundle) {
+        let manifest = Json::parse(
+            r#"{"model": {"name": "tiny", "n_classes": 2, "ops": [
+            {"kind":"input","name":"in","shape":[4]},
+            {"kind":"linear","name":"fc0","out_ch":3,"w_bits":8,"a_bits":8,"act":"relu","bn":true,"lhs":-1},
+            {"kind":"linear","name":"head","out_ch":2,"w_bits":8,"a_bits":8,"act":"none","bn":false,"lhs":-1}
+        ]}}"#,
+        )
+        .unwrap();
+        let graph = ModelGraph::from_manifest(&manifest).unwrap();
+        let mut b = ExportBundle::default();
+        let put = |b: &mut ExportBundle, k: &str, shape: Vec<usize>, data: Vec<f32>| {
+            b.arrays.insert(k.into(), ExportArray { shape, data });
+        };
+        put(&mut b, "in_step", vec![], vec![0.25]);
+        // fc0: w (4x3)
+        put(&mut b, "fc0/w_int", vec![4, 3],
+            vec![1., 2., -1., 0., 1., 1., -2., 0., 1., 1., -1., 0.]);
+        put(&mut b, "fc0/a", vec![3], vec![0.1, 0.2, 0.1]);
+        put(&mut b, "fc0/b", vec![3], vec![0.0, -0.5, 0.3]);
+        put(&mut b, "fc0/s_out", vec![], vec![0.05]);
+        // head: w (3x2)
+        put(&mut b, "head/w_int", vec![3, 2], vec![1., -1., 2., 0., 0., 1.]);
+        put(&mut b, "head/a", vec![2], vec![0.01, 0.01]);
+        put(&mut b, "head/b", vec![2], vec![0.0, 0.1]);
+        put(&mut b, "head/s_out", vec![], vec![1.0]);
+        (graph, b)
+    }
+
+    #[test]
+    fn exact_forward_matches_hand_computation() {
+        let (g, b) = tiny();
+        let eng = Engine::new(g, &b, ActMode::Exact).unwrap();
+        let x = [1.0f32, -0.5, 0.25, 2.0];
+        // x_int = round(x/0.25) = [4, -2, 1, 8]
+        // mac = x_int @ w = [4*1+(-2)*0+1*(-2)+8*1, 4*2+(-2)*1+0+8*(-1), 4*(-1)+(-2)*1+1*1+0]
+        //     = [10, -2, -5]
+        // pre = a*mac + b = [1.0, -0.9, -0.2]; relu = [1.0, 0, 0]
+        // act_int = round(relu/0.05) = [20, 0, 0]
+        // head mac = [20*1, 20*(-1)] = [20, -20]
+        // logits = [0.2, -0.1]
+        let logits = eng.forward_sample(&x, None);
+        assert!((logits[0] - 0.2).abs() < 1e-6, "{logits:?}");
+        assert!((logits[1] + 0.1).abs() < 1e-6, "{logits:?}");
+    }
+
+    #[test]
+    fn ranges_recorded() {
+        let (g, b) = tiny();
+        let eng = Engine::new(g, &b, ActMode::Exact).unwrap();
+        let mut r = eng.empty_ranges();
+        eng.forward_sample(&[1.0, -0.5, 0.25, 2.0], Some(&mut r));
+        assert_eq!(r.ranges.len(), 1);
+        assert_eq!(r.ranges[0][0], (10, 10));
+        assert_eq!(r.ranges[0][2], (-5, -5));
+    }
+
+    #[test]
+    fn grau_mode_tracks_exact_when_fit_well() {
+        use crate::fit::pipeline::{fit_folded, FitOptions};
+        let (g, b) = tiny();
+        let exact = Engine::new(g.clone(), &b, ActMode::Exact).unwrap();
+        // fit per-channel GRAU configs over a generous range
+        let mut site_regs = Vec::new();
+        let mut regs = Vec::new();
+        for ch in 0..3 {
+            let f = exact.folded(0, ch);
+            let r = fit_folded(&f, -200, 200, FitOptions { segments: 8, n_shifts: 16, ..Default::default() });
+            regs.push(r.apot.regs);
+        }
+        site_regs.push(regs);
+        let grau = Engine::new(g, &b, ActMode::Grau(site_regs)).unwrap();
+        let x = [1.0f32, -0.5, 0.25, 2.0];
+        let le = exact.forward_sample(&x, None);
+        let lg = grau.forward_sample(&x, None);
+        // relu fold is piecewise linear -> APoT16 at 8 segments is near-exact
+        for (a, b) in le.iter().zip(&lg) {
+            assert!((a - b).abs() < 0.06, "{le:?} vs {lg:?}");
+        }
+    }
+
+    #[test]
+    fn validate_bundle_catches_missing() {
+        let (g, mut b) = tiny();
+        validate_bundle(&g, &b).unwrap();
+        b.arrays.remove("fc0/a");
+        assert!(validate_bundle(&g, &b).is_err());
+    }
+
+    #[test]
+    fn conv_same_padding_identity_kernel() {
+        // 1x1 kernel, stride 1: conv = per-pixel channel mix
+        let src = vec![1, 2, 3, 4]; // 2x2x1
+        let out = conv2d_i32(&src, &[2, 2, 1], &[3], &[1, 1, 1, 1], 1);
+        assert_eq!(out, vec![3, 6, 9, 12]);
+        // stride 2 downsamples
+        let out = conv2d_i32(&src, &[2, 2, 1], &[1], &[1, 1, 1, 1], 2);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let src = vec![1, 5, 3, 2, 8, 0, 4, 4]; // 2x2x2 NHWC
+        let out = maxpool2(&src, &[2, 2, 2]);
+        assert_eq!(out, vec![8, 5]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Model IR parsed from the artifact manifest — the same op list
+//! `python/compile/model.py` builds, re-instantiated in Rust.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Input,
+    Conv,
+    Linear,
+    MaxPool,
+    Gap,
+    Flatten,
+    Add,
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphOp {
+    pub kind: OpKind,
+    pub name: String,
+    pub out_ch: usize,
+    pub ksize: usize,
+    pub stride: usize,
+    pub w_bits: u8,
+    pub a_bits: u8,
+    pub act: String,
+    pub bn: bool,
+    /// explicit input op index (-1 = previous op)
+    pub lhs: i64,
+    pub rhs: i64,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelGraph {
+    pub name: String,
+    pub n_classes: usize,
+    pub ops: Vec<GraphOp>,
+}
+
+impl ModelGraph {
+    pub fn from_manifest(manifest: &Json) -> Result<ModelGraph> {
+        let model = manifest.get("model");
+        let name = model
+            .get("name")
+            .as_str()
+            .context("manifest missing model.name")?
+            .to_string();
+        let n_classes = model
+            .get("n_classes")
+            .as_usize()
+            .context("manifest missing n_classes")?;
+        let ops_json = model.get("ops").as_arr().context("missing ops")?;
+        let mut ops = Vec::with_capacity(ops_json.len());
+        for o in ops_json {
+            let kind = match o.get("kind").as_str().unwrap_or("") {
+                "input" => OpKind::Input,
+                "conv" => OpKind::Conv,
+                "linear" => OpKind::Linear,
+                "maxpool" => OpKind::MaxPool,
+                "gap" => OpKind::Gap,
+                "flatten" => OpKind::Flatten,
+                "add" => OpKind::Add,
+                k => bail!("unknown op kind {k:?}"),
+            };
+            ops.push(GraphOp {
+                kind,
+                name: o.get("name").as_str().unwrap_or("?").to_string(),
+                out_ch: o.get("out_ch").as_usize().unwrap_or(0),
+                ksize: o.get("ksize").as_usize().unwrap_or(0),
+                stride: o.get("stride").as_usize().unwrap_or(1),
+                w_bits: o.get("w_bits").as_i64().unwrap_or(8) as u8,
+                a_bits: o.get("a_bits").as_i64().unwrap_or(8) as u8,
+                act: o.get("act").as_str().unwrap_or("relu").to_string(),
+                bn: o.get("bn").as_bool().unwrap_or(false),
+                lhs: o.get("lhs").as_i64().unwrap_or(-1),
+                rhs: o.get("rhs").as_i64().unwrap_or(-1),
+                shape: o
+                    .get("shape")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                    .unwrap_or_default(),
+            });
+        }
+        if ops.is_empty() || ops[0].kind != OpKind::Input {
+            bail!("model must start with an input op");
+        }
+        Ok(ModelGraph {
+            name,
+            n_classes,
+            ops,
+        })
+    }
+
+    /// Indices of ops that have an activation quantization site (conv /
+    /// linear except head, plus add ops) — one GRAU instance per channel
+    /// of each of these.
+    pub fn activation_sites(&self) -> Vec<usize> {
+        self.ops
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| {
+                (matches!(op.kind, OpKind::Conv | OpKind::Linear) && op.name != "head")
+                    || op.kind == OpKind::Add
+            })
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Quantized weight memory in bytes (Table I's memory column):
+    /// Σ params × w_bits / 8 over conv/linear ops.
+    pub fn weight_bytes(&self) -> f64 {
+        let mut shape: Vec<usize> = self.ops[0].shape.clone();
+        let mut shapes: Vec<Vec<usize>> = Vec::new();
+        let mut total = 0f64;
+        for op in &self.ops {
+            match op.kind {
+                OpKind::Input => shape = op.shape.clone(),
+                OpKind::Conv => {
+                    let in_shape = if op.lhs >= 0 {
+                        shapes[op.lhs as usize].clone()
+                    } else {
+                        shape.clone()
+                    };
+                    let in_ch = *in_shape.last().unwrap();
+                    let params = op.ksize * op.ksize * in_ch * op.out_ch;
+                    total += params as f64 * op.w_bits as f64 / 8.0;
+                    let h = in_shape[0].div_ceil(op.stride);
+                    shape = vec![h, h, op.out_ch];
+                }
+                OpKind::Linear => {
+                    let in_dim = shape[0];
+                    total += (in_dim * op.out_ch) as f64 * op.w_bits as f64 / 8.0;
+                    shape = vec![op.out_ch];
+                }
+                OpKind::MaxPool => shape = vec![shape[0] / 2, shape[1] / 2, shape[2]],
+                OpKind::Gap => shape = vec![1, 1, shape[2]],
+                OpKind::Flatten => shape = vec![shape.iter().product()],
+                OpKind::Add => shape = shapes[op.lhs as usize].clone(),
+            }
+            shapes.push(shape.clone());
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> Json {
+        Json::parse(
+            r#"{"model": {"name": "m", "n_classes": 10, "ops": [
+            {"kind":"input","name":"in","shape":[768]},
+            {"kind":"linear","name":"fc0","out_ch":256,"w_bits":4,"a_bits":4,"act":"relu","bn":true,"lhs":-1},
+            {"kind":"linear","name":"head","out_ch":10,"w_bits":8,"a_bits":8,"act":"none","bn":false,"lhs":-1}
+        ]}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_ops() {
+        let g = ModelGraph::from_manifest(&mini_manifest()).unwrap();
+        assert_eq!(g.ops.len(), 3);
+        assert_eq!(g.ops[1].kind, OpKind::Linear);
+        assert_eq!(g.ops[1].w_bits, 4);
+        assert_eq!(g.activation_sites(), vec![1]);
+    }
+
+    #[test]
+    fn weight_bytes_mixed_precision() {
+        let g = ModelGraph::from_manifest(&mini_manifest()).unwrap();
+        // fc0: 768*256 at 4 bits + head: 256*10 at 8 bits
+        let want = 768.0 * 256.0 * 0.5 + 256.0 * 10.0;
+        assert_eq!(g.weight_bytes(), want);
+    }
+}

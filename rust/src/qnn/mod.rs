@@ -1,0 +1,26 @@
+//! The QNN substrate: an integer inference engine that executes the
+//! exported quantized models with a *pluggable activation path*.
+//!
+//! The engine mirrors the accelerator dataflow the paper assumes: each
+//! conv/linear layer is an integer MAC array (int8-range operands, int32
+//! accumulation); between layers sits the activation unit — exactly the
+//! component GRAU replaces.  Swapping [`ActMode`] switches every layer's
+//! activation path between:
+//!
+//! * `Exact`  — the folded float black box (the "Original QNN" rows),
+//! * `Pwlf`   — float-slope piecewise linear (the "PWLF" rows),
+//! * `Grau`   — the bit-exact PoT/APoT register files (the "PoT-PWLF" /
+//!              "APoT-PWLF" rows), identical arithmetic to `hw::`,
+//! * `Mt`     — the Multi-Threshold baseline (exact only for monotone
+//!              activations — Figure 1).
+//!
+//! Graph structure comes from the artifact manifest (the same IR the JAX
+//! model was built from), weights from the AOT `export` computation.
+
+pub mod engine;
+pub mod graph;
+pub mod weights;
+
+pub use engine::{ActMode, Engine, EvalResult};
+pub use graph::{GraphOp, ModelGraph, OpKind};
+pub use weights::ExportBundle;

@@ -1,0 +1,165 @@
+//! Exported model parameters: integer weights + folded per-channel
+//! affine maps + quantization steps.
+//!
+//! Produced by executing the `export` AOT computation through the PJRT
+//! runtime (or loaded from the weight cache this module writes, so the
+//! table benches can re-run fitting sweeps without re-training).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One exported array (f32 payload; integer-valued for `*/w_int`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExportArray {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// All export arrays of one trained model, keyed exactly like the
+/// manifest's `export_keys` (e.g. `"fc0/w_int"`, `"fc0/a"`, `"in_step"`).
+#[derive(Clone, Debug, Default)]
+pub struct ExportBundle {
+    pub arrays: BTreeMap<String, ExportArray>,
+}
+
+const MAGIC: &[u8; 4] = b"GRWB";
+const VERSION: u32 = 1;
+
+impl ExportBundle {
+    pub fn get(&self, key: &str) -> Result<&ExportArray> {
+        self.arrays
+            .get(key)
+            .with_context(|| format!("export bundle missing {key:?}"))
+    }
+
+    pub fn scalar(&self, key: &str) -> Result<f32> {
+        let a = self.get(key)?;
+        if a.data.len() != 1 {
+            bail!("{key:?} is not a scalar");
+        }
+        Ok(a.data[0])
+    }
+
+    /// Integer weights for a layer, rounded from the f32 carrier.
+    pub fn w_int(&self, layer: &str) -> Result<(Vec<usize>, Vec<i32>)> {
+        let a = self.get(&format!("{layer}/w_int"))?;
+        Ok((
+            a.shape.clone(),
+            a.data.iter().map(|&v| v.round_ties_even() as i32).collect(),
+        ))
+    }
+
+    // --- disk cache (own binary format; no serde offline) --------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.arrays.len() as u32).to_le_bytes())?;
+        for (k, a) in &self.arrays {
+            f.write_all(&(k.len() as u32).to_le_bytes())?;
+            f.write_all(k.as_bytes())?;
+            f.write_all(&(a.shape.len() as u32).to_le_bytes())?;
+            for &d in &a.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            f.write_all(&(a.data.len() as u64).to_le_bytes())?;
+            for &v in &a.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ExportBundle> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a GRWB weight file");
+        }
+        let ver = read_u32(&mut f)?;
+        if ver != VERSION {
+            bail!("{path:?}: unsupported version {ver}");
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut arrays = BTreeMap::new();
+        for _ in 0..n {
+            let klen = read_u32(&mut f)? as usize;
+            let mut kb = vec![0u8; klen];
+            f.read_exact(&mut kb)?;
+            let key = String::from_utf8(kb)?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let len = read_u64(&mut f)? as usize;
+            let mut data = vec![0f32; len];
+            let mut buf = [0u8; 4];
+            for v in &mut data {
+                f.read_exact(&mut buf)?;
+                *v = f32::from_le_bytes(buf);
+            }
+            arrays.insert(key, ExportArray { shape, data });
+        }
+        Ok(ExportBundle { arrays })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut b = ExportBundle::default();
+        b.arrays.insert(
+            "fc0/w_int".into(),
+            ExportArray {
+                shape: vec![2, 3],
+                data: vec![1.0, -2.0, 3.0, 0.0, 127.0, -128.0],
+            },
+        );
+        b.arrays.insert(
+            "in_step".into(),
+            ExportArray {
+                shape: vec![],
+                data: vec![0.031_25],
+            },
+        );
+        let dir = std::env::temp_dir().join("grau_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.grwb");
+        b.save(&path).unwrap();
+        let b2 = ExportBundle::load(&path).unwrap();
+        assert_eq!(b.arrays, b2.arrays);
+        assert_eq!(b2.scalar("in_step").unwrap(), 0.031_25);
+        let (shape, w) = b2.w_int("fc0").unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(w, vec![1, -2, 3, 0, 127, -128]);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let b = ExportBundle::default();
+        assert!(b.get("nope").is_err());
+    }
+}

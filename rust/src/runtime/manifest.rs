@@ -1,0 +1,127 @@
+//! Artifact manifest parsing (`artifacts/{name}.manifest.json`) — the
+//! contract between `python/compile/aot.py` and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::qnn::graph::ModelGraph;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct LeafInfo {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExportKey {
+    pub key: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub dir: PathBuf,
+    pub graph: ModelGraph,
+    pub lr: f64,
+    pub seed: u64,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub n_leaves: usize,
+    /// optimizer leaves are the first `n_opt_leaves` of the flattening;
+    /// predict/export take only the remaining (params, state) leaves
+    pub n_opt_leaves: usize,
+    pub leaves: Vec<LeafInfo>,
+    pub export_keys: Vec<ExportKey>,
+    /// artifact file names keyed by fn: init / train / predict / export
+    pub files: std::collections::BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path, name: &str) -> Result<Manifest> {
+        let path = artifacts_dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        let graph = ModelGraph::from_manifest(&j)?;
+        let shapes = |v: &Json| -> Vec<usize> {
+            v.as_arr()
+                .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        let leaves = j
+            .get("leaves")
+            .as_arr()
+            .context("manifest.leaves")?
+            .iter()
+            .map(|l| LeafInfo {
+                path: l.get("path").as_str().unwrap_or("").to_string(),
+                shape: shapes(l.get("shape")),
+                dtype: l.get("dtype").as_str().unwrap_or("float32").to_string(),
+            })
+            .collect::<Vec<_>>();
+        let export_keys = j
+            .get("export_keys")
+            .as_arr()
+            .context("manifest.export_keys")?
+            .iter()
+            .map(|e| ExportKey {
+                key: e.get("key").as_str().unwrap_or("").to_string(),
+                shape: shapes(e.get("shape")),
+            })
+            .collect();
+        let mut files = std::collections::BTreeMap::new();
+        if let Some(obj) = j.get("artifacts").as_obj() {
+            for (k, v) in obj {
+                files.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+        }
+        Ok(Manifest {
+            name: name.to_string(),
+            dir: artifacts_dir.to_path_buf(),
+            lr: j.get("lr").as_f64().unwrap_or(1e-3),
+            seed: j.get("seed").as_i64().unwrap_or(0) as u64,
+            train_batch: j.get("train_batch").as_usize().unwrap_or(64),
+            eval_batch: j.get("eval_batch").as_usize().unwrap_or(256),
+            input_shape: shapes(j.get("input_shape")),
+            n_classes: j.get("n_classes").as_usize().unwrap_or(10),
+            n_leaves: j.get("n_leaves").as_usize().context("n_leaves")?,
+            n_opt_leaves: j.get("n_opt_leaves").as_usize().unwrap_or(0),
+            graph,
+            leaves,
+            export_keys,
+            files,
+        })
+    }
+
+    pub fn artifact_path(&self, fn_name: &str) -> Result<PathBuf> {
+        let f = self
+            .files
+            .get(fn_name)
+            .with_context(|| format!("manifest {} has no artifact {fn_name}", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Flat input feature count.
+    pub fn input_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// All config names in the artifact index.
+    pub fn list_configs(artifacts_dir: &Path) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(artifacts_dir.join("index.json"))
+            .context("read artifacts/index.json — run `make artifacts`")?;
+        let j = Json::parse(&text)?;
+        Ok(j.get("configs")
+            .as_arr()
+            .context("index.configs")?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect())
+    }
+}

@@ -1,0 +1,270 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from
+//! the Rust request path (Python never runs here).
+//!
+//! Flow per model config: `init` produces the parameter/state/optimizer
+//! leaves; `train` consumes (leaves…, x, y) and returns (leaves…, loss);
+//! `predict` maps (leaves…, x) to logits; `export` folds the trained
+//! model into the integer-engine bundle.  Leaves stay device-resident
+//! between steps (`execute_b` on `PjRtBuffer`s) — the host only touches
+//! the loss scalar and the batch tensors.
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::qnn::weights::{ExportArray, ExportBundle};
+
+/// Shared PJRT client (one CPU client per process).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {path:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on literals, untupling the (return_tuple=True) root.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut out = self.exe.execute::<L>(args)?;
+        untuple(&mut out)
+    }
+
+    /// Execute on device buffers (fast path for the training loop).
+    pub fn run_b(&self, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let mut out = self.exe.execute_b::<xla::PjRtBuffer>(args)?;
+        untuple(&mut out)
+    }
+
+    /// Execute on buffers, keeping outputs as buffers when the runtime
+    /// untuples them (otherwise falls back through literals).
+    pub fn run_b_buffers<L: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self,
+        args: &[L],
+    ) -> Result<RunOut> {
+        let mut out = self.exe.execute_b::<L>(args)?;
+        if out.is_empty() {
+            bail!("no device output");
+        }
+        let outs = out.swap_remove(0);
+        Ok(RunOut { bufs: outs })
+    }
+
+    pub fn run_buffers(&self, args: &[xla::Literal]) -> Result<RunOut> {
+        let mut out = self.exe.execute::<xla::Literal>(args)?;
+        if out.is_empty() {
+            bail!("no device output");
+        }
+        Ok(RunOut {
+            bufs: out.swap_remove(0),
+        })
+    }
+}
+
+/// Device-side outputs of one execution.
+pub struct RunOut {
+    pub bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl RunOut {
+    /// Number of device outputs (1 = still tupled).
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Materialize everything to literals (untupling if needed).
+    pub fn into_literals(self) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(self.bufs.len());
+        for b in &self.bufs {
+            lits.push(b.to_literal_sync()?);
+        }
+        if lits.len() == 1 && lits[0].shape()?.tuple_size().unwrap_or(0) > 0 {
+            return Ok(lits.swap_remove(0).to_tuple()?);
+        }
+        Ok(lits)
+    }
+}
+
+fn untuple(out: &mut Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+    if out.is_empty() {
+        bail!("no device output");
+    }
+    let outs = out.swap_remove(0);
+    let mut lits = Vec::with_capacity(outs.len());
+    for b in &outs {
+        lits.push(b.to_literal_sync()?);
+    }
+    // return_tuple=True roots may come back as a single tuple literal
+    if lits.len() == 1 {
+        if let Ok(shape) = lits[0].shape() {
+            if shape.tuple_size().unwrap_or(0) > 0 {
+                return Ok(lits.swap_remove(0).to_tuple()?);
+            }
+        }
+    }
+    Ok(lits)
+}
+
+/// Literal constructors for the shapes the artifacts expect.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    Ok(l.reshape(dims)?)
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let l = xla::Literal::vec1(data);
+    Ok(l.reshape(dims)?)
+}
+
+// ---------------------------------------------------------------------------
+// Model session: init/train/predict/export over one config's artifacts
+// ---------------------------------------------------------------------------
+
+pub struct ModelSession {
+    pub manifest: Manifest,
+    init: Executable,
+    train: Executable,
+    predict: Executable,
+    export: Executable,
+    /// model leaves (params + state + optimizer).  The CPU PJRT plugin
+    /// returns tuple roots as a single tuple buffer, so buffers cannot
+    /// stay device-resident across steps; on CPU the host<->device copy
+    /// is a memcpy, so literal-resident leaves cost ~ms per step.
+    leaves: Vec<xla::Literal>,
+    pub steps_done: u64,
+}
+
+impl ModelSession {
+    pub fn open(rt: &Runtime, artifacts_dir: &Path, name: &str) -> Result<ModelSession> {
+        let manifest = Manifest::load(artifacts_dir, name)?;
+        let init = rt.load(&manifest.artifact_path("init")?)?;
+        let train = rt.load(&manifest.artifact_path("train")?)?;
+        let predict = rt.load(&manifest.artifact_path("predict")?)?;
+        let export = rt.load(&manifest.artifact_path("export")?)?;
+        let mut s = ModelSession {
+            manifest,
+            init,
+            train,
+            predict,
+            export,
+            leaves: Vec::new(),
+            steps_done: 0,
+        };
+        s.reset()?;
+        Ok(s)
+    }
+
+    /// (Re)initialize the leaves from the AOT init computation.
+    pub fn reset(&mut self) -> Result<()> {
+        let lits = self.init.run::<xla::Literal>(&[])?;
+        if lits.len() != self.manifest.n_leaves {
+            bail!(
+                "init returned {} leaves, want {}",
+                lits.len(),
+                self.manifest.n_leaves
+            );
+        }
+        self.leaves = lits;
+        self.steps_done = 0;
+        Ok(())
+    }
+
+    /// One optimizer step on a host batch; returns the loss.
+    pub fn train_step(&mut self, x: &[f32], y: &[i32]) -> Result<f32> {
+        let m = &self.manifest;
+        let b = m.train_batch;
+        assert_eq!(x.len(), b * m.input_dim());
+        assert_eq!(y.len(), b);
+        let mut dims: Vec<i64> = vec![b as i64];
+        dims.extend(m.input_shape.iter().map(|&d| d as i64));
+        let xl = lit_f32(x, &dims)?;
+        let yl = lit_i32(y, &[b as i64])?;
+        let mut args: Vec<&xla::Literal> = self.leaves.iter().collect();
+        args.push(&xl);
+        args.push(&yl);
+        let mut out = self.train.run(args.as_slice())?;
+        let want = self.manifest.n_leaves + 1;
+        if out.len() != want {
+            bail!("train returned {} outputs, want {want}", out.len());
+        }
+        let loss = out.pop().unwrap().get_first_element::<f32>()?;
+        self.leaves = out;
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// Predict logits for one eval batch (padded to `eval_batch`).
+    pub fn predict_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let b = m.eval_batch;
+        assert_eq!(x.len(), b * m.input_dim());
+        let mut dims: Vec<i64> = vec![b as i64];
+        dims.extend(m.input_shape.iter().map(|&d| d as i64));
+        let xl = lit_f32(x, &dims)?;
+        // predict takes only the (params, state) leaves
+        let mut args: Vec<&xla::Literal> =
+            self.leaves[self.manifest.n_opt_leaves..].iter().collect();
+        args.push(&xl);
+        let out = self.predict.run(args.as_slice())?;
+        Ok(out
+            .into_iter()
+            .next()
+            .context("predict produced no output")?
+            .to_vec::<f32>()?)
+    }
+
+    /// Fold the trained model into the integer-engine bundle.
+    pub fn export_bundle(&self) -> Result<ExportBundle> {
+        let args: Vec<&xla::Literal> =
+            self.leaves[self.manifest.n_opt_leaves..].iter().collect();
+        let lits = self.export.run(args.as_slice())?;
+        let keys = &self.manifest.export_keys;
+        if lits.len() != keys.len() {
+            bail!("export returned {} arrays, want {}", lits.len(), keys.len());
+        }
+        let mut bundle = ExportBundle::default();
+        for (k, lit) in keys.iter().zip(lits) {
+            let data = lit.to_vec::<f32>()?;
+            bundle.arrays.insert(
+                k.key.clone(),
+                ExportArray {
+                    shape: k.shape.clone(),
+                    data,
+                },
+            );
+        }
+        Ok(bundle)
+    }
+}

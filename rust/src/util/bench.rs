@@ -1,0 +1,147 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline).  Used by every target under `rust/benches/` (all declared
+//! `harness = false`), so `cargo bench` runs them unchanged.
+//!
+//! Protocol per benchmark: warm-up, then timed iterations until both a
+//! minimum sample count and a minimum wall-time are reached; reports
+//! mean / p50 / p95 and throughput when the caller declares elements.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+pub struct Bencher {
+    name: String,
+    min_samples: usize,
+    min_time: Duration,
+    elements: Option<u64>,
+}
+
+pub struct BenchReport {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub samples: usize,
+    pub throughput: Option<f64>, // elements / second
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            min_samples: 20,
+            min_time: Duration::from_millis(300),
+            elements: None,
+        }
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.min_samples = n;
+        self
+    }
+
+    pub fn min_time_ms(mut self, ms: u64) -> Self {
+        self.min_time = Duration::from_millis(ms);
+        self
+    }
+
+    /// Declare per-iteration element count for throughput reporting.
+    pub fn elements(mut self, n: u64) -> Self {
+        self.elements = Some(n);
+        self
+    }
+
+    pub fn run<T, F: FnMut() -> T>(self, mut f: F) -> BenchReport {
+        // warm-up
+        for _ in 0..3 {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_samples || start.elapsed() < self.min_time {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_nanos() as f64);
+            if times.len() > 100_000 {
+                break;
+            }
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let mut t = times.clone();
+        let p50 = percentile(&mut t, 50.0);
+        let p95 = percentile(&mut t, 95.0);
+        let throughput = self.elements.map(|e| e as f64 / (mean * 1e-9));
+        let rep = BenchReport {
+            name: self.name,
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+            samples: times.len(),
+            throughput,
+        };
+        rep.print();
+        rep
+    }
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let fmt_t = |ns: f64| {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        let tp = self
+            .throughput
+            .map(|t| {
+                if t >= 1e6 {
+                    format!("  {:.2} Melem/s", t / 1e6)
+                } else {
+                    format!("  {:.1} Kelem/s", t / 1e3)
+                }
+            })
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} mean {:>11}  p50 {:>11}  p95 {:>11}  (n={}){}",
+            self.name,
+            fmt_t(self.mean_ns),
+            fmt_t(self.p50_ns),
+            fmt_t(self.p95_ns),
+            self.samples,
+            tp
+        );
+    }
+}
+
+/// Header printed at the top of each bench binary, echoing what paper
+/// table/figure the target regenerates.
+pub fn bench_header(title: &str, paper_ref: &str) {
+    println!("{}", "=".repeat(78));
+    println!("{title}");
+    println!("reproduces: {paper_ref}");
+    println!("{}", "=".repeat(78));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_numbers() {
+        let rep = Bencher::new("noop")
+            .samples(10)
+            .min_time_ms(5)
+            .elements(100)
+            .run(|| std::hint::black_box(1 + 1));
+        assert!(rep.mean_ns > 0.0);
+        assert!(rep.samples >= 10);
+        assert!(rep.throughput.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Synthetic teacher-labelled datasets (DESIGN.md §Substitutions).
+//!
+//! Mirrors `python/compile/data.py`: inputs are standard-normal vectors /
+//! box-smoothed noise images, labels come from a fixed random *teacher*
+//! network.  The result is a learnable-but-not-trivial task: trained
+//! students land in the same accuracy regime as the paper's real-dataset
+//! models, and — the property the tables actually measure — their
+//! accuracy *degrades* when the activation path is approximated.
+
+use crate::util::rng::Rng;
+
+/// A dataset of flat vectors or NHWC images plus integer labels.
+#[derive(Clone)]
+pub struct Dataset {
+    /// row-major [n, dim...] flattened
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    /// per-sample feature count (prod of input shape)
+    pub dim: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Copy batch `[start, start+b)` (wrapping) into `(x, y)` buffers.
+    pub fn batch(&self, start: usize, b: usize, x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        for k in 0..b {
+            let i = (start + k) % self.n;
+            x.extend_from_slice(self.sample(i));
+            y.push(self.y[i]);
+        }
+    }
+}
+
+/// MNIST-like: class-prototype Gaussian mixture.  Each class has a fixed
+/// random prototype direction; a sample is `alpha * proto[y] + noise`.
+/// `alpha` controls class separation, chosen so trained QNNs land in the
+/// same accuracy regime as the paper's real-dataset models (high but not
+/// saturated), leaving headroom for approximation-induced degradation.
+pub fn teacher_vectors(n: usize, dim: usize, n_classes: usize, seed: u64) -> Dataset {
+    let alpha = 0.18f32;
+    let mut rng = Rng::new(seed);
+    let protos: Vec<f32> = (0..n_classes * dim).map(|_| rng.normal_f32()).collect();
+    let mut x = vec![0f32; n * dim];
+    let mut y = vec![0i32; n];
+    for i in 0..n {
+        let c = rng.range_usize(0, n_classes);
+        y[i] = c as i32;
+        let p = &protos[c * dim..(c + 1) * dim];
+        for (v, &pv) in x[i * dim..(i + 1) * dim].iter_mut().zip(p) {
+            *v = alpha * pv + rng.normal_f32();
+        }
+    }
+    Dataset {
+        x,
+        y,
+        n,
+        dim,
+        n_classes,
+    }
+}
+
+/// CIFAR/ImageNet-like images (NHWC): class-prototype *patterns*
+/// (box-smoothed random images) mixed with smoothed noise — spatially
+/// correlated like natural images, learnable by small conv nets, hard
+/// enough that activation approximation shows up as accuracy loss.
+pub fn teacher_images(n: usize, hw: usize, chans: usize, n_classes: usize, seed: u64) -> Dataset {
+    let alpha = if n_classes > 10 { 0.25f32 } else { 0.2f32 };
+    let mut rng = Rng::new(seed);
+    let dim = hw * hw * chans;
+
+    let smooth = |raw: &[f32], out: &mut [f32], rngless_hw: usize| {
+        let idx = |r: usize, c: usize, ch: usize| (r * rngless_hw + c) * chans + ch;
+        for r in 0..rngless_hw {
+            for c in 0..rngless_hw {
+                for ch in 0..chans {
+                    let mut s = 0f32;
+                    for dr in -1i64..=1 {
+                        for dc in -1i64..=1 {
+                            let rr = (r as i64 + dr).clamp(0, rngless_hw as i64 - 1) as usize;
+                            let cc = (c as i64 + dc).clamp(0, rngless_hw as i64 - 1) as usize;
+                            s += raw[idx(rr, cc, ch)];
+                        }
+                    }
+                    out[idx(r, c, ch)] = s / 9.0;
+                }
+            }
+        }
+    };
+
+    // fixed smoothed prototype pattern per class
+    let mut protos = vec![0f32; n_classes * dim];
+    let mut raw = vec![0f32; dim];
+    for c in 0..n_classes {
+        for v in raw.iter_mut() {
+            *v = rng.normal_f32() * 3.0;
+        }
+        let (a, b) = protos.split_at_mut(c * dim);
+        let _ = a;
+        smooth(&raw, &mut b[..dim], hw);
+    }
+
+    let mut x = vec![0f32; n * dim];
+    let mut y = vec![0i32; n];
+    let mut noise = vec![0f32; dim];
+    for i in 0..n {
+        let c = rng.range_usize(0, n_classes);
+        y[i] = c as i32;
+        for v in raw.iter_mut() {
+            *v = rng.normal_f32();
+        }
+        smooth(&raw, &mut noise, hw);
+        let p = &protos[c * dim..(c + 1) * dim];
+        for ((v, &pv), &nz) in x[i * dim..(i + 1) * dim].iter_mut().zip(p).zip(noise.iter()) {
+            *v = alpha * pv + nz;
+        }
+    }
+    Dataset {
+        x,
+        y,
+        n,
+        dim,
+        n_classes,
+    }
+}
+
+fn argmax(v: &[f64]) -> usize {
+    let mut best = 0;
+    for i in 1..v.len() {
+        if v[i] > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The standard splits used throughout the experiments.
+pub struct Splits {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+pub fn mnist_like(seed: u64) -> Splits {
+    // one generator stream; first n_train samples are train, rest test
+    let all = teacher_vectors(6000, 768, 10, seed);
+    split(all, 5000)
+}
+
+pub fn cifar_like(seed: u64) -> Splits {
+    let all = teacher_images(3500, 32, 3, 10, seed);
+    split(all, 3000)
+}
+
+pub fn imagenet_like(seed: u64) -> Splits {
+    let all = teacher_images(4000, 32, 3, 100, seed);
+    split(all, 3200)
+}
+
+fn split(all: Dataset, n_train: usize) -> Splits {
+    let dim = all.dim;
+    let train = Dataset {
+        x: all.x[..n_train * dim].to_vec(),
+        y: all.y[..n_train].to_vec(),
+        n: n_train,
+        dim,
+        n_classes: all.n_classes,
+    };
+    let n_test = all.n - n_train;
+    let test = Dataset {
+        x: all.x[n_train * dim..].to_vec(),
+        y: all.y[n_train..].to_vec(),
+        n: n_test,
+        dim,
+        n_classes: all.n_classes,
+    };
+    Splits { train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let a = teacher_vectors(500, 64, 10, 3);
+        let b = teacher_vectors(500, 64, 10, 3);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x[..64], b.x[..64]);
+        // every class should appear (rough balance)
+        let mut counts = [0usize; 10];
+        for &y in &a.y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 10), "{counts:?}");
+    }
+
+    #[test]
+    fn images_shape_and_labels() {
+        let d = teacher_images(40, 16, 3, 10, 5);
+        assert_eq!(d.x.len(), 40 * 16 * 16 * 3);
+        assert!(d.y.iter().all(|&y| (0..10).contains(&y)));
+        // smoothing should reduce variance well below the raw normal's
+        // (prototype adds signal on top of the ~0.11 smoothed-noise var)
+        let var: f32 = d.x.iter().map(|v| v * v).sum::<f32>() / d.x.len() as f32;
+        assert!(var < 0.9, "smoothed variance {var}");
+    }
+
+    #[test]
+    fn batch_wraps() {
+        let d = teacher_vectors(10, 4, 3, 1);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        d.batch(8, 4, &mut x, &mut y);
+        assert_eq!(y.len(), 4);
+        assert_eq!(&x[8..12], d.sample(0));
+    }
+}

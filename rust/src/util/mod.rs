@@ -1,0 +1,17 @@
+//! Offline-environment substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so the conveniences a networked project would pull from
+//! crates.io (serde, clap, criterion, rayon, rand) are implemented here:
+//! a JSON codec, a CLI parser, a deterministic PRNG, statistics helpers,
+//! synthetic dataset generators, a scoped thread pool and a
+//! criterion-style benchmark harness.
+
+pub mod bench;
+pub mod cli;
+pub mod dataset;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

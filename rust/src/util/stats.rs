@@ -1,0 +1,143 @@
+//! Streaming statistics + percentile helpers for benches and the service.
+
+/// Online mean/variance (Welford) with min/max.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a sample (nearest-rank). `q` in [0,100].
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q / 100.0) * (samples.len() - 1) as f64).round() as usize;
+    samples[rank.min(samples.len() - 1)]
+}
+
+/// Root-mean-square error between two equal-length slices.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// Classification accuracy from logits (row-major `n x c`) and labels.
+pub fn accuracy_from_logits(logits: &[f32], n: usize, c: usize, labels: &[i32]) -> f64 {
+    assert_eq!(logits.len(), n * c);
+    assert!(labels.len() >= n);
+    let mut hit = 0usize;
+    for i in 0..n {
+        let row = &logits[i * c..(i + 1) * c];
+        let mut best = 0usize;
+        for j in 1..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+        }
+        if best as i32 == labels[i] {
+            hit += 1;
+        }
+    }
+    hit as f64 / n as f64
+}
+
+/// Top-k accuracy from logits.
+pub fn topk_accuracy(logits: &[f32], n: usize, c: usize, labels: &[i32], k: usize) -> f64 {
+    let mut hit = 0usize;
+    for i in 0..n {
+        let row = &logits[i * c..(i + 1) * c];
+        let y = labels[i] as usize;
+        let rank = row.iter().filter(|&&v| v > row[y]).count();
+        if rank < k {
+            hit += 1;
+        }
+    }
+    hit as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_match_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = OnlineStats::new();
+        for x in xs {
+            s.push(x);
+        }
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+        let var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((s.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 100.0), 100.0);
+        let p50 = percentile(&mut v, 50.0);
+        assert!((p50 - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn topk() {
+        // logits for 2 samples, 4 classes
+        let logits = [0.1f32, 0.9, 0.0, 0.0, 0.4, 0.3, 0.2, 0.1];
+        assert_eq!(accuracy_from_logits(&logits, 2, 4, &[1, 0]), 1.0);
+        assert_eq!(accuracy_from_logits(&logits, 2, 4, &[0, 0]), 0.5);
+        assert_eq!(topk_accuracy(&logits, 2, 4, &[0, 1], 2), 1.0);
+    }
+}

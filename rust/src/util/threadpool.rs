@@ -1,0 +1,95 @@
+//! Minimal scoped thread pool (rayon substitute) for data-parallel loops.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Run `f(i)` for every `i in 0..n` across `threads` OS threads.
+/// `f` must be `Sync`; work is distributed by atomic counter (dynamic
+/// load balancing, good for skewed per-item cost).
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let counter = Arc::clone(&counter);
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
+    n: usize,
+    threads: usize,
+    f: F,
+) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = std::sync::Mutex::new(&mut out);
+        // SAFETY-free approach: compute into a Vec of Mutexes would be slow;
+        // instead gather (i, value) pairs per thread then place.
+        drop(slots);
+    }
+    // simple approach: collect pairs then sort into place
+    let pairs = std::sync::Mutex::new(Vec::with_capacity(n));
+    parallel_for(n, threads, |i| {
+        let v = f(i);
+        pairs.lock().unwrap().push((i, v));
+    });
+    for (i, v) in pairs.into_inner().unwrap() {
+        out[i] = Some(v);
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Default worker count: physical parallelism minus one, at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn covers_all_indices() {
+        let hits = AtomicU64::new(0);
+        parallel_for(1000, 4, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 500500);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(100, 4, |i| i * i);
+        assert_eq!(v[7], 49);
+        assert_eq!(v.len(), 100);
+        assert!(v.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let v = parallel_map(5, 1, |i| i);
+        assert_eq!(v, vec![0, 1, 2, 3, 4]);
+    }
+}

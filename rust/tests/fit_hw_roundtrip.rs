@@ -1,0 +1,131 @@
+//! Integration: fitting pipeline -> hardware simulators round-trip.
+//! For a grid of folded activations, the pipelined and serialized
+//! cycle-accurate units must match the functional register-file model
+//! bit-for-bit, and the whole chain must track the exact black box
+//! within a small LSB budget.
+
+use grau::act::{Activation, FoldedActivation};
+use grau::fit::encode::{decode, encode};
+use grau::fit::pipeline::{fit_folded, FitOptions, Fitter};
+use grau::fit::ApproxKind;
+use grau::hw::pipeline::PipelinedGrau;
+use grau::hw::serial::SerialGrau;
+use grau::util::rng::Rng;
+
+fn folded_grid() -> Vec<FoldedActivation> {
+    let mut v = Vec::new();
+    for act in [Activation::Relu, Activation::Sigmoid, Activation::Silu, Activation::Tanh] {
+        for (a, b) in [(0.004, 0.0), (0.001, 0.3), (0.02, -0.5)] {
+            for n_bits in [4u8, 8] {
+                v.push(FoldedActivation::new(a, b, act, 1.0 / 100.0, n_bits));
+            }
+        }
+    }
+    v
+}
+
+#[test]
+fn hardware_equals_functional_for_all_fits() {
+    let mut rng = Rng::new(2024);
+    for (i, f) in folded_grid().into_iter().enumerate() {
+        for fitter in [Fitter::Greedy, Fitter::Lsq] {
+            let fit = fit_folded(
+                &f,
+                -1500,
+                1500,
+                FitOptions {
+                    fitter,
+                    segments: 6,
+                    n_shifts: 8,
+                    samples: 400,
+                    ..Default::default()
+                },
+            );
+            for (kind, regs) in [
+                (ApproxKind::Pot, fit.pot.regs.clone()),
+                (ApproxKind::Apot, fit.apot.regs.clone()),
+            ] {
+                let mut pipe = PipelinedGrau::new(regs.clone(), kind);
+                let ser = SerialGrau::new(regs.clone(), kind);
+                let xs: Vec<i32> = (0..200)
+                    .map(|_| rng.range_i64(-5000, 5000) as i32)
+                    .collect();
+                let (yp, _) = pipe.process_stream(&xs);
+                let (ys, _) = ser.process_stream(&xs);
+                for ((&x, &a), &b) in xs.iter().zip(&yp).zip(&ys) {
+                    let want = regs.eval(x);
+                    assert_eq!(a, want, "case {i} {fitter:?} {kind:?} pipelined x={x}");
+                    assert_eq!(b, want, "case {i} {fitter:?} {kind:?} serial x={x}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fit_tracks_black_box_within_lsb_budget() {
+    // well-conditioned 8-bit cases: APoT-PWLF with 8 segments / 16
+    // exponents should stay within a few LSBs of the exact black box
+    for act in [Activation::Relu, Activation::Sigmoid, Activation::Silu] {
+        let f = FoldedActivation::new(0.004, 0.0, act, 1.0 / 120.0, 8);
+        let fit = fit_folded(
+            &f,
+            -1000,
+            1000,
+            FitOptions {
+                segments: 8,
+                n_shifts: 16,
+                ..Default::default()
+            },
+        );
+        let mut worst = 0i32;
+        for x in (-2000i64..=2000).step_by(7) {
+            let d = (fit.apot.regs.eval(x as i32) - f.eval(x)).abs();
+            worst = worst.max(d);
+        }
+        assert!(worst <= 6, "{act:?}: worst {worst} LSB");
+    }
+}
+
+#[test]
+fn encode_decode_roundtrip_full_space() {
+    for n_shifts in [4u8, 8, 16] {
+        for sign in [1, -1] {
+            // PoT: every single-power mask
+            for k in 0..n_shifts as u32 {
+                let w = encode(sign, 1 << k, n_shifts, ApproxKind::Pot);
+                assert_eq!(decode(w, ApproxKind::Pot), (sign, 1 << k));
+            }
+            // APoT: random masks
+            let mut rng = Rng::new(n_shifts as u64);
+            for _ in 0..50 {
+                let mask = (rng.next_u64() as u32) & ((1u32 << n_shifts) - 1);
+                let w = encode(sign, mask, n_shifts, ApproxKind::Apot);
+                let (s2, m2) = decode(w, ApproxKind::Apot);
+                assert_eq!(m2, mask);
+                if mask != 0 {
+                    assert_eq!(s2, sign);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_two_bit_bypass_matches_mt_semantics() {
+    use grau::hw::GrauRegisters;
+    // 2-bit GRAU bypass == MT with 3 thresholds when the (flat) segment
+    // biases are programmed to the MT levels qmin + j
+    let mut regs = GrauRegisters::new(2, 4, 0, 8);
+    regs.thresholds[..3].copy_from_slice(&[-100, 0, 100]);
+    regs.y0[..4].copy_from_slice(&[-2, -1, 0, 1]);
+    let mut hw = PipelinedGrau::new(regs.clone(), ApproxKind::Apot);
+    assert_eq!(hw.depth(), 3, "2-bit bypass depth matches MT");
+    let xs = vec![-500i32, -100, -1, 0, 99, 100, 500];
+    let (ys, _) = hw.process_stream(&xs);
+    assert_eq!(ys, vec![-2, -1, -1, 0, 0, 1, 1]);
+    // and it equals the functional register-file model
+    for (x, y) in xs.iter().zip(&ys) {
+        assert_eq!(*y, regs.eval(*x));
+    }
+}

@@ -1,0 +1,176 @@
+//! Property-based invariants (hand-rolled generator — proptest is not
+//! vendored offline).  Each property runs over hundreds of randomized
+//! cases with a deterministic seed.
+
+use grau::act::{qrange, Activation, FoldedActivation};
+use grau::fit::greedy::{select_breakpoints, GreedyOptions};
+use grau::fit::pipeline::{fit_samples, FitOptions};
+use grau::fit::slope::quantize_slope;
+use grau::fit::ApproxKind;
+use grau::hw::{GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use grau::util::rng::Rng;
+
+fn random_regs(rng: &mut Rng) -> GrauRegisters {
+    let n_bits = [1u8, 2, 4, 8][rng.range_usize(0, 4)];
+    let segs = rng.range_usize(1, MAX_SEGMENTS + 1);
+    let n_shifts = [4u8, 8, 16][rng.range_usize(0, 3)];
+    let shift_lo = rng.range_i64(0, 8) as u8;
+    let mut r = GrauRegisters::new(n_bits, segs, shift_lo, n_shifts);
+    let mut ths: Vec<i32> = (0..segs - 1)
+        .map(|_| rng.range_i64(-50_000, 50_000) as i32)
+        .collect();
+    ths.sort_unstable();
+    ths.dedup();
+    while ths.len() < segs - 1 {
+        ths.push(*ths.last().unwrap_or(&0) + 1 + ths.len() as i32);
+    }
+    r.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
+    r.thresholds[..segs - 1].copy_from_slice(&ths[..segs - 1]);
+    for j in 0..segs {
+        r.x0[j] = rng.range_i64(-50_000, 50_000) as i32;
+        let (qmin, qmax) = qrange(n_bits);
+        r.y0[j] = rng.range_i64(qmin as i64, qmax as i64 + 1) as i32;
+        r.sign[j] = if rng.uniform() < 0.5 { 1 } else { -1 };
+        r.mask[j] = (rng.next_u64() as u32) & ((1u32 << n_shifts) - 1);
+    }
+    r
+}
+
+/// Re-implementation of the python scalar spec (big-int semantics).
+fn spec_eval(r: &GrauRegisters, x: i32) -> i32 {
+    let mut seg = 0usize;
+    for i in 0..r.n_segments - 1 {
+        if x >= r.thresholds[i] {
+            seg += 1;
+        }
+    }
+    let dx = x as i64 - r.x0[seg] as i64;
+    let mut acc = 0i64;
+    for k in 0..r.n_shifts as u32 {
+        if r.mask[seg] >> k & 1 == 1 {
+            acc += dx >> (r.shift_lo as u32 + k);
+        }
+    }
+    let (qmin, qmax) = qrange(r.n_bits);
+    (r.y0[seg] as i64 + r.sign[seg] as i64 * acc).clamp(qmin as i64, qmax as i64) as i32
+}
+
+#[test]
+fn prop_eval_matches_spec_and_stays_in_range() {
+    let mut rng = Rng::new(7777);
+    for _ in 0..300 {
+        let r = random_regs(&mut rng);
+        let (qmin, qmax) = qrange(r.n_bits);
+        for _ in 0..50 {
+            let x = rng.range_i64(i32::MIN as i64 / 2, i32::MAX as i64 / 2) as i32;
+            let y = r.eval(x);
+            assert_eq!(y, spec_eval(&r, x));
+            assert!(y >= qmin && y <= qmax);
+        }
+    }
+}
+
+#[test]
+fn prop_eval_piecewise_linear_within_segment() {
+    // within one segment with sign=+1 and non-zero mask the response is
+    // monotone non-decreasing in x (floor-shift sums preserve order)
+    let mut rng = Rng::new(99);
+    for _ in 0..100 {
+        let mut r = random_regs(&mut rng);
+        for j in 0..r.n_segments {
+            r.sign[j] = 1;
+        }
+        // pick xs inside one segment (below the first threshold)
+        let hi = if r.n_segments > 1 {
+            r.thresholds[0].saturating_sub(1)
+        } else {
+            i32::MAX / 2
+        };
+        let lo = hi.saturating_sub(10_000);
+        let mut xs: Vec<i32> = (0..30).map(|_| rng.range_i64(lo as i64, hi as i64 + 1) as i32).collect();
+        xs.sort_unstable();
+        let ys: Vec<i32> = xs.iter().map(|&x| r.eval(x)).collect();
+        for w in ys.windows(2) {
+            assert!(w[1] >= w[0], "monotone within segment");
+        }
+    }
+}
+
+#[test]
+fn prop_greedy_breakpoints_sorted_distinct_gapped() {
+    let mut rng = Rng::new(31337);
+    for _ in 0..50 {
+        let n = 200 + rng.range_usize(0, 400);
+        let act = [Activation::Sigmoid, Activation::Silu, Activation::Tanh][rng.range_usize(0, 3)];
+        let f = FoldedActivation::new(
+            0.001 + rng.uniform() * 0.01,
+            rng.normal() * 0.3,
+            act,
+            1.0 / 100.0,
+            8,
+        );
+        let samples = f.sample(-2000, 2000, n);
+        let gap = 1 + rng.range_i64(0, 50);
+        let opts = GreedyOptions {
+            segments: 2 + rng.range_usize(0, 7),
+            min_gap: gap,
+            eps: 1e-4,
+        };
+        let bps = select_breakpoints(&samples, opts);
+        assert!(bps.len() + 1 <= opts.segments);
+        for w in bps.windows(2) {
+            assert!(w[1] - w[0] >= gap, "gap violated: {bps:?} gap {gap}");
+        }
+    }
+}
+
+#[test]
+fn prop_apot_never_worse_than_pot() {
+    let mut rng = Rng::new(4242);
+    for _ in 0..500 {
+        let slope = rng.normal() * 0.5;
+        let shift_lo = rng.range_i64(0, 10) as u8;
+        let n_shifts = [4u8, 8, 16][rng.range_usize(0, 3)];
+        let p = quantize_slope(slope, shift_lo, n_shifts, ApproxKind::Pot);
+        let a = quantize_slope(slope, shift_lo, n_shifts, ApproxKind::Apot);
+        assert!(
+            (a.value - slope).abs() <= (p.value - slope).abs() + 1e-12,
+            "slope {slope} lo {shift_lo} n {n_shifts}: pot {p:?} apot {a:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_fit_error_monotone_in_segments() {
+    let mut rng = Rng::new(808);
+    for _ in 0..20 {
+        let act = [Activation::Sigmoid, Activation::Silu][rng.range_usize(0, 2)];
+        let f = FoldedActivation::new(0.004, rng.normal() * 0.2, act, 1.0 / 120.0, 8);
+        let samples = f.sample(-1500, 1500, 500);
+        let e4 = fit_samples(&samples, 8, FitOptions { segments: 4, samples: 500, ..Default::default() });
+        let e8 = fit_samples(&samples, 8, FitOptions { segments: 8, samples: 500, ..Default::default() });
+        assert!(
+            e8.rmse_pwlf <= e4.rmse_pwlf + 1e-9,
+            "{act:?}: S=8 rmse {} > S=4 rmse {}",
+            e8.rmse_pwlf,
+            e4.rmse_pwlf
+        );
+    }
+}
+
+#[test]
+fn prop_mt_output_monotone_in_input() {
+    use grau::hw::mt::MtUnit;
+    let mut rng = Rng::new(5150);
+    for _ in 0..50 {
+        let n_bits = [1u8, 2, 4, 8][rng.range_usize(0, 4)];
+        let n_th = (1usize << n_bits) - 1;
+        let mut ths: Vec<i32> = (0..n_th).map(|_| rng.range_i64(-9999, 9999) as i32).collect();
+        ths.sort_unstable();
+        let mt = MtUnit::new(n_bits, ths);
+        let mut xs: Vec<i32> = (0..100).map(|_| rng.range_i64(-20_000, 20_000) as i32).collect();
+        xs.sort_unstable();
+        let ys: Vec<i32> = xs.iter().map(|&x| mt.eval(x)).collect();
+        assert!(ys.windows(2).all(|w| w[1] >= w[0]));
+    }
+}

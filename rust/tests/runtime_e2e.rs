@@ -1,0 +1,86 @@
+//! Integration: AOT artifacts -> PJRT training -> export -> integer engine.
+//! The CORE cross-layer signal: JAX-lowered HLO must train under the Rust
+//! runtime, and the exported integer model must agree with the float
+//! predict path on accuracy.
+
+use grau::qnn::{engine::validate_bundle, ActMode, Engine};
+use grau::runtime::{ModelSession, Runtime};
+use grau::util::dataset;
+use std::path::Path;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+#[test]
+fn train_export_eval_mlp() {
+    let dir = artifacts_dir();
+    if !dir.join("t1_mlp_full8.manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let mut sess = ModelSession::open(&rt, dir, "t1_mlp_full8").expect("open session");
+    let splits = dataset::mnist_like(7);
+    let b = sess.manifest.train_batch;
+
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    let mut first = 0.0f32;
+    let mut recent = Vec::new();
+    for step in 0..240 {
+        splits.train.batch(step * b, b, &mut x, &mut y);
+        let loss = sess.train_step(&x, &y).expect("train step");
+        if step == 0 {
+            first = loss;
+        }
+        recent.push(loss);
+    }
+    let tail: f32 = recent[recent.len() - 20..].iter().sum::<f32>() / 20.0;
+    assert!(
+        tail < first * 0.6 && tail < 1.6,
+        "loss should fall: first {first} tail-mean {tail}"
+    );
+
+    // float predict accuracy via the runtime
+    let eb = sess.manifest.eval_batch;
+    let n = 512.min(splits.test.n) / eb * eb;
+    let mut hits = 0usize;
+    for c in 0..n / eb {
+        splits.test.batch(c * eb, eb, &mut x, &mut y);
+        let logits = sess.predict_batch(&x).expect("predict");
+        let classes = sess.manifest.n_classes;
+        for i in 0..eb {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let best = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            hits += (best as i32 == y[i]) as usize;
+        }
+    }
+    let float_acc = hits as f64 / n as f64;
+    assert!(float_acc > 0.5, "float accuracy too low: {float_acc}");
+
+    // export -> integer engine (Exact activation path)
+    let bundle = sess.export_bundle().expect("export");
+    validate_bundle(&sess.manifest.graph, &bundle).expect("bundle complete");
+    let eng = Engine::new(sess.manifest.graph.clone(), &bundle, ActMode::Exact).unwrap();
+    let res = eng.evaluate(&splits.test, n, 4);
+    assert!(
+        (res.top1 - float_acc).abs() < 0.15,
+        "integer engine {} vs float {}",
+        res.top1,
+        float_acc
+    );
+}

@@ -1,0 +1,109 @@
+//! Integration: the L3 activation service under concurrent multi-stream
+//! load, across backends, checked bit-exactly against the registry.
+
+use grau::act::{Activation, FoldedActivation};
+use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::hw::GrauRegisters;
+use grau::util::rng::Rng;
+
+fn fitted(act: Activation, window16: bool) -> GrauRegisters {
+    let f = FoldedActivation::new(0.004, 0.0, act, 1.0 / 120.0, 8);
+    let r = fit_folded(
+        &f,
+        -1000,
+        1000,
+        FitOptions {
+            n_shifts: if window16 { 16 } else { 8 },
+            ..Default::default()
+        },
+    );
+    r.apot.regs
+}
+
+#[test]
+fn concurrent_multistream_bit_exact() {
+    for backend in [Backend::Functional, Backend::CycleSim] {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 4,
+            max_batch: 4096,
+            backend,
+            ..Default::default()
+        });
+        let acts = [Activation::Relu, Activation::Sigmoid, Activation::Silu];
+        let regs: Vec<GrauRegisters> = acts.iter().map(|&a| fitted(a, false)).collect();
+        for (i, r) in regs.iter().enumerate() {
+            svc.register(i as u64, r.clone(), ApproxKind::Apot);
+        }
+        let mut rng = Rng::new(1);
+        let mut pending = Vec::new();
+        for i in 0..60 {
+            let sid = (i % 3) as u64;
+            let data: Vec<i32> = (0..500).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
+            pending.push((sid, data.clone(), svc.submit(sid, data)));
+        }
+        for (sid, data, rx) in pending {
+            let resp = rx.recv().expect("response");
+            for (x, y) in data.iter().zip(&resp.data) {
+                assert_eq!(*y, regs[sid as usize].eval(*x), "{backend:?} stream {sid}");
+            }
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.requests, 60);
+        assert_eq!(m.elements, 60 * 500);
+        if backend == Backend::CycleSim {
+            assert!(m.sim_cycles > 0);
+        }
+    }
+}
+
+#[test]
+fn metrics_conserved_under_load() {
+    let svc = ActivationService::start(ServiceConfig {
+        workers: 3,
+        ..Default::default()
+    });
+    svc.register(0, fitted(Activation::Sigmoid, false), ApproxKind::Apot);
+    let mut pending = Vec::new();
+    for _ in 0..200 {
+        pending.push(svc.submit(0, vec![1, 2, 3, 4, 5]));
+    }
+    for p in pending {
+        p.recv().unwrap();
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 200);
+    assert_eq!(m.elements, 1000);
+    assert!(m.batches <= m.requests);
+    assert!(m.mean_latency_us() <= m.latency_us_max as f64);
+}
+
+#[test]
+fn pjrt_offload_backend_matches_functional() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("grau_act_service.hlo.txt").exists() {
+        eprintln!("skipping: service artifact missing (run `make artifacts`)");
+        return;
+    }
+    let svc = ActivationService::start(ServiceConfig {
+        workers: 1,
+        backend: Backend::Pjrt,
+        artifacts_dir: dir.to_path_buf(),
+        ..Default::default()
+    });
+    // the offload kernel is compiled for shift_lo=0, 16 shifts, 8-bit
+    let regs = fitted(Activation::Silu, true);
+    if regs.shift_lo != 0 {
+        eprintln!("skipping: fitted window not at shift_lo=0");
+        svc.shutdown();
+        return;
+    }
+    svc.register(0, regs.clone(), ApproxKind::Apot);
+    let data: Vec<i32> = (-3000..3000).step_by(3).collect();
+    let resp = svc.call(0, data.clone()).expect("pjrt call");
+    for (x, y) in data.iter().zip(&resp.data) {
+        assert_eq!(*y, regs.eval(*x), "pjrt offload x={x}");
+    }
+    svc.shutdown();
+}
