@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Local gate: run before landing any change.
+#
+#   ./ci.sh          full gate (fmt, build, test, doc)
+#   ./ci.sh fast     skip the doc build
+#
+# Mirrors the tier-1 verify (`cargo build --release && cargo test -q`)
+# plus formatting and rustdoc hygiene.  The fmt step is advisory (the
+# seed predates rustfmt enforcement); build, test, and doc are fatal.
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+step() { printf '\n== %s ==\n' "$*"; }
+
+step "cargo fmt --check (advisory)"
+if ! cargo fmt --check; then
+    printf 'ci.sh: WARNING: formatting drift (run `cargo fmt`)\n'
+fi
+
+step "cargo build --release (lib, bin, benches, examples)"
+cargo build --release --benches --examples
+
+step "cargo test -q"
+cargo test -q
+
+if [ "${1:-}" != "fast" ]; then
+    step "cargo doc --no-deps"
+    cargo doc --no-deps
+fi
+
+printf '\nci.sh: all green\n'

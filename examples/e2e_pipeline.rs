@@ -29,7 +29,7 @@ use grau::hw::cost::{estimate, UnitKind};
 use grau::qnn::{ActMode, Engine};
 use grau::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> grau::error::Result<()> {
     let artifacts = Path::new("artifacts");
     // the 8-bit CNV — the mixed-precision variant is demonstrated by
     // examples/mixed_precision_accelerator.rs; the 8-bit model trains to

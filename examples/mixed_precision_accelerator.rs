@@ -16,7 +16,7 @@ use grau::hw::pipeline::PipelinedGrau;
 use grau::qnn::{ActMode, Engine};
 use grau::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> grau::error::Result<()> {
     let artifacts = Path::new("artifacts");
     let config = "t1_mlp_mixed"; // layer precisions 1 / 2 / 4 / 8
     let rt = Runtime::cpu()?;

@@ -3,7 +3,7 @@
 //! non-monotone function (SiLU-folded, right plot).  Emits the two data
 //! series as CSV and reports the max error of each.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::act::{Activation, FoldedActivation};
 use crate::coordinator::experiments::Ctx;

@@ -2,7 +2,7 @@
 //! APoT-PWLF (Sigmoid and SiLU, 6 segments, 8-bit outputs).  Emits the
 //! four curves per activation as CSV plus per-curve RMSE.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::act::{Activation, FoldedActivation};
 use crate::coordinator::experiments::Ctx;

@@ -13,7 +13,7 @@ pub mod table6;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::runtime::Runtime;
 

@@ -2,7 +2,7 @@
 //! MNIST-like) — accuracy, accuracy loss vs the mixed baseline, weight
 //! memory, and memory ratio.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::coordinator::experiments::{acc, Ctx};
 use crate::coordinator::trainer::{dataset_for, train_config};

@@ -3,7 +3,7 @@
 //! ReLU / Sigmoid / SiLU, using the continuous LSQ fitter (the library
 //! substitute) with 6 segments.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::coordinator::experiments::{acc, Ctx};
 use crate::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};

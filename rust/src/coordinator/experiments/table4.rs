@@ -3,7 +3,7 @@
 //! / PoT-PWLF / APoT-PWLF.  Quick mode trims to segments {4,8} and
 //! windows {16,8}.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::coordinator::experiments::{acc, Ctx};
 use crate::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};

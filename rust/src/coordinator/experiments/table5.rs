@@ -2,7 +2,7 @@
 //! mixed-precision, ReLU and ReLU+SiLU, Top-1 / Top-5 for PWLF and
 //! APoT-PWLF over segments {4,6,8}.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::coordinator::experiments::{acc, Ctx};
 use crate::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};

@@ -3,7 +3,7 @@
 //! model, plus *measured* pipeline depth and cycle counts from the
 //! cycle-accurate simulators (the Vivado-substitute validation loop).
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::act::{Activation, FoldedActivation};
 use crate::coordinator::experiments::Ctx;

@@ -38,7 +38,7 @@ impl Default for SweepOptions {
 
 /// All per-channel fits of one model, reusable across ApproxKinds.
 pub struct ModelFits {
-    /// [site][channel]
+    /// `[site][channel]`
     pub pwlf: Vec<Vec<Pwlf>>,
     pub pot: Vec<Vec<GrauRegisters>>,
     pub apot: Vec<Vec<GrauRegisters>>,

@@ -21,7 +21,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::error::{ensure, Context, Result};
 
 use crate::fit::ApproxKind;
 use crate::hw::pipeline::PipelinedGrau;
@@ -371,28 +371,30 @@ impl PjrtOffload {
     fn run(&mut self, regs: &GrauRegisters, data: &[i32]) -> Result<Vec<i32>> {
         use crate::runtime::lit_i32;
         // the artifact is fixed-shape: shift_lo 0, 16 shifts, 8-bit
-        anyhow::ensure!(
+        ensure!(
             regs.shift_lo == 0 && regs.n_shifts == 16 && regs.n_bits == 8,
             "PJRT offload kernel is compiled for (shift_lo=0, 16 shifts, 8-bit)"
         );
         let mut out = Vec::with_capacity(data.len());
+        // register-file literals are loop-invariant; only x changes per chunk
+        let masks: Vec<i32> = regs.mask.iter().map(|&m| m as i32).collect();
+        let reg_lits = [
+            lit_i32(&regs.thresholds, &[7])?,
+            lit_i32(&regs.x0, &[8])?,
+            lit_i32(&regs.y0, &[8])?,
+            lit_i32(&regs.sign, &[8])?,
+            lit_i32(&masks, &[8])?,
+        ];
         for chunk in data.chunks(SERVICE_N) {
             let mut x = chunk.to_vec();
             x.resize(SERVICE_N, 0);
-            let masks: Vec<i32> = regs.mask.iter().map(|&m| m as i32).collect();
-            let args = [
-                lit_i32(&x, &[SERVICE_N as i64])?,
-                lit_i32(&regs.thresholds, &[7])?,
-                lit_i32(&regs.x0, &[8])?,
-                lit_i32(&regs.y0, &[8])?,
-                lit_i32(&regs.sign, &[8])?,
-                lit_i32(&masks, &[8])?,
-            ];
+            let xl = lit_i32(&x, &[SERVICE_N as i64])?;
+            let args = [&xl, &reg_lits[0], &reg_lits[1], &reg_lits[2], &reg_lits[3], &reg_lits[4]];
             let lits = self.exe.run(&args)?;
             let y = lits
                 .into_iter()
                 .next()
-                .ok_or_else(|| anyhow::anyhow!("no output"))?
+                .context("no output")?
                 .to_vec::<i32>()?;
             out.extend_from_slice(&y[..chunk.len()]);
         }

@@ -5,7 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use crate::qnn::engine::validate_bundle;
 use crate::qnn::{ExportBundle, ModelGraph};
@@ -88,7 +88,6 @@ pub fn train_config(
         let loss = sess.train_step(&x, &y)?;
         losses.push(loss);
         if verbose && (step % 50 == 0 || step + 1 == steps) {
-            log::info!("[{name}] step {step:>4} loss {loss:.4}");
             println!("[{name}] step {step:>4} loss {loss:.4}");
         }
     }

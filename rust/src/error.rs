@@ -1,0 +1,228 @@
+//! Crate-local error handling — context-chained errors with zero
+//! external dependencies.
+//!
+//! The offline build environment vendors no crates, so this module
+//! provides the small error-handling surface the rest of the codebase
+//! relies on:
+//!
+//! * [`Error`] — an opaque, context-chained error value.
+//! * [`Result`] — `Result<T, Error>` with the error type defaulted.
+//! * [`Context`] — `.context(msg)` / `.with_context(|| msg)` adapters on
+//!   `Result` and `Option`, attaching a human-readable frame to the
+//!   failure path.
+//! * [`bail!`](crate::bail) / [`ensure!`](crate::ensure) — early-return
+//!   macros accepting `format!`-style arguments.
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the whole chain separated by `: ` (outermost context first,
+//! root cause last), which is what `main` uses for fatal errors.
+
+use std::fmt;
+
+/// An opaque error: a chain of human-readable frames, outermost context
+/// first, root cause last.
+///
+/// Deliberately does **not** implement [`std::error::Error`]: that keeps
+/// the blanket `From<E: std::error::Error>` conversion below coherent,
+/// so `?` works on any standard error type inside functions returning
+/// [`Result`].
+pub struct Error {
+    /// context frames; `chain[0]` is the outermost message and the last
+    /// entry is the root cause
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context frame.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the frames from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if f.alternate() {
+            for frame in &self.chain[1..] {
+                write!(f, ": {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, frame) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Convert any standard error into [`Error`], flattening its source
+/// chain into frames.  This is what makes `?` work on `io::Error`,
+/// `FromUtf8Error`, `RecvError`, [`JsonError`](crate::util::json::JsonError)
+/// and friends.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result alias; the error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context adapters for `Result` and `Option` — attach an outer message
+/// to the failure path.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with `ctx`.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Coherent with the blanket impl above because `Error` itself does not
+// implement `std::error::Error` (see the type's doc comment).
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an [`Error`] built from `format!`-style arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    // bare arm first so `ensure!(cond,)` (trailing comma, no message)
+    // gets the stringified-condition message instead of `format!()`
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::error::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+// Make the macros importable alongside the types:
+// `use grau::error::{bail, ensure, Context, Result};`
+pub use crate::{bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root cause {}", 42)
+    }
+
+    #[test]
+    fn bail_and_context_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause 42");
+        assert_eq!(e.root_cause(), "root cause 42");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        let e = check(-1).unwrap_err();
+        assert_eq!(format!("{e}"), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn open() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+            Ok(s)
+        }
+        assert!(open().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        let v = Some(5).with_context(|| "unused").unwrap();
+        assert_eq!(v, 5);
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = fails().context("ctx").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("root cause 42"));
+    }
+}

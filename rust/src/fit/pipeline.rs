@@ -19,8 +19,11 @@ pub enum Fitter {
     Lsq,
 }
 
+/// Knobs of the fitting pipeline (defaults mirror the paper's setup:
+/// greedy fitter, 6 segments, 8-exponent window, 1000 samples).
 #[derive(Clone, Copy, Debug)]
 pub struct FitOptions {
+    /// which fitter produces the float PWLF
     pub fitter: Fitter,
     /// target segments (paper: 4 / 6 / 8)
     pub segments: usize,
@@ -58,6 +61,10 @@ pub struct FitResult {
 }
 
 impl FitResult {
+    /// The fitted register file for a hardware kind (PoT / APoT).
+    ///
+    /// Panics for [`ApproxKind::Pwlf`]: float slopes have no register
+    /// encoding.
     pub fn registers(&self, kind: ApproxKind) -> &GrauRegisters {
         match kind {
             ApproxKind::Pot => &self.pot.regs,
@@ -66,6 +73,8 @@ impl FitResult {
         }
     }
 
+    /// RMS error (in output LSBs) of one approximation family against
+    /// the sampled black box.
     pub fn rmse(&self, kind: ApproxKind) -> f64 {
         match kind {
             ApproxKind::Pwlf => self.rmse_pwlf,

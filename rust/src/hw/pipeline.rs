@@ -67,6 +67,9 @@ pub struct PipelinedGrau {
 }
 
 impl PipelinedGrau {
+    /// Build a pipelined instance from a fitted register file.  Chooses
+    /// the 1/2-bit threshold-only bypass automatically when the
+    /// configuration allows it (all segment slopes zero).
     pub fn new(regs: GrauRegisters, kind: ApproxKind) -> Self {
         assert!(kind != ApproxKind::Pwlf, "hardware needs quantized slopes");
         let settings = (0..regs.n_segments)

@@ -10,6 +10,8 @@ use crate::hw::pipeline::CycleStats;
 use crate::hw::shifter::{apot_unit, pot_unit, pre_shift};
 use crate::hw::GrauRegisters;
 
+/// The serialized GRAU instance (Figure 5): one shifter unit, one
+/// comparator, iterated by an FSM.
 pub struct SerialGrau {
     pub regs: GrauRegisters,
     pub kind: ApproxKind,
@@ -17,6 +19,7 @@ pub struct SerialGrau {
 }
 
 impl SerialGrau {
+    /// Build a serialized instance from a fitted register file.
     pub fn new(regs: GrauRegisters, kind: ApproxKind) -> Self {
         assert!(kind != ApproxKind::Pwlf);
         let settings = (0..regs.n_segments)

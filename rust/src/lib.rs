@@ -6,6 +6,9 @@
 //!
 //! The crate is organised bottom-up:
 //!
+//! * [`error`] — crate-local context-chained error handling (`Error`,
+//!   `Result`, `Context`, `bail!`, `ensure!`); the crate builds with zero
+//!   external dependencies.
 //! * [`util`] — offline-environment substrates: JSON codec, CLI parser,
 //!   deterministic PRNG, statistics, synthetic dataset generators, and a
 //!   criterion-style benchmark harness.
@@ -34,11 +37,11 @@
 
 pub mod act;
 pub mod coordinator;
+pub mod error;
 pub mod fit;
 pub mod hw;
 pub mod qnn;
 pub mod runtime;
 pub mod util;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use error::{Error, Result};

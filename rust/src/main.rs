@@ -13,7 +13,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use grau::error::{bail, Context, Result};
 
 use grau::coordinator::experiments::{self, Ctx};
 use grau::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};

@@ -2,7 +2,7 @@
 //! operands / int32 MACs, applying the activation path through a pluggable
 //! backend — the component GRAU replaces in hardware.
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Result};
 
 use crate::act::{qrange, Activation, FoldedActivation};
 use crate::fit::Pwlf;
@@ -54,7 +54,7 @@ struct LayerData {
 /// Per-site per-channel observed MAC ranges (for fitting).
 #[derive(Clone, Debug, Default)]
 pub struct MacRanges {
-    /// [site][channel] -> (min, max)
+    /// `[site][channel] -> (min, max)`
     pub ranges: Vec<Vec<(i32, i32)>>,
 }
 

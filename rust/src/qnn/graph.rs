@@ -1,7 +1,7 @@
 //! Model IR parsed from the artifact manifest — the same op list
 //! `python/compile/model.py` builds, re-instantiated in Rust.
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::util::json::Json;
 

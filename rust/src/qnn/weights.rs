@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 /// One exported array (f32 payload; integer-valued for `*/w_int`).
 #[derive(Clone, Debug, PartialEq)]

@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use crate::qnn::graph::ModelGraph;
 use crate::util::json::Json;

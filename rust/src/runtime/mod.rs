@@ -9,12 +9,13 @@
 //! the loss scalar and the batch tensors.
 
 pub mod manifest;
+pub mod xla;
 
 pub use manifest::Manifest;
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::qnn::weights::{ExportArray, ExportBundle};
 

@@ -1,0 +1,292 @@
+//! Offline stub of the XLA/PJRT binding surface the runtime layer
+//! targets.
+//!
+//! The real deployment links the vendored XLA bindings (a `PjRtClient`
+//! over the CPU plugin) and executes the HLO-text artifacts produced by
+//! `python/compile/aot.py`.  This offline build has no XLA toolchain, so
+//! the same API surface is provided here with honest failure semantics:
+//!
+//! * [`PjRtClient::cpu`] succeeds (cheap handle) so experiment contexts
+//!   that never touch training — fig1/fig2/table6 — run end to end;
+//! * [`HloModuleProto::from_text_file`] reads the artifact bytes;
+//! * [`PjRtClient::compile`] fails with a clear message, which the
+//!   callers surface through their context chains (and the artifact
+//!   files are absent in this environment anyway, so the usual failure
+//!   is the earlier "read ... — run `make artifacts` first").
+//!
+//! [`Literal`] is a real (if tiny) host tensor container so the literal
+//! constructors in [`runtime`](crate::runtime) stay functional; the
+//! device-side types ([`PjRtBuffer`], [`PjRtLoadedExecutable`]) are
+//! uninhabited — they can only exist once a real backend compiles
+//! something, which the stub never does.
+
+use std::borrow::Borrow;
+use std::convert::Infallible;
+
+use crate::error::{bail, Context, Result};
+
+/// Host-side tensor literal: f32 / i32 payload plus dimensions, or a
+/// tuple of literals (the `return_tuple=True` root convention).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+#[derive(Clone, Debug)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl LiteralData {
+    /// Short dtype tag for error messages (never the payload — a
+    /// mismatched 8192-element buffer should not end up in an error
+    /// string).
+    fn dtype_name(&self) -> &'static str {
+        match self {
+            LiteralData::F32(_) => "f32",
+            LiteralData::I32(_) => "i32",
+            LiteralData::Tuple(_) => "tuple",
+        }
+    }
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {
+    /// Build a rank-1 literal from a host vector.
+    fn lit_from_vec(v: Vec<Self>) -> Literal;
+    /// Extract the payload, failing on a dtype mismatch.
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn lit_from_vec(v: Vec<Self>) -> Literal {
+        let dims = vec![v.len() as i64];
+        Literal {
+            data: LiteralData::F32(v),
+            dims,
+        }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            other => bail!("literal dtype mismatch: expected f32, got {}", other.dtype_name()),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn lit_from_vec(v: Vec<Self>) -> Literal {
+        let dims = vec![v.len() as i64];
+        Literal {
+            data: LiteralData::I32(v),
+            dims,
+        }
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            LiteralData::I32(v) => Ok(v.clone()),
+            other => bail!("literal dtype mismatch: expected i32, got {}", other.dtype_name()),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::lit_from_vec(data.to_vec())
+    }
+
+    /// Reinterpret the payload under new dimensions (element count must
+    /// match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            bail!("reshape {dims:?} needs {want} elements, literal has {have}");
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Shape descriptor ([`Shape::tuple_size`] is `Some` for tuples).
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape {
+            dims: self.dims.clone(),
+            tuple: match &self.data {
+                LiteralData::Tuple(v) => Some(v.len()),
+                _ => None,
+            },
+        })
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(v) => Ok(v),
+            other => bail!("not a tuple literal: {}", other.dtype_name()),
+        }
+    }
+
+    /// Copy the payload out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// First element of the payload (the loss-scalar convention).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::extract(self)?
+            .first()
+            .copied()
+            .context("empty literal has no first element")
+    }
+}
+
+/// Array shape descriptor.
+#[derive(Clone, Debug)]
+pub struct Shape {
+    dims: Vec<i64>,
+    tuple: Option<usize>,
+}
+
+impl Shape {
+    /// `Some(n)` when this shape describes an n-element tuple.
+    pub fn tuple_size(&self) -> Option<usize> {
+        self.tuple
+    }
+
+    /// Array dimensions (empty for scalars and tuples).
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO-text module (the stub stores the raw text).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact from disk.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read HLO artifact {path}"))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation handle built from a parsed module.
+pub struct XlaComputation {
+    _text_len: usize,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _text_len: proto.text.len(),
+        }
+    }
+}
+
+/// PJRT client handle (one per process).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client.  Always succeeds in the stub so pure
+    /// fit/hardware experiments can share the experiment context
+    /// ([`crate::coordinator::experiments::Ctx`]) without a backend.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    /// Compile an XLA computation — unsupported in the offline stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!(
+            "the offline XLA stub cannot compile HLO artifacts; \
+             link the vendored PJRT bindings to enable the training runtime"
+        )
+    }
+}
+
+/// A compiled executable — uninhabited in the stub (compilation always
+/// fails, so no value of this type can exist).
+pub struct PjRtLoadedExecutable {
+    never: Infallible,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on host literals.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.never {}
+    }
+
+    /// Execute on device buffers.
+    pub fn execute_b<L: Borrow<PjRtBuffer>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.never {}
+    }
+}
+
+/// A device-resident buffer — uninhabited in the stub.
+pub struct PjRtBuffer {
+    never: Infallible,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32_i32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(r.to_vec::<i32>().is_err(), "dtype mismatch must fail");
+        assert!(r.shape().unwrap().tuple_size().is_none());
+        assert_eq!(r.shape().unwrap().dims(), &[2, 2]);
+
+        let l = Literal::vec1(&[7i32, -7]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, -7]);
+        assert!(l.reshape(&[3]).is_err(), "element count mismatch");
+    }
+
+    #[test]
+    fn client_exists_but_compile_fails() {
+        let c = PjRtClient::cpu().expect("stub client");
+        let proto = HloModuleProto {
+            text: "HloModule m".into(),
+        };
+        let comp = XlaComputation::from_proto(&proto);
+        let e = c.compile(&comp).unwrap_err();
+        assert!(format!("{e}").contains("offline XLA stub"));
+    }
+
+    #[test]
+    fn missing_artifact_read_fails_with_path() {
+        let e = HloModuleProto::from_text_file("/no/such/artifact.hlo.txt").unwrap_err();
+        assert!(format!("{e:#}").contains("artifact"));
+    }
+}

@@ -1,11 +1,12 @@
 //! Offline-environment substrates.
 //!
-//! The build environment vendors only the `xla` crate's dependency
-//! closure, so the conveniences a networked project would pull from
-//! crates.io (serde, clap, criterion, rayon, rand) are implemented here:
-//! a JSON codec, a CLI parser, a deterministic PRNG, statistics helpers,
-//! synthetic dataset generators, a scoped thread pool and a
-//! criterion-style benchmark harness.
+//! The build environment vendors nothing from crates.io, so the
+//! conveniences a networked project would pull in (serde, clap,
+//! criterion, rayon, rand) are implemented here: a JSON codec, a CLI
+//! parser, a deterministic PRNG, statistics helpers, synthetic dataset
+//! generators, a scoped thread pool and a criterion-style benchmark
+//! harness.  Error handling lives in the sibling
+//! [`error`](crate::error) module.
 
 pub mod bench;
 pub mod cli;
