@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Local gate: run before landing any change.
 #
-#   ./ci.sh          full gate (fmt, build, test, doc)
-#   ./ci.sh fast     skip the doc build
+#   ./ci.sh          full gate (fmt, build, test, doc, doc-tests)
+#   ./ci.sh fast     skip the doc build and doc-tests
 #
 # Mirrors the tier-1 verify (`cargo build --release && cargo test -q`)
 # plus formatting and rustdoc hygiene.  The fmt step is advisory (the
-# seed predates rustfmt enforcement); build, test, and doc are fatal.
+# seed predates rustfmt enforcement); build, test, doc (rustdoc
+# warnings promoted to errors), and the runnable doc-examples are
+# fatal.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -25,8 +27,11 @@ step "cargo test -q"
 cargo test -q
 
 if [ "${1:-}" != "fast" ]; then
-    step "cargo doc --no-deps"
-    cargo doc --no-deps
+    step "cargo doc --no-deps (rustdoc warnings are errors)"
+    RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+    step "cargo test --doc (runnable doc-examples)"
+    cargo test --doc -q
 fi
 
 printf '\nci.sh: all green\n'

@@ -14,6 +14,8 @@ use grau::fit::greedy::{select_breakpoints, GreedyOptions};
 use grau::fit::lsq::fit_lsq;
 use grau::fit::pipeline::{fit_folded, FitOptions};
 use grau::fit::ApproxKind;
+use grau::hw::lut_unit::LutUnit;
+use grau::hw::GrauPlan;
 use grau::qnn::engine::conv2d_i32;
 use grau::util::bench::{bench_header, Bencher};
 use grau::util::rng::Rng;
@@ -43,8 +45,43 @@ fn main() {
         .elements(macs)
         .run(|| conv2d_i32(&src, &[32, 32, 16], &w, &[3, 3, 16, 32], 1));
 
-    // --- L3 service -------------------------------------------------------
+    // --- activation eval: scalar registers vs compiled plan vs LUT --------
+    // The 8-bit service workload: one APoT-fitted register file, inputs
+    // sweeping the doubled MAC range (same shape the L3 rows stream).
     let fit = fit_folded(&f, -1000, 1000, FitOptions::default());
+    println!("\nperf: activation eval — scalar vs compiled plan vs direct LUT (8-bit workload)");
+    let regs = fit.apot.regs.clone();
+    let plan = GrauPlan::new(&regs);
+    let lut = LutUnit::from_folded(&f, -3000, 3000);
+    let xs: Vec<i32> = (0..65_536).map(|i| (i as i32 % 6000) - 3000).collect();
+    let n = xs.len() as u64;
+    let rep_scalar = Bencher::new("GrauRegisters::eval (scalar, per element)")
+        .elements(n)
+        .run(|| xs.iter().map(|&x| regs.eval(x) as i64).sum::<i64>());
+    Bencher::new("GrauPlan::eval (compiled, per element)")
+        .elements(n)
+        .run(|| xs.iter().map(|&x| plan.eval(x) as i64).sum::<i64>());
+    let mut plan_out: Vec<i32> = Vec::new();
+    let rep_batch = Bencher::new("GrauPlan::eval_batch (compiled, chunked)")
+        .elements(n)
+        .run(|| {
+            plan.eval_batch(&xs, &mut plan_out);
+            plan_out.last().copied()
+        });
+    Bencher::new("LutUnit::eval (direct table, upper bound)")
+        .elements(n)
+        .run(|| xs.iter().map(|&x| lut.eval(x) as i64).sum::<i64>());
+    println!(
+        "  plan eval_batch speedup over scalar eval: {:.2}x  (dense table: {})",
+        rep_scalar.mean_ns / rep_batch.mean_ns,
+        plan.has_dense_table()
+    );
+    // bit-exactness sanity on the bench workload itself
+    for &x in xs.iter().step_by(997) {
+        assert_eq!(plan.eval(x), regs.eval(x), "plan/scalar diverge at x={x}");
+    }
+
+    // --- L3 service -------------------------------------------------------
     for (label, backend, workers) in [
         ("service functional 1w", Backend::Functional, 1usize),
         ("service functional 4w", Backend::Functional, 4),

@@ -14,6 +14,13 @@
 //! validate that service outputs equal hardware outputs bit-for-bit and
 //! to account cycles), and `Pjrt` (offload through the AOT-compiled L1
 //! Pallas kernel via the runtime — Python never involved).
+//!
+//! Reconfigure → plan → stream: whenever a worker switches streams it
+//! compiles the new register file into a [`GrauPlan`] alongside the
+//! cycle-model reconfiguration, and the `Functional` backend (plus the
+//! `Pjrt` fallback) batch-evaluates every request of the batch through
+//! that plan — no per-element threshold search or mask bit-scan on the
+//! request path (see `docs/ARCHITECTURE.md`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,7 +32,7 @@ use crate::error::{ensure, Context, Result};
 
 use crate::fit::ApproxKind;
 use crate::hw::pipeline::PipelinedGrau;
-use crate::hw::GrauRegisters;
+use crate::hw::{GrauPlan, GrauRegisters};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -125,6 +132,74 @@ impl MetricsSnapshot {
 
 type Registry = Arc<RwLock<HashMap<u64, (GrauRegisters, ApproxKind)>>>;
 
+/// A worker's request source.  Affinity mode gives every worker
+/// exclusive ownership of its queue, so it can block in `recv` with no
+/// idle spin; the shared queue keeps the mutex + short-timeout poll
+/// (blocking in `recv` while holding the mutex would starve the other
+/// workers).
+enum WorkerQueue {
+    Owned(Receiver<ActRequest>),
+    Shared(Arc<Mutex<Receiver<ActRequest>>>),
+}
+
+impl WorkerQueue {
+    /// Next request, or `None` to poll again, or `Err(())` on shutdown.
+    fn recv_first(&self) -> std::result::Result<Option<ActRequest>, ()> {
+        match self {
+            WorkerQueue::Owned(rx) => match rx.recv() {
+                Ok(r) => Ok(Some(r)),
+                Err(_) => Err(()),
+            },
+            WorkerQueue::Shared(m) => {
+                let guard = m.lock().unwrap();
+                match guard.recv_timeout(std::time::Duration::from_millis(1)) {
+                    Ok(r) => Ok(Some(r)),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(()),
+                }
+            }
+        }
+    }
+
+    /// Opportunistically drain more requests up to `max_batch` elements.
+    fn coalesce(&self, batch: &mut Vec<ActRequest>, mut elems: usize, max_batch: usize) {
+        let guard;
+        let rx: &Receiver<ActRequest> = match self {
+            WorkerQueue::Owned(rx) => rx,
+            WorkerQueue::Shared(m) => {
+                guard = m.lock().unwrap();
+                &guard
+            }
+        };
+        while elems < max_batch {
+            match rx.try_recv() {
+                Ok(r) => {
+                    elems += r.data.len();
+                    batch.push(r);
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// The L3 activation service: a bank of worker-owned GRAU units behind
+/// a stream-affine router and dynamic batcher.
+///
+/// ```
+/// use grau::coordinator::service::{ActivationService, ServiceConfig};
+/// use grau::fit::ApproxKind;
+/// use grau::hw::GrauRegisters;
+///
+/// let svc = ActivationService::start(ServiceConfig { workers: 1, ..Default::default() });
+/// // a single-segment unit with slope 2^-1
+/// let mut regs = GrauRegisters::new(8, 1, 0, 4);
+/// regs.mask[0] = 0b0010;
+/// svc.register(7, regs, ApproxKind::Pot);
+/// let resp = svc.call(7, vec![-64, 0, 64]).unwrap();
+/// assert_eq!(resp.data, vec![-32, 0, 32]);
+/// svc.shutdown();
+/// ```
 pub struct ActivationService {
     /// shared queue (affinity = false)
     tx: Option<Sender<ActRequest>>,
@@ -149,16 +224,16 @@ impl ActivationService {
         let mut worker_tx = Vec::new();
         let mut shared_tx = None;
         if config.affinity {
-            // one queue per worker; the submit path routes by stream hash
+            // one queue per worker, exclusively owned; the submit path
+            // routes by stream hash and the worker blocks in recv
             for wid in 0..n {
                 let (tx, rx) = channel::<ActRequest>();
                 worker_tx.push(tx);
-                let rx = Arc::new(Mutex::new(rx));
                 let registry = Arc::clone(&registry);
                 let metrics = Arc::clone(&metrics);
                 let cfg = config.clone();
                 workers.push(std::thread::spawn(move || {
-                    worker_loop(wid, rx, registry, metrics, cfg);
+                    worker_loop(wid, WorkerQueue::Owned(rx), registry, metrics, cfg);
                 }));
             }
         } else {
@@ -171,7 +246,7 @@ impl ActivationService {
                 let metrics = Arc::clone(&metrics);
                 let cfg = config.clone();
                 workers.push(std::thread::spawn(move || {
-                    worker_loop(wid, rx, registry, metrics, cfg);
+                    worker_loop(wid, WorkerQueue::Shared(rx), registry, metrics, cfg);
                 }));
             }
         }
@@ -229,16 +304,29 @@ impl ActivationService {
     }
 }
 
+/// Upper bound on per-worker cached plans.  A dense segment table can
+/// reach 64 KiB, so an unbounded cache over many short-lived streams
+/// would dwarf the registry; on overflow the cache is simply cleared
+/// (plans recompile on demand).
+const MAX_WORKER_PLANS: usize = 1024;
+
 fn worker_loop(
     _wid: usize,
-    rx: Arc<Mutex<Receiver<ActRequest>>>,
+    queue: WorkerQueue,
     registry: Registry,
     metrics: Arc<Metrics>,
     cfg: ServiceConfig,
 ) {
-    // per-worker state: ONE hardware unit, reconfigured on stream switch
-    let mut current_stream: Option<u64> = None;
+    // per-worker state: ONE hardware unit; `resident` records which
+    // (stream, register file) the unit currently holds, so both stream
+    // switches AND in-place re-registrations trigger a reconfiguration
+    let mut resident: Option<(u64, GrauRegisters)> = None;
     let mut unit: Option<PipelinedGrau> = None;
+    // compiled plans, one per stream this worker has served (bounded by
+    // the streams routed here), keyed by the register file they were
+    // compiled from — stream switches reuse plans, re-registrations
+    // recompile
+    let mut plans: HashMap<u64, (GrauRegisters, GrauPlan)> = HashMap::new();
     // PJRT backend state (created on this thread; executables are !Send)
     let mut pjrt: Option<PjrtOffload> = if cfg.backend == Backend::Pjrt {
         PjrtOffload::new(&cfg.artifacts_dir).ok()
@@ -247,34 +335,17 @@ fn worker_loop(
     };
 
     loop {
-        // Take one request, then opportunistically coalesce same-stream
-        // requests up to max_batch elements.  NOTE: never block in recv()
-        // while holding the shared mutex — that starves the other
-        // workers' try_recv (deadlock); poll with a short timeout
-        // instead.
-        let first = {
-            let guard = rx.lock().unwrap();
-            match guard.recv_timeout(std::time::Duration::from_millis(1)) {
-                Ok(r) => Some(r),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
-            }
+        // Take one request (blocking on an owned queue, polling on the
+        // shared one), then opportunistically coalesce more requests up
+        // to max_batch elements.
+        let first = match queue.recv_first() {
+            Ok(Some(r)) => r,
+            Ok(None) => continue,
+            Err(()) => return,
         };
-        let Some(first) = first else { continue };
         let mut batch: Vec<ActRequest> = vec![first];
-        let mut elems = batch[0].data.len();
-        {
-            let guard = rx.lock().unwrap();
-            while elems < cfg.max_batch {
-                match guard.try_recv() {
-                    Ok(r) => {
-                        elems += r.data.len();
-                        batch.push(r);
-                    }
-                    Err(_) => break,
-                }
-            }
-        }
+        let elems = batch[0].data.len();
+        queue.coalesce(&mut batch, elems, cfg.max_batch);
 
         // group by stream id to batch reconfigurations
         batch.sort_by_key(|r| r.stream_id);
@@ -299,7 +370,11 @@ fn worker_loop(
                     continue;
                 }
             };
-            if current_stream != Some(sid) {
+            let unit_stale = resident
+                .as_ref()
+                .map(|(s, r)| *s != sid || r != &regs)
+                .unwrap_or(true);
+            if unit_stale {
                 let cost = match unit.as_mut() {
                     Some(u) => u.reconfigure(regs.clone(), kind),
                     None => {
@@ -309,12 +384,27 @@ fn worker_loop(
                 };
                 metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
                 metrics.reconfig_cycles.fetch_add(cost, Ordering::Relaxed);
-                current_stream = Some(sid);
+                resident = Some((sid, regs.clone()));
             }
+            // compiled plan: built once per (stream, register file) and
+            // reused across stream switches; recompiled only when a
+            // re-registration replaced the registers (bit-exact with
+            // regs.eval either way)
+            let plan_stale = plans
+                .get(&sid)
+                .map(|(src, _)| src != &regs)
+                .unwrap_or(true);
+            if plan_stale {
+                if plans.len() >= MAX_WORKER_PLANS {
+                    plans.clear();
+                }
+                plans.insert(sid, (regs.clone(), GrauPlan::new(&regs)));
+            }
+            let p = &plans.get(&sid).expect("plan compiled above").1;
 
             for r in group {
                 let out = match cfg.backend {
-                    Backend::Functional => r.data.iter().map(|&x| regs.eval(x)).collect(),
+                    Backend::Functional => p.eval_vec(&r.data),
                     Backend::CycleSim => {
                         let u = unit.as_mut().unwrap();
                         let (out, stats) = u.process_stream(&r.data);
@@ -322,10 +412,10 @@ fn worker_loop(
                         out
                     }
                     Backend::Pjrt => match pjrt.as_mut() {
-                        Some(p) => p
+                        Some(pj) => pj
                             .run(&regs, &r.data)
-                            .unwrap_or_else(|_| r.data.iter().map(|&x| regs.eval(x)).collect()),
-                        None => r.data.iter().map(|&x| regs.eval(x)).collect(),
+                            .unwrap_or_else(|_| p.eval_vec(&r.data)),
+                        None => p.eval_vec(&r.data),
                     },
                 };
                 respond(r, out, &metrics);
@@ -465,6 +555,46 @@ mod tests {
         assert!(m.reconfigs >= 2, "reconfigs {}", m.reconfigs);
         assert!(m.reconfig_cycles > 0);
         assert_eq!(m.requests, 10);
+    }
+
+    #[test]
+    fn re_registering_a_stream_recompiles_the_plan() {
+        // replacing a stream's registers must invalidate the compiled
+        // plan even though no stream switch happens
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let mut a = GrauRegisters::new(8, 1, 0, 4);
+        a.mask[0] = 0b0001; // identity slope
+        let mut b = a.clone();
+        b.mask[0] = 0b0010; // slope 1/2
+        svc.register(3, a, ApproxKind::Pot);
+        assert_eq!(svc.call(3, vec![40]).unwrap().data, vec![40]);
+        svc.register(3, b, ApproxKind::Pot);
+        assert_eq!(svc.call(3, vec![40]).unwrap().data, vec![20]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn re_registering_reconfigures_the_cycle_sim_unit() {
+        // the hardware unit (not just the plan) must pick up replaced
+        // registers, and the reload must be accounted as a reconfig
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            backend: Backend::CycleSim,
+            ..Default::default()
+        });
+        let mut a = GrauRegisters::new(8, 1, 0, 4);
+        a.mask[0] = 0b0001; // identity slope
+        let mut b = a.clone();
+        b.mask[0] = 0b0010; // slope 1/2
+        svc.register(3, a, ApproxKind::Pot);
+        assert_eq!(svc.call(3, vec![40]).unwrap().data, vec![40]);
+        svc.register(3, b, ApproxKind::Pot);
+        assert_eq!(svc.call(3, vec![40]).unwrap().data, vec![20]);
+        let m = svc.shutdown();
+        assert!(m.reconfigs >= 2, "reconfigs {}", m.reconfigs);
     }
 
     #[test]

@@ -85,6 +85,20 @@ impl FitResult {
 }
 
 /// Fit one folded activation over its (doubled) MAC range.
+///
+/// ```
+/// use grau::act::{Activation, FoldedActivation};
+/// use grau::fit::pipeline::{fit_folded, FitOptions};
+/// use grau::fit::ApproxKind;
+///
+/// let f = FoldedActivation::new(0.004, 0.0, Activation::Sigmoid, 1.0 / 120.0, 8);
+/// let fit = fit_folded(&f, -1000, 1000, FitOptions::default());
+/// // APoT slopes can only improve on PoT at equal exponent budget
+/// assert!(fit.rmse_apot <= fit.rmse_pot * 1.001 + 1e-9);
+/// // the fitted register file is ready for hardware (or a GrauPlan)
+/// let regs = fit.registers(ApproxKind::Apot);
+/// assert!(regs.n_segments >= 1 && regs.n_segments <= 6);
+/// ```
 pub fn fit_folded(
     f: &FoldedActivation,
     mac_lo: i64,
@@ -129,10 +143,11 @@ pub fn fit_samples(samples: &[(i64, f64)], n_bits: u8, opts: FitOptions) -> FitR
 /// in `[lo, hi]` where the hardware output differs from `f.eval`.
 pub fn mismatch_rate(regs: &GrauRegisters, f: &FoldedActivation, lo: i64, hi: i64, n: usize) -> f64 {
     let samples = f.sample(lo, hi, n);
+    let plan = crate::hw::GrauPlan::without_table(regs);
     let mut bad = 0usize;
     for &(x, _) in &samples {
         let x32 = x.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
-        if regs.eval(x32) != f.eval(x) {
+        if plan.eval(x32) != f.eval(x) {
             bad += 1;
         }
     }

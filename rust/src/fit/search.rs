@@ -7,7 +7,7 @@
 
 use crate::fit::slope::quantize_slope;
 use crate::fit::{ApproxKind, Pwlf};
-use crate::hw::{GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use crate::hw::{GrauPlan, GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
 
 /// Largest shift amount considered (the paper's widest range reaches
 /// 2^-24).
@@ -43,11 +43,18 @@ fn clamp_i32(v: i64) -> i32 {
 }
 
 /// Quantized-output SSE of a register file against float samples.
+///
+/// Scoring compiles the candidate into a [`GrauPlan`] (without the dense
+/// segment table — the plan is evaluated ~1000 times then discarded, so
+/// table construction would dominate) and streams the samples through
+/// it; the plan is bit-exact with `regs.eval`, so the score is
+/// unchanged.
 pub fn registers_sse(regs: &GrauRegisters, samples: &[(i64, f64)]) -> f64 {
+    let plan = GrauPlan::without_table(regs);
     samples
         .iter()
         .map(|&(x, y)| {
-            let d = regs.eval(clamp_i32(x)) as f64 - y;
+            let d = plan.eval(clamp_i32(x)) as f64 - y;
             d * d
         })
         .sum()

@@ -5,6 +5,9 @@
 //!   its bit-exact *functional* model.  This is the single source of
 //!   truth the Pallas kernel (`python/compile/specs.py`) and the
 //!   cycle-accurate simulators below must agree with.
+//! * [`plan`] — compiled evaluation plans ([`GrauPlan`]): the per-stream
+//!   work of `eval` (threshold search, mask bit-scan) hoisted to
+//!   reconfigure time, with a batched bit-exact fast path.
 //! * [`shifter`] — the 1-bit right-shifter units of Figure 4.
 //! * [`pipeline`] / [`serial`] — cycle-accurate pipelined (Figure 6) and
 //!   serialized (Figure 5) GRAU implementations.
@@ -19,8 +22,11 @@ pub mod dse;
 pub mod lut_unit;
 pub mod mt;
 pub mod pipeline;
+pub mod plan;
 pub mod serial;
 pub mod shifter;
+
+pub use plan::GrauPlan;
 
 use crate::act::qrange;
 
@@ -33,6 +39,23 @@ pub const PAD_THRESHOLD: i32 = i32::MAX;
 /// The register file of one GRAU instance — everything runtime
 /// reconfiguration rewrites (paper §II-B: "reload the value of thresholds
 /// and shifter settings").
+///
+/// [`eval`](GrauRegisters::eval) is the bit-exact scalar reference; for
+/// streaming workloads compile the register file into a [`GrauPlan`]
+/// once and batch-evaluate through it instead.
+///
+/// ```
+/// use grau::hw::GrauRegisters;
+///
+/// // one segment, identity slope 2^0: the unit passes inputs through,
+/// // clamped to the 8-bit output rails
+/// let mut regs = GrauRegisters::new(8, 1, 0, 4);
+/// regs.mask[0] = 0b0001;
+/// assert_eq!(regs.eval(5), 5);
+/// assert_eq!(regs.eval(1_000), 127);
+/// assert_eq!(regs.eval(-1_000), -128);
+/// assert!((regs.slope(0) - 1.0).abs() < 1e-12);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct GrauRegisters {
     pub n_bits: u8,

@@ -1,0 +1,358 @@
+//! Compiled evaluation plans — the batched, bit-exact fast path.
+//!
+//! [`GrauRegisters::eval`] re-derives everything per input: a linear
+//! threshold search to pick the segment, then a `trailing_zeros` bit-scan
+//! over the shifter mask to accumulate the shift sum.  The register file
+//! is tiny and *static between reconfigurations* (paper §II-B: runtime
+//! reconfiguration only "reloads the value of thresholds and shifter
+//! settings"), so all of that per-input work can be hoisted to
+//! reconfigure time:
+//!
+//! * the shifter mask of each segment is unrolled into an explicit list
+//!   of absolute shift amounts (no bit-scan on the stream path);
+//! * `y0`, `sign`, and the output clamp rails are widened to `i64` once;
+//! * for small register files (`n_bits <= 8`) whose thresholds span at
+//!   most [`DENSE_TABLE_MAX`] integers, the threshold search is replaced
+//!   by a dense segment-index table — one byte per input value between
+//!   the lowest and highest threshold, with the two out-of-span answers
+//!   (`0` below, `n_segments - 1` above) resolved by a range check.
+//!
+//! [`GrauPlan::eval`] and [`GrauPlan::eval_batch`] are **bit-for-bit
+//! identical** to [`GrauRegisters::eval`] for every `i32` input — the
+//! shift sum is an exact `i64` addition, so unrolling cannot change the
+//! result, and `rust/tests/proptest_invariants.rs` enforces equality over
+//! randomized register files.  This is the same precompute-then-stream
+//! structure FINN-style dataflow accelerators exploit: compile once per
+//! reconfiguration, then stream MAC outputs through the compiled form.
+
+use crate::act::qrange;
+use crate::hw::GrauRegisters;
+
+/// Upper bound on dense segment-table entries (one byte each).  Threshold
+/// spans wider than this fall back to the linear threshold search.
+pub const DENSE_TABLE_MAX: i64 = 1 << 16;
+
+/// Elements per chunk in [`GrauPlan::eval_batch`]: segment indices for a
+/// whole chunk are resolved first, then the arithmetic pass runs — the
+/// two loops are independent, which keeps both tight.
+const BATCH_CHUNK: usize = 256;
+
+/// One segment's precomputed constants: anchor, bias, sign, and the
+/// unrolled absolute shift amounts its mask encodes.
+#[derive(Clone, Debug)]
+struct PlanSegment {
+    x0: i64,
+    y0: i64,
+    sign: i64,
+    /// number of live entries in `shifts`
+    n: u8,
+    /// absolute shift amounts (`shift_lo + k` for every set mask bit
+    /// `k`); sized for the full 32-bit mask so the unroll mirrors
+    /// `GrauRegisters::eval` exactly even for out-of-window bits
+    shifts: [u32; 32],
+}
+
+/// How the plan maps an input to its segment index.
+#[derive(Clone, Debug)]
+enum SegLookup {
+    /// single segment — no thresholds at all
+    Single,
+    /// dense table over `[lo, lo + idx.len())` covering every threshold;
+    /// inputs below the span are segment 0, above it `n_segments - 1`
+    Dense { lo: i32, idx: Box<[u8]> },
+    /// linear count of passed thresholds (the scalar model's search)
+    Search { thresholds: Vec<i32> },
+}
+
+/// A compiled evaluation plan: everything [`GrauRegisters::eval`] derives
+/// per input, derived once at build (i.e. reconfigure) time.
+///
+/// ```
+/// use grau::hw::{GrauPlan, GrauRegisters};
+///
+/// let mut regs = GrauRegisters::new(8, 2, 0, 4);
+/// regs.thresholds[0] = 0; // segment 1 starts at x >= 0
+/// regs.mask[0] = 0b0001;  // slope 2^0 below zero
+/// regs.mask[1] = 0b0010;  // slope 2^-1 at and above zero
+///
+/// let plan = GrauPlan::new(&regs);
+/// let mut out = Vec::new();
+/// plan.eval_batch(&[-10, 4, 100], &mut out);
+/// assert_eq!(out, vec![-10, 2, 50]);
+/// // bit-for-bit identical to the scalar register-file model
+/// for x in [-10, 4, 100, i32::MIN, i32::MAX] {
+///     assert_eq!(plan.eval(x), regs.eval(x));
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct GrauPlan {
+    segs: Vec<PlanSegment>,
+    lookup: SegLookup,
+    qmin: i64,
+    qmax: i64,
+    n_bits: u8,
+}
+
+impl GrauPlan {
+    /// Compile a plan, building the dense segment table when the register
+    /// file qualifies (`n_bits <= 8` and the threshold span fits
+    /// [`DENSE_TABLE_MAX`]).
+    pub fn new(regs: &GrauRegisters) -> GrauPlan {
+        GrauPlan::with_table_cap(regs, DENSE_TABLE_MAX)
+    }
+
+    /// Compile a plan without the dense table.  Used where plans are
+    /// short-lived (the fit window search builds one per candidate and
+    /// scores only ~1000 samples through it, so table construction would
+    /// dominate).
+    pub fn without_table(regs: &GrauRegisters) -> GrauPlan {
+        GrauPlan::with_table_cap(regs, 0)
+    }
+
+    fn with_table_cap(regs: &GrauRegisters, cap: i64) -> GrauPlan {
+        let segs = (0..regs.n_segments)
+            .map(|j| {
+                // unroll EVERY set mask bit (not just the n_shifts
+                // window) — GrauRegisters::eval's bit-scan does the
+                // same, and bit-for-bit parity is the contract
+                let mut shifts = [0u32; 32];
+                let mut n = 0u8;
+                for k in 0..32u32 {
+                    if regs.mask[j] >> k & 1 == 1 {
+                        shifts[n as usize] = regs.shift_lo as u32 + k;
+                        n += 1;
+                    }
+                }
+                PlanSegment {
+                    x0: regs.x0[j] as i64,
+                    y0: regs.y0[j] as i64,
+                    sign: regs.sign[j] as i64,
+                    n,
+                    shifts,
+                }
+            })
+            .collect();
+
+        let used = &regs.thresholds[..regs.n_segments - 1];
+        let lookup = if used.is_empty() {
+            SegLookup::Single
+        } else {
+            let lo = *used.iter().min().unwrap();
+            let hi = *used.iter().max().unwrap();
+            let span = hi as i64 - lo as i64 + 1;
+            if regs.n_bits <= 8 && span <= cap {
+                // idx[x - lo] = number of thresholds <= x, exactly the
+                // count GrauRegisters::segment computes
+                let mut sorted = used.to_vec();
+                sorted.sort_unstable();
+                let mut idx = vec![0u8; span as usize].into_boxed_slice();
+                let mut passed = 0u8;
+                let mut next = 0usize;
+                for (off, slot) in idx.iter_mut().enumerate() {
+                    let x = lo + off as i32;
+                    while next < sorted.len() && sorted[next] <= x {
+                        next += 1;
+                        passed += 1;
+                    }
+                    *slot = passed;
+                }
+                SegLookup::Dense { lo, idx }
+            } else {
+                SegLookup::Search {
+                    thresholds: used.to_vec(),
+                }
+            }
+        };
+
+        let (qmin, qmax) = qrange(regs.n_bits);
+        GrauPlan {
+            segs,
+            lookup,
+            qmin: qmin as i64,
+            qmax: qmax as i64,
+            n_bits: regs.n_bits,
+        }
+    }
+
+    /// Segment index for input `x` — same contract as
+    /// [`GrauRegisters::segment`].
+    #[inline]
+    pub fn segment(&self, x: i32) -> usize {
+        match &self.lookup {
+            SegLookup::Single => 0,
+            SegLookup::Dense { lo, idx } => {
+                let off = x as i64 - *lo as i64;
+                if off < 0 {
+                    0
+                } else if off >= idx.len() as i64 {
+                    self.segs.len() - 1
+                } else {
+                    idx[off as usize] as usize
+                }
+            }
+            SegLookup::Search { thresholds } => {
+                let mut s = 0usize;
+                for &t in thresholds {
+                    s += (x >= t) as usize;
+                }
+                s
+            }
+        }
+    }
+
+    #[inline]
+    fn eval_in_segment(&self, j: usize, x: i32) -> i32 {
+        let seg = &self.segs[j];
+        let dx = x as i64 - seg.x0;
+        let mut acc = 0i64;
+        for &sh in &seg.shifts[..seg.n as usize] {
+            acc += dx >> sh;
+        }
+        (seg.y0 + seg.sign * acc).clamp(self.qmin, self.qmax) as i32
+    }
+
+    /// Evaluate one input — bit-for-bit identical to
+    /// [`GrauRegisters::eval`] on the register file the plan was built
+    /// from.
+    #[inline]
+    pub fn eval(&self, x: i32) -> i32 {
+        self.eval_in_segment(self.segment(x), x)
+    }
+
+    /// Evaluate a stream into `out` (cleared first).  Processes fixed
+    /// chunks: segment indices for the whole chunk are resolved before
+    /// the arithmetic pass.
+    pub fn eval_batch(&self, xs: &[i32], out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(xs.len());
+        let mut seg = [0u8; BATCH_CHUNK];
+        for chunk in xs.chunks(BATCH_CHUNK) {
+            for (s, &x) in seg.iter_mut().zip(chunk.iter()) {
+                *s = self.segment(x) as u8;
+            }
+            for (i, &x) in chunk.iter().enumerate() {
+                out.push(self.eval_in_segment(seg[i] as usize, x));
+            }
+        }
+    }
+
+    /// Convenience wrapper allocating the output vector.
+    pub fn eval_vec(&self, xs: &[i32]) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.eval_batch(xs, &mut out);
+        out
+    }
+
+    /// Output bit width the plan clamps to.
+    pub fn n_bits(&self) -> u8 {
+        self.n_bits
+    }
+
+    /// Number of segments.
+    pub fn n_segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Did this plan qualify for the dense segment-index table?
+    pub fn has_dense_table(&self) -> bool {
+        matches!(self.lookup, SegLookup::Dense { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_regs() -> GrauRegisters {
+        let mut r = GrauRegisters::new(8, 6, 3, 4);
+        r.thresholds[..5].copy_from_slice(&[-300, -50, 10, 200, 900]);
+        r.x0[..6].copy_from_slice(&[-1000, -300, -50, 10, 200, 900]);
+        r.y0[..6].copy_from_slice(&[-120, -90, -20, 0, 40, 100]);
+        r.sign[..6].copy_from_slice(&[1, -1, 1, 1, 1, -1]);
+        r.mask[..6].copy_from_slice(&[0b0001, 0b1010, 0b0110, 0b0011, 0b1000, 0b0101]);
+        r
+    }
+
+    #[test]
+    fn plan_matches_registers_on_demo_file() {
+        let r = demo_regs();
+        let plan = GrauPlan::new(&r);
+        assert!(plan.has_dense_table());
+        let lean = GrauPlan::without_table(&r);
+        assert!(!lean.has_dense_table());
+        for x in (-5000i32..5000).step_by(7) {
+            assert_eq!(plan.eval(x), r.eval(x), "x={x}");
+            assert_eq!(lean.eval(x), r.eval(x), "x={x}");
+        }
+        for x in [i32::MIN, i32::MIN + 1, -1, 0, 1, i32::MAX - 1, i32::MAX] {
+            assert_eq!(plan.eval(x), r.eval(x), "x={x}");
+            assert_eq!(lean.eval(x), r.eval(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let r = demo_regs();
+        let plan = GrauPlan::new(&r);
+        // longer than one chunk so the chunk seam is exercised
+        let xs: Vec<i32> = (-4000..4000).collect();
+        let mut out = Vec::new();
+        plan.eval_batch(&xs, &mut out);
+        assert_eq!(out.len(), xs.len());
+        for (x, y) in xs.iter().zip(&out) {
+            assert_eq!(*y, r.eval(*x), "x={x}");
+        }
+        // the buffer is reused across calls
+        plan.eval_batch(&[0, 10], &mut out);
+        assert_eq!(out, vec![r.eval(0), r.eval(10)]);
+        assert_eq!(plan.eval_vec(&[0, 10]), out);
+    }
+
+    #[test]
+    fn segment_boundaries_match() {
+        let r = demo_regs();
+        let plan = GrauPlan::new(&r);
+        for x in [-301, -300, -299, -51, -50, 9, 10, 199, 200, 899, 900, 901] {
+            assert_eq!(plan.segment(x), r.segment(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn single_segment_has_no_table() {
+        let mut r = GrauRegisters::new(4, 1, 0, 4);
+        r.mask[0] = 0b1;
+        let plan = GrauPlan::new(&r);
+        assert!(!plan.has_dense_table());
+        assert_eq!(plan.n_segments(), 1);
+        assert_eq!(plan.eval(1_000_000), 7);
+        assert_eq!(plan.eval(-1_000_000), -8);
+    }
+
+    #[test]
+    fn wide_threshold_span_falls_back_to_search() {
+        let mut r = GrauRegisters::new(8, 3, 0, 8);
+        r.thresholds[0] = -1_000_000;
+        r.thresholds[1] = 1_000_000;
+        r.mask[..3].copy_from_slice(&[0b1, 0b10, 0b100]);
+        let plan = GrauPlan::new(&r);
+        assert!(!plan.has_dense_table());
+        for x in [-2_000_000, -1_000_000, 0, 999_999, 1_000_000, 2_000_000] {
+            assert_eq!(plan.eval(x), r.eval(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn empty_and_full_masks() {
+        // mask 0 (flat segment) and an all-ones 16-bit mask
+        let mut r = GrauRegisters::new(8, 2, 2, 16);
+        r.thresholds[0] = 5;
+        r.y0[0] = -7;
+        r.mask[0] = 0;
+        r.mask[1] = 0xffff;
+        let plan = GrauPlan::new(&r);
+        for x in [-100, 4, 5, 6, 100, 30_000] {
+            assert_eq!(plan.eval(x), r.eval(x), "x={x}");
+        }
+        assert_eq!(plan.eval(-100), -7); // flat segment returns its bias
+    }
+}

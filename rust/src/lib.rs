@@ -22,8 +22,10 @@
 //! * [`hw`] — bit-accurate and cycle-accurate hardware models: the 1-bit
 //!   right-shifter units (Figure 4), serialized and pipelined GRAU
 //!   (Figures 5/6), the Multi-Threshold baseline (FINN-R style), a direct
-//!   LUT unit, and the Vivado-calibrated resource/power/timing cost model
-//!   behind Table VI.
+//!   LUT unit, the Vivado-calibrated resource/power/timing cost model
+//!   behind Table VI, and *compiled evaluation plans* ([`hw::plan`]) —
+//!   the bit-exact batched fast path every software consumer streams
+//!   through (see `docs/ARCHITECTURE.md`).
 //! * [`qnn`] — the quantized-neural-network substrate: integer tensors,
 //!   quantized linear/conv/pool layers, BN folding, mixed-precision
 //!   configuration, and the paper's model zoo (SFC, CNV, VGG16, ResNet18).

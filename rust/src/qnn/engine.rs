@@ -7,7 +7,7 @@ use crate::error::{bail, Result};
 use crate::act::{qrange, Activation, FoldedActivation};
 use crate::fit::Pwlf;
 use crate::hw::mt::MtUnit;
-use crate::hw::GrauRegisters;
+use crate::hw::{GrauPlan, GrauRegisters};
 use crate::qnn::graph::{GraphOp, ModelGraph, OpKind};
 use crate::qnn::weights::ExportBundle;
 use crate::util::dataset::Dataset;
@@ -95,7 +95,14 @@ pub struct Engine {
     site_of_op: Vec<Option<usize>>,
     /// per-site channel counts
     site_channels: Vec<usize>,
-    pub act_mode: ActMode,
+    /// private: `grau_plans` is derived from this at construction, so
+    /// swapping the mode in place would desync them — build a new
+    /// `Engine` instead (read access via [`Engine::act_mode`])
+    act_mode: ActMode,
+    /// compiled evaluation plans mirroring `ActMode::Grau`
+    /// (`[site][channel]`, empty for the other modes) — built once at
+    /// engine construction, streamed through on every forward pass
+    grau_plans: Vec<Vec<GrauPlan>>,
 }
 
 impl Engine {
@@ -177,6 +184,16 @@ impl Engine {
                 _ => graph.ops[oi].out_ch,
             };
         }
+        // compile Grau register files into evaluation plans up front:
+        // the plans carry the unrolled shift lists / segment tables the
+        // per-element hot loop would otherwise re-derive per MAC
+        let grau_plans = match &act_mode {
+            ActMode::Grau(sites) => sites
+                .iter()
+                .map(|chans| chans.iter().map(GrauPlan::new).collect())
+                .collect(),
+            _ => Vec::new(),
+        };
         Ok(Engine {
             graph,
             in_step,
@@ -184,7 +201,13 @@ impl Engine {
             site_of_op,
             site_channels,
             act_mode,
+            grau_plans,
         })
+    }
+
+    /// The active activation mode.
+    pub fn act_mode(&self) -> &ActMode {
+        &self.act_mode
     }
 
     pub fn site_channels(&self) -> &[usize] {
@@ -229,9 +252,39 @@ impl Engine {
         match &self.act_mode {
             ActMode::Exact => f.eval(mac as i64),
             ActMode::Pwlf(v) => v[site][ch].eval(mac as i64),
-            ActMode::Grau(v) => v[site][ch].eval(mac),
+            ActMode::Grau(_) => self.grau_plans[site][ch].eval(mac),
             ActMode::Mt(v) => v[site][ch].eval(mac),
         }
+    }
+
+    /// Batched Grau activation over a position-major `[pos][channel]`
+    /// MAC block: gathers each channel's stride into a contiguous buffer,
+    /// streams it through that channel's compiled plan, and scatters the
+    /// outputs back.  Bit-exact with the per-element path.
+    fn grau_batch(&self, site: usize, mac: &[i32], chans: usize) -> Vec<i32> {
+        let plans = &self.grau_plans[site];
+        debug_assert_eq!(plans.len(), chans);
+        let positions = mac.len() / chans;
+        if positions <= 1 {
+            // vector layers (one position): no stride to batch over
+            return mac
+                .iter()
+                .enumerate()
+                .map(|(ch, &m)| plans[ch].eval(m))
+                .collect();
+        }
+        let mut out = vec![0i32; mac.len()];
+        let mut xs: Vec<i32> = Vec::with_capacity(positions);
+        let mut ys: Vec<i32> = Vec::new();
+        for (ch, plan) in plans.iter().enumerate() {
+            xs.clear();
+            xs.extend(mac.iter().skip(ch).step_by(chans).copied());
+            plan.eval_batch(&xs, &mut ys);
+            for (p, &y) in ys.iter().enumerate() {
+                out[p * chans + ch] = y;
+            }
+        }
+        out
     }
 
     /// Run one sample; returns logits. `ranges` records per-site MAC
@@ -317,22 +370,34 @@ impl Engine {
                         op.a_bits,
                     );
                     let chans = *ld.out_shape.last().unwrap();
-                    l.iter()
+                    // Q16 residual realignment first, then the activation
+                    // (batched through compiled plans in Grau mode)
+                    let q: Vec<i32> = l
+                        .iter()
                         .zip(r)
-                        .enumerate()
-                        .map(|(idx, (&a, &b))| {
+                        .map(|(&a, &b)| {
                             let q16 = ld.m_l * a as i64 + ld.m_r * b as i64;
-                            let q = q16.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
-                            let ch = idx % chans;
-                            if let (Some(s), Some(rg)) = (site, ranges.as_deref_mut()) {
-                                rg.update(s, ch, q);
-                            }
-                            match site {
-                                Some(s) => self.apply_act(s, ch, q, &f),
-                                None => q,
-                            }
+                            q16.clamp(i32::MIN as i64, i32::MAX as i64) as i32
                         })
-                        .collect()
+                        .collect();
+                    if let (Some(s), Some(rg)) = (site, ranges.as_deref_mut()) {
+                        for (idx, &v) in q.iter().enumerate() {
+                            rg.update(s, idx % chans, v);
+                        }
+                    }
+                    match site {
+                        Some(s) => {
+                            if let ActMode::Grau(_) = &self.act_mode {
+                                self.grau_batch(s, &q, chans)
+                            } else {
+                                q.iter()
+                                    .enumerate()
+                                    .map(|(idx, &v)| self.apply_act(s, idx % chans, v, &f))
+                                    .collect()
+                            }
+                        }
+                        None => q,
+                    }
                 }
             };
             outs.push(out);
@@ -341,7 +406,7 @@ impl Engine {
     }
 
     /// Shared conv/linear epilogue: per-channel activation (or head
-    /// logits).  `mac` is laid out position-major [pos][channel].
+    /// logits).  `mac` is laid out position-major `[pos][channel]`.
     fn finish_macs(
         &self,
         oi: usize,
@@ -361,6 +426,15 @@ impl Engine {
             return mac.to_vec();
         }
         let site = self.site_of_op[oi].expect("non-head conv/linear is a site");
+        if let Some(rg) = ranges.as_deref_mut() {
+            for (i, &m) in mac.iter().enumerate() {
+                rg.update(site, i % chans, m);
+            }
+        }
+        if let ActMode::Grau(_) = &self.act_mode {
+            // compiled-plan fast path: per-channel batched evaluation
+            return self.grau_batch(site, mac, chans);
+        }
         let act = if op.a_bits == 1 {
             Activation::Identity
         } else {
@@ -369,9 +443,6 @@ impl Engine {
         let mut out = Vec::with_capacity(mac.len());
         for (i, &m) in mac.iter().enumerate() {
             let ch = i % chans;
-            if let Some(rg) = ranges.as_deref_mut() {
-                rg.update(site, ch, m);
-            }
             let f = FoldedActivation::new(ld.a[ch], ld.b[ch], act, ld.s_out, op.a_bits);
             out.push(self.apply_act(site, ch, m, &f));
         }
@@ -406,8 +477,8 @@ impl Engine {
     }
 }
 
-/// SAME-padded stride-s conv: input [H,W,Cin], weights [kh,kw,Cin,Cout],
-/// output position-major [oh*ow][Cout] int32 MACs.
+/// SAME-padded stride-s conv: input `[H,W,Cin]`, weights
+/// `[kh,kw,Cin,Cout]`, output position-major `[oh*ow][Cout]` int32 MACs.
 pub fn conv2d_i32(
     src: &[i32],
     in_shape: &[usize],

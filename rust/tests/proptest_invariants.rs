@@ -7,7 +7,7 @@ use grau::fit::greedy::{select_breakpoints, GreedyOptions};
 use grau::fit::pipeline::{fit_samples, FitOptions};
 use grau::fit::slope::quantize_slope;
 use grau::fit::ApproxKind;
-use grau::hw::{GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use grau::hw::{GrauPlan, GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
 use grau::util::rng::Rng;
 
 fn random_regs(rng: &mut Rng) -> GrauRegisters {
@@ -24,6 +24,36 @@ fn random_regs(rng: &mut Rng) -> GrauRegisters {
     while ths.len() < segs - 1 {
         ths.push(*ths.last().unwrap_or(&0) + 1 + ths.len() as i32);
     }
+    r.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
+    r.thresholds[..segs - 1].copy_from_slice(&ths[..segs - 1]);
+    for j in 0..segs {
+        r.x0[j] = rng.range_i64(-50_000, 50_000) as i32;
+        let (qmin, qmax) = qrange(n_bits);
+        r.y0[j] = rng.range_i64(qmin as i64, qmax as i64 + 1) as i32;
+        r.sign[j] = if rng.uniform() < 0.5 { 1 } else { -1 };
+        r.mask[j] = (rng.next_u64() as u32) & ((1u32 << n_shifts) - 1);
+    }
+    r
+}
+
+/// Like [`random_regs`] but with a caller-chosen threshold range (narrow
+/// ranges exercise the plan's dense segment-index table, wide ranges its
+/// linear-search fallback) and the full 4/6/8-bit width set.
+fn random_regs_spanned(rng: &mut Rng, th_lo: i64, th_hi: i64) -> GrauRegisters {
+    let n_bits = [1u8, 2, 4, 6, 8][rng.range_usize(0, 5)];
+    let segs = rng.range_usize(1, MAX_SEGMENTS + 1);
+    let n_shifts = [4u8, 8, 16][rng.range_usize(0, 3)];
+    let shift_lo = rng.range_i64(0, 8) as u8;
+    let mut r = GrauRegisters::new(n_bits, segs, shift_lo, n_shifts);
+    let mut ths: Vec<i32> = (0..segs - 1)
+        .map(|_| rng.range_i64(th_lo, th_hi) as i32)
+        .collect();
+    ths.sort_unstable();
+    ths.dedup();
+    while ths.len() < segs - 1 {
+        ths.push(*ths.last().unwrap_or(&0) + 1 + ths.len() as i32);
+    }
+    ths.sort_unstable();
     r.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
     r.thresholds[..segs - 1].copy_from_slice(&ths[..segs - 1]);
     for j in 0..segs {
@@ -66,6 +96,42 @@ fn prop_eval_matches_spec_and_stays_in_range() {
             let y = r.eval(x);
             assert_eq!(y, spec_eval(&r, x));
             assert!(y >= qmin && y <= qmax);
+        }
+    }
+}
+
+#[test]
+fn prop_plan_matches_registers_bit_for_bit() {
+    // GrauPlan::eval / eval_batch must equal GrauRegisters::eval for
+    // every input, across all n_shifts windows (4/8/16), 1-8 segments,
+    // and 1/2/4/6/8-bit widths — with and without the dense table.
+    let mut rng = Rng::new(20_260_727);
+    for case in 0..300 {
+        // alternate wide threshold spans (linear-search fallback) and
+        // narrow spans (dense segment-index table)
+        let (lo, hi) = if case % 2 == 0 {
+            (-50_000i64, 50_000i64)
+        } else {
+            (-120i64, 120i64)
+        };
+        let r = random_regs_spanned(&mut rng, lo, hi);
+        let plan = GrauPlan::new(&r);
+        let lean = GrauPlan::without_table(&r);
+        let mut xs: Vec<i32> = (0..48)
+            .map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64 + 1) as i32)
+            .collect();
+        xs.extend((0..48).map(|_| rng.range_i64(lo, hi) as i32));
+        // threshold neighbourhoods: the exact boundary and both sides
+        for i in 0..r.n_segments - 1 {
+            let t = r.thresholds[i];
+            xs.extend([t.saturating_sub(1), t, t.saturating_add(1)]);
+        }
+        let batch = plan.eval_vec(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            let want = r.eval(x);
+            assert_eq!(plan.eval(x), want, "plan x={x} case={case}");
+            assert_eq!(lean.eval(x), want, "lean plan x={x} case={case}");
+            assert_eq!(batch[i], want, "batch x={x} case={case}");
         }
     }
 }
