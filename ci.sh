@@ -5,10 +5,11 @@
 #   ./ci.sh fast     skip the doc build and doc-tests
 #
 # Mirrors the tier-1 verify (`cargo build --release && cargo test -q`)
-# plus formatting and rustdoc hygiene.  The fmt step is advisory (the
-# seed predates rustfmt enforcement); build, test, doc (rustdoc
-# warnings promoted to errors), and the runnable doc-examples are
-# fatal.
+# plus formatting, clippy, and rustdoc hygiene.  The fmt step is
+# advisory (the seed predates rustfmt enforcement); build, test, clippy
+# (lints promoted to errors; skipped only when the toolchain ships no
+# clippy), doc (rustdoc warnings promoted to errors), and the runnable
+# doc-examples are fatal.
 
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -25,6 +26,13 @@ cargo build --release --benches --examples
 
 step "cargo test -q"
 cargo test -q
+
+step "cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    printf 'ci.sh: WARNING: clippy not installed in this toolchain; step skipped\n'
+fi
 
 if [ "${1:-}" != "fast" ]; then
     step "cargo doc --no-deps (rustdoc warnings are errors)"

@@ -65,9 +65,9 @@ fn main() {
     );
     println!(
         "  throughput {:.2} Melem/s | batches {} | reconfigs {} ({} cycles) | \
-         mean latency {:.0}µs p_max {}µs",
+         latency mean {:.0}µs p50 {}µs p99 {}µs max {}µs",
         m.elements as f64 / dt / 1e6, m.batches, m.reconfigs, m.reconfig_cycles,
-        m.mean_latency_us(), m.latency_us_max
+        m.mean_latency_us(), m.p50_latency_us(), m.p99_latency_us(), m.latency_us_max
     );
     println!(
         "  reconfig amortization: {:.1} elements per reconfig",

@@ -15,6 +15,7 @@ use grau::fit::lsq::fit_lsq;
 use grau::fit::pipeline::{fit_folded, FitOptions};
 use grau::fit::ApproxKind;
 use grau::hw::lut_unit::LutUnit;
+use grau::hw::unit::{build_unit, UnitKind};
 use grau::hw::GrauPlan;
 use grau::qnn::engine::conv2d_i32;
 use grau::util::bench::{bench_header, Bencher};
@@ -79,6 +80,38 @@ fn main() {
     // bit-exactness sanity on the bench workload itself
     for &x in xs.iter().step_by(997) {
         assert_eq!(plan.eval(x), regs.eval(x), "plan/scalar diverge at x={x}");
+    }
+
+    // --- hw::unit registry: one loop drives every backend ------------------
+    // (replaces the old hand-rolled per-unit comparisons: each registered
+    // UnitKind is built from the same fitted register file and streamed
+    // through the ActivationUnit trait)
+    println!("\nperf: ActivationUnit registry — eval_batch throughput per backend");
+    let unit_xs: Vec<i32> = (0..16_384).map(|i| (i as i32 % 6000) - 3000).collect();
+    let mut unit_out: Vec<i32> = Vec::new();
+    for kind in UnitKind::ALL {
+        if !kind.supports(&regs, ApproxKind::Apot) {
+            println!(
+                "  (skipping '{}': fitted register file outside its representable domain)",
+                kind.name()
+            );
+            continue;
+        }
+        let mut unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
+        Bencher::new(&format!("unit '{}' eval_batch 16Ki", kind.name()))
+            .elements(unit_xs.len() as u64)
+            .samples(5)
+            .min_time_ms(100)
+            .run(|| {
+                unit.eval_batch(&unit_xs, &mut unit_out);
+                unit_out.last().copied()
+            });
+        if let Some(c) = unit.cost_report() {
+            println!(
+                "    cost model: {} LUT / {} FF @ {:.0} MHz (depth {})",
+                c.lut, c.ff, c.fmax_mhz, c.depth_8bit
+            );
+        }
     }
 
     // --- L3 service -------------------------------------------------------

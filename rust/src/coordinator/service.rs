@@ -3,35 +3,45 @@
 //! Models the activation subsystem of a QNN accelerator as a service: a
 //! request is a stream of MAC outputs tagged with a *stream id* (one per
 //! layer/channel-group configuration).  Requests are routed by stream
-//! affinity to worker threads; each worker owns ONE GRAU instance and
-//! must *reconfigure* it (reload thresholds + shifter settings — the
-//! paper's runtime reconfiguration) whenever consecutive batches carry
-//! different stream ids.  A dynamic batcher coalesces same-stream
+//! affinity to worker threads; each worker owns a bank of
+//! [`ActivationUnit`] trait objects — one per stream it has served —
+//! and *reconfigures* a unit (reload thresholds + shifter settings, the
+//! paper's runtime reconfiguration) whenever a stream's registered
+//! configuration changes.  A dynamic batcher coalesces same-stream
 //! requests up to `max_batch` elements to amortize reconfiguration.
 //!
-//! Backends: `Functional` (bit-exact register-file model, the fast
-//! path), `CycleSim` (the cycle-accurate pipelined simulator — used to
-//! validate that service outputs equal hardware outputs bit-for-bit and
-//! to account cycles), and `Pjrt` (offload through the AOT-compiled L1
-//! Pallas kernel via the runtime — Python never involved).
+//! Backends are registry entries over the `hw::unit` layer:
 //!
-//! Reconfigure → plan → stream: whenever a worker switches streams it
-//! compiles the new register file into a [`GrauPlan`] alongside the
-//! cycle-model reconfiguration, and the `Functional` backend (plus the
-//! `Pjrt` fallback) batch-evaluates every request of the batch through
-//! that plan — no per-element threshold search or mask bit-scan on the
-//! request path (see `docs/ARCHITECTURE.md`).
+//! * [`Backend::Functional`] → [`UnitKind::Plan`] (compiled bit-exact
+//!   batched evaluation, the fast path);
+//! * [`Backend::CycleSim`] → [`UnitKind::Pipelined`] (the cycle-accurate
+//!   simulator — validates service outputs bit-for-bit against the
+//!   hardware model and accounts cycles);
+//! * [`Backend::Pjrt`] → offload through the AOT-compiled L1 Pallas
+//!   kernel via the runtime (Python never involved), with a compiled-plan
+//!   fallback.
+//!
+//! The service-wide backend is only a *default*: individual streams can
+//! pin any registry backend via
+//! [`register_unit`](ActivationService::register_unit), so a cycle-sim
+//! validation stream can run alongside functional traffic on the same
+//! worker bank.  Any future backend plugs in by implementing
+//! [`ActivationUnit`] and registering a [`UnitKind`] — the worker loop
+//! is backend-agnostic.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
-use crate::error::{ensure, Context, Result};
+use crate::error::{ensure, Context, Error, Result};
 
 use crate::fit::ApproxKind;
-use crate::hw::pipeline::PipelinedGrau;
+use crate::hw::pipeline::CycleStats;
+use crate::hw::unit::{build_unit, reconfigure_cost, ActivationUnit, UnitKind};
 use crate::hw::{GrauPlan, GrauRegisters};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,8 +58,8 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     pub backend: Backend,
     /// Route each stream to a fixed worker (hash affinity).  Keeps a
-    /// stream's register file resident in "its" unit, so reconfiguration
-    /// only happens when a worker's stream set collides — the §Perf
+    /// stream's unit resident in "its" worker's bank, so reconfiguration
+    /// only happens on (re-)registration or cache overflow — the §Perf
     /// optimization that removed per-batch reconfigs (EXPERIMENTS.md).
     pub affinity: bool,
     /// artifacts dir (needed for the Pjrt backend)
@@ -79,6 +89,40 @@ pub struct ActRequest {
 pub struct ActResponse {
     pub data: Vec<i32>,
     pub latency_us: u64,
+    /// Why the request failed (`data` is empty in that case), e.g.
+    /// `"stream 7 not registered"`.  `None` on success.
+    pub error: Option<String>,
+}
+
+/// Number of log-scale latency buckets: bucket 0 holds 0 µs, bucket
+/// `b >= 1` holds latencies in `[2^(b-1), 2^b)` µs.
+pub const LATENCY_BUCKETS: usize = 64;
+
+/// Lock-free fixed-bucket log-scale latency histogram.  `record` is one
+/// relaxed `fetch_add` on the hot path; percentiles are resolved from a
+/// snapshot at read time with power-of-two resolution.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    #[inline]
+    pub fn record(&self, us: u64) {
+        let b = (64 - us.leading_zeros() as usize).min(LATENCY_BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> [u64; LATENCY_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
 }
 
 #[derive(Default)]
@@ -91,6 +135,7 @@ pub struct Metrics {
     pub sim_cycles: AtomicU64,
     pub latency_us_sum: AtomicU64,
     pub latency_us_max: AtomicU64,
+    pub latency: LatencyHistogram,
 }
 
 impl Metrics {
@@ -104,11 +149,12 @@ impl Metrics {
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
             latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
             latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
+            latency_buckets: self.latency.snapshot(),
         }
     }
 }
 
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub elements: u64,
@@ -118,6 +164,24 @@ pub struct MetricsSnapshot {
     pub sim_cycles: u64,
     pub latency_us_sum: u64,
     pub latency_us_max: u64,
+    /// log-scale latency histogram (see [`LatencyHistogram`])
+    pub latency_buckets: [u64; LATENCY_BUCKETS],
+}
+
+impl Default for MetricsSnapshot {
+    fn default() -> Self {
+        MetricsSnapshot {
+            requests: 0,
+            elements: 0,
+            batches: 0,
+            reconfigs: 0,
+            reconfig_cycles: 0,
+            sim_cycles: 0,
+            latency_us_sum: 0,
+            latency_us_max: 0,
+            latency_buckets: [0; LATENCY_BUCKETS],
+        }
+    }
 }
 
 impl MetricsSnapshot {
@@ -128,9 +192,47 @@ impl MetricsSnapshot {
             self.latency_us_sum as f64 / self.requests as f64
         }
     }
+
+    /// Latency at percentile `pct` (0–100), resolved from the log-scale
+    /// histogram: the returned value is the upper bound of the bucket
+    /// containing that rank (power-of-two resolution).
+    pub fn latency_percentile_us(&self, pct: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (((pct / 100.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (b, &count) in self.latency_buckets.iter().enumerate() {
+            cum += count;
+            if cum >= rank {
+                return if b == 0 { 0 } else { (1u64 << b) - 1 };
+            }
+        }
+        0
+    }
+
+    /// Median request latency (µs, log-bucket upper bound).
+    pub fn p50_latency_us(&self) -> u64 {
+        self.latency_percentile_us(50.0)
+    }
+
+    /// 99th-percentile request latency (µs, log-bucket upper bound).
+    pub fn p99_latency_us(&self) -> u64 {
+        self.latency_percentile_us(99.0)
+    }
 }
 
-type Registry = Arc<RwLock<HashMap<u64, (GrauRegisters, ApproxKind)>>>;
+/// Per-stream registration: register file, approximation family, and an
+/// optional backend pin (`None` = the service-wide default backend).
+#[derive(Clone)]
+struct StreamConfig {
+    regs: GrauRegisters,
+    kind: ApproxKind,
+    unit: Option<UnitKind>,
+}
+
+type Registry = Arc<RwLock<HashMap<u64, StreamConfig>>>;
 
 /// A worker's request source.  Affinity mode gives every worker
 /// exclusive ownership of its queue, so it can block in `recv` with no
@@ -183,8 +285,8 @@ impl WorkerQueue {
     }
 }
 
-/// The L3 activation service: a bank of worker-owned GRAU units behind
-/// a stream-affine router and dynamic batcher.
+/// The L3 activation service: a bank of worker-owned activation units
+/// behind a stream-affine router and dynamic batcher.
 ///
 /// ```
 /// use grau::coordinator::service::{ActivationService, ServiceConfig};
@@ -260,15 +362,42 @@ impl ActivationService {
         }
     }
 
-    /// Register / replace a stream's GRAU configuration.
+    /// Register / replace a stream's GRAU configuration on the
+    /// service-wide default backend.
     pub fn register(&self, stream_id: u64, regs: GrauRegisters, kind: ApproxKind) {
-        self.registry
-            .write()
-            .unwrap()
-            .insert(stream_id, (regs, kind));
+        self.registry.write().unwrap().insert(
+            stream_id,
+            StreamConfig {
+                regs,
+                kind,
+                unit: None,
+            },
+        );
     }
 
-    /// Submit asynchronously; returns the response receiver.
+    /// Register / replace a stream pinned to a specific activation-unit
+    /// backend, overriding the service default — e.g. a cycle-sim
+    /// validation stream alongside functional traffic.
+    pub fn register_unit(
+        &self,
+        stream_id: u64,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+        unit: UnitKind,
+    ) {
+        self.registry.write().unwrap().insert(
+            stream_id,
+            StreamConfig {
+                regs,
+                kind,
+                unit: Some(unit),
+            },
+        );
+    }
+
+    /// Submit asynchronously; returns the response receiver.  Failures
+    /// (unregistered stream, unrepresentable configuration) are reported
+    /// through [`ActResponse::error`], never by dropping the channel.
     pub fn submit(&self, stream_id: u64, data: Vec<i32>) -> Receiver<ActResponse> {
         let (rtx, rrx) = channel();
         let req = ActRequest {
@@ -288,10 +417,17 @@ impl ActivationService {
         rrx
     }
 
-    /// Blocking convenience call.
+    /// Blocking convenience call.  Returns a typed error when the worker
+    /// reports a failure (e.g. calling an unregistered stream).
     pub fn call(&self, stream_id: u64, data: Vec<i32>) -> Result<ActResponse> {
         let rx = self.submit(stream_id, data);
-        Ok(rx.recv()?)
+        let resp = rx.recv()?;
+        if let Some(e) = &resp.error {
+            return Err(Error::msg(format!(
+                "activation call on stream {stream_id} failed: {e}"
+            )));
+        }
+        Ok(resp)
     }
 
     pub fn shutdown(mut self) -> MetricsSnapshot {
@@ -304,11 +440,45 @@ impl ActivationService {
     }
 }
 
-/// Upper bound on per-worker cached plans.  A dense segment table can
-/// reach 64 KiB, so an unbounded cache over many short-lived streams
-/// would dwarf the registry; on overflow the cache is simply cleared
-/// (plans recompile on demand).
-const MAX_WORKER_PLANS: usize = 1024;
+/// Upper bound on per-worker cached units.  A plan's dense segment table
+/// can reach 64 KiB, so an unbounded bank over many short-lived streams
+/// would dwarf the registry; on overflow the bank is simply cleared
+/// (units rebuild on demand, each rebuild accounted as a reconfig).
+const MAX_WORKER_UNITS: usize = 1024;
+
+/// Which unit a worker runs for a stream: a registry backend, or the
+/// worker-local PJRT offload wrapper.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum WorkerUnitKind {
+    Registry(UnitKind),
+    PjrtOffloaded,
+}
+
+/// One resident unit in a worker's bank, keyed by the configuration it
+/// was last reconfigured to — re-registrations and backend changes make
+/// it stale.
+struct CachedUnit {
+    src: GrauRegisters,
+    kind: ApproxKind,
+    unit_kind: WorkerUnitKind,
+    unit: Box<dyn ActivationUnit>,
+}
+
+fn make_unit(
+    wk: WorkerUnitKind,
+    regs: &GrauRegisters,
+    kind: ApproxKind,
+    offload: &Option<Rc<RefCell<PjrtOffload>>>,
+) -> Result<Box<dyn ActivationUnit>> {
+    match wk {
+        WorkerUnitKind::Registry(k) => build_unit(k, regs, kind),
+        WorkerUnitKind::PjrtOffloaded => Ok(Box::new(PjrtUnit {
+            regs: regs.clone(),
+            plan: GrauPlan::new(regs),
+            offload: offload.clone(),
+        })),
+    }
+}
 
 fn worker_loop(
     _wid: usize,
@@ -317,21 +487,24 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     cfg: ServiceConfig,
 ) {
-    // per-worker state: ONE hardware unit; `resident` records which
-    // (stream, register file) the unit currently holds, so both stream
-    // switches AND in-place re-registrations trigger a reconfiguration
-    let mut resident: Option<(u64, GrauRegisters)> = None;
-    let mut unit: Option<PipelinedGrau> = None;
-    // compiled plans, one per stream this worker has served (bounded by
-    // the streams routed here), keyed by the register file they were
-    // compiled from — stream switches reuse plans, re-registrations
-    // recompile
-    let mut plans: HashMap<u64, (GrauRegisters, GrauPlan)> = HashMap::new();
-    // PJRT backend state (created on this thread; executables are !Send)
-    let mut pjrt: Option<PjrtOffload> = if cfg.backend == Backend::Pjrt {
-        PjrtOffload::new(&cfg.artifacts_dir).ok()
+    // per-worker state: a bank of trait-object units, one per stream
+    // this worker has served (bounded by the streams routed here), each
+    // keyed by the registration it was built from — re-registrations
+    // and backend changes trigger a (counted) reconfiguration
+    let mut units: HashMap<u64, CachedUnit> = HashMap::new();
+    // PJRT backend state (created on this thread; executables are !Send),
+    // shared by every PjrtUnit in this worker's bank
+    let offload: Option<Rc<RefCell<PjrtOffload>>> = if cfg.backend == Backend::Pjrt {
+        PjrtOffload::new(&cfg.artifacts_dir)
+            .ok()
+            .map(|p| Rc::new(RefCell::new(p)))
     } else {
         None
+    };
+    let default_kind = match cfg.backend {
+        Backend::Functional => WorkerUnitKind::Registry(UnitKind::Plan),
+        Backend::CycleSim => WorkerUnitKind::Registry(UnitKind::Pipelined),
+        Backend::Pjrt => WorkerUnitKind::PjrtOffloaded,
     };
 
     loop {
@@ -358,67 +531,84 @@ fn worker_loop(
             }
             let group = &batch[i..j];
 
-            // reconfigure if the unit holds a different stream's settings
-            let (regs, kind) = match registry.read().unwrap().get(&sid) {
-                Some((r, k)) => (r.clone(), *k),
+            let entry = match registry.read().unwrap().get(&sid) {
+                Some(e) => e.clone(),
                 None => {
-                    // unknown stream: identity passthrough
                     for r in group {
-                        respond(r, r.data.clone(), &metrics);
+                        respond_error(r, format!("stream {sid} not registered"), &metrics);
                     }
                     i = j;
                     continue;
                 }
             };
-            let unit_stale = resident
-                .as_ref()
-                .map(|(s, r)| *s != sid || r != &regs)
-                .unwrap_or(true);
-            if unit_stale {
-                let cost = match unit.as_mut() {
-                    Some(u) => u.reconfigure(regs.clone(), kind),
-                    None => {
-                        unit = Some(PipelinedGrau::new(regs.clone(), kind));
-                        (regs.n_segments as u64 - 1) + regs.n_segments as u64 + 2
+            let want = entry
+                .unit
+                .map(WorkerUnitKind::Registry)
+                .unwrap_or(default_kind);
+            // representable-domain pre-check, so neither the build nor a
+            // later trait reconfigure can panic the worker
+            if let WorkerUnitKind::Registry(k) = want {
+                if let Err(e) = k.check(&entry.regs, entry.kind) {
+                    for r in group {
+                        respond_error(r, format!("stream {sid}: {e:#}"), &metrics);
                     }
+                    i = j;
+                    continue;
+                }
+            }
+
+            // reconfigure when the resident unit (if any) holds a
+            // different registration: stream re-registered, family
+            // changed, or pinned to a different backend
+            let stale = units
+                .get(&sid)
+                .map(|c| c.src != entry.regs || c.kind != entry.kind || c.unit_kind != want)
+                .unwrap_or(true);
+            if stale {
+                if units.len() >= MAX_WORKER_UNITS && !units.contains_key(&sid) {
+                    units.clear();
+                }
+                let (unit, cost) = match units.remove(&sid) {
+                    // same backend: replay the runtime reconfiguration on
+                    // the existing unit (counts flush costs etc.)
+                    Some(mut c) if c.unit_kind == want => {
+                        let cost = c.unit.reconfigure(&entry.regs, entry.kind);
+                        (c.unit, cost)
+                    }
+                    // new stream or backend change: build a fresh unit and
+                    // charge the register-write floor for loading it
+                    _ => match make_unit(want, &entry.regs, entry.kind, &offload) {
+                        Ok(u) => (u, reconfigure_cost(&entry.regs)),
+                        Err(e) => {
+                            for r in group {
+                                respond_error(r, format!("stream {sid}: {e:#}"), &metrics);
+                            }
+                            i = j;
+                            continue;
+                        }
+                    },
                 };
                 metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
                 metrics.reconfig_cycles.fetch_add(cost, Ordering::Relaxed);
-                resident = Some((sid, regs.clone()));
-            }
-            // compiled plan: built once per (stream, register file) and
-            // reused across stream switches; recompiled only when a
-            // re-registration replaced the registers (bit-exact with
-            // regs.eval either way)
-            let plan_stale = plans
-                .get(&sid)
-                .map(|(src, _)| src != &regs)
-                .unwrap_or(true);
-            if plan_stale {
-                if plans.len() >= MAX_WORKER_PLANS {
-                    plans.clear();
-                }
-                plans.insert(sid, (regs.clone(), GrauPlan::new(&regs)));
-            }
-            let p = &plans.get(&sid).expect("plan compiled above").1;
-
-            for r in group {
-                let out = match cfg.backend {
-                    Backend::Functional => p.eval_vec(&r.data),
-                    Backend::CycleSim => {
-                        let u = unit.as_mut().unwrap();
-                        let (out, stats) = u.process_stream(&r.data);
-                        metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
-                        out
-                    }
-                    Backend::Pjrt => match pjrt.as_mut() {
-                        Some(pj) => pj
-                            .run(&regs, &r.data)
-                            .unwrap_or_else(|_| p.eval_vec(&r.data)),
-                        None => p.eval_vec(&r.data),
+                units.insert(
+                    sid,
+                    CachedUnit {
+                        src: entry.regs.clone(),
+                        kind: entry.kind,
+                        unit_kind: want,
+                        unit,
                     },
-                };
-                respond(r, out, &metrics);
+                );
+            }
+
+            let cached = units.get_mut(&sid).expect("unit resident after staleness check");
+            for r in group {
+                // the response owns its output, so there is nothing to
+                // amortize across requests — allocate per request
+                let mut data = Vec::new();
+                let stats = cached.unit.eval_batch(&r.data, &mut data);
+                metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
+                respond(r, data, &metrics);
             }
             metrics.batches.fetch_add(1, Ordering::Relaxed);
             i = j;
@@ -427,6 +617,14 @@ fn worker_loop(
 }
 
 fn respond(req: &ActRequest, data: Vec<i32>, metrics: &Metrics) {
+    finish(req, data, None, metrics)
+}
+
+fn respond_error(req: &ActRequest, error: String, metrics: &Metrics) {
+    finish(req, Vec::new(), Some(error), metrics)
+}
+
+fn finish(req: &ActRequest, data: Vec<i32>, error: Option<String>, metrics: &Metrics) {
     let lat = req.t_submit.elapsed().as_micros() as u64;
     metrics.requests.fetch_add(1, Ordering::Relaxed);
     metrics
@@ -434,12 +632,56 @@ fn respond(req: &ActRequest, data: Vec<i32>, metrics: &Metrics) {
         .fetch_add(data.len() as u64, Ordering::Relaxed);
     metrics.latency_us_sum.fetch_add(lat, Ordering::Relaxed);
     metrics.latency_us_max.fetch_max(lat, Ordering::Relaxed);
+    metrics.latency.record(lat);
     req.resp
         .send(ActResponse {
             data,
             latency_us: lat,
+            error,
         })
         .ok();
+}
+
+/// PJRT offload as an [`ActivationUnit`]: batches go through the
+/// AOT-compiled L1 kernel when the worker's offload runtime is up and
+/// the register file matches the artifact's fixed shape; everything else
+/// falls back to the compiled plan (bit-exact either way).
+struct PjrtUnit {
+    regs: GrauRegisters,
+    plan: GrauPlan,
+    offload: Option<Rc<RefCell<PjrtOffload>>>,
+}
+
+impl ActivationUnit for PjrtUnit {
+    fn name(&self) -> &'static str {
+        "pjrt-offload"
+    }
+    fn reconfigure(&mut self, regs: &GrauRegisters, _kind: ApproxKind) -> u64 {
+        self.regs = regs.clone();
+        self.plan = GrauPlan::new(regs);
+        reconfigure_cost(regs)
+    }
+    fn eval(&mut self, x: i32) -> i32 {
+        self.plan.eval(x)
+    }
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats {
+        if let Some(pj) = &self.offload {
+            if let Ok(ys) = pj.borrow_mut().run(&self.regs, xs) {
+                *out = ys;
+                return CycleStats {
+                    cycles: 0,
+                    outputs: xs.len() as u64,
+                    first_latency: 0,
+                };
+            }
+        }
+        self.plan.eval_batch(xs, out);
+        CycleStats {
+            cycles: 0,
+            outputs: xs.len() as u64,
+            first_latency: 0,
+        }
+    }
 }
 
 /// PJRT offload: the AOT-compiled L1 GRAU kernel (8-bit, 16-shift window
@@ -558,9 +800,9 @@ mod tests {
     }
 
     #[test]
-    fn re_registering_a_stream_recompiles_the_plan() {
-        // replacing a stream's registers must invalidate the compiled
-        // plan even though no stream switch happens
+    fn re_registering_a_stream_recompiles_the_unit() {
+        // replacing a stream's registers must invalidate the resident
+        // unit even though no stream switch happens
         let svc = ActivationService::start(ServiceConfig {
             workers: 1,
             ..Default::default()
@@ -578,8 +820,8 @@ mod tests {
 
     #[test]
     fn re_registering_reconfigures_the_cycle_sim_unit() {
-        // the hardware unit (not just the plan) must pick up replaced
-        // registers, and the reload must be accounted as a reconfig
+        // the hardware unit (not just a compiled plan) must pick up
+        // replaced registers, and the reload must count as a reconfig
         let svc = ActivationService::start(ServiceConfig {
             workers: 1,
             backend: Backend::CycleSim,
@@ -598,10 +840,78 @@ mod tests {
     }
 
     #[test]
-    fn unknown_stream_passthrough() {
+    fn unknown_stream_reports_clear_error() {
+        // regression: an unregistered stream must produce an explicit
+        // error response, not an opaque dropped-channel failure (and not
+        // silently echo the input back)
         let svc = ActivationService::start(ServiceConfig::default());
-        let resp = svc.call(777, vec![5, -5]).unwrap();
-        assert_eq!(resp.data, vec![5, -5]);
+        let err = svc.call(777, vec![5, -5]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("not registered"), "got: {msg}");
+        assert!(msg.contains("777"), "got: {msg}");
+        // the async path reports the same failure without closing the
+        // response channel
+        let resp = svc.submit(777, vec![1]).recv().expect("channel stays open");
+        assert!(resp.data.is_empty());
+        assert!(resp.error.unwrap().contains("not registered"));
         svc.shutdown();
+    }
+
+    #[test]
+    fn per_stream_backend_pin_overrides_default() {
+        // a cycle-sim validation stream rides alongside functional
+        // traffic on a Functional-backend service
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let regs = demo_regs(Activation::Silu);
+        svc.register(1, regs.clone(), ApproxKind::Apot);
+        svc.register_unit(2, regs.clone(), ApproxKind::Apot, UnitKind::Pipelined);
+        let data: Vec<i32> = (-150..150).collect();
+        for sid in [1u64, 2] {
+            let resp = svc.call(sid, data.clone()).unwrap();
+            for (x, y) in data.iter().zip(&resp.data) {
+                assert_eq!(*y, regs.eval(*x), "stream {sid}");
+            }
+        }
+        let m = svc.shutdown();
+        // only the pinned stream runs the cycle simulator
+        assert!(m.sim_cycles >= 300, "sim cycles {}", m.sim_cycles);
+    }
+
+    #[test]
+    fn unrepresentable_backend_pin_reports_error() {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        // fitted (non-flat) registers cannot run on the MT baseline
+        svc.register_unit(5, demo_regs(Activation::Silu), ApproxKind::Apot, UnitKind::Mt);
+        let err = svc.call(5, vec![1, 2, 3]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("flat step"), "got: {msg}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn latency_percentiles_from_log_histogram() {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        });
+        svc.register(1, demo_regs(Activation::Sigmoid), ApproxKind::Apot);
+        for _ in 0..64 {
+            svc.call(1, vec![1, 2, 3, 4]).unwrap();
+        }
+        let m = svc.shutdown();
+        // every request lands in exactly one bucket
+        assert_eq!(m.latency_buckets.iter().sum::<u64>(), m.requests);
+        let p50 = m.p50_latency_us();
+        let p99 = m.p99_latency_us();
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        // bucket upper bounds stay within 2x of the true max
+        assert!(p99 <= m.latency_us_max.saturating_mul(2).max(1), "p99 {p99} max {}", m.latency_us_max);
+        assert_eq!(MetricsSnapshot::default().p99_latency_us(), 0);
     }
 }

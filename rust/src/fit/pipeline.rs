@@ -5,10 +5,10 @@
 use crate::act::FoldedActivation;
 use crate::fit::greedy::{select_breakpoints, GreedyOptions};
 use crate::fit::lsq::fit_lsq;
-use crate::fit::search::{registers_sse, search_window, WindowSearchResult};
+use crate::fit::search::{search_window, WindowSearchResult};
 use crate::fit::slope::pwlf_from_breakpoints;
 use crate::fit::{ApproxKind, Pwlf};
-use crate::hw::GrauRegisters;
+use crate::hw::{FunctionalUnit, GrauRegisters};
 
 /// Which fitter produces the float PWLF.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -138,20 +138,33 @@ pub fn fit_samples(samples: &[(i64, f64)], n_bits: u8, opts: FitOptions) -> FitR
     }
 }
 
-/// Re-validate a register file against the *exact* quantized black box
-/// (round-trip check used by the QNN engine): fraction of integer points
-/// in `[lo, hi]` where the hardware output differs from `f.eval`.
-pub fn mismatch_rate(regs: &GrauRegisters, f: &FoldedActivation, lo: i64, hi: i64, n: usize) -> f64 {
+/// Re-validate any functional activation unit against the *exact*
+/// quantized black box: fraction of integer points in `[lo, hi]` where
+/// the unit's output differs from `f.eval`.
+pub fn unit_mismatch_rate(
+    unit: &dyn FunctionalUnit,
+    f: &FoldedActivation,
+    lo: i64,
+    hi: i64,
+    n: usize,
+) -> f64 {
     let samples = f.sample(lo, hi, n);
-    let plan = crate::hw::GrauPlan::without_table(regs);
     let mut bad = 0usize;
     for &(x, _) in &samples {
         let x32 = x.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
-        if plan.eval(x32) != f.eval(x) {
+        if unit.eval_ref(x32) != f.eval(x) {
             bad += 1;
         }
     }
     bad as f64 / samples.len() as f64
+}
+
+/// Re-validate a register file against the *exact* quantized black box
+/// (round-trip check used by the QNN engine), scored through a
+/// table-less compiled plan on the `hw::unit` trait layer.
+pub fn mismatch_rate(regs: &GrauRegisters, f: &FoldedActivation, lo: i64, hi: i64, n: usize) -> f64 {
+    let plan = crate::hw::GrauPlan::without_table(regs);
+    unit_mismatch_rate(&plan, f, lo, hi, n)
 }
 
 /// MT threshold derivation for the baseline unit: for a *monotone*

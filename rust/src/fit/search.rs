@@ -7,7 +7,7 @@
 
 use crate::fit::slope::quantize_slope;
 use crate::fit::{ApproxKind, Pwlf};
-use crate::hw::{GrauPlan, GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use crate::hw::{FunctionalUnit, GrauPlan, GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
 
 /// Largest shift amount considered (the paper's widest range reaches
 /// 2^-24).
@@ -42,22 +42,29 @@ fn clamp_i32(v: i64) -> i32 {
     v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
 }
 
+/// Quantized-output SSE of any functional activation unit against float
+/// samples — the scoring primitive the window search (and any future
+/// fitter) drives through the `hw::unit` trait layer.
+pub fn unit_sse(unit: &dyn FunctionalUnit, samples: &[(i64, f64)]) -> f64 {
+    samples
+        .iter()
+        .map(|&(x, y)| {
+            let d = unit.eval_ref(clamp_i32(x)) as f64 - y;
+            d * d
+        })
+        .sum()
+}
+
 /// Quantized-output SSE of a register file against float samples.
 ///
 /// Scoring compiles the candidate into a [`GrauPlan`] (without the dense
 /// segment table — the plan is evaluated ~1000 times then discarded, so
 /// table construction would dominate) and streams the samples through
-/// it; the plan is bit-exact with `regs.eval`, so the score is
+/// [`unit_sse`]; the plan is bit-exact with `regs.eval`, so the score is
 /// unchanged.
 pub fn registers_sse(regs: &GrauRegisters, samples: &[(i64, f64)]) -> f64 {
     let plan = GrauPlan::without_table(regs);
-    samples
-        .iter()
-        .map(|&(x, y)| {
-            let d = plan.eval(clamp_i32(x)) as f64 - y;
-            d * d
-        })
-        .sum()
+    unit_sse(&plan, samples)
 }
 
 /// Result of the window search.
@@ -141,6 +148,18 @@ mod tests {
         let w4 = search_window(&pwlf, 4, ApproxKind::Apot, &samples).sse;
         let w16 = search_window(&pwlf, 16, ApproxKind::Apot, &samples).sse;
         assert!(w16 <= w4 * 1.001, "w16 {w16} vs w4 {w4}");
+    }
+
+    #[test]
+    fn unit_sse_scores_identically_across_bit_exact_units() {
+        // the trait-layer scorer gives the same SSE whether it drives
+        // the scalar reference or a compiled plan
+        let (pwlf, samples) = fitted(Activation::Silu, 8, 6);
+        let regs = registers_from_pwlf(&pwlf, 3, 8, ApproxKind::Apot);
+        let via_regs = unit_sse(&regs, &samples);
+        let plan = GrauPlan::new(&regs);
+        assert!((unit_sse(&plan, &samples) - via_regs).abs() < 1e-9);
+        assert!((registers_sse(&regs, &samples) - via_regs).abs() < 1e-9);
     }
 
     #[test]

@@ -5,6 +5,18 @@
 //! argument for why direct LUTs don't scale to 18-bit MAC ranges.
 
 use crate::act::FoldedActivation;
+use crate::hw::GrauRegisters;
+
+/// How far [`LutUnit::from_registers`] extends the compiled window
+/// beyond the register file's threshold span on each side.
+pub const REGISTER_WINDOW_MARGIN: i64 = 4096;
+
+/// Hard cap on [`LutUnit::from_registers`] table entries (a 20-bit
+/// address space).  A direct LUT physically cannot scale past ~18-20
+/// address bits (the paper's §I-B argument), so wider threshold spans
+/// get a window clamped around the span's midpoint rather than an
+/// unbounded — potentially process-aborting — allocation.
+pub const MAX_REGISTER_TABLE_ENTRIES: i64 = 1 << 20;
 
 pub struct LutUnit {
     pub lo: i64,
@@ -26,6 +38,44 @@ impl LutUnit {
             table,
             n_bits: f.n_bits,
         }
+    }
+
+    /// Build a direct LUT replaying `regs.eval` over the window spanned
+    /// by the register file's thresholds (plus zero), extended by
+    /// [`REGISTER_WINDOW_MARGIN`] on both sides and clamped to
+    /// [`MAX_REGISTER_TABLE_ENTRIES`] around the span midpoint.
+    /// Bit-exact with [`GrauRegisters::eval`] inside [`LutUnit::window`];
+    /// outside it the unit clamps to the edge entries — the LUT design's
+    /// inherent limitation (§I-B), not a bug.
+    pub fn from_registers(regs: &GrauRegisters) -> Self {
+        let used = &regs.thresholds[..regs.n_segments - 1];
+        let (tlo, thi) = used
+            .iter()
+            .fold((0i64, 0i64), |(lo, hi), &t| (lo.min(t as i64), hi.max(t as i64)));
+        let mut lo = tlo - REGISTER_WINDOW_MARGIN;
+        let mut hi = thi + REGISTER_WINDOW_MARGIN;
+        if hi - lo + 1 > MAX_REGISTER_TABLE_ENTRIES {
+            let mid = tlo + (thi - tlo) / 2;
+            lo = mid - MAX_REGISTER_TABLE_ENTRIES / 2;
+            hi = lo + MAX_REGISTER_TABLE_ENTRIES - 1;
+        }
+        // stay on addressable i32 inputs (thresholds near the extremes
+        // would otherwise wrap in the `x as i32` below)
+        lo = lo.max(i32::MIN as i64);
+        hi = hi.min(i32::MAX as i64);
+        let table: Vec<i32> = (lo..=hi).map(|x| regs.eval(x as i32)).collect();
+        LutUnit {
+            lo,
+            under: table[0],
+            over: *table.last().expect("window is non-empty"),
+            table,
+            n_bits: regs.n_bits,
+        }
+    }
+
+    /// Inclusive input window the table covers exactly.
+    pub fn window(&self) -> (i64, i64) {
+        (self.lo, self.lo + self.table.len() as i64 - 1)
     }
 
     #[inline]
@@ -66,6 +116,38 @@ mod tests {
         // clamps outside
         assert_eq!(lut.eval(-10_000), f.eval(-500));
         assert_eq!(lut.eval(10_000), f.eval(500));
+    }
+
+    #[test]
+    fn from_registers_exact_within_window() {
+        let mut regs = GrauRegisters::new(8, 3, 0, 8);
+        regs.thresholds[..2].copy_from_slice(&[-200, 350]);
+        regs.x0[..3].copy_from_slice(&[-600, -200, 350]);
+        regs.y0[..3].copy_from_slice(&[-90, -10, 60]);
+        regs.mask[..3].copy_from_slice(&[0b10, 0b101, 0b1]);
+        let lut = LutUnit::from_registers(&regs);
+        let (lo, hi) = lut.window();
+        assert_eq!(lo, -200 - REGISTER_WINDOW_MARGIN);
+        assert_eq!(hi, 350 + REGISTER_WINDOW_MARGIN);
+        for x in (lo..=hi).step_by(17) {
+            assert_eq!(lut.eval(x as i32), regs.eval(x as i32), "x={x}");
+        }
+        assert_eq!(lut.eval(i32::MIN), regs.eval(lo as i32));
+        assert_eq!(lut.eval(i32::MAX), regs.eval(hi as i32));
+    }
+
+    #[test]
+    fn from_registers_caps_table_for_wide_threshold_spans() {
+        let mut regs = GrauRegisters::new(8, 3, 0, 8);
+        regs.thresholds[..2].copy_from_slice(&[-(1 << 24), 1 << 24]);
+        regs.mask[..3].copy_from_slice(&[0b1, 0b10, 0b100]);
+        let lut = LutUnit::from_registers(&regs);
+        assert_eq!(lut.table.len() as i64, MAX_REGISTER_TABLE_ENTRIES);
+        let (lo, hi) = lut.window();
+        // still exact inside the (clamped) window
+        for x in [lo, (lo + hi) / 2, hi] {
+            assert_eq!(lut.eval(x as i32), regs.eval(x as i32), "x={x}");
+        }
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //! * [`lut_unit`] — a direct lookup-table unit (Table II comparison).
 //! * [`cost`] — the Vivado-substitute resource/timing/power model
 //!   behind Table VI.
+//! * [`unit`] — the [`ActivationUnit`] trait layer and backend registry
+//!   ([`unit::UnitKind`] / [`unit::build_unit`]): one execution
+//!   abstraction over all of the above, which the service, the QNN
+//!   engine, and the fit scorer dispatch through.
 
 pub mod cost;
 pub mod dse;
@@ -25,8 +29,10 @@ pub mod pipeline;
 pub mod plan;
 pub mod serial;
 pub mod shifter;
+pub mod unit;
 
 pub use plan::GrauPlan;
+pub use unit::{ActivationUnit, FunctionalUnit};
 
 use crate::act::qrange;
 
@@ -91,11 +97,10 @@ impl GrauRegisters {
     /// Segment index for input `x`: the number of thresholds passed.
     #[inline]
     pub fn segment(&self, x: i32) -> usize {
-        let mut s = 0usize;
-        for i in 0..self.n_segments - 1 {
-            s += (x >= self.thresholds[i]) as usize;
-        }
-        s
+        self.thresholds[..self.n_segments - 1]
+            .iter()
+            .filter(|&&t| x >= t)
+            .count()
     }
 
     /// Bit-exact functional evaluation — must match

@@ -12,6 +12,26 @@
 
 use crate::act::{qrange, FoldedActivation};
 use crate::hw::pipeline::CycleStats;
+use crate::hw::GrauRegisters;
+
+/// Is `regs` inside the MT unit's representable domain?  The MT output
+/// is structurally `qmin + #thresholds passed`, so a register file is
+/// representable exactly when every segment is flat (all shifter masks
+/// zero), the step levels are the consecutive MT levels
+/// (`y0[j] = qmin + j`), and the `2^n - 1` threshold registers can hold
+/// every used threshold (`n_segments <= 2^n`, the rest padded with the
+/// never-firing `i32::MAX`).
+pub fn is_mt_representable(regs: &GrauRegisters) -> bool {
+    let (qmin, _) = qrange(regs.n_bits);
+    regs.n_segments <= 1usize << regs.n_bits
+        && regs.mask[..regs.n_segments].iter().all(|&m| m == 0)
+        && (0..regs.n_segments).all(|j| regs.y0[j] == qmin + j as i32)
+        // a *used* threshold of i32::MAX would collide with the MT
+        // unit's never-fires padding convention
+        && regs.thresholds[..regs.n_segments - 1]
+            .iter()
+            .all(|&t| t != i32::MAX)
+}
 
 pub struct MtUnit {
     pub n_bits: u8,
@@ -34,11 +54,32 @@ impl MtUnit {
         MtUnit::new(f.n_bits, crate::fit::pipeline::mt_thresholds(f, lo, hi))
     }
 
-    /// Functional model.
+    /// Build an MT unit realizing an [MT-representable](is_mt_representable)
+    /// GRAU register file bit-exactly (every `i32` input): the used
+    /// thresholds are loaded and the remaining `2^n - 1` registers padded
+    /// with the never-firing `i32::MAX`.  Returns `None` when `regs` is
+    /// outside the representable domain.
+    pub fn from_registers(regs: &GrauRegisters) -> Option<Self> {
+        if !is_mt_representable(regs) {
+            return None;
+        }
+        let n_th = (1usize << regs.n_bits) - 1;
+        let mut ths = vec![i32::MAX; n_th];
+        ths[..regs.n_segments - 1].copy_from_slice(&regs.thresholds[..regs.n_segments - 1]);
+        Some(MtUnit::new(regs.n_bits, ths))
+    }
+
+    /// Functional model.  `i32::MAX` threshold registers are the
+    /// "never fires" padding value (unreached levels, unused registers)
+    /// and are excluded even for `x == i32::MAX`.
     #[inline]
     pub fn eval(&self, x: i32) -> i32 {
         let (qmin, _) = qrange(self.n_bits);
-        qmin + self.thresholds.iter().filter(|&&t| x >= t).count() as i32
+        qmin + self
+            .thresholds
+            .iter()
+            .filter(|&&t| t != i32::MAX && x >= t)
+            .count() as i32
     }
 
     /// Pipelined depth (Table VI: 1/3/15/255).
@@ -136,6 +177,24 @@ mod tests {
             let mt = MtUnit::new(bits, vec![0; depth]);
             assert_eq!(mt.pipelined_depth(), depth);
         }
+    }
+
+    #[test]
+    fn from_registers_realizes_flat_step_files() {
+        let mut regs = GrauRegisters::new(2, 4, 0, 8);
+        regs.thresholds[..3].copy_from_slice(&[-10, 0, 10]);
+        regs.y0[..4].copy_from_slice(&[-2, -1, 0, 1]); // qmin + j
+        assert!(is_mt_representable(&regs));
+        let mt = MtUnit::from_registers(&regs).unwrap();
+        assert_eq!(mt.thresholds.len(), 3);
+        // i32::MAX included: the padding registers never fire, even there
+        for x in [i32::MIN, -100, -10, -1, 0, 9, 10, 100, i32::MAX] {
+            assert_eq!(mt.eval(x), regs.eval(x), "x={x}");
+        }
+        // a non-flat mask leaves the representable domain
+        regs.mask[1] = 0b1;
+        assert!(!is_mt_representable(&regs));
+        assert!(MtUnit::from_registers(&regs).is_none());
     }
 
     #[test]

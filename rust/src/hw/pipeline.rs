@@ -77,9 +77,13 @@ impl PipelinedGrau {
             .collect();
         // The 1/2-bit bypass (paper §III-2) is a *threshold-only* path:
         // it can only realise configurations whose segments are flat
-        // (all shift masks zero — MT-style step functions).  Fitted
-        // low-bit configs with non-zero slopes take the full pipeline.
+        // (all shift masks zero — MT-style step functions) AND whose
+        // threshold count fits the bypass's 2^n - 1 comparator stages.
+        // Fitted low-bit configs with non-zero slopes, or flat files
+        // with more segments than the precision can address, take the
+        // full pipeline (the truncated bypass would drop thresholds).
         let bypass = regs.n_bits <= 2
+            && regs.n_segments <= 1usize << regs.n_bits
             && regs.mask[..regs.n_segments].iter().all(|&m| m == 0);
         let depth = Self::depth_of(&regs, bypass);
         PipelinedGrau {

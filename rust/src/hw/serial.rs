@@ -43,8 +43,8 @@ impl SerialGrau {
 
         // sequential threshold compares (one comparator, reused)
         let mut seg = 0usize;
-        for i in 0..self.regs.n_segments - 1 {
-            if x >= self.regs.thresholds[i] {
+        for &t in &self.regs.thresholds[..self.regs.n_segments - 1] {
+            if x >= t {
                 seg += 1;
             }
             cycles += 1;

@@ -1,0 +1,512 @@
+//! The activation-unit trait layer — one execution abstraction over
+//! every activation datapath in the tree.
+//!
+//! The paper's point is that GRAU is *generic and reconfigurable*: one
+//! datapath serves ReLU/SiLU/mixed-precision streams where
+//! multi-threshold and LUT designs need per-function hardware.  The
+//! software mirror of that claim is [`ActivationUnit`]: a single trait
+//! implemented by the bit-exact reference model ([`GrauRegisters`]), the
+//! compiled plan ([`GrauPlan`]), both cycle-accurate GRAU simulators
+//! ([`PipelinedGrau`] / [`SerialGrau`]), and the two baseline designs
+//! ([`MtUnit`] / [`LutUnit`]).  The service worker loop, the QNN engine
+//! epilogues, and the fit scorer all dispatch through this layer, so a
+//! new backend (SIMD, remote, FPGA-bitstream cost model) plugs in by
+//! implementing the trait and registering a [`UnitKind`] — no L2/L3
+//! call-site changes.
+//!
+//! Two tiers:
+//!
+//! * [`ActivationUnit`] — the full mutable interface (`reconfigure`,
+//!   scalar/batch evaluation with [`CycleStats`], `cost_report`).  The
+//!   cycle-accurate simulators advance internal pipeline state per
+//!   element, so evaluation takes `&mut self`.
+//! * [`FunctionalUnit`] — the pure subset (`eval_ref` / `eval_batch_ref`
+//!   through `&self`) for units with no per-element hardware state.
+//!   These are the units the QNN engine can share across evaluation
+//!   threads (`Box<dyn FunctionalUnit + Send + Sync>`).
+//!
+//! The contract every implementation is held to (enforced by
+//! `rust/tests/unit_conformance.rs` over randomized register files):
+//! within the unit's representable domain, `eval` and `eval_batch` are
+//! **bit-for-bit identical** to [`GrauRegisters::eval`], batch and
+//! scalar evaluation agree, and `reconfigure` charges a non-zero cycle
+//! cost — at least the register-write floor [`reconfigure_cost`] for
+//! the GRAU-family units; the baselines charge their own register
+//! counts (one write per threshold / table entry).
+
+use crate::error::{bail, ensure, Result};
+use crate::fit::ApproxKind;
+use crate::hw::cost::{estimate, HwCost, UnitKind as CostKind};
+use crate::hw::lut_unit::LutUnit;
+use crate::hw::mt::{is_mt_representable, MtUnit};
+use crate::hw::pipeline::{CycleStats, PipelinedGrau};
+use crate::hw::serial::SerialGrau;
+use crate::hw::{GrauPlan, GrauRegisters};
+
+/// Cycle floor of a runtime reconfiguration: one register write per
+/// threshold (`S - 1`), one per segment setting word (`S`), plus the
+/// window/precision control pair — the same accounting the pipelined
+/// simulator uses for its write phase (its total adds a pipe flush).
+pub fn reconfigure_cost(regs: &GrauRegisters) -> u64 {
+    (regs.n_segments as u64 - 1) + regs.n_segments as u64 + 2
+}
+
+/// Cycle stats for a purely functional (non-cycle-modelled) evaluation.
+fn functional_stats(n: usize) -> CycleStats {
+    CycleStats {
+        cycles: 0,
+        outputs: n as u64,
+        first_latency: 0,
+    }
+}
+
+/// One activation unit behind the service/engine/fit dispatch.
+///
+/// Implementations must be bit-for-bit identical to
+/// [`GrauRegisters::eval`] on every register file inside their
+/// representable domain (see [`UnitKind::check`]).
+pub trait ActivationUnit {
+    /// Short stable identifier (`"registers"`, `"plan"`, `"pipelined"`,
+    /// `"serial"`, `"mt"`, `"lut"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Runtime reconfiguration: reload the unit from a register file
+    /// (paper §II-B "reload the value of thresholds and shifter
+    /// settings").  Returns the reconfiguration cost in cycles — at
+    /// least [`reconfigure_cost`] for the GRAU-family units; baselines
+    /// charge one write per threshold / table entry.
+    ///
+    /// Panics if `regs` is outside the unit's representable domain;
+    /// pre-check with [`UnitKind::check`] / [`UnitKind::supports`].
+    fn reconfigure(&mut self, regs: &GrauRegisters, kind: ApproxKind) -> u64;
+
+    /// Evaluate one input.
+    fn eval(&mut self, x: i32) -> i32;
+
+    /// Evaluate a stream into `out` (cleared first), returning the cycle
+    /// accounting (zero cycles for purely functional units).
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats;
+
+    /// Post-implementation hardware cost, when the Table VI cost model
+    /// covers this unit (`None` for software-only units).
+    fn cost_report(&self) -> Option<HwCost> {
+        None
+    }
+}
+
+/// The pure subset of [`ActivationUnit`]: units whose evaluation carries
+/// no per-element hardware state, so `&self` suffices and one instance
+/// can be shared across threads.  This is what the QNN engine stores per
+/// (site, channel).
+pub trait FunctionalUnit: ActivationUnit {
+    /// Evaluate one input through a shared reference.
+    fn eval_ref(&self, x: i32) -> i32;
+
+    /// Batch-evaluate into `out` (cleared first) through a shared
+    /// reference.
+    fn eval_batch_ref(&self, xs: &[i32], out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(xs.len());
+        out.extend(xs.iter().map(|&x| self.eval_ref(x)));
+    }
+}
+
+// --- GrauRegisters: the bit-exact reference semantics -----------------------
+
+impl ActivationUnit for GrauRegisters {
+    fn name(&self) -> &'static str {
+        "registers"
+    }
+    fn reconfigure(&mut self, regs: &GrauRegisters, _kind: ApproxKind) -> u64 {
+        *self = regs.clone();
+        reconfigure_cost(regs)
+    }
+    fn eval(&mut self, x: i32) -> i32 {
+        GrauRegisters::eval(self, x)
+    }
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats {
+        self.eval_batch_ref(xs, out);
+        functional_stats(xs.len())
+    }
+}
+
+impl FunctionalUnit for GrauRegisters {
+    fn eval_ref(&self, x: i32) -> i32 {
+        GrauRegisters::eval(self, x)
+    }
+}
+
+// --- GrauPlan: the compiled batched fast path --------------------------------
+
+impl ActivationUnit for GrauPlan {
+    fn name(&self) -> &'static str {
+        "plan"
+    }
+    fn reconfigure(&mut self, regs: &GrauRegisters, _kind: ApproxKind) -> u64 {
+        *self = GrauPlan::new(regs);
+        reconfigure_cost(regs)
+    }
+    fn eval(&mut self, x: i32) -> i32 {
+        GrauPlan::eval(self, x)
+    }
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats {
+        GrauPlan::eval_batch(self, xs, out);
+        functional_stats(xs.len())
+    }
+}
+
+impl FunctionalUnit for GrauPlan {
+    fn eval_ref(&self, x: i32) -> i32 {
+        GrauPlan::eval(self, x)
+    }
+    fn eval_batch_ref(&self, xs: &[i32], out: &mut Vec<i32>) {
+        GrauPlan::eval_batch(self, xs, out)
+    }
+}
+
+// --- PipelinedGrau: Figure 6, cycle-accurate ---------------------------------
+
+impl ActivationUnit for PipelinedGrau {
+    fn name(&self) -> &'static str {
+        "pipelined"
+    }
+    fn reconfigure(&mut self, regs: &GrauRegisters, kind: ApproxKind) -> u64 {
+        PipelinedGrau::reconfigure(self, regs.clone(), kind)
+    }
+    fn eval(&mut self, x: i32) -> i32 {
+        self.process_stream(&[x]).0[0]
+    }
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats {
+        let (ys, stats) = self.process_stream(xs);
+        *out = ys;
+        stats
+    }
+    fn cost_report(&self) -> Option<HwCost> {
+        Some(estimate(CostKind::GrauPipelined {
+            kind: self.kind,
+            segments: self.regs.n_segments as u32,
+            exponents: self.regs.n_shifts as u32,
+        }))
+    }
+}
+
+// --- SerialGrau: Figure 5, cycle-accurate ------------------------------------
+
+impl ActivationUnit for SerialGrau {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+    fn reconfigure(&mut self, regs: &GrauRegisters, kind: ApproxKind) -> u64 {
+        *self = SerialGrau::new(regs.clone(), kind);
+        reconfigure_cost(regs)
+    }
+    fn eval(&mut self, x: i32) -> i32 {
+        self.eval_counted(x).0
+    }
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats {
+        let (ys, stats) = self.process_stream(xs);
+        *out = ys;
+        stats
+    }
+    fn cost_report(&self) -> Option<HwCost> {
+        Some(estimate(CostKind::GrauSerial { kind: self.kind }))
+    }
+}
+
+// --- MtUnit: the multi-threshold baseline ------------------------------------
+
+impl ActivationUnit for MtUnit {
+    fn name(&self) -> &'static str {
+        "mt"
+    }
+    fn reconfigure(&mut self, regs: &GrauRegisters, _kind: ApproxKind) -> u64 {
+        let rebuilt = MtUnit::from_registers(regs).expect(
+            "MtUnit::reconfigure needs an MT-representable register file \
+             (flat masks, y0[j] = qmin + j) — pre-check with UnitKind::Mt",
+        );
+        let cost = rebuilt.thresholds.len() as u64;
+        *self = rebuilt;
+        cost
+    }
+    fn eval(&mut self, x: i32) -> i32 {
+        MtUnit::eval(self, x)
+    }
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats {
+        let (ys, stats) = self.process_stream_pipelined(xs);
+        *out = ys;
+        stats
+    }
+    fn cost_report(&self) -> Option<HwCost> {
+        Some(estimate(CostKind::MtPipelined {
+            n_bits: self.n_bits,
+        }))
+    }
+}
+
+impl FunctionalUnit for MtUnit {
+    fn eval_ref(&self, x: i32) -> i32 {
+        MtUnit::eval(self, x)
+    }
+}
+
+// --- LutUnit: the direct lookup-table baseline -------------------------------
+
+impl ActivationUnit for LutUnit {
+    fn name(&self) -> &'static str {
+        "lut"
+    }
+    fn reconfigure(&mut self, regs: &GrauRegisters, _kind: ApproxKind) -> u64 {
+        *self = LutUnit::from_registers(regs);
+        // one memory write per table entry — the exponential reconfig
+        // cost that rules direct LUTs out for runtime reconfiguration
+        self.table.len() as u64
+    }
+    fn eval(&mut self, x: i32) -> i32 {
+        LutUnit::eval(self, x)
+    }
+    fn eval_batch(&mut self, xs: &[i32], out: &mut Vec<i32>) -> CycleStats {
+        self.eval_batch_ref(xs, out);
+        CycleStats {
+            cycles: xs.len() as u64 + 1,
+            outputs: xs.len() as u64,
+            first_latency: 1,
+        }
+    }
+    fn cost_report(&self) -> Option<HwCost> {
+        Some(estimate(CostKind::DirectLut {
+            addr_bits: self.address_bits(),
+            n_bits: self.n_bits,
+        }))
+    }
+}
+
+impl FunctionalUnit for LutUnit {
+    fn eval_ref(&self, x: i32) -> i32 {
+        LutUnit::eval(self, x)
+    }
+}
+
+// --- the backend registry ----------------------------------------------------
+
+/// Every registered activation-unit backend.  (Distinct from
+/// [`crate::hw::cost::UnitKind`], which enumerates Table VI cost-model
+/// *instances*; this enum enumerates executable backends.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnitKind {
+    /// [`GrauRegisters`] — the scalar bit-exact reference semantics.
+    Reference,
+    /// [`GrauPlan`] — the compiled batched fast path (the service's
+    /// `Functional` backend).
+    Plan,
+    /// [`PipelinedGrau`] — Figure 6, cycle-accurate (the service's
+    /// `CycleSim` backend).
+    Pipelined,
+    /// [`SerialGrau`] — Figure 5, cycle-accurate.
+    Serial,
+    /// [`MtUnit`] — the multi-threshold baseline; representable domain
+    /// is flat step register files only (see [`is_mt_representable`]).
+    Mt,
+    /// [`LutUnit`] — direct lookup table, exact within its compiled
+    /// window (see [`LutUnit::from_registers`]).
+    Lut,
+}
+
+impl UnitKind {
+    /// Every registered backend, in dispatch-preference order.
+    pub const ALL: [UnitKind; 6] = [
+        UnitKind::Reference,
+        UnitKind::Plan,
+        UnitKind::Pipelined,
+        UnitKind::Serial,
+        UnitKind::Mt,
+        UnitKind::Lut,
+    ];
+
+    /// Stable name (matches [`ActivationUnit::name`] of the built unit).
+    pub fn name(self) -> &'static str {
+        match self {
+            UnitKind::Reference => "registers",
+            UnitKind::Plan => "plan",
+            UnitKind::Pipelined => "pipelined",
+            UnitKind::Serial => "serial",
+            UnitKind::Mt => "mt",
+            UnitKind::Lut => "lut",
+        }
+    }
+
+    /// Parse a backend name (the inverse of [`UnitKind::name`], plus a
+    /// few aliases).
+    pub fn parse(s: &str) -> Option<UnitKind> {
+        match s {
+            "registers" | "reference" => Some(UnitKind::Reference),
+            "plan" | "functional" => Some(UnitKind::Plan),
+            "pipelined" | "cyclesim" => Some(UnitKind::Pipelined),
+            "serial" | "serialized" => Some(UnitKind::Serial),
+            "mt" | "multi-threshold" => Some(UnitKind::Mt),
+            "lut" => Some(UnitKind::Lut),
+            _ => None,
+        }
+    }
+
+    /// Can this backend realize `regs` (under approximation family
+    /// `kind`) bit-exactly?  `Err` explains why not.
+    pub fn check(self, regs: &GrauRegisters, kind: ApproxKind) -> Result<()> {
+        match self {
+            UnitKind::Pipelined | UnitKind::Serial => {
+                ensure!(
+                    kind != ApproxKind::Pwlf,
+                    "cycle-accurate units need quantized (PoT/APoT) slopes, not float PWLF"
+                );
+                Ok(())
+            }
+            UnitKind::Mt => {
+                ensure!(
+                    is_mt_representable(regs),
+                    "multi-threshold unit needs a flat step register file \
+                     (all masks zero, y0[j] = qmin + j, at most 2^n segments)"
+                );
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Boolean convenience over [`UnitKind::check`].
+    pub fn supports(self, regs: &GrauRegisters, kind: ApproxKind) -> bool {
+        self.check(regs, kind).is_ok()
+    }
+}
+
+/// The backend registry factory: stream configuration → boxed unit.
+/// Fails (rather than panicking) when `regs`/`kind` are outside the
+/// backend's representable domain.
+pub fn build_unit(
+    kind: UnitKind,
+    regs: &GrauRegisters,
+    approx: ApproxKind,
+) -> Result<Box<dyn ActivationUnit>> {
+    kind.check(regs, approx)?;
+    Ok(match kind {
+        UnitKind::Reference => Box::new(regs.clone()),
+        UnitKind::Plan => Box::new(GrauPlan::new(regs)),
+        UnitKind::Pipelined => Box::new(PipelinedGrau::new(regs.clone(), approx)),
+        UnitKind::Serial => Box::new(SerialGrau::new(regs.clone(), approx)),
+        UnitKind::Mt => Box::new(MtUnit::from_registers(regs).expect("checked above")),
+        UnitKind::Lut => Box::new(LutUnit::from_registers(regs)),
+    })
+}
+
+/// The functional (thread-shareable) subset of the registry — what the
+/// QNN engine stores per (site, channel).  Cycle-accurate backends are
+/// rejected: their evaluation mutates pipeline state.
+pub fn build_functional_unit(
+    kind: UnitKind,
+    regs: &GrauRegisters,
+    approx: ApproxKind,
+) -> Result<Box<dyn FunctionalUnit + Send + Sync>> {
+    kind.check(regs, approx)?;
+    Ok(match kind {
+        UnitKind::Reference => Box::new(regs.clone()),
+        UnitKind::Plan => Box::new(GrauPlan::new(regs)),
+        UnitKind::Mt => Box::new(MtUnit::from_registers(regs).expect("checked above")),
+        UnitKind::Lut => Box::new(LutUnit::from_registers(regs)),
+        UnitKind::Pipelined | UnitKind::Serial => bail!(
+            "{} is cycle-accurate (stateful) — not available as a functional unit",
+            kind.name()
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_regs() -> GrauRegisters {
+        let mut r = GrauRegisters::new(8, 6, 3, 4);
+        r.thresholds[..5].copy_from_slice(&[-300, -50, 10, 200, 900]);
+        r.x0[..6].copy_from_slice(&[-1000, -300, -50, 10, 200, 900]);
+        r.y0[..6].copy_from_slice(&[-120, -90, -20, 0, 40, 100]);
+        r.sign[..6].copy_from_slice(&[1, -1, 1, 1, 1, -1]);
+        r.mask[..6].copy_from_slice(&[0b0001, 0b1010, 0b0110, 0b0011, 0b1000, 0b0101]);
+        r
+    }
+
+    #[test]
+    fn registry_names_roundtrip_and_are_unique() {
+        for kind in UnitKind::ALL {
+            assert_eq!(UnitKind::parse(kind.name()), Some(kind));
+        }
+        let mut names: Vec<&str> = UnitKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), UnitKind::ALL.len());
+        assert_eq!(UnitKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn built_units_report_their_kind_name() {
+        let regs = demo_regs();
+        for kind in [
+            UnitKind::Reference,
+            UnitKind::Plan,
+            UnitKind::Pipelined,
+            UnitKind::Serial,
+            UnitKind::Lut,
+        ] {
+            let unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
+            assert_eq!(unit.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn registry_rejects_out_of_domain_configs() {
+        let regs = demo_regs();
+        // non-flat register file is not MT-representable
+        assert!(build_unit(UnitKind::Mt, &regs, ApproxKind::Apot).is_err());
+        // float PWLF slopes have no cycle-accurate encoding
+        assert!(build_unit(UnitKind::Pipelined, &regs, ApproxKind::Pwlf).is_err());
+        assert!(build_unit(UnitKind::Serial, &regs, ApproxKind::Pwlf).is_err());
+        // cycle-accurate kinds are not functional units
+        assert!(build_functional_unit(UnitKind::Pipelined, &regs, ApproxKind::Apot).is_err());
+    }
+
+    #[test]
+    fn trait_dispatch_matches_reference_on_demo_file() {
+        let regs = demo_regs();
+        let mut out = Vec::new();
+        let xs: Vec<i32> = (-2000..2000).step_by(13).collect();
+        for kind in [
+            UnitKind::Reference,
+            UnitKind::Plan,
+            UnitKind::Pipelined,
+            UnitKind::Serial,
+        ] {
+            let mut unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
+            let stats = unit.eval_batch(&xs, &mut out);
+            assert_eq!(stats.outputs as usize, xs.len(), "{}", unit.name());
+            for (x, y) in xs.iter().zip(&out) {
+                assert_eq!(*y, regs.eval(*x), "{} x={x}", unit.name());
+            }
+        }
+    }
+
+    #[test]
+    fn cost_reports_cover_hardware_units_only() {
+        let regs = demo_regs();
+        let plan = build_unit(UnitKind::Plan, &regs, ApproxKind::Apot).unwrap();
+        assert!(plan.cost_report().is_none());
+        let reference = build_unit(UnitKind::Reference, &regs, ApproxKind::Apot).unwrap();
+        assert!(reference.cost_report().is_none());
+        for kind in [UnitKind::Pipelined, UnitKind::Serial, UnitKind::Lut] {
+            let unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
+            let cost = unit.cost_report().expect("hardware unit has a cost model");
+            assert!(cost.lut > 0 && cost.power_w > 0.0, "{}", unit.name());
+        }
+    }
+
+    #[test]
+    fn reconfigure_cost_floor_matches_service_accounting() {
+        let regs = demo_regs();
+        assert_eq!(reconfigure_cost(&regs), 5 + 6 + 2);
+    }
+}

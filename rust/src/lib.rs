@@ -23,9 +23,10 @@
 //!   right-shifter units (Figure 4), serialized and pipelined GRAU
 //!   (Figures 5/6), the Multi-Threshold baseline (FINN-R style), a direct
 //!   LUT unit, the Vivado-calibrated resource/power/timing cost model
-//!   behind Table VI, and *compiled evaluation plans* ([`hw::plan`]) —
-//!   the bit-exact batched fast path every software consumer streams
-//!   through (see `docs/ARCHITECTURE.md`).
+//!   behind Table VI, *compiled evaluation plans* ([`hw::plan`]) — the
+//!   bit-exact batched fast path — and the [`hw::unit`] trait layer +
+//!   backend registry that puts one execution abstraction over all of
+//!   the above (see `docs/ARCHITECTURE.md`).
 //! * [`qnn`] — the quantized-neural-network substrate: integer tensors,
 //!   quantized linear/conv/pool layers, BN folding, mixed-precision
 //!   configuration, and the paper's model zoo (SFC, CNV, VGG16, ResNet18).

@@ -143,7 +143,8 @@ fn run() -> Result<()> {
             let m = svc.shutdown();
             println!(
                 "served {} requests / {} elements in {:.3}s -> {:.2} Melem/s; \
-                 batches {} reconfigs {} (cycles {}), mean latency {:.0}µs max {}µs",
+                 batches {} reconfigs {} (cycles {}), latency mean {:.0}µs \
+                 p50 {}µs p99 {}µs max {}µs",
                 m.requests,
                 m.elements,
                 dt,
@@ -152,6 +153,8 @@ fn run() -> Result<()> {
                 m.reconfigs,
                 m.reconfig_cycles,
                 m.mean_latency_us(),
+                m.p50_latency_us(),
+                m.p99_latency_us(),
                 m.latency_us_max
             );
         }
@@ -177,9 +180,9 @@ fn run() -> Result<()> {
         "fig2" => {
             experiments::fig2::run(&Ctx::new(&artifacts_dir(&args))?)?;
         }
-        "help" | _ => {
-            if cmd != "help" {
-                bail!("unknown command {cmd:?} — run `grau help`");
+        other => {
+            if other != "help" {
+                bail!("unknown command {other:?} — run `grau help`");
             }
             println!("{}", HELP);
         }

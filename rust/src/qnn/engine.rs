@@ -1,13 +1,17 @@
 //! The integer inference engine: executes the exported QNN with int8-range
 //! operands / int32 MACs, applying the activation path through a pluggable
-//! backend — the component GRAU replaces in hardware.
+//! backend — the component GRAU replaces in hardware.  Quantized modes
+//! (`Grau`, `Mt`) dispatch every activation epilogue through
+//! `hw::unit::FunctionalUnit` trait objects built from the backend
+//! registry at engine construction.
 
 use crate::error::{bail, Result};
 
 use crate::act::{qrange, Activation, FoldedActivation};
-use crate::fit::Pwlf;
+use crate::fit::{ApproxKind, Pwlf};
 use crate::hw::mt::MtUnit;
-use crate::hw::{GrauPlan, GrauRegisters};
+use crate::hw::unit::{build_functional_unit, FunctionalUnit, UnitKind};
+use crate::hw::GrauRegisters;
 use crate::qnn::graph::{GraphOp, ModelGraph, OpKind};
 use crate::qnn::weights::ExportBundle;
 use crate::util::dataset::Dataset;
@@ -95,14 +99,16 @@ pub struct Engine {
     site_of_op: Vec<Option<usize>>,
     /// per-site channel counts
     site_channels: Vec<usize>,
-    /// private: `grau_plans` is derived from this at construction, so
+    /// private: `units` is derived from this at construction, so
     /// swapping the mode in place would desync them — build a new
     /// `Engine` instead (read access via [`Engine::act_mode`])
     act_mode: ActMode,
-    /// compiled evaluation plans mirroring `ActMode::Grau`
-    /// (`[site][channel]`, empty for the other modes) — built once at
-    /// engine construction, streamed through on every forward pass
-    grau_plans: Vec<Vec<GrauPlan>>,
+    /// `hw::unit` trait objects mirroring the activation mode
+    /// (`[site][channel]`; empty for the `Exact`/`Pwlf` float modes) —
+    /// built once at engine construction through the backend registry,
+    /// streamed through on every forward pass.  Functional (Sync) units
+    /// only, so evaluation threads can share the engine.
+    units: Vec<Vec<Box<dyn FunctionalUnit + Send + Sync>>>,
 }
 
 impl Engine {
@@ -184,13 +190,38 @@ impl Engine {
                 _ => graph.ops[oi].out_ch,
             };
         }
-        // compile Grau register files into evaluation plans up front:
-        // the plans carry the unrolled shift lists / segment tables the
-        // per-element hot loop would otherwise re-derive per MAC
-        let grau_plans = match &act_mode {
+        // build the per-(site, channel) activation units up front through
+        // the hw::unit registry: Grau register files compile into plans
+        // (unrolled shift lists / segment tables the per-element hot loop
+        // would otherwise re-derive per MAC), MT baselines into
+        // multi-threshold units; the forward pass dispatches through the
+        // FunctionalUnit trait either way
+        let units: Vec<Vec<Box<dyn FunctionalUnit + Send + Sync>>> = match &act_mode {
             ActMode::Grau(sites) => sites
                 .iter()
-                .map(|chans| chans.iter().map(GrauPlan::new).collect())
+                .map(|chans| {
+                    chans
+                        .iter()
+                        .map(|r| {
+                            // the plan backend ignores the approximation
+                            // family (the masks already encode it)
+                            build_functional_unit(UnitKind::Plan, r, ApproxKind::Apot)
+                                .expect("plan units accept every register file")
+                        })
+                        .collect()
+                })
+                .collect(),
+            ActMode::Mt(sites) => sites
+                .iter()
+                .map(|chans| {
+                    chans
+                        .iter()
+                        .map(|m| {
+                            Box::new(MtUnit::new(m.n_bits, m.thresholds.clone()))
+                                as Box<dyn FunctionalUnit + Send + Sync>
+                        })
+                        .collect()
+                })
                 .collect(),
             _ => Vec::new(),
         };
@@ -201,7 +232,7 @@ impl Engine {
             site_of_op,
             site_channels,
             act_mode,
-            grau_plans,
+            units,
         })
     }
 
@@ -252,34 +283,33 @@ impl Engine {
         match &self.act_mode {
             ActMode::Exact => f.eval(mac as i64),
             ActMode::Pwlf(v) => v[site][ch].eval(mac as i64),
-            ActMode::Grau(_) => self.grau_plans[site][ch].eval(mac),
-            ActMode::Mt(v) => v[site][ch].eval(mac),
+            ActMode::Grau(_) | ActMode::Mt(_) => self.units[site][ch].eval_ref(mac),
         }
     }
 
-    /// Batched Grau activation over a position-major `[pos][channel]`
+    /// Batched unit activation over a position-major `[pos][channel]`
     /// MAC block: gathers each channel's stride into a contiguous buffer,
-    /// streams it through that channel's compiled plan, and scatters the
-    /// outputs back.  Bit-exact with the per-element path.
-    fn grau_batch(&self, site: usize, mac: &[i32], chans: usize) -> Vec<i32> {
-        let plans = &self.grau_plans[site];
-        debug_assert_eq!(plans.len(), chans);
+    /// streams it through that channel's activation unit, and scatters
+    /// the outputs back.  Bit-exact with the per-element path.
+    fn unit_batch(&self, site: usize, mac: &[i32], chans: usize) -> Vec<i32> {
+        let units = &self.units[site];
+        debug_assert_eq!(units.len(), chans);
         let positions = mac.len() / chans;
         if positions <= 1 {
             // vector layers (one position): no stride to batch over
             return mac
                 .iter()
                 .enumerate()
-                .map(|(ch, &m)| plans[ch].eval(m))
+                .map(|(ch, &m)| units[ch].eval_ref(m))
                 .collect();
         }
         let mut out = vec![0i32; mac.len()];
         let mut xs: Vec<i32> = Vec::with_capacity(positions);
         let mut ys: Vec<i32> = Vec::new();
-        for (ch, plan) in plans.iter().enumerate() {
+        for (ch, unit) in units.iter().enumerate() {
             xs.clear();
             xs.extend(mac.iter().skip(ch).step_by(chans).copied());
-            plan.eval_batch(&xs, &mut ys);
+            unit.eval_batch_ref(&xs, &mut ys);
             for (p, &y) in ys.iter().enumerate() {
                 out[p * chans + ch] = y;
             }
@@ -387,8 +417,8 @@ impl Engine {
                     }
                     match site {
                         Some(s) => {
-                            if let ActMode::Grau(_) = &self.act_mode {
-                                self.grau_batch(s, &q, chans)
+                            if !self.units.is_empty() {
+                                self.unit_batch(s, &q, chans)
                             } else {
                                 q.iter()
                                     .enumerate()
@@ -431,9 +461,11 @@ impl Engine {
                 rg.update(site, i % chans, m);
             }
         }
-        if let ActMode::Grau(_) = &self.act_mode {
-            // compiled-plan fast path: per-channel batched evaluation
-            return self.grau_batch(site, mac, chans);
+        if !self.units.is_empty() {
+            // trait-object fast path: per-channel batched evaluation
+            // through the hw::unit layer (compiled plans in Grau mode,
+            // multi-threshold units in Mt mode)
+            return self.unit_batch(site, mac, chans);
         }
         let act = if op.a_bits == 1 {
             Activation::Identity
@@ -660,6 +692,26 @@ mod tests {
         // relu fold is piecewise linear -> APoT16 at 8 segments is near-exact
         for (a, b) in le.iter().zip(&lg) {
             assert!((a - b).abs() < 0.06, "{le:?} vs {lg:?}");
+        }
+    }
+
+    #[test]
+    fn mt_mode_dispatches_through_unit_trait() {
+        // the MT baseline rides the same hw::unit epilogue path as Grau;
+        // on a monotone (relu) site it tracks the exact engine closely
+        let (g, b) = tiny();
+        let exact = Engine::new(g.clone(), &b, ActMode::Exact).unwrap();
+        let mut chans = Vec::new();
+        for ch in 0..3 {
+            let f = exact.folded(0, ch);
+            chans.push(MtUnit::from_folded(&f, -200, 200));
+        }
+        let mt = Engine::new(g, &b, ActMode::Mt(vec![chans])).unwrap();
+        let x = [1.0f32, -0.5, 0.25, 2.0];
+        let le = exact.forward_sample(&x, None);
+        let lm = mt.forward_sample(&x, None);
+        for (a, b) in le.iter().zip(&lm) {
+            assert!((a - b).abs() < 0.1, "{le:?} vs {lm:?}");
         }
     }
 

@@ -69,8 +69,8 @@ fn random_regs_spanned(rng: &mut Rng, th_lo: i64, th_hi: i64) -> GrauRegisters {
 /// Re-implementation of the python scalar spec (big-int semantics).
 fn spec_eval(r: &GrauRegisters, x: i32) -> i32 {
     let mut seg = 0usize;
-    for i in 0..r.n_segments - 1 {
-        if x >= r.thresholds[i] {
+    for &t in &r.thresholds[..r.n_segments - 1] {
+        if x >= t {
             seg += 1;
         }
     }
@@ -122,8 +122,7 @@ fn prop_plan_matches_registers_bit_for_bit() {
             .collect();
         xs.extend((0..48).map(|_| rng.range_i64(lo, hi) as i32));
         // threshold neighbourhoods: the exact boundary and both sides
-        for i in 0..r.n_segments - 1 {
-            let t = r.thresholds[i];
+        for &t in &r.thresholds[..r.n_segments - 1] {
             xs.extend([t.saturating_sub(1), t, t.saturating_add(1)]);
         }
         let batch = plan.eval_vec(&xs);

@@ -5,6 +5,7 @@ use grau::act::{Activation, FoldedActivation};
 use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
 use grau::fit::pipeline::{fit_folded, FitOptions};
 use grau::fit::ApproxKind;
+use grau::hw::unit::UnitKind;
 use grau::hw::GrauRegisters;
 use grau::util::rng::Rng;
 
@@ -77,6 +78,77 @@ fn metrics_conserved_under_load() {
     assert_eq!(m.elements, 1000);
     assert!(m.batches <= m.requests);
     assert!(m.mean_latency_us() <= m.latency_us_max as f64);
+}
+
+#[test]
+fn shared_queue_shutdown_answers_all_in_flight() {
+    // affinity: false — all workers contend on one queue.  Shutting
+    // down with requests still in flight must drain the queue: every
+    // request gets a successful response and the counters reconcile
+    // (requests submitted == responses accounted).
+    let svc = ActivationService::start(ServiceConfig {
+        workers: 3,
+        affinity: false,
+        ..Default::default()
+    });
+    let regs = fitted(Activation::Sigmoid, false);
+    svc.register(0, regs.clone(), ApproxKind::Apot);
+    let data: Vec<i32> = (-40..40).collect();
+    let mut pending = Vec::new();
+    for _ in 0..300 {
+        pending.push(svc.submit(0, data.clone()));
+    }
+    // no recv before shutdown: the workers drain the backlog while the
+    // service joins them
+    let m = svc.shutdown();
+    let mut answered = 0u64;
+    for rx in &pending {
+        let resp = rx.recv().expect("in-flight request answered during shutdown");
+        assert!(resp.error.is_none());
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x));
+        }
+        answered += 1;
+    }
+    assert_eq!(answered, 300);
+    assert_eq!(m.requests, 300, "every submitted request is accounted");
+    assert_eq!(m.elements, 300 * data.len() as u64);
+    assert_eq!(m.latency_buckets.iter().sum::<u64>(), m.requests);
+}
+
+#[test]
+fn mixed_backends_share_one_worker_bank_under_load() {
+    // one Functional-default service; stream 2 is pinned to the
+    // cycle-accurate simulator and stream 3 to the serialized one —
+    // all three streams must stay bit-exact and the pinned streams
+    // must account simulated cycles
+    let svc = ActivationService::start(ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    });
+    let acts = [Activation::Relu, Activation::Sigmoid, Activation::Silu];
+    let regs: Vec<GrauRegisters> = acts.iter().map(|&a| fitted(a, false)).collect();
+    svc.register(1, regs[0].clone(), ApproxKind::Apot);
+    svc.register_unit(2, regs[1].clone(), ApproxKind::Apot, UnitKind::Pipelined);
+    svc.register_unit(3, regs[2].clone(), ApproxKind::Apot, UnitKind::Serial);
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    for i in 0..45 {
+        let sid = 1 + (i % 3) as u64;
+        let data: Vec<i32> = (0..200).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
+        pending.push((sid, data.clone(), svc.submit(sid, data)));
+    }
+    for (sid, data, rx) in pending {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "stream {sid}: {:?}", resp.error);
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs[(sid - 1) as usize].eval(*x), "stream {sid}");
+        }
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 45);
+    // the two cycle-accurate streams ran 15 requests x 200 elements each
+    assert!(m.sim_cycles >= 2 * 15 * 200, "sim cycles {}", m.sim_cycles);
 }
 
 #[test]

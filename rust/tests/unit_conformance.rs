@@ -1,0 +1,242 @@
+//! Conformance harness for the `hw::unit` trait layer: every registered
+//! backend is driven over randomized register files and held to the
+//! shared contract — bit-for-bit parity with `GrauRegisters::eval`
+//! inside its representable domain, batch/scalar agreement, and
+//! reconfigure-cycle accounting no lower than the register-write floor.
+//!
+//! Domains: the four GRAU execution backends (reference registers,
+//! compiled plan, pipelined and serialized cycle simulators) must match
+//! on *arbitrary* register files over the full `i32` input range; the MT
+//! baseline only on flat step files (its structural limitation — paper
+//! Figure 1); the direct LUT only inside its compiled window (its §I-B
+//! limitation).
+
+use grau::act::qrange;
+use grau::fit::ApproxKind;
+use grau::hw::lut_unit::LutUnit;
+use grau::hw::unit::{build_unit, reconfigure_cost, UnitKind};
+use grau::hw::{GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use grau::util::rng::Rng;
+
+/// The four backends whose representable domain is every register file.
+const GRAU_KINDS: [UnitKind; 4] = [
+    UnitKind::Reference,
+    UnitKind::Plan,
+    UnitKind::Pipelined,
+    UnitKind::Serial,
+];
+
+/// Randomized register file: 1/2/4/6/8-bit, 1–8 segments, 4/8/16-shift
+/// windows, thresholds drawn from `[th_lo, th_hi)` (narrow spans
+/// exercise the plan's dense table, wide spans its search fallback).
+fn random_regs(rng: &mut Rng, th_lo: i64, th_hi: i64) -> GrauRegisters {
+    let n_bits = [1u8, 2, 4, 6, 8][rng.range_usize(0, 5)];
+    let segs = rng.range_usize(1, MAX_SEGMENTS + 1);
+    let n_shifts = [4u8, 8, 16][rng.range_usize(0, 3)];
+    let shift_lo = rng.range_i64(0, 8) as u8;
+    let mut r = GrauRegisters::new(n_bits, segs, shift_lo, n_shifts);
+    let mut ths: Vec<i32> = (0..segs - 1)
+        .map(|_| rng.range_i64(th_lo, th_hi) as i32)
+        .collect();
+    ths.sort_unstable();
+    ths.dedup();
+    while ths.len() < segs - 1 {
+        ths.push(*ths.last().unwrap_or(&0) + 1 + ths.len() as i32);
+    }
+    ths.sort_unstable();
+    r.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
+    r.thresholds[..segs - 1].copy_from_slice(&ths[..segs - 1]);
+    let (qmin, qmax) = qrange(n_bits);
+    for j in 0..segs {
+        r.x0[j] = rng.range_i64(-50_000, 50_000) as i32;
+        r.y0[j] = rng.range_i64(qmin as i64, qmax as i64 + 1) as i32;
+        r.sign[j] = if rng.uniform() < 0.5 { 1 } else { -1 };
+        r.mask[j] = (rng.next_u64() as u32) & ((1u32 << n_shifts) - 1);
+    }
+    r
+}
+
+/// Randomized register file inside the MT unit's representable domain:
+/// flat segments, consecutive step levels `y0[j] = qmin + j`, and at
+/// most `2^n` segments.
+fn random_mt_regs(rng: &mut Rng) -> GrauRegisters {
+    let n_bits = [1u8, 2, 4, 6, 8][rng.range_usize(0, 5)];
+    let max_segs = MAX_SEGMENTS.min(1usize << n_bits);
+    let segs = rng.range_usize(1, max_segs + 1);
+    let mut r = random_regs(rng, -20_000, 20_000);
+    // rebuild on the MT-constrained shape, keeping the threshold style
+    let mut mt = GrauRegisters::new(n_bits, segs, r.shift_lo, r.n_shifts);
+    mt.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
+    let mut ths: Vec<i32> = (0..segs - 1)
+        .map(|_| rng.range_i64(-20_000, 20_000) as i32)
+        .collect();
+    ths.sort_unstable();
+    ths.dedup();
+    while ths.len() < segs - 1 {
+        ths.push(*ths.last().unwrap_or(&0) + 1 + ths.len() as i32);
+    }
+    ths.sort_unstable();
+    mt.thresholds[..segs - 1].copy_from_slice(&ths[..segs - 1]);
+    let (qmin, _) = qrange(n_bits);
+    for j in 0..segs {
+        mt.x0[j] = r.x0[j];
+        mt.y0[j] = qmin + j as i32;
+        mt.sign[j] = 1;
+        mt.mask[j] = 0;
+    }
+    mt
+}
+
+/// Probe inputs: random draws from `[lo, hi)` plus every threshold
+/// boundary and both neighbours.
+fn probe_inputs(rng: &mut Rng, regs: &GrauRegisters, lo: i64, hi: i64) -> Vec<i32> {
+    let mut xs: Vec<i32> = (0..48).map(|_| rng.range_i64(lo, hi) as i32).collect();
+    for &t in &regs.thresholds[..regs.n_segments - 1] {
+        xs.extend([t.saturating_sub(1), t, t.saturating_add(1)]);
+    }
+    xs
+}
+
+#[test]
+fn conformance_grau_backends_bit_exact_on_random_files() {
+    let mut rng = Rng::new(0x6e17_c0de);
+    let mut out = Vec::new();
+    for case in 0..120 {
+        // alternate wide threshold spans (plan search fallback) and
+        // narrow spans (dense segment-index table)
+        let (lo, hi) = if case % 2 == 0 {
+            (-50_000i64, 50_000i64)
+        } else {
+            (-120i64, 120i64)
+        };
+        let regs = random_regs(&mut rng, lo, hi);
+        let mut xs = probe_inputs(&mut rng, &regs, i32::MIN as i64, i32::MAX as i64 + 1);
+        xs.extend((0..24).map(|_| rng.range_i64(lo, hi) as i32));
+        for kind in GRAU_KINDS {
+            assert!(kind.supports(&regs, ApproxKind::Apot), "{}", kind.name());
+            let mut unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
+            let stats = unit.eval_batch(&xs, &mut out);
+            assert_eq!(stats.outputs as usize, xs.len(), "{} case {case}", unit.name());
+            assert_eq!(out.len(), xs.len(), "{} case {case}", unit.name());
+            for (i, &x) in xs.iter().enumerate() {
+                let want = regs.eval(x);
+                assert_eq!(out[i], want, "{} batch x={x} case={case}", unit.name());
+                assert_eq!(unit.eval(x), want, "{} scalar x={x} case={case}", unit.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn conformance_cycle_accounting() {
+    let mut rng = Rng::new(0xacc0);
+    let mut out = Vec::new();
+    for _ in 0..20 {
+        let regs = random_regs(&mut rng, -500, 500);
+        let xs: Vec<i32> = (0..100).map(|_| rng.range_i64(-2000, 2000) as i32).collect();
+        // functional backends account outputs but no simulated cycles
+        for kind in [UnitKind::Reference, UnitKind::Plan] {
+            let mut unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
+            let stats = unit.eval_batch(&xs, &mut out);
+            assert_eq!(stats.cycles, 0, "{}", unit.name());
+            assert_eq!(stats.outputs, 100);
+        }
+        // cycle simulators charge at least one cycle per element
+        for kind in [UnitKind::Pipelined, UnitKind::Serial] {
+            let mut unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
+            let stats = unit.eval_batch(&xs, &mut out);
+            assert!(stats.cycles >= 100, "{}: {}", unit.name(), stats.cycles);
+            assert_eq!(stats.outputs, 100);
+            assert!(stats.first_latency >= 1, "{}", unit.name());
+        }
+    }
+}
+
+#[test]
+fn conformance_reconfigure_swaps_state_and_counts_cycles() {
+    let mut rng = Rng::new(0x5eed);
+    for case in 0..30 {
+        let a = random_regs(&mut rng, -400, 400);
+        let b = random_regs(&mut rng, -30_000, 30_000);
+        let xs = probe_inputs(&mut rng, &b, -60_000, 60_000);
+        for kind in GRAU_KINDS {
+            let mut unit = build_unit(kind, &a, ApproxKind::Apot).unwrap();
+            let cost = unit.reconfigure(&b, ApproxKind::Apot);
+            assert!(
+                cost >= reconfigure_cost(&b),
+                "{} case {case}: cost {cost} below the register-write floor",
+                unit.name()
+            );
+            for &x in &xs {
+                assert_eq!(unit.eval(x), b.eval(x), "{} x={x} case={case}", unit.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn conformance_mt_bit_exact_on_flat_step_files() {
+    let mut rng = Rng::new(0x3717);
+    let mut out = Vec::new();
+    for case in 0..60 {
+        let regs = random_mt_regs(&mut rng);
+        assert!(UnitKind::Mt.supports(&regs, ApproxKind::Apot), "case {case}");
+        let mut unit = build_unit(UnitKind::Mt, &regs, ApproxKind::Apot).unwrap();
+        // full i32 range including i32::MAX: the padded threshold
+        // registers are never-fires even there
+        let mut xs = probe_inputs(&mut rng, &regs, i32::MIN as i64, i32::MAX as i64 + 1);
+        xs.push(i32::MAX);
+        xs.push(i32::MIN);
+        let stats = unit.eval_batch(&xs, &mut out);
+        assert_eq!(stats.outputs as usize, xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            let want = regs.eval(x);
+            assert_eq!(out[i], want, "mt batch x={x} case={case}");
+            assert_eq!(unit.eval(x), want, "mt scalar x={x} case={case}");
+        }
+        // reconfiguration onto a second representable file
+        let next = random_mt_regs(&mut rng);
+        let cost = unit.reconfigure(&next, ApproxKind::Apot);
+        assert!(cost >= 1, "one write per threshold register");
+        for x in [-25_000, -1, 0, 1, 25_000] {
+            assert_eq!(unit.eval(x), next.eval(x), "post-reconfig x={x}");
+        }
+    }
+}
+
+#[test]
+fn conformance_lut_bit_exact_within_window() {
+    let mut rng = Rng::new(0x107a);
+    let mut out = Vec::new();
+    for case in 0..40 {
+        let regs = random_regs(&mut rng, -2_000, 2_000);
+        let (wlo, whi) = LutUnit::from_registers(&regs).window();
+        let mut unit = build_unit(UnitKind::Lut, &regs, ApproxKind::Apot).unwrap();
+        let xs = probe_inputs(&mut rng, &regs, wlo, whi + 1);
+        let stats = unit.eval_batch(&xs, &mut out);
+        assert_eq!(stats.outputs as usize, xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            let want = regs.eval(x);
+            assert_eq!(out[i], want, "lut batch x={x} case={case}");
+            assert_eq!(unit.eval(x), want, "lut scalar x={x} case={case}");
+        }
+    }
+}
+
+#[test]
+fn registry_rejects_out_of_domain_streams() {
+    let mut rng = Rng::new(0xbad);
+    // a register file with a live slope is not MT-representable
+    let mut regs = random_regs(&mut rng, -100, 100);
+    regs.mask[0] |= 1;
+    assert!(!UnitKind::Mt.supports(&regs, ApproxKind::Apot));
+    assert!(build_unit(UnitKind::Mt, &regs, ApproxKind::Apot).is_err());
+    // float PWLF slopes have no cycle-accurate realization
+    for kind in [UnitKind::Pipelined, UnitKind::Serial] {
+        assert!(build_unit(kind, &regs, ApproxKind::Pwlf).is_err());
+    }
+    // but the functional backends accept both
+    for kind in [UnitKind::Reference, UnitKind::Plan, UnitKind::Lut] {
+        assert!(build_unit(kind, &regs, ApproxKind::Pwlf).is_ok());
+    }
+}
