@@ -34,6 +34,19 @@ else
     printf 'ci.sh: WARNING: clippy not installed in this toolchain; step skipped\n'
 fi
 
+# Tiny-shape bench smoke: the harness = false bench targets are built by
+# the release step above, but only running one proves they still start,
+# bit-exactness assertions hold, and BENCH_qnn.json is written.
+# GRAU_BENCH_SMOKE restricts perf_hot_paths to the tiny QNN forward
+# block (seconds, not minutes).  Gated like the clippy step: skipped
+# with a warning if this cargo cannot run benches.
+step "bench smoke (GRAU_BENCH_SMOKE=1 cargo bench --bench perf_hot_paths)"
+if cargo bench --help >/dev/null 2>&1; then
+    GRAU_BENCH_SMOKE=1 cargo bench --bench perf_hot_paths
+else
+    printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
+fi
+
 if [ "${1:-}" != "fast" ]; then
     step "cargo doc --no-deps (rustdoc warnings are errors)"
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -3,10 +3,22 @@
 //! Covers every layer the optimization pass touches:
 //!   L3 service  — end-to-end activation service throughput (functional
 //!                 and cycle-sim backends, single + multi worker);
-//!   engine      — integer conv/linear MAC throughput;
+//!   engine      — integer conv/linear MAC throughput, plus the
+//!                 end-to-end QNN forward pass: the seed's position-major
+//!                 per-sample path vs the channel-major scratch-arena
+//!                 pipeline (bit-exactness asserted on the workload);
 //!   fitting     — greedy Algorithm 1 vs the LSQ (pwlf-substitute)
 //!                 fitter, the paper's "4 minutes per fit -> fast" claim;
 //!   ablations   — APoT vs PoT at equal budget, segments vs exponents.
+//!
+//! Machine-readable output: the QNN rows are also written to
+//! `BENCH_qnn.json` (`[{bench, ns_per_elem, speedup}, ...]`) so
+//! CHANGES.md bench deltas can be recorded mechanically — see
+//! docs/EXPERIMENTS.md §Perf for the convention.
+//!
+//! `GRAU_BENCH_SMOKE=1` runs only the QNN forward block on tiny shapes
+//! with short timings — the CI smoke gate (`ci.sh`) that keeps the
+//! `harness = false` bench targets from rotting.
 
 use grau::act::{Activation, FoldedActivation};
 use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
@@ -18,11 +30,22 @@ use grau::hw::lut_unit::LutUnit;
 use grau::hw::unit::{build_unit, UnitKind};
 use grau::hw::GrauPlan;
 use grau::qnn::engine::conv2d_i32;
+use grau::qnn::tensor::{conv2d_cm, repack_conv_weights, to_channel_major, to_position_major};
+use grau::qnn::{ActMode, Engine};
 use grau::util::bench::{bench_header, Bencher};
+use grau::util::dataset::teacher_images;
+use grau::util::json::{arr, num, obj, s as jstr, Json};
 use grau::util::rng::Rng;
 
 fn main() {
+    let smoke = std::env::var_os("GRAU_BENCH_SMOKE").is_some();
     bench_header("perf_hot_paths", "EXPERIMENTS.md §Perf — per-layer hot paths");
+    if smoke {
+        println!("(GRAU_BENCH_SMOKE set: tiny-shape QNN forward smoke only)");
+        let rows = qnn_forward_block(true);
+        write_bench_json(&rows);
+        return;
+    }
 
     let f = FoldedActivation::new(0.004, 0.05, Activation::Silu, 1.0 / 120.0, 8);
     let samples = f.sample(-2000, 2000, 1000);
@@ -45,6 +68,10 @@ fn main() {
     Bencher::new("conv2d_i32 32x32x16 -> 32ch k3 (MACs/s)")
         .elements(macs)
         .run(|| conv2d_i32(&src, &[32, 32, 16], &w, &[3, 3, 16, 32], 1));
+
+    // --- QNN forward: naive position-major vs channel-major pipeline ------
+    let qnn_rows = qnn_forward_block(false);
+    write_bench_json(&qnn_rows);
 
     // --- activation eval: scalar registers vs compiled plan vs LUT --------
     // The 8-bit service workload: one APoT-fitted register file, inputs
@@ -209,5 +236,150 @@ fn main() {
     }
 }
 
-// appended: DSE + service-affinity ablations are invoked from main() via
-// the helper below (kept separate to keep main() readable).
+/// One machine-readable bench row: (name, ns per element, speedup of the
+/// channel-major path over the naive position-major one).
+type BenchRow = (String, f64, f64);
+
+/// End-to-end QNN forward comparison on a synthetic residual conv net
+/// (conv → conv → add → maxpool → strided conv → flatten → head) with
+/// GRAU plan units at every activation site: the seed's per-sample
+/// position-major path vs the channel-major scratch-arena pipeline.
+/// Asserts bit-exact logits and identical recorded MAC ranges between
+/// the two paths on the bench workload itself.
+fn qnn_forward_block(smoke: bool) -> Vec<BenchRow> {
+    let (s, c0, c1, c2) = if smoke { (8usize, 4usize, 8usize, 16usize) } else { (16, 8, 16, 32) };
+    let (samples_n, mt) = if smoke { (3usize, 20u64) } else { (10, 300) };
+    // smoke rows are tagged so tiny-shape CI numbers can never be
+    // mistaken for recordable full-run results in BENCH_qnn.json
+    let tag = if smoke { "smoke_" } else { "" };
+    // same factory the qnn_parity tests build their graphs from
+    let (graph, bundle) = grau::qnn::synth::residual_qnn(s, c0, c1, c2, 20_260_727);
+    let mut rng = Rng::new(20_260_727);
+
+    // GRAU plan units at every site: fit channel 0's folded activation
+    // over the calibrated MAC range, clone the register file across the
+    // site's channels (throughput-representative; bit-exactness between
+    // the two engine paths holds for any unit bank)
+    let exact = Engine::new(graph.clone(), &bundle, ActMode::Exact).unwrap();
+    let data = teacher_images(if smoke { 8 } else { 32 }, s, c0, 10, 42);
+    let ranges = exact.calibrate(&data, 4);
+    let mut site_regs = Vec::new();
+    for (si, &chs) in exact.site_channels().iter().enumerate() {
+        let f = exact.folded(si, 0);
+        let (mut lo, mut hi) = (i64::MAX, i64::MIN);
+        for &(a, b) in &ranges.ranges[si] {
+            lo = lo.min(a as i64);
+            hi = hi.max(b as i64);
+        }
+        let regs = fit_folded(&f, lo.min(-100), hi.max(100), FitOptions::default()).apot.regs;
+        site_regs.push(vec![regs; chs]);
+    }
+    let eng = Engine::new(graph, &bundle, ActMode::Grau(site_regs)).unwrap();
+
+    let n_eval = if smoke { 4 } else { 16 };
+    let head = eng.graph.n_classes;
+    println!(
+        "\nperf: QNN forward ({s}x{s}x{c0} residual conv net, GRAU units) — naive vs channel-major"
+    );
+    let rep_naive = Bencher::new("qnn forward naive (per-sample, position-major)")
+        .elements(n_eval as u64)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| {
+            let mut acc = 0f32;
+            for i in 0..n_eval {
+                acc += eng.forward_sample_naive(data.sample(i), None)[0];
+            }
+            acc
+        });
+    let rep_cm = Bencher::new("qnn forward channel-major (forward_batch, 1 thread)")
+        .elements(n_eval as u64)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| eng.forward_batch(&data, n_eval, 1)[0]);
+    let fwd_speedup = rep_naive.mean_ns / rep_cm.mean_ns;
+    println!(
+        "  channel-major speedup over naive: {fwd_speedup:.2}x  ({:.0} ns/sample vs {:.0} ns/sample)",
+        rep_naive.mean_ns / n_eval as f64,
+        rep_cm.mean_ns / n_eval as f64
+    );
+
+    // bit-exactness on the bench workload itself: logits to the bit,
+    // and MAC ranges recorded through the two layouts must be identical
+    let batch = eng.forward_batch(&data, n_eval, 2);
+    for i in 0..n_eval {
+        let naive = eng.forward_sample_naive(data.sample(i), None);
+        assert_eq!(
+            &batch[i * head..(i + 1) * head],
+            &naive[..],
+            "logits diverge at sample {i}"
+        );
+    }
+    let n_ranges = n_eval.min(4);
+    let mut r_naive = eng.empty_ranges();
+    for i in 0..n_ranges {
+        eng.forward_sample_naive(data.sample(i), Some(&mut r_naive));
+    }
+    let r_cm = eng.calibrate(&data, n_ranges);
+    assert_eq!(r_naive.ranges, r_cm.ranges, "recorded MAC ranges diverge");
+
+    // the conv kernel in isolation: naive vs interior/border split
+    let (kh, kcin, kcout) = if smoke { (8usize, 4usize, 8usize) } else { (32, 16, 32) };
+    let src_pm: Vec<i32> =
+        (0..kh * kh * kcin).map(|_| rng.range_i64(-128, 128) as i32).collect();
+    let wt: Vec<i32> =
+        (0..3 * 3 * kcin * kcout).map(|_| rng.range_i64(-128, 128) as i32).collect();
+    let in_shape = [kh, kh, kcin];
+    let w_shape = [3, 3, kcin, kcout];
+    let macs = (kh * kh * kcout) as u64 * (3 * 3 * kcin) as u64;
+    let rep_conv_naive = Bencher::new(&format!("conv2d_i32 naive {kh}x{kh}x{kcin} -> {kcout}ch k3"))
+        .elements(macs)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| conv2d_i32(&src_pm, &in_shape, &wt, &w_shape, 1));
+    let mut src_cm = vec![0i32; src_pm.len()];
+    to_channel_major(&src_pm, kh * kh, kcin, &mut src_cm);
+    let w_cm = repack_conv_weights(&wt, &w_shape);
+    let mut out_cm = vec![0i32; kh * kh * kcout];
+    let rep_conv_cm = Bencher::new(&format!("conv2d_cm split {kh}x{kh}x{kcin} -> {kcout}ch k3"))
+        .elements(macs)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| {
+            conv2d_cm(&src_cm, &in_shape, &w_cm, &w_shape, 1, &mut out_cm);
+            out_cm[0]
+        });
+    let conv_speedup = rep_conv_naive.mean_ns / rep_conv_cm.mean_ns;
+    println!("  conv2d channel-major speedup over naive: {conv_speedup:.2}x");
+    let want = conv2d_i32(&src_pm, &in_shape, &wt, &w_shape, 1);
+    conv2d_cm(&src_cm, &in_shape, &w_cm, &w_shape, 1, &mut out_cm);
+    let mut got = vec![0i32; want.len()];
+    to_position_major(&out_cm, kh * kh, kcout, &mut got);
+    assert_eq!(got, want, "conv kernels diverge");
+
+    vec![
+        (format!("{tag}qnn_forward"), rep_cm.mean_ns / n_eval as f64, fwd_speedup),
+        (
+            format!("{tag}conv2d_k3_{kh}x{kh}x{kcin}_to_{kcout}"),
+            rep_conv_cm.mean_ns / macs as f64,
+            conv_speedup,
+        ),
+    ]
+}
+
+/// Write the machine-readable QNN rows next to the printed table —
+/// `BENCH_qnn.json` is the file CHANGES.md bench deltas are recorded
+/// from (convention documented in docs/EXPERIMENTS.md §Perf).
+fn write_bench_json(rows: &[BenchRow]) {
+    let doc: Json = arr(rows.iter().map(|(name, nspe, sp)| {
+        obj(vec![
+            ("bench", jstr(name)),
+            ("ns_per_elem", num(*nspe)),
+            ("speedup", num(*sp)),
+        ])
+    }));
+    match std::fs::write("BENCH_qnn.json", format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote BENCH_qnn.json ({} rows)", rows.len()),
+        Err(e) => println!("\nWARNING: could not write BENCH_qnn.json: {e}"),
+    }
+}

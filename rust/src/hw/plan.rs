@@ -219,21 +219,30 @@ impl GrauPlan {
         self.eval_in_segment(self.segment(x), x)
     }
 
-    /// Evaluate a stream into `out` (cleared first).  Processes fixed
-    /// chunks: segment indices for the whole chunk are resolved before
-    /// the arithmetic pass.
-    pub fn eval_batch(&self, xs: &[i32], out: &mut Vec<i32>) {
-        out.clear();
-        out.reserve(xs.len());
+    /// Evaluate a stream into a preallocated slice
+    /// (`out.len() == xs.len()`) — the allocation-free form the QNN
+    /// engine's channel-major epilogues stream whole channel planes
+    /// through.  Processes fixed chunks: segment indices for the whole
+    /// chunk are resolved before the arithmetic pass.
+    pub fn eval_into(&self, xs: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(xs.len(), out.len());
         let mut seg = [0u8; BATCH_CHUNK];
-        for chunk in xs.chunks(BATCH_CHUNK) {
+        for (chunk, ochunk) in xs.chunks(BATCH_CHUNK).zip(out.chunks_mut(BATCH_CHUNK)) {
             for (s, &x) in seg.iter_mut().zip(chunk.iter()) {
                 *s = self.segment(x) as u8;
             }
-            for (i, &x) in chunk.iter().enumerate() {
-                out.push(self.eval_in_segment(seg[i] as usize, x));
+            for (i, (o, &x)) in ochunk.iter_mut().zip(chunk.iter()).enumerate() {
+                *o = self.eval_in_segment(seg[i] as usize, x);
             }
         }
+    }
+
+    /// Evaluate a stream into `out` (cleared and resized first) —
+    /// allocating wrapper over [`GrauPlan::eval_into`].
+    pub fn eval_batch(&self, xs: &[i32], out: &mut Vec<i32>) {
+        out.clear();
+        out.resize(xs.len(), 0);
+        self.eval_into(xs, out);
     }
 
     /// Convenience wrapper allocating the output vector.

@@ -109,6 +109,18 @@ pub trait FunctionalUnit: ActivationUnit {
         out.reserve(xs.len());
         out.extend(xs.iter().map(|&x| self.eval_ref(x)));
     }
+
+    /// Batch-evaluate into a preallocated slice
+    /// (`out.len() == xs.len()`) — the allocation-free epilogue form:
+    /// the QNN engine's channel-major pipeline hands each unit one
+    /// contiguous channel plane and writes the activations straight into
+    /// the scratch arena's output plane.
+    fn eval_slice(&self, xs: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.eval_ref(x);
+        }
+    }
 }
 
 // --- GrauRegisters: the bit-exact reference semantics -----------------------
@@ -161,6 +173,9 @@ impl FunctionalUnit for GrauPlan {
     }
     fn eval_batch_ref(&self, xs: &[i32], out: &mut Vec<i32>) {
         GrauPlan::eval_batch(self, xs, out)
+    }
+    fn eval_slice(&self, xs: &[i32], out: &mut [i32]) {
+        GrauPlan::eval_into(self, xs, out)
     }
 }
 
@@ -501,6 +516,23 @@ mod tests {
             let unit = build_unit(kind, &regs, ApproxKind::Apot).unwrap();
             let cost = unit.cost_report().expect("hardware unit has a cost model");
             assert!(cost.lut > 0 && cost.power_w > 0.0, "{}", unit.name());
+        }
+    }
+
+    #[test]
+    fn eval_slice_matches_scalar_for_functional_units() {
+        // the preallocated-slice epilogue form (default impl and the
+        // GrauPlan specialization) must match scalar evaluation
+        let regs = demo_regs();
+        let xs: Vec<i32> = (-1500..1500).step_by(3).collect();
+        let mut out = vec![0i32; xs.len()];
+        for kind in [UnitKind::Reference, UnitKind::Plan, UnitKind::Lut] {
+            let unit = build_functional_unit(kind, &regs, ApproxKind::Apot).unwrap();
+            out.fill(i32::MIN);
+            unit.eval_slice(&xs, &mut out);
+            for (x, y) in xs.iter().zip(&out) {
+                assert_eq!(*y, unit.eval_ref(*x), "{} x={x}", unit.name());
+            }
         }
     }
 

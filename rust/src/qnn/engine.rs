@@ -4,6 +4,22 @@
 //! (`Grau`, `Mt`) dispatch every activation epilogue through
 //! `hw::unit::FunctionalUnit` trait objects built from the backend
 //! registry at engine construction.
+//!
+//! Data layout (see `qnn::tensor` and docs/ARCHITECTURE.md §Data layout):
+//! the *boundary* format is position-major NHWC (what the exporter and
+//! the datasets speak), but the engine's *interior* is **channel-major**
+//! — each intermediate tensor is stored as contiguous per-channel
+//! planes, so every activation unit receives one contiguous `&[i32]`
+//! slice and MAC-range recording walks whole planes instead of doing
+//! `i % chans` per element.  All intermediate buffers live in a
+//! [`Scratch`] arena reused across samples, making the steady-state
+//! forward pass allocation-free ([`Engine::forward_batch`]).
+//!
+//! The seed's position-major per-sample path is retained verbatim as
+//! [`Engine::forward_sample_naive`] — the reference oracle the
+//! channel-major pipeline is held bit-for-bit equal to
+//! (`rust/tests/qnn_parity.rs`, plus the `perf_hot_paths` bench which
+//! asserts equality on its own workload).
 
 use crate::error::{bail, Result};
 
@@ -13,10 +29,13 @@ use crate::hw::mt::MtUnit;
 use crate::hw::unit::{build_functional_unit, FunctionalUnit, UnitKind};
 use crate::hw::GrauRegisters;
 use crate::qnn::graph::{GraphOp, ModelGraph, OpKind};
+use crate::qnn::tensor::{
+    conv2d_cm, gap_cm, maxpool2_cm, permute_linear_rows, plane_dims, repack_conv_weights, Scratch,
+};
 use crate::qnn::weights::ExportBundle;
 use crate::util::dataset::Dataset;
 use crate::util::stats::{accuracy_from_logits, topk_accuracy};
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::parallel_for_init;
 
 /// Which activation implementation every quantization site uses.
 /// Per-site vectors are indexed like [`ModelGraph::activation_sites`],
@@ -43,7 +62,16 @@ impl ActMode {
 #[derive(Clone, Debug, Default)]
 struct LayerData {
     w_shape: Vec<usize>,
+    /// weights in the exported layout — conv `[kh,kw,cin,cout]`, linear
+    /// `[in,out]` with position-major input indexing (the naive oracle
+    /// path reads these)
     w: Vec<i32>,
+    /// channel-major repack: conv `[cout][kh][kw][cin]`
+    /// ([`repack_conv_weights`]); linear rows permuted to channel-major
+    /// input indexing when fed by a spatial flatten
+    /// ([`permute_linear_rows`]; empty when no permutation is needed —
+    /// the exported rows already match)
+    w_cm: Vec<i32>,
     /// folded per-channel affine (gap-corrected): pre-act = a*mac + b
     a: Vec<f64>,
     b: Vec<f64>,
@@ -73,6 +101,15 @@ impl MacRanges {
         r.0 = r.0.min(v);
         r.1 = r.1.max(v);
     }
+    /// Fold a whole channel plane into `(site, ch)` — the channel-major
+    /// recording path (one range lookup per plane, not per element).
+    fn update_plane(&mut self, site: usize, ch: usize, plane: &[i32]) {
+        let r = &mut self.ranges[site][ch];
+        for &v in plane {
+            r.0 = r.0.min(v);
+            r.1 = r.1.max(v);
+        }
+    }
     pub fn merge(&mut self, other: &MacRanges) {
         for (s, o) in self.ranges.iter_mut().zip(&other.ranges) {
             for (r, q) in s.iter_mut().zip(o) {
@@ -99,6 +136,11 @@ pub struct Engine {
     site_of_op: Vec<Option<usize>>,
     /// per-site channel counts
     site_channels: Vec<usize>,
+    /// op index -> index of the op whose buffer holds its output.
+    /// `Flatten` aliases its source (channel-major flatten is a no-op
+    /// view — the linear weights are row-permuted instead); every other
+    /// op owns its own slot.
+    slot: Vec<usize>,
     /// private: `units` is derived from this at construction, so
     /// swapping the mode in place would desync them — build a new
     /// `Engine` instead (read access via [`Engine::act_mode`])
@@ -123,12 +165,20 @@ impl Engine {
         let mut layers = Vec::with_capacity(graph.ops.len());
         let mut shape: Vec<usize> = Vec::new();
         let mut shapes: Vec<Vec<usize>> = Vec::new();
+        let mut slot: Vec<usize> = Vec::with_capacity(graph.ops.len());
         // correction accumulated by ops that rescale without requantizing
         // (gap divides by the pooled element count)
         let mut corr = 1.0f64;
         let mut site_channels = vec![0usize; sites.len()];
 
-        for op in &graph.ops {
+        for (oi, op) in graph.ops.iter().enumerate() {
+            // flatten is a zero-copy view in the channel-major layout:
+            // its readers resolve to the source op's buffer
+            let this_slot = match op.kind {
+                OpKind::Flatten => slot[oi - 1],
+                _ => oi,
+            };
+            slot.push(this_slot);
             let mut ld = LayerData::default();
             match op.kind {
                 OpKind::Input => {
@@ -147,6 +197,7 @@ impl Engine {
                     ld.w = w;
                     corr = 1.0;
                     if op.kind == OpKind::Conv {
+                        ld.w_cm = repack_conv_weights(&ld.w, &ld.w_shape);
                         let in_shape = if op.lhs >= 0 {
                             shapes[op.lhs as usize].clone()
                         } else {
@@ -155,6 +206,19 @@ impl Engine {
                         let h = in_shape[0].div_ceil(op.stride);
                         shape = vec![h, h, op.out_ch];
                     } else {
+                        // linear fed (through a flatten view) by a
+                        // spatial tensor: permute the rows once so the
+                        // channel-major buffer indexes the exported
+                        // position-major weights correctly
+                        let src_shape = &shapes[slot[oi - 1]];
+                        if src_shape.len() == 3 && src_shape[0] * src_shape[1] > 1 {
+                            ld.w_cm = permute_linear_rows(
+                                &ld.w,
+                                src_shape[0] * src_shape[1],
+                                src_shape[2],
+                                op.out_ch,
+                            );
+                        }
                         shape = vec![op.out_ch];
                     }
                 }
@@ -231,6 +295,7 @@ impl Engine {
             layers,
             site_of_op,
             site_channels,
+            slot,
             act_mode,
             units,
         })
@@ -262,11 +327,7 @@ impl Engine {
         let ld = &self.layers[oi];
         // 1-bit sites quantize the BN output directly (sign) — the
         // nonlinearity folds into the threshold (see model.py forward)
-        let act = if op.a_bits == 1 {
-            Activation::Identity
-        } else {
-            Activation::parse(&op.act).unwrap_or(Activation::Identity)
-        };
+        let act = op_activation(op);
         match op.kind {
             OpKind::Add => {
                 // pre-act value = q16_sum * s_out / 65536... the add path
@@ -287,10 +348,291 @@ impl Engine {
         }
     }
 
+    // -----------------------------------------------------------------
+    // Channel-major pipeline (the hot path)
+    // -----------------------------------------------------------------
+
+    /// Run one sample through the channel-major pipeline, reusing the
+    /// caller's [`Scratch`] arena (steady state: zero heap allocation).
+    /// Returns the position-major logits, which stay valid in the arena
+    /// until the next pass.  `ranges` records per-site MAC extents when
+    /// provided (calibration).
+    pub fn forward_into<'s>(
+        &self,
+        x: &[f32],
+        scratch: &'s mut Scratch,
+        mut ranges: Option<&mut MacRanges>,
+    ) -> &'s [f32] {
+        scratch.prepare(self.graph.ops.len());
+        // a headless graph must return empty logits, not a stale row
+        scratch.logits.clear();
+        let (in_qmin, in_qmax) = qrange(8);
+
+        for (oi, op) in self.graph.ops.iter().enumerate() {
+            let ld = &self.layers[oi];
+            let mut out = std::mem::take(&mut scratch.outs[oi]);
+            let mut mac = std::mem::take(&mut scratch.mac);
+            match op.kind {
+                OpKind::Input => {
+                    let (positions, c) = plane_dims(&ld.out_shape);
+                    debug_assert_eq!(x.len(), positions * c);
+                    Scratch::ensure_i32_overwrite(&mut out, positions * c, &mut scratch.allocs);
+                    // fused quantize + position-major -> channel-major
+                    for ch in 0..c {
+                        let plane = &mut out[ch * positions..][..positions];
+                        for (p, v) in plane.iter_mut().enumerate() {
+                            *v = ((x[p * c + ch] as f64 / self.in_step).round_ties_even()
+                                as i64)
+                                .clamp(in_qmin as i64, in_qmax as i64)
+                                as i32;
+                        }
+                    }
+                }
+                OpKind::Linear => {
+                    let src_slot = self.slot[oi - 1];
+                    let (in_dim, out_dim) = (ld.w_shape[0], ld.w_shape[1]);
+                    Scratch::ensure_i32(&mut mac, out_dim, &mut scratch.allocs);
+                    {
+                        let src = &scratch.outs[src_slot];
+                        debug_assert_eq!(src.len(), in_dim);
+                        let w = if ld.w_cm.is_empty() { &ld.w } else { &ld.w_cm };
+                        for (d, &xv) in src.iter().enumerate() {
+                            if xv == 0 {
+                                continue;
+                            }
+                            let row = &w[d * out_dim..(d + 1) * out_dim];
+                            for (c, &wv) in row.iter().enumerate() {
+                                mac[c] += xv * wv;
+                            }
+                        }
+                    }
+                    Scratch::ensure_i32_overwrite(&mut out, out_dim, &mut scratch.allocs);
+                    if op.name == "head" {
+                        Scratch::ensure_f32(&mut scratch.logits, out_dim, &mut scratch.allocs);
+                        head_logits_cm(ld, &mac[..out_dim], op.out_ch, &mut scratch.logits);
+                        out.copy_from_slice(&mac[..out_dim]);
+                    } else {
+                        self.epilogue_cm(oi, op, ld, &mac[..out_dim], &mut out, &mut ranges);
+                    }
+                }
+                OpKind::Conv => {
+                    let src_oi = if op.lhs >= 0 { op.lhs as usize } else { oi - 1 };
+                    let src_slot = self.slot[src_oi];
+                    let in_shape = &self.layers[src_slot].out_shape;
+                    let (positions, _) = plane_dims(&ld.out_shape);
+                    let out_len = positions * op.out_ch;
+                    Scratch::ensure_i32_overwrite(&mut mac, out_len, &mut scratch.allocs);
+                    conv2d_cm(
+                        &scratch.outs[src_slot],
+                        in_shape,
+                        &ld.w_cm,
+                        &ld.w_shape,
+                        op.stride,
+                        &mut mac[..out_len],
+                    );
+                    Scratch::ensure_i32_overwrite(&mut out, out_len, &mut scratch.allocs);
+                    if op.name == "head" {
+                        Scratch::ensure_f32(&mut scratch.logits, out_len, &mut scratch.allocs);
+                        head_logits_cm(ld, &mac[..out_len], op.out_ch, &mut scratch.logits);
+                        out.copy_from_slice(&mac[..out_len]);
+                    } else {
+                        self.epilogue_cm(oi, op, ld, &mac[..out_len], &mut out, &mut ranges);
+                    }
+                }
+                OpKind::MaxPool => {
+                    let src_slot = self.slot[oi - 1];
+                    let in_shape = &self.layers[src_slot].out_shape;
+                    let out_len = (in_shape[0] / 2) * (in_shape[1] / 2) * in_shape[2];
+                    Scratch::ensure_i32_overwrite(&mut out, out_len, &mut scratch.allocs);
+                    maxpool2_cm(&scratch.outs[src_slot], in_shape, &mut out);
+                }
+                OpKind::Gap => {
+                    let src_slot = self.slot[oi - 1];
+                    let in_shape = &self.layers[src_slot].out_shape;
+                    Scratch::ensure_i32_overwrite(&mut out, in_shape[2], &mut scratch.allocs);
+                    gap_cm(&scratch.outs[src_slot], in_shape, &mut out);
+                }
+                OpKind::Flatten => {
+                    // zero-copy: readers resolve through `self.slot` to
+                    // the source buffer (the seed cloned the whole
+                    // tensor here, per sample)
+                }
+                OpKind::Add => {
+                    let l_slot = self.slot[op.lhs as usize];
+                    let r_slot = self.slot[op.rhs as usize];
+                    let out_len = scratch.outs[l_slot].len();
+                    Scratch::ensure_i32_overwrite(&mut mac, out_len, &mut scratch.allocs);
+                    {
+                        let (l, r) = (&scratch.outs[l_slot], &scratch.outs[r_slot]);
+                        debug_assert_eq!(l.len(), r.len());
+                        // Q16 residual realignment first, then the
+                        // activation over contiguous channel planes
+                        for ((q, &a), &b) in mac.iter_mut().zip(l.iter()).zip(r.iter()) {
+                            let q16 = ld.m_l * a as i64 + ld.m_r * b as i64;
+                            *q = q16.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+                        }
+                    }
+                    let site = self.site_of_op[oi];
+                    let chans = *ld.out_shape.last().unwrap();
+                    let positions = out_len / chans;
+                    if let (Some(s), Some(rg)) = (site, ranges.as_deref_mut()) {
+                        for ch in 0..chans {
+                            rg.update_plane(s, ch, &mac[ch * positions..][..positions]);
+                        }
+                    }
+                    Scratch::ensure_i32_overwrite(&mut out, out_len, &mut scratch.allocs);
+                    match site {
+                        Some(s) => self.add_epilogue_cm(s, op, ld, &mac[..out_len], &mut out),
+                        None => out.copy_from_slice(&mac[..out_len]),
+                    }
+                }
+            }
+            scratch.outs[oi] = out;
+            scratch.mac = mac;
+        }
+        scratch.logits()
+    }
+
+    /// Channel-major conv/linear epilogue: MAC-range recording and the
+    /// per-channel activation, one contiguous plane at a time.
+    /// `mac` and `out` are `[chans][positions]`.
+    fn epilogue_cm(
+        &self,
+        oi: usize,
+        op: &GraphOp,
+        ld: &LayerData,
+        mac: &[i32],
+        out: &mut [i32],
+        ranges: &mut Option<&mut MacRanges>,
+    ) {
+        let chans = op.out_ch;
+        let positions = mac.len() / chans;
+        let site = self.site_of_op[oi].expect("non-head conv/linear is a site");
+        if let Some(rg) = ranges.as_deref_mut() {
+            for ch in 0..chans {
+                rg.update_plane(site, ch, &mac[ch * positions..][..positions]);
+            }
+        }
+        let act = op_activation(op);
+        self.act_planes(site, chans, positions, mac, out, &|ch| {
+            FoldedActivation::new(ld.a[ch], ld.b[ch], act, ld.s_out, op.a_bits)
+        });
+    }
+
+    /// Channel-major Add epilogue over the Q16-realigned sum `q` (one
+    /// shared fold across channels — the Q16 scale is per-site).
+    fn add_epilogue_cm(&self, site: usize, op: &GraphOp, ld: &LayerData, q: &[i32], out: &mut [i32]) {
+        let chans = *ld.out_shape.last().unwrap();
+        let positions = q.len() / chans;
+        let act = op_activation(op);
+        self.act_planes(site, chans, positions, q, out, &|_| {
+            FoldedActivation::new(ld.s_out / 65536.0, 0.0, act, ld.s_out, op.a_bits)
+        });
+    }
+
+    /// Shared per-plane activation dispatch: the unit bank when one is
+    /// resident (contiguous `eval_slice` per channel, no
+    /// gather/scatter), otherwise the float fold `fold(ch)` produces /
+    /// the per-channel `Pwlf`.
+    fn act_planes(
+        &self,
+        site: usize,
+        chans: usize,
+        positions: usize,
+        q: &[i32],
+        out: &mut [i32],
+        fold: &dyn Fn(usize) -> FoldedActivation,
+    ) {
+        if !self.units.is_empty() {
+            // trait-object fast path: each channel's plane streams
+            // through its hw::unit (compiled plans in Grau mode,
+            // multi-threshold units in Mt mode)
+            for ch in 0..chans {
+                self.units[site][ch].eval_slice(
+                    &q[ch * positions..][..positions],
+                    &mut out[ch * positions..][..positions],
+                );
+            }
+            return;
+        }
+        for ch in 0..chans {
+            let plane = &q[ch * positions..][..positions];
+            let oplane = &mut out[ch * positions..][..positions];
+            match &self.act_mode {
+                ActMode::Exact => {
+                    let f = fold(ch);
+                    for (o, &m) in oplane.iter_mut().zip(plane) {
+                        *o = f.eval(m as i64);
+                    }
+                }
+                ActMode::Pwlf(v) => {
+                    let pw = &v[site][ch];
+                    for (o, &m) in oplane.iter_mut().zip(plane) {
+                        *o = pw.eval(m as i64);
+                    }
+                }
+                ActMode::Grau(_) | ActMode::Mt(_) => {
+                    unreachable!("unit modes dispatch through the unit bank above")
+                }
+            }
+        }
+    }
+
+    /// Run one sample; returns logits.  Convenience wrapper over
+    /// [`Engine::forward_into`] with a throwaway arena — batch callers
+    /// should hold a [`Scratch`] (or use [`Engine::forward_batch`]) to
+    /// stay allocation-free.
+    pub fn forward_sample(&self, x: &[f32], ranges: Option<&mut MacRanges>) -> Vec<f32> {
+        let mut scratch = Scratch::new();
+        self.forward_into(x, &mut scratch, ranges).to_vec()
+    }
+
+    /// Batched forward pass: `threads`-way parallel, one scratch arena
+    /// per worker thread.  After a worker's first sample its arena never
+    /// grows again (debug-asserted), so the steady state performs no
+    /// per-sample heap allocation in the conv/linear/add path.  Returns
+    /// row-major `[n][n_classes]` logits for the first
+    /// `min(limit, data.n)` samples.
+    pub fn forward_batch(&self, data: &Dataset, limit: usize, threads: usize) -> Vec<f32> {
+        let n = limit.min(data.n);
+        let c = self.graph.n_classes;
+        let mut logits = vec![0f32; n * c];
+        {
+            let sink = std::sync::Mutex::new(logits.as_mut_slice());
+            parallel_for_init(
+                n,
+                threads,
+                || (Scratch::new(), None::<u64>),
+                |(scratch, baseline), i| {
+                    let row = self.forward_into(data.sample(i), scratch, None);
+                    assert_eq!(row.len(), c, "head width");
+                    let mut out = sink.lock().unwrap();
+                    out[i * c..(i + 1) * c].copy_from_slice(row);
+                    drop(out);
+                    match baseline {
+                        None => *baseline = Some(scratch.alloc_events()),
+                        Some(b) => debug_assert_eq!(
+                            scratch.alloc_events(),
+                            *b,
+                            "steady-state forward pass allocated"
+                        ),
+                    }
+                },
+            );
+        }
+        logits
+    }
+
+    // -----------------------------------------------------------------
+    // Position-major reference path (the seed semantics, kept as oracle)
+    // -----------------------------------------------------------------
+
     /// Batched unit activation over a position-major `[pos][channel]`
     /// MAC block: gathers each channel's stride into a contiguous buffer,
     /// streams it through that channel's activation unit, and scatters
-    /// the outputs back.  Bit-exact with the per-element path.
+    /// the outputs back.  Bit-exact with the per-element path.  Only the
+    /// naive oracle uses this — the channel-major pipeline hands units
+    /// contiguous planes directly.
     fn unit_batch(&self, site: usize, mac: &[i32], chans: usize) -> Vec<i32> {
         let units = &self.units[site];
         debug_assert_eq!(units.len(), chans);
@@ -317,9 +659,13 @@ impl Engine {
         out
     }
 
-    /// Run one sample; returns logits. `ranges` records per-site MAC
-    /// extents when provided (calibration pass).
-    pub fn forward_sample(&self, x: &[f32], mut ranges: Option<&mut MacRanges>) -> Vec<f32> {
+    /// The seed's per-sample position-major forward pass, retained
+    /// verbatim as the reference oracle: `rust/tests/qnn_parity.rs` and
+    /// the `perf_hot_paths` bench hold [`Engine::forward_into`] /
+    /// [`Engine::forward_batch`] bit-for-bit equal to this (logits and
+    /// recorded MAC ranges).  Allocates per op per sample — do not use
+    /// on a hot path.
+    pub fn forward_sample_naive(&self, x: &[f32], mut ranges: Option<&mut MacRanges>) -> Vec<f32> {
         let n_ops = self.graph.ops.len();
         let mut outs: Vec<Vec<i32>> = Vec::with_capacity(n_ops);
         let mut logits: Vec<f32> = Vec::new();
@@ -349,7 +695,7 @@ impl Engine {
                             mac[c] += xv * wv;
                         }
                     }
-                    self.finish_macs(oi, op, ld, &mac, &mut ranges, &mut logits)
+                    self.finish_macs_naive(oi, op, ld, &mac, &mut ranges, &mut logits)
                 }
                 OpKind::Conv => {
                     let src_oi = if op.lhs >= 0 { op.lhs as usize } else { oi - 1 };
@@ -362,7 +708,7 @@ impl Engine {
                         &ld.w_shape,
                         op.stride,
                     );
-                    self.finish_macs(oi, op, ld, &mac, &mut ranges, &mut logits)
+                    self.finish_macs_naive(oi, op, ld, &mac, &mut ranges, &mut logits)
                 }
                 OpKind::MaxPool => {
                     let src = &outs[oi - 1];
@@ -387,15 +733,10 @@ impl Engine {
                     let r = &outs[op.rhs as usize];
                     debug_assert_eq!(l.len(), r.len());
                     let site = self.site_of_op[oi];
-                    let act = if op.a_bits == 1 {
-                        Activation::Identity
-                    } else {
-                        Activation::parse(&op.act).unwrap_or(Activation::Identity)
-                    };
                     let f = FoldedActivation::new(
                         ld.s_out / 65536.0,
                         0.0,
-                        act,
+                        op_activation(op),
                         ld.s_out,
                         op.a_bits,
                     );
@@ -435,9 +776,10 @@ impl Engine {
         logits
     }
 
-    /// Shared conv/linear epilogue: per-channel activation (or head
-    /// logits).  `mac` is laid out position-major `[pos][channel]`.
-    fn finish_macs(
+    /// Shared conv/linear epilogue of the naive oracle: per-channel
+    /// activation (or head logits).  `mac` is laid out position-major
+    /// `[pos][channel]`.
+    fn finish_macs_naive(
         &self,
         oi: usize,
         op: &GraphOp,
@@ -467,11 +809,7 @@ impl Engine {
             // multi-threshold units in Mt mode)
             return self.unit_batch(site, mac, chans);
         }
-        let act = if op.a_bits == 1 {
-            Activation::Identity
-        } else {
-            Activation::parse(&op.act).unwrap_or(Activation::Identity)
-        };
+        let act = op_activation(op);
         let mut out = Vec::with_capacity(mac.len());
         for (i, &m) in mac.iter().enumerate() {
             let ch = i % chans;
@@ -482,25 +820,24 @@ impl Engine {
     }
 
     /// Calibration pass: run `n` samples in Exact mode semantics,
-    /// recording MAC ranges (single-threaded, deterministic).
+    /// recording MAC ranges (single-threaded, deterministic; one scratch
+    /// arena reused across all samples).
     pub fn calibrate(&self, data: &Dataset, n: usize) -> MacRanges {
         let mut ranges = self.empty_ranges();
+        let mut scratch = Scratch::new();
         for i in 0..n.min(data.n) {
-            self.forward_sample(data.sample(i), Some(&mut ranges));
+            self.forward_into(data.sample(i), &mut scratch, Some(&mut ranges));
         }
         ranges
     }
 
-    /// Accuracy over the first `limit` samples, `threads`-way parallel.
+    /// Accuracy over the first `limit` samples, `threads`-way parallel
+    /// (one scratch arena per worker via [`Engine::forward_batch`]).
     pub fn evaluate(&self, data: &Dataset, limit: usize, threads: usize) -> EvalResult {
         let n = limit.min(data.n);
         let c = data.n_classes;
-        let rows = parallel_map(n, threads, |i| self.forward_sample(data.sample(i), None));
-        let mut logits = Vec::with_capacity(n * c);
-        for r in rows {
-            assert_eq!(r.len(), c, "head width");
-            logits.extend_from_slice(&r);
-        }
+        assert_eq!(self.graph.n_classes, c, "dataset/model class count");
+        let logits = self.forward_batch(data, limit, threads);
         EvalResult {
             top1: accuracy_from_logits(&logits, n, c, &data.y),
             top5: topk_accuracy(&logits, n, c, &data.y, 5),
@@ -509,8 +846,34 @@ impl Engine {
     }
 }
 
+/// The activation an op's epilogue applies: 1-bit sites quantize the BN
+/// output directly (the nonlinearity folds into the threshold — see
+/// model.py forward), everything else parses the op's `act` name with an
+/// identity fallback.  Single source of truth for all engine paths.
+fn op_activation(op: &GraphOp) -> Activation {
+    if op.a_bits == 1 {
+        Activation::Identity
+    } else {
+        Activation::parse(&op.act).unwrap_or(Activation::Identity)
+    }
+}
+
+/// Head affine over channel-major MACs, exported as position-major
+/// logits (`logits[pos * chans + ch]`, matching the naive path).
+fn head_logits_cm(ld: &LayerData, mac: &[i32], chans: usize, logits: &mut [f32]) {
+    let positions = mac.len() / chans;
+    for ch in 0..chans {
+        for (p, &m) in mac[ch * positions..][..positions].iter().enumerate() {
+            logits[p * chans + ch] = (ld.a[ch] * m as f64 + ld.b[ch]) as f32;
+        }
+    }
+}
+
 /// SAME-padded stride-s conv: input `[H,W,Cin]`, weights
 /// `[kh,kw,Cin,Cout]`, output position-major `[oh*ow][Cout]` int32 MACs.
+/// This is the seed's naive kernel, retained as the reference oracle for
+/// the channel-major [`crate::qnn::tensor::conv2d_cm`] (which splits
+/// interior and border and runs bounds-check-free inside).
 pub fn conv2d_i32(
     src: &[i32],
     in_shape: &[usize],
@@ -658,6 +1021,9 @@ mod tests {
         let logits = eng.forward_sample(&x, None);
         assert!((logits[0] - 0.2).abs() < 1e-6, "{logits:?}");
         assert!((logits[1] + 0.1).abs() < 1e-6, "{logits:?}");
+        // the retained naive oracle computes the same logits bit-for-bit
+        let naive = eng.forward_sample_naive(&x, None);
+        assert_eq!(logits, naive);
     }
 
     #[test]
@@ -669,6 +1035,10 @@ mod tests {
         assert_eq!(r.ranges.len(), 1);
         assert_eq!(r.ranges[0][0], (10, 10));
         assert_eq!(r.ranges[0][2], (-5, -5));
+        // identical through the naive oracle path
+        let mut rn = eng.empty_ranges();
+        eng.forward_sample_naive(&[1.0, -0.5, 0.25, 2.0], Some(&mut rn));
+        assert_eq!(r.ranges, rn.ranges);
     }
 
     #[test]
@@ -713,6 +1083,21 @@ mod tests {
         for (a, b) in le.iter().zip(&lm) {
             assert!((a - b).abs() < 0.1, "{le:?} vs {lm:?}");
         }
+    }
+
+    #[test]
+    fn scratch_reuse_is_allocation_free_and_stable() {
+        let (g, b) = tiny();
+        let eng = Engine::new(g, &b, ActMode::Exact).unwrap();
+        let mut scratch = Scratch::new();
+        let first = eng.forward_into(&[1.0, -0.5, 0.25, 2.0], &mut scratch, None).to_vec();
+        let warm = scratch.alloc_events();
+        assert!(warm > 0, "first pass grows the arena");
+        for _ in 0..5 {
+            let again = eng.forward_into(&[1.0, -0.5, 0.25, 2.0], &mut scratch, None).to_vec();
+            assert_eq!(first, again);
+        }
+        assert_eq!(scratch.alloc_events(), warm, "steady state must not allocate");
     }
 
     #[test]

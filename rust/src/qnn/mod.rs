@@ -19,8 +19,11 @@
 
 pub mod engine;
 pub mod graph;
+pub mod synth;
+pub mod tensor;
 pub mod weights;
 
 pub use engine::{ActMode, Engine, EvalResult};
 pub use graph::{GraphOp, ModelGraph, OpKind};
+pub use tensor::Scratch;
 pub use weights::ExportBundle;

@@ -1,0 +1,116 @@
+//! Synthetic QNN factories — deterministic graph + weight-bundle pairs
+//! for benches, tests, and demos that need a runnable model without the
+//! Python export path.  `rust/benches/perf_hot_paths.rs` and
+//! `rust/tests/qnn_parity.rs` both build their workloads here, so the
+//! bench's bit-exactness gate and the parity property tests exercise
+//! the same model shapes by construction.
+
+use crate::qnn::graph::ModelGraph;
+use crate::qnn::weights::{ExportArray, ExportBundle};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+fn put(b: &mut ExportBundle, key: &str, shape: Vec<usize>, data: Vec<f32>) {
+    b.arrays.insert(key.into(), ExportArray { shape, data });
+}
+
+fn rand_w(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range_i64(-64, 64) as f32).collect()
+}
+
+/// Residual conv net: input `[s,s,c0]` → conv(`c1`,k3) → conv(`c1`,k3)
+/// → add → maxpool → conv(`c2`,k3,stride 2) → flatten → linear head
+/// (10 classes).  Exercises every op kind except gap, including the
+/// flatten-view + permuted-linear-rows path and the Add epilogue.
+/// Weights/biases are seeded-random, scales fixed.
+pub fn residual_qnn(s: usize, c0: usize, c1: usize, c2: usize, seed: u64) -> (ModelGraph, ExportBundle) {
+    let manifest = format!(
+        r#"{{"model": {{"name": "synth_res", "n_classes": 10, "ops": [
+        {{"kind":"input","name":"in","shape":[{s},{s},{c0}]}},
+        {{"kind":"conv","name":"b0","out_ch":{c1},"ksize":3,"stride":1,"w_bits":8,"a_bits":8,"act":"relu","bn":true,"lhs":-1}},
+        {{"kind":"conv","name":"b1","out_ch":{c1},"ksize":3,"stride":1,"w_bits":8,"a_bits":8,"act":"silu","bn":true,"lhs":-1}},
+        {{"kind":"add","name":"res","out_ch":{c1},"a_bits":8,"act":"relu","lhs":1,"rhs":2}},
+        {{"kind":"maxpool","name":"mp","lhs":-1}},
+        {{"kind":"conv","name":"b2","out_ch":{c2},"ksize":3,"stride":2,"w_bits":8,"a_bits":8,"act":"relu","bn":true,"lhs":-1}},
+        {{"kind":"flatten","name":"fl","lhs":-1}},
+        {{"kind":"linear","name":"head","out_ch":10,"w_bits":8,"a_bits":8,"act":"none","bn":false,"lhs":-1}}
+    ]}}}}"#
+    );
+    let graph = ModelGraph::from_manifest(&Json::parse(&manifest).expect("synth manifest"))
+        .expect("synth graph");
+    let mut rng = Rng::new(seed);
+    let mut bundle = ExportBundle::default();
+    put(&mut bundle, "in_step", vec![], vec![0.05]);
+    for (name, cin, cout) in [("b0", c0, c1), ("b1", c1, c1), ("b2", c1, c2)] {
+        put(&mut bundle, &format!("{name}/w_int"), vec![3, 3, cin, cout], rand_w(&mut rng, 3 * 3 * cin * cout));
+        put(&mut bundle, &format!("{name}/a"), vec![cout], vec![0.001; cout]);
+        let b: Vec<f32> = (0..cout).map(|_| rng.normal_f32() * 0.1).collect();
+        put(&mut bundle, &format!("{name}/b"), vec![cout], b);
+        put(&mut bundle, &format!("{name}/s_out"), vec![], vec![0.05]);
+    }
+    for key in ["res/s_lhs", "res/s_rhs", "res/s_out"] {
+        put(&mut bundle, key, vec![], vec![0.05]);
+    }
+    let half = s / 2;
+    let flat_dim = half.div_ceil(2) * half.div_ceil(2) * c2;
+    put(&mut bundle, "head/w_int", vec![flat_dim, 10], rand_w(&mut rng, flat_dim * 10));
+    put(&mut bundle, "head/a", vec![10], vec![0.01; 10]);
+    put(&mut bundle, "head/b", vec![10], vec![0.0; 10]);
+    put(&mut bundle, "head/s_out", vec![], vec![1.0]);
+    (graph, bundle)
+}
+
+/// Gap-pooled net: input `[s,s,c0]` → conv(`c1`,k3) → gap → flatten →
+/// linear head (10 classes).  Exercises the gap correction and the
+/// flatten-of-a-vector no-permute path.
+pub fn gap_qnn(s: usize, c0: usize, c1: usize, seed: u64) -> (ModelGraph, ExportBundle) {
+    let manifest = format!(
+        r#"{{"model": {{"name": "synth_gap", "n_classes": 10, "ops": [
+        {{"kind":"input","name":"in","shape":[{s},{s},{c0}]}},
+        {{"kind":"conv","name":"b0","out_ch":{c1},"ksize":3,"stride":1,"w_bits":8,"a_bits":8,"act":"sigmoid","bn":true,"lhs":-1}},
+        {{"kind":"gap","name":"gp","lhs":-1}},
+        {{"kind":"flatten","name":"fl","lhs":-1}},
+        {{"kind":"linear","name":"head","out_ch":10,"w_bits":8,"a_bits":8,"act":"none","bn":false,"lhs":-1}}
+    ]}}}}"#
+    );
+    let graph = ModelGraph::from_manifest(&Json::parse(&manifest).expect("synth manifest"))
+        .expect("synth graph");
+    let mut rng = Rng::new(seed);
+    let mut bundle = ExportBundle::default();
+    put(&mut bundle, "in_step", vec![], vec![0.05]);
+    put(&mut bundle, "b0/w_int", vec![3, 3, c0, c1], rand_w(&mut rng, 3 * 3 * c0 * c1));
+    put(&mut bundle, "b0/a", vec![c1], vec![0.002; c1]);
+    put(&mut bundle, "b0/b", vec![c1], vec![0.05; c1]);
+    put(&mut bundle, "b0/s_out", vec![], vec![0.05]);
+    put(&mut bundle, "head/w_int", vec![c1, 10], rand_w(&mut rng, c1 * 10));
+    put(&mut bundle, "head/a", vec![10], vec![0.01; 10]);
+    put(&mut bundle, "head/b", vec![10], vec![0.0; 10]);
+    put(&mut bundle, "head/s_out", vec![], vec![1.0]);
+    (graph, bundle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::engine::validate_bundle;
+
+    #[test]
+    fn factories_produce_valid_graph_bundle_pairs() {
+        let (g, b) = residual_qnn(8, 3, 4, 6, 1);
+        validate_bundle(&g, &b).unwrap();
+        assert_eq!(g.activation_sites().len(), 4); // b0, b1, res, b2
+        let (g, b) = gap_qnn(7, 2, 5, 2);
+        validate_bundle(&g, &b).unwrap();
+        assert_eq!(g.activation_sites().len(), 1);
+    }
+
+    #[test]
+    fn factories_are_deterministic() {
+        let (_, a) = residual_qnn(8, 3, 4, 6, 9);
+        let (_, b) = residual_qnn(8, 3, 4, 6, 9);
+        assert_eq!(
+            a.arrays.get("b0/w_int").unwrap().data,
+            b.arrays.get("b0/w_int").unwrap().data
+        );
+    }
+}

@@ -1,0 +1,478 @@
+//! Channel-major activation tensors and the scratch arena — the data
+//! layout the integer engine streams through.
+//!
+//! The engine's boundary format is *position-major* (NHWC: `[pos][ch]`,
+//! the layout the Python exporter and `util::dataset` produce), but the
+//! per-channel activation units from `hw::unit` want each channel's
+//! values **contiguous**: FINN-style dataflow accelerators stream one
+//! channel per hardware unit, and the software mirror of that is handing
+//! every [`crate::hw::unit::FunctionalUnit`] one `&[i32]` plane with no
+//! gather/scatter around it.  So the engine's *interior* format is
+//! **channel-major**: a `[h, w, c]` tensor is stored as `c` contiguous
+//! planes of `h*w` positions (`data[ch * positions + pos]`,
+//! `pos = y * w + x`), and a `[dim]` vector is `dim` channels of one
+//! position each (identical bytes either way).
+//!
+//! Conversion happens exactly twice per sample: input quantization
+//! imports position-major pixels into channel-major planes, and the head
+//! exports position-major logits.  Everything in between — conv MACs,
+//! pooling, residual adds, activation epilogues, MAC-range recording —
+//! operates on whole channel planes with no `i % chans` arithmetic.
+//!
+//! The [`Scratch`] arena owns every intermediate buffer (one per graph
+//! op, plus a MAC ping-pong partner), so a steady-state forward pass
+//! performs **no heap allocation**: buffers grow to the model's shapes
+//! on the first sample and are reused verbatim afterwards.  The arena
+//! counts buffer-growth events ([`Scratch::alloc_events`]) so tests can
+//! assert the steady state really is allocation-free.
+//!
+//! [`conv2d_cm`] is the channel-major convolution kernel, split into a
+//! bounds-check-free interior pass (every kernel tap provably in bounds,
+//! weights repacked so the innermost loop is a scalar×row
+//! multiply-accumulate over contiguous memory) and a checked border pass
+//! for the SAME-padding ring.  The position-major
+//! [`crate::qnn::engine::conv2d_i32`] is retained as the reference
+//! oracle; `rust/tests/qnn_parity.rs` holds the two bit-for-bit equal
+//! over randomized shapes.
+
+/// Interpret an op output shape as `(positions, channels)`:
+/// `[h, w, c]` → `(h*w, c)`, `[dim]` → `(1, dim)` (a vector is one
+/// position of `dim` channels, which makes channel-major and
+/// position-major layouts coincide).
+pub fn plane_dims(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        3 => (shape[0] * shape[1], shape[2]),
+        1 => (1, shape[0]),
+        _ => panic!("tensor shapes are [h, w, c] or [dim], got {shape:?}"),
+    }
+}
+
+/// Transpose position-major `[pos][ch]` into channel-major `[ch][pos]`.
+/// `dst.len()` must equal `src.len() == positions * c`.
+pub fn to_channel_major(src: &[i32], positions: usize, c: usize, dst: &mut [i32]) {
+    debug_assert_eq!(src.len(), positions * c);
+    debug_assert_eq!(dst.len(), positions * c);
+    for ch in 0..c {
+        let plane = &mut dst[ch * positions..][..positions];
+        for (p, slot) in plane.iter_mut().enumerate() {
+            *slot = src[p * c + ch];
+        }
+    }
+}
+
+/// Transpose channel-major `[ch][pos]` back into position-major
+/// `[pos][ch]` — the graph-boundary export.
+pub fn to_position_major(src: &[i32], positions: usize, c: usize, dst: &mut [i32]) {
+    debug_assert_eq!(src.len(), positions * c);
+    debug_assert_eq!(dst.len(), positions * c);
+    for ch in 0..c {
+        let plane = &src[ch * positions..][..positions];
+        for (p, &v) in plane.iter().enumerate() {
+            dst[p * c + ch] = v;
+        }
+    }
+}
+
+/// Repack conv weights from the exported `[kh, kw, cin, cout]` layout to
+/// the channel-major kernel's `[cout][kh][kw][cin]` layout, so the
+/// interior loop reads one contiguous `cin` row per (output-channel,
+/// tap) pair.  Done once at `Engine::new`.
+pub fn repack_conv_weights(w: &[i32], w_shape: &[usize]) -> Vec<i32> {
+    let (kh, kw, cin, cout) = (w_shape[0], w_shape[1], w_shape[2], w_shape[3]);
+    debug_assert_eq!(w.len(), kh * kw * cin * cout);
+    let mut out = vec![0i32; w.len()];
+    for ky in 0..kh {
+        for kx in 0..kw {
+            for ci in 0..cin {
+                let src_base = ((ky * kw + kx) * cin + ci) * cout;
+                for co in 0..cout {
+                    out[((co * kh + ky) * kw + kx) * cin + ci] = w[src_base + co];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Permute linear weight *rows* from position-major input indexing
+/// (`d = pos * c + ch`, the order the exporter's flatten produces) to
+/// channel-major (`d = ch * positions + pos`), so a flattened spatial
+/// tensor can feed the linear layer without being transposed back.
+/// Done once at `Engine::new` for linears fed by a spatial flatten.
+pub fn permute_linear_rows(w: &[i32], positions: usize, c: usize, out_dim: usize) -> Vec<i32> {
+    debug_assert_eq!(w.len(), positions * c * out_dim);
+    let mut out = vec![0i32; w.len()];
+    for ch in 0..c {
+        for p in 0..positions {
+            let d_cm = ch * positions + p;
+            let d_pm = p * c + ch;
+            out[d_cm * out_dim..][..out_dim].copy_from_slice(&w[d_pm * out_dim..][..out_dim]);
+        }
+    }
+    out
+}
+
+/// SAME-padded stride-`s` convolution over channel-major planes: input
+/// `[cin][h*w]`, weights repacked `[cout][kh][kw][cin]` (see
+/// [`repack_conv_weights`]), output `[cout][oh*ow]` int32 MACs
+/// (overwritten).
+///
+/// The output is split into an *interior* rectangle — every kernel tap
+/// provably inside the image, so the innermost loop is a straight
+/// scalar×row accumulate with no bounds branch — and the SAME-padding
+/// *border* ring, handled by a checked pass.  Accumulation is plain
+/// `i32` addition (commutative even under wrap), so the result is
+/// bit-for-bit identical to the position-major reference
+/// [`crate::qnn::engine::conv2d_i32`] modulo layout.
+pub fn conv2d_cm(
+    src: &[i32],
+    in_shape: &[usize],
+    w_cm: &[i32],
+    w_shape: &[usize],
+    stride: usize,
+    out: &mut [i32],
+) {
+    let (h, wd, cin) = (in_shape[0], in_shape[1], in_shape[2]);
+    let (kh, kw, cin2, cout) = (w_shape[0], w_shape[1], w_shape[2], w_shape[3]);
+    debug_assert_eq!(cin, cin2);
+    debug_assert_eq!(src.len(), h * wd * cin);
+    let oh = h.div_ceil(stride);
+    let ow = wd.div_ceil(stride);
+    debug_assert_eq!(out.len(), oh * ow * cout);
+    // SAME padding offsets (match XLA: pad_total = (o-1)*s + k - i)
+    let pad_h = (((oh - 1) * stride + kh).saturating_sub(h)) / 2;
+    let pad_w = (((ow - 1) * stride + kw).saturating_sub(wd)) / 2;
+
+    // Interior output rectangle: oy*stride - pad_h >= 0 and
+    // oy*stride - pad_h + kh - 1 < h (same for x) — every tap in bounds.
+    let oy0 = pad_h.div_ceil(stride);
+    let oy1 = if h + pad_h >= kh {
+        (((h + pad_h - kh) / stride) + 1).min(oh).max(oy0)
+    } else {
+        oy0
+    };
+    let ox0 = pad_w.div_ceil(stride);
+    let ox1 = if wd + pad_w >= kw {
+        (((wd + pad_w - kw) / stride) + 1).min(ow).max(ox0)
+    } else {
+        ox0
+    };
+
+    out.fill(0);
+
+    // --- interior: no bounds checks in the inner loop -----------------
+    let n_i = ox1 - ox0;
+    if n_i > 0 {
+        for co in 0..cout {
+            let out_plane = &mut out[co * oh * ow..][..oh * ow];
+            let w_co = &w_cm[co * kh * kw * cin..][..kh * kw * cin];
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let wrow = &w_co[(ky * kw + kx) * cin..][..cin];
+                    for (ci, &wv) in wrow.iter().enumerate() {
+                        if wv == 0 {
+                            continue;
+                        }
+                        let sp = &src[ci * h * wd..][..h * wd];
+                        for oy in oy0..oy1 {
+                            // in bounds by construction of [oy0, oy1)
+                            let iy = oy * stride + ky - pad_h;
+                            let srow = &sp[iy * wd..][..wd];
+                            let orow = &mut out_plane[oy * ow + ox0..oy * ow + ox1];
+                            let s0 = ox0 * stride + kx - pad_w;
+                            if stride == 1 {
+                                for (o, &xv) in orow.iter_mut().zip(&srow[s0..s0 + n_i]) {
+                                    *o += wv * xv;
+                                }
+                            } else {
+                                let taps = srow[s0..].iter().step_by(stride);
+                                for (o, &xv) in orow.iter_mut().zip(taps) {
+                                    *o += wv * xv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // --- border: the SAME-padding ring, bounds-checked ----------------
+    for oy in 0..oh {
+        let row_interior = oy >= oy0 && oy < oy1;
+        for ox in 0..ow {
+            if row_interior && ox >= ox0 && ox < ox1 {
+                continue;
+            }
+            for co in 0..cout {
+                let w_co = &w_cm[co * kh * kw * cin..][..kh * kw * cin];
+                let mut acc = 0i32;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as i64 - pad_h as i64;
+                    if iy < 0 || iy >= h as i64 {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as i64 - pad_w as i64;
+                        if ix < 0 || ix >= wd as i64 {
+                            continue;
+                        }
+                        let wrow = &w_co[(ky * kw + kx) * cin..][..cin];
+                        let sbase = iy as usize * wd + ix as usize;
+                        for (ci, &wv) in wrow.iter().enumerate() {
+                            acc += wv * src[ci * h * wd + sbase];
+                        }
+                    }
+                }
+                out[co * oh * ow + oy * ow + ox] = acc;
+            }
+        }
+    }
+}
+
+/// 2×2 stride-2 max pool over channel-major planes: input `[c][h*w]`,
+/// output `[c][(h/2)*(w/2)]` (overwritten).
+pub fn maxpool2_cm(src: &[i32], in_shape: &[usize], out: &mut [i32]) {
+    let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    debug_assert_eq!(out.len(), oh * ow * c);
+    for ch in 0..c {
+        let sp = &src[ch * h * w..][..h * w];
+        let op = &mut out[ch * oh * ow..][..oh * ow];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let b = oy * 2 * w + ox * 2;
+                op[oy * ow + ox] = sp[b].max(sp[b + 1]).max(sp[b + w]).max(sp[b + w + 1]);
+            }
+        }
+    }
+}
+
+/// Global average pool *sums* over channel-major planes: input
+/// `[c][h*w]`, output `[c]` (the engine folds the 1/(h*w) factor into
+/// the downstream affine, matching the position-major path).
+pub fn gap_cm(src: &[i32], in_shape: &[usize], out: &mut [i32]) {
+    let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+    debug_assert_eq!(out.len(), c);
+    for (ch, slot) in out.iter_mut().enumerate() {
+        // plain `+=` like every other kernel (and the naive oracle), so
+        // the overflow policy stays uniform: debug builds panic, release
+        // wraps — identically on both paths
+        let mut acc = 0i32;
+        for &v in &src[ch * h * w..][..h * w] {
+            acc += v;
+        }
+        *slot = acc;
+    }
+}
+
+/// The per-thread scratch arena: one channel-major buffer per graph op,
+/// a MAC ping-pong partner, and the logits row.  Buffers grow to the
+/// model's shapes on the first forward pass and are reused verbatim on
+/// every later one, so steady-state inference performs no heap
+/// allocation; [`Scratch::alloc_events`] counts buffer-growth events so
+/// tests (and a debug assertion in `Engine::forward_batch`) can verify
+/// that.
+///
+/// One `Scratch` belongs to one evaluation thread — `forward_batch`
+/// builds one per worker via `util::threadpool::parallel_for_init`.
+#[derive(Default)]
+pub struct Scratch {
+    /// per-op channel-major output buffers (`Flatten` ops stay empty —
+    /// they alias their source buffer through the engine's slot map)
+    pub(crate) outs: Vec<Vec<i32>>,
+    /// MAC accumulator, ping-ponged against the op output buffer
+    pub(crate) mac: Vec<i32>,
+    /// position-major logits row written by the head op
+    pub(crate) logits: Vec<f32>,
+    /// buffer-growth event counter (crate-visible so the engine can pass
+    /// `&mut scratch.allocs` alongside disjoint field borrows)
+    pub(crate) allocs: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Number of buffer-growth events so far.  Constant across forward
+    /// passes once every buffer has reached its model's shape.
+    pub fn alloc_events(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Logits of the most recent forward pass through this arena.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    pub(crate) fn prepare(&mut self, n_ops: usize) {
+        if self.outs.len() < n_ops {
+            self.allocs += 1;
+            self.outs.resize_with(n_ops, Vec::new);
+        }
+    }
+
+    /// Size `buf` to `len` zeroed elements, counting a growth event when
+    /// the existing capacity does not cover it.  For consumers that
+    /// *accumulate* into the buffer (the linear MAC loop).
+    pub(crate) fn ensure_i32(buf: &mut Vec<i32>, len: usize, allocs: &mut u64) {
+        if buf.capacity() < len {
+            *allocs += 1;
+        }
+        buf.clear();
+        buf.resize(len, 0);
+    }
+
+    /// Size `buf` to `len` elements *without* zeroing retained contents
+    /// (stale values are unspecified) — for consumers that overwrite
+    /// every element: the conv kernel zero-fills internally, and the
+    /// pool/gap/input/epilogue/Add paths write every slot.  Saves one
+    /// full-buffer memset per op per sample on the steady-state path.
+    pub(crate) fn ensure_i32_overwrite(buf: &mut Vec<i32>, len: usize, allocs: &mut u64) {
+        if buf.capacity() < len {
+            *allocs += 1;
+        }
+        buf.resize(len, 0);
+    }
+
+    pub(crate) fn ensure_f32(buf: &mut Vec<f32>, len: usize, allocs: &mut u64) {
+        if buf.capacity() < len {
+            *allocs += 1;
+        }
+        buf.clear();
+        buf.resize(len, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::engine::conv2d_i32;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layout_roundtrip() {
+        let mut rng = Rng::new(11);
+        let (positions, c) = (6, 4);
+        let pm: Vec<i32> = (0..positions * c).map(|_| rng.range_i64(-9, 9) as i32).collect();
+        let mut cm = vec![0i32; pm.len()];
+        let mut back = vec![0i32; pm.len()];
+        to_channel_major(&pm, positions, c, &mut cm);
+        to_position_major(&cm, positions, c, &mut back);
+        assert_eq!(pm, back);
+        // channel plane 1 is the strided gather of channel 1
+        let plane: Vec<i32> = pm.iter().skip(1).step_by(c).copied().collect();
+        assert_eq!(&cm[positions..2 * positions], &plane[..]);
+    }
+
+    #[test]
+    fn vector_layouts_coincide() {
+        let v = vec![3, -1, 7];
+        let mut cm = vec![0i32; 3];
+        to_channel_major(&v, 1, 3, &mut cm);
+        assert_eq!(cm, v);
+    }
+
+    #[test]
+    fn conv_cm_matches_naive_on_small_cases() {
+        let mut rng = Rng::new(7);
+        for &(h, w, cin, cout, k, stride) in &[
+            (5usize, 5usize, 2usize, 3usize, 3usize, 1usize),
+            (4, 6, 1, 2, 1, 1),
+            (7, 5, 3, 2, 5, 2),
+            (3, 3, 2, 2, 5, 1), // kernel larger than image: all border
+            (8, 8, 2, 4, 3, 2),
+        ] {
+            let src_pm: Vec<i32> =
+                (0..h * w * cin).map(|_| rng.range_i64(-8, 9) as i32).collect();
+            let wt: Vec<i32> =
+                (0..k * k * cin * cout).map(|_| rng.range_i64(-4, 5) as i32).collect();
+            let in_shape = [h, w, cin];
+            let w_shape = [k, k, cin, cout];
+            let want = conv2d_i32(&src_pm, &in_shape, &wt, &w_shape, stride);
+
+            let mut src_cm = vec![0i32; src_pm.len()];
+            to_channel_major(&src_pm, h * w, cin, &mut src_cm);
+            let w_cm = repack_conv_weights(&wt, &w_shape);
+            let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+            let mut out_cm = vec![0i32; oh * ow * cout];
+            conv2d_cm(&src_cm, &in_shape, &w_cm, &w_shape, stride, &mut out_cm);
+            let mut got = vec![0i32; out_cm.len()];
+            to_position_major(&out_cm, oh * ow, cout, &mut got);
+            assert_eq!(got, want, "h={h} w={w} cin={cin} cout={cout} k={k} s={stride}");
+        }
+    }
+
+    #[test]
+    fn maxpool_and_gap_match_position_major() {
+        let mut rng = Rng::new(23);
+        let (h, w, c) = (6, 4, 3);
+        let pm: Vec<i32> = (0..h * w * c).map(|_| rng.range_i64(-99, 99) as i32).collect();
+        let mut cm = vec![0i32; pm.len()];
+        to_channel_major(&pm, h * w, c, &mut cm);
+
+        // position-major references (the engine's retained naive ops)
+        let (oh, ow) = (h / 2, w / 2);
+        let mut want_pool = vec![i32::MIN; oh * ow * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let base = ((oy * 2 + dy) * w + ox * 2 + dx) * c;
+                        for ch in 0..c {
+                            let o = (oy * ow + ox) * c + ch;
+                            want_pool[o] = want_pool[o].max(pm[base + ch]);
+                        }
+                    }
+                }
+            }
+        }
+        let mut pool_cm = vec![0i32; oh * ow * c];
+        maxpool2_cm(&cm, &[h, w, c], &mut pool_cm);
+        let mut pool_pm = vec![0i32; pool_cm.len()];
+        to_position_major(&pool_cm, oh * ow, c, &mut pool_pm);
+        assert_eq!(pool_pm, want_pool);
+
+        let mut want_gap = vec![0i32; c];
+        for p in 0..h * w {
+            for ch in 0..c {
+                want_gap[ch] += pm[p * c + ch];
+            }
+        }
+        let mut gap = vec![0i32; c];
+        gap_cm(&cm, &[h, w, c], &mut gap);
+        assert_eq!(gap, want_gap);
+    }
+
+    #[test]
+    fn linear_row_permutation_is_a_permutation() {
+        let (positions, c, out_dim) = (4, 3, 2);
+        let w: Vec<i32> = (0..(positions * c * out_dim) as i32).collect();
+        let p = permute_linear_rows(&w, positions, c, out_dim);
+        let mut seen: Vec<i32> = p.clone();
+        seen.sort_unstable();
+        let mut orig = w.clone();
+        orig.sort_unstable();
+        assert_eq!(seen, orig);
+        // row for channel-major index (ch=1, p=2) is position-major row 2*3+1
+        let d_cm = positions + 2;
+        let d_pm = 2 * c + 1;
+        assert_eq!(&p[d_cm * out_dim..][..out_dim], &w[d_pm * out_dim..][..out_dim]);
+    }
+
+    #[test]
+    fn scratch_counts_growth_once() {
+        let mut s = Scratch::new();
+        let mut allocs = 0u64;
+        let mut buf = Vec::new();
+        Scratch::ensure_i32(&mut buf, 100, &mut allocs);
+        assert_eq!(allocs, 1);
+        Scratch::ensure_i32(&mut buf, 100, &mut allocs);
+        Scratch::ensure_i32(&mut buf, 50, &mut allocs);
+        assert_eq!(allocs, 1, "shrinking and reuse are free");
+        s.prepare(4);
+        s.prepare(4);
+        assert_eq!(s.alloc_events(), 1);
+    }
+}

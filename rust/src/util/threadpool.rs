@@ -1,36 +1,56 @@
 //! Minimal scoped thread pool (rayon substitute) for data-parallel loops.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 
-/// Run `f(i)` for every `i in 0..n` across `threads` OS threads.
-/// `f` must be `Sync`; work is distributed by atomic counter (dynamic
-/// load balancing, good for skewed per-item cost).
-pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+/// Run `f(&mut state, i)` for every `i in 0..n` across `threads` OS
+/// threads, where each worker thread owns one `state` value built by
+/// `init` at thread start.  This is the worker-local-arena primitive:
+/// `Engine::forward_batch` hands every thread its own scratch arena so
+/// steady-state forward passes are allocation-free.  Work is distributed
+/// by atomic counter (dynamic load balancing, good for skewed per-item
+/// cost); the state never crosses threads, so it needs neither `Send`
+/// nor `Sync`.
+pub fn parallel_for_init<S, I, F>(n: usize, threads: usize, init: I, f: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
     if n == 0 {
         return;
     }
     let threads = threads.max(1).min(n);
     if threads == 1 {
+        let mut state = init();
         for i in 0..n {
-            f(i);
+            f(&mut state, i);
         }
         return;
     }
-    let counter = Arc::new(AtomicUsize::new(0));
+    let counter = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            let counter = Arc::clone(&counter);
+            let counter = &counter;
+            let init = &init;
             let f = &f;
-            scope.spawn(move || loop {
-                let i = counter.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(&mut state, i);
                 }
-                f(i);
             });
         }
     });
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` OS threads.
+/// `f` must be `Sync`; work is distributed by atomic counter (dynamic
+/// load balancing, good for skewed per-item cost).
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    parallel_for_init(n, threads, || (), |_, i| f(i));
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in order.
@@ -40,13 +60,7 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
     f: F,
 ) -> Vec<T> {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    {
-        let slots = std::sync::Mutex::new(&mut out);
-        // SAFETY-free approach: compute into a Vec of Mutexes would be slow;
-        // instead gather (i, value) pairs per thread then place.
-        drop(slots);
-    }
-    // simple approach: collect pairs then sort into place
+    // collect (i, value) pairs under one lock, then place in order
     let pairs = std::sync::Mutex::new(Vec::with_capacity(n));
     parallel_for(n, threads, |i| {
         let v = f(i);
@@ -68,7 +82,7 @@ pub fn default_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
     #[test]
     fn covers_all_indices() {
@@ -91,5 +105,45 @@ mod tests {
     fn single_thread_fallback() {
         let v = parallel_map(5, 1, |i| i);
         assert_eq!(v, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn init_state_is_per_thread_and_reused() {
+        // each worker's state is created exactly once and sees every
+        // index that worker processed
+        let states = AtomicUsize::new(0);
+        let visits = AtomicUsize::new(0);
+        parallel_for_init(
+            200,
+            4,
+            || {
+                states.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |local, _i| {
+                *local += 1;
+                visits.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(visits.load(Ordering::Relaxed), 200);
+        let s = states.load(Ordering::Relaxed);
+        assert!((1..=4).contains(&s), "states {s}");
+    }
+
+    #[test]
+    fn init_state_needs_no_send() {
+        // Rc is neither Send nor Sync — it must still work as worker
+        // state because states never cross threads
+        use std::rc::Rc;
+        let total = AtomicUsize::new(0);
+        parallel_for_init(
+            50,
+            3,
+            || Rc::new(7usize),
+            |rc, _i| {
+                total.fetch_add(**rc, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(total.load(Ordering::Relaxed), 350);
     }
 }

@@ -1,0 +1,196 @@
+//! Bit-exactness of the channel-major engine pipeline against the
+//! retained position-major oracle (the seed semantics).
+//!
+//! Properties (hand-rolled generators, deterministic seeds — proptest is
+//! not vendored offline):
+//!
+//! * `conv2d_cm` (interior bounds-check-free kernel + checked border
+//!   pass, repacked weights) equals `conv2d_i32` over randomized shapes:
+//!   strides 1/2, kernels 1/3/5, odd and even non-square H/W, kernels
+//!   larger than the image (all-border case);
+//! * `forward_into` / `forward_batch` produce logits bit-for-bit equal
+//!   to `forward_sample_naive` on whole graphs (conv / residual add /
+//!   maxpool / gap / flatten / linear), in Exact mode and through GRAU
+//!   unit banks;
+//! * `MacRanges` recorded through the channel-major planes are identical
+//!   to the naive per-element recording;
+//! * the scratch arena performs zero allocation in steady state.
+
+use grau::fit::{Pwlf, PwlfSegment};
+use grau::hw::GrauRegisters;
+use grau::qnn::engine::conv2d_i32;
+use grau::qnn::synth::{gap_qnn, residual_qnn};
+use grau::qnn::tensor::{
+    conv2d_cm, repack_conv_weights, to_channel_major, to_position_major, Scratch,
+};
+use grau::qnn::{ActMode, Engine};
+use grau::util::dataset::Dataset;
+use grau::util::rng::Rng;
+
+#[test]
+fn prop_conv_channel_major_matches_naive() {
+    let mut rng = Rng::new(0xC0117);
+    for case in 0..250 {
+        let h = rng.range_usize(1, 13);
+        let w = rng.range_usize(1, 13);
+        let cin = rng.range_usize(1, 6);
+        let cout = rng.range_usize(1, 6);
+        let k = [1usize, 3, 5][rng.range_usize(0, 3)];
+        let stride = 1 + rng.range_usize(0, 2);
+        let src_pm: Vec<i32> =
+            (0..h * w * cin).map(|_| rng.range_i64(-128, 128) as i32).collect();
+        let wt: Vec<i32> =
+            (0..k * k * cin * cout).map(|_| rng.range_i64(-128, 128) as i32).collect();
+        let in_shape = [h, w, cin];
+        let w_shape = [k, k, cin, cout];
+
+        let want = conv2d_i32(&src_pm, &in_shape, &wt, &w_shape, stride);
+
+        let mut src_cm = vec![0i32; src_pm.len()];
+        to_channel_major(&src_pm, h * w, cin, &mut src_cm);
+        let w_cm = repack_conv_weights(&wt, &w_shape);
+        let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+        let mut out_cm = vec![0i32; oh * ow * cout];
+        conv2d_cm(&src_cm, &in_shape, &w_cm, &w_shape, stride, &mut out_cm);
+        let mut got = vec![0i32; out_cm.len()];
+        to_position_major(&out_cm, oh * ow, cout, &mut got);
+
+        assert_eq!(
+            got, want,
+            "case {case}: h={h} w={w} cin={cin} cout={cout} k={k} stride={stride}"
+        );
+    }
+}
+
+/// A hand-built per-channel GRAU register file (2 segments, PoT slopes),
+/// varied by channel so the unit bank is not uniform.
+fn mk_regs(ch: usize) -> GrauRegisters {
+    let mut r = GrauRegisters::new(8, 2, 0, 4);
+    r.thresholds[0] = (ch as i32 % 7) - 3;
+    r.x0[0] = -(ch as i32 % 5);
+    r.x0[1] = 0;
+    r.y0[0] = -10;
+    r.y0[1] = 5;
+    r.sign[0] = 1;
+    r.sign[1] = 1;
+    r.mask[0] = 0b0001; // slope 1
+    r.mask[1] = 0b0010; // slope 1/2
+    r
+}
+
+/// Forward `n` random samples through both paths of `eng`, asserting
+/// bit-exact logits (per-sample, batched, threaded) and identical
+/// recorded MAC ranges.
+fn assert_paths_agree(eng: &Engine, seed: u64, n: usize) {
+    let mut rng = Rng::new(seed);
+    let dim: usize = eng.graph.ops[0].shape.iter().product();
+    let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32()).collect();
+    let data = Dataset {
+        x: xs,
+        y: vec![0; n],
+        n,
+        dim,
+        n_classes: eng.graph.n_classes,
+    };
+
+    let mut r_naive = eng.empty_ranges();
+    let mut r_cm = eng.empty_ranges();
+    let mut scratch = Scratch::new();
+    let mut naive_rows: Vec<Vec<f32>> = Vec::new();
+    for i in 0..n {
+        let naive = eng.forward_sample_naive(data.sample(i), Some(&mut r_naive));
+        let cm = eng
+            .forward_into(data.sample(i), &mut scratch, Some(&mut r_cm))
+            .to_vec();
+        assert_eq!(naive, cm, "per-sample logits diverge at {i}");
+        naive_rows.push(naive);
+    }
+    assert_eq!(r_naive.ranges, r_cm.ranges, "MacRanges diverge");
+
+    let c = eng.graph.n_classes;
+    let batch = eng.forward_batch(&data, n, 3);
+    for (i, naive) in naive_rows.iter().enumerate() {
+        assert_eq!(&batch[i * c..(i + 1) * c], &naive[..], "batch row {i} diverges");
+    }
+}
+
+#[test]
+fn prop_forward_batch_matches_naive_exact_mode() {
+    // even, odd, and tiny odd inputs; varying channel widths
+    for &(s, c0, c1, c2, seed) in &[
+        (8usize, 3usize, 4usize, 6usize, 1u64),
+        (9, 2, 3, 4, 2),
+        (11, 1, 2, 3, 3),
+    ] {
+        let (graph, bundle) = residual_qnn(s, c0, c1, c2, seed);
+        let eng = Engine::new(graph, &bundle, ActMode::Exact).unwrap();
+        assert_paths_agree(&eng, seed * 101 + 7, 4);
+    }
+    let (graph, bundle) = gap_qnn(7, 2, 5, 9);
+    let eng = Engine::new(graph, &bundle, ActMode::Exact).unwrap();
+    assert_paths_agree(&eng, 77, 4);
+}
+
+#[test]
+fn prop_forward_batch_matches_naive_grau_units() {
+    // the unit-bank epilogue: naive gather/scatter unit_batch vs the
+    // channel-major contiguous-plane eval_slice path
+    for &(s, c0, c1, c2, seed) in &[(8usize, 3usize, 4usize, 6usize, 21u64), (9, 2, 3, 4, 22)] {
+        let (graph, bundle) = residual_qnn(s, c0, c1, c2, seed);
+        let exact = Engine::new(graph.clone(), &bundle, ActMode::Exact).unwrap();
+        let site_regs: Vec<Vec<GrauRegisters>> = exact
+            .site_channels()
+            .iter()
+            .map(|&chs| (0..chs).map(mk_regs).collect())
+            .collect();
+        let eng = Engine::new(graph, &bundle, ActMode::Grau(site_regs)).unwrap();
+        assert_paths_agree(&eng, seed * 31 + 1, 4);
+    }
+}
+
+/// A hand-built two-segment float PWLF, varied by channel.
+fn mk_pwlf(ch: usize) -> Pwlf {
+    Pwlf {
+        breakpoints: vec![(ch as i64 % 5) - 2],
+        segments: vec![
+            PwlfSegment { x0: -50, y0: -10.0, slope: 0.02 + ch as f64 * 0.003 },
+            PwlfSegment { x0: 0, y0: 2.0, slope: 0.05 },
+        ],
+        n_bits: 8,
+    }
+}
+
+#[test]
+fn prop_forward_batch_matches_naive_pwlf_mode() {
+    // the float-PWLF epilogue branch (no unit bank): per-channel Pwlf
+    // over contiguous planes vs the naive per-element dispatch
+    let (graph, bundle) = residual_qnn(8, 3, 4, 6, 31);
+    let exact = Engine::new(graph.clone(), &bundle, ActMode::Exact).unwrap();
+    let site_pwlf: Vec<Vec<Pwlf>> = exact
+        .site_channels()
+        .iter()
+        .map(|&chs| (0..chs).map(mk_pwlf).collect())
+        .collect();
+    let eng = Engine::new(graph, &bundle, ActMode::Pwlf(site_pwlf)).unwrap();
+    assert_paths_agree(&eng, 999, 4);
+}
+
+#[test]
+fn scratch_arena_is_allocation_free_in_steady_state() {
+    let (graph, bundle) = residual_qnn(8, 3, 4, 6, 5);
+    let eng = Engine::new(graph, &bundle, ActMode::Exact).unwrap();
+    let mut rng = Rng::new(55);
+    let dim = 8 * 8 * 3;
+    let mut scratch = Scratch::new();
+    let x0: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+    eng.forward_into(&x0, &mut scratch, None);
+    let warm = scratch.alloc_events();
+    assert!(warm > 0, "first pass must size the arena");
+    // different samples, same shapes: the arena never grows again —
+    // conv/linear/add epilogues are allocation-free in steady state
+    for _ in 0..10 {
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        eng.forward_into(&x, &mut scratch, None);
+        assert_eq!(scratch.alloc_events(), warm, "steady-state pass allocated");
+    }
+}
