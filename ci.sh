@@ -47,6 +47,20 @@ else
     printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
 fi
 
+# Facade smoke: run the migrated examples on tiny inputs so regressions
+# in the grau::api surface (builder, stream handles, descriptors) fail
+# the gate, not just compile.  e2e_pipeline needs training artifacts, so
+# it only runs when they exist.
+step "examples on tiny inputs (quickstart, reconfig_service)"
+cargo run --release --example quickstart >/dev/null
+cargo run --release --example reconfig_service -- 64 2
+if [ -f artifacts/t1_cnn_full8.manifest.json ]; then
+    step "example e2e_pipeline (artifacts present)"
+    GRAU_STEPS=2 cargo run --release --example e2e_pipeline
+else
+    printf 'ci.sh: NOTE: artifacts missing; e2e_pipeline example skipped\n'
+fi
+
 if [ "${1:-}" != "fast" ]; then
     step "cargo doc --no-deps (rustdoc warnings are errors)"
     RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

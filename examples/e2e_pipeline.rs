@@ -9,9 +9,11 @@
 //!      fitted (greedy Algorithm 1 -> PoT/APoT register files).
 //!   4. Accuracy is measured under Exact / PWLF / PoT / APoT activation
 //!      paths (the paper's Tables III/IV protocol).
-//!   5. The fitted register files are replayed through the
-//!      cycle-accurate pipelined GRAU via the L3 activation service and
-//!      checked bit-for-bit against the functional model.
+//!   5. The fitted register files are exported as a serialized
+//!      `UnitDescriptor` bank, loaded back from disk, and replayed
+//!      through the cycle-accurate pipelined GRAU via the typed service
+//!      facade — checked bit-for-bit against the functional model (the
+//!      fit → file → service round trip).
 //!   6. Headline metrics: accuracy deltas, LUT reduction vs MT, service
 //!      throughput.
 //!
@@ -21,11 +23,12 @@
 
 use std::path::Path;
 
+use grau::api::{Backend, DescriptorBank, ServiceBuilder, UnitDescriptor};
 use grau::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};
-use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
 use grau::coordinator::trainer::{dataset_for, train_config};
 use grau::fit::ApproxKind;
 use grau::hw::cost::{estimate, UnitKind};
+use grau::hw::unit::UnitKind as BackendKind;
 use grau::qnn::{ActMode, Engine};
 use grau::runtime::Runtime;
 
@@ -77,22 +80,33 @@ fn main() -> grau::error::Result<()> {
         }
     }
 
-    // ---- 5: hardware replay through the L3 service ----------------------
-    println!("== [5/6] cycle-accurate replay through the activation service ==");
-    let svc = ActivationService::start(ServiceConfig {
-        workers: 2,
-        backend: Backend::CycleSim,
-        ..Default::default()
-    });
-    // register the first site's channels as streams; replay calibration MACs
-    let mut checked = 0usize;
+    // ---- 5: fit -> file -> cycle-accurate replay through the service ----
+    println!("== [5/6] descriptor export + cycle-accurate replay through the service ==");
+    // export the first site's channels as a serialized descriptor bank,
+    // pinned to the cycle-accurate pipelined backend...
+    let mut bank = DescriptorBank::new(config);
     for (ch, regs) in fits.apot[0].iter().enumerate().take(8) {
-        svc.register(ch as u64, regs.clone(), ApproxKind::Apot);
+        bank.insert(
+            format!("site0/ch{ch}"),
+            UnitDescriptor::new(regs.clone(), ApproxKind::Apot).with_unit(BackendKind::Pipelined),
+        );
+    }
+    let bank_path = std::env::temp_dir().join("grau_e2e.units.json");
+    bank.save(&bank_path)?;
+    // ...and load it back from disk to drive the service, as a deployed
+    // accelerator would
+    let bank = DescriptorBank::load(&bank_path)?;
+    println!("  exported + reloaded {} descriptors via {bank_path:?}", bank.len());
+    let svc = ServiceBuilder::new().workers(2).backend(Backend::CycleSim).start();
+    let mut checked = 0usize;
+    for (ch, (name, d)) in bank.iter().enumerate() {
+        let stream = svc.register_descriptor(d)?;
         let (lo, hi) = ranges.ranges[0][ch];
         let xs: Vec<i32> = (0..512).map(|i| lo + ((hi - lo).max(1) / 512 * i)).collect();
-        let resp = svc.call(ch as u64, xs.clone())?;
+        let resp = stream.call(xs.clone())?;
+        let regs = &fits.apot[0][ch];
         for (x, y) in xs.iter().zip(&resp.data) {
-            assert_eq!(*y, regs.eval(*x), "hardware != functional at x={x}");
+            assert_eq!(*y, regs.eval(*x), "{name}: hardware != functional at x={x}");
         }
         checked += xs.len();
     }

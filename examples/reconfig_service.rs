@@ -2,62 +2,75 @@
 //! (streams) with different activation functions share a small bank of
 //! GRAU workers; the service batches per stream and pays explicit
 //! reconfiguration cycles on every switch — the paper's runtime
-//! reconfigurability as a serving system.
+//! reconfigurability as a serving system, driven entirely through the
+//! typed `grau::api` facade: every stream is a `StreamHandle` built from
+//! a serializable `UnitDescriptor`, and phase 2 *reconfigures* the live
+//! handles to refitted descriptors mid-run.
 //!
 //! ```bash
 //! cargo run --release --example reconfig_service -- [requests] [workers]
 //! ```
 
 use grau::act::{Activation, FoldedActivation};
-use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
+use grau::api::{Backend, Pending, ServiceBuilder, StreamHandle, UnitDescriptor};
 use grau::fit::pipeline::{fit_folded, FitOptions};
 use grau::fit::ApproxKind;
+use grau::hw::GrauRegisters;
 use grau::util::rng::Rng;
 use std::time::Instant;
+
+/// Fit one layer's folded activation and emit its deployable descriptor.
+fn fit_layer(i: u64, act: Activation, scale: f64) -> UnitDescriptor {
+    let f = FoldedActivation::new(scale, 0.0, act, 1.0 / 120.0, 8);
+    let fit = fit_folded(&f, -1500, 1500, FitOptions { n_shifts: 16, ..Default::default() });
+    fit.descriptor(ApproxKind::Apot, &format!("layer{i}/{act:?}"))
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_req: usize = args.first().and_then(|v| v.parse().ok()).unwrap_or(2000);
     let workers: usize = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(4);
 
-    let svc = ActivationService::start(ServiceConfig {
-        workers,
-        max_batch: 16384,
-        backend: Backend::Functional,
-        ..Default::default()
-    });
+    let svc = ServiceBuilder::new()
+        .workers(workers)
+        .max_batch(16384)
+        .backend(Backend::Functional)
+        .start();
 
     // 12 streams = 12 layers with alternating activation functions and
-    // scales, all fitted independently (per-layer reconfig state).
+    // scales, all fitted independently (per-layer reconfig state).  Each
+    // registration hands back the handle that owns the stream.
     let acts = [Activation::Relu, Activation::Sigmoid, Activation::Silu, Activation::Tanh];
-    let mut fitted = Vec::new();
+    let mut streams: Vec<(StreamHandle, GrauRegisters)> = Vec::new();
     for i in 0..12u64 {
-        let act = acts[i as usize % acts.len()];
-        let f = FoldedActivation::new(0.002 + 0.0005 * i as f64, 0.0, act, 1.0 / 120.0, 8);
-        let fit = fit_folded(&f, -1500, 1500, FitOptions { n_shifts: 16, ..Default::default() });
-        svc.register(i, fit.apot.regs.clone(), ApproxKind::Apot);
-        fitted.push(fit.apot.regs);
+        let d = fit_layer(i, acts[i as usize % acts.len()], 0.002 + 0.0005 * i as f64);
+        let handle = svc.register_descriptor(&d).expect("register stream");
+        streams.push((handle, d.regs));
     }
 
     let mut rng = Rng::new(42);
     let t0 = Instant::now();
-    let mut pending = Vec::with_capacity(n_req);
-    for i in 0..n_req {
-        let stream = rng.range_i64(0, 12) as u64;
-        let n = 1024 + rng.range_usize(0, 3072);
-        let data: Vec<i32> = (0..n).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
-        pending.push((stream, data.clone(), svc.submit(stream, data)));
-        let _ = i;
+
+    // phase 1: mixed traffic over the fitted bank
+    run_wave(&streams, &mut rng, n_req / 2);
+
+    // phase 2: runtime reconfiguration — every layer is refitted at a
+    // new scale and the LIVE handles swap their register files via
+    // serialized descriptors; traffic then verifies against the NEW fits
+    for (i, (handle, regs)) in streams.iter_mut().enumerate() {
+        let d = fit_layer(i as u64, acts[i % acts.len()], 0.004 + 0.0003 * i as f64);
+        handle.reconfigure(&d).expect("reconfigure stream");
+        *regs = d.regs;
     }
-    // verify every response bit-exactly against the registered config
-    for (stream, data, rx) in pending {
-        let resp = rx.recv().expect("response");
-        let regs = &fitted[stream as usize];
-        for (x, y) in data.iter().zip(&resp.data) {
-            assert_eq!(*y, regs.eval(*x), "stream {stream}");
-        }
-    }
+    run_wave(&streams, &mut rng, n_req - n_req / 2);
+
     let dt = t0.elapsed().as_secs_f64();
+    let s0 = streams[0].0.metrics();
+    println!(
+        "  stream 0: {} reqs / {} elements, mean latency {:.0}µs (handle-scoped metrics)",
+        s0.completed, s0.elements_out, s0.mean_latency_us()
+    );
+    drop(streams); // handles evict their streams
     let m = svc.shutdown();
     println!(
         "served {} reqs / {:.1}M elements with {workers} workers in {:.3}s",
@@ -73,4 +86,24 @@ fn main() {
         "  reconfig amortization: {:.1} elements per reconfig",
         m.elements as f64 / m.reconfigs.max(1) as f64
     );
+}
+
+/// Fire `n_req` randomized requests across the stream bank and verify
+/// every response bit-exactly against the registered register file.
+fn run_wave(streams: &[(StreamHandle, GrauRegisters)], rng: &mut Rng, n_req: usize) {
+    let mut pending: Vec<(usize, Vec<i32>, Pending)> = Vec::with_capacity(n_req);
+    for _ in 0..n_req {
+        let si = rng.range_usize(0, streams.len());
+        let n = 1024 + rng.range_usize(0, 3072);
+        let data: Vec<i32> = (0..n).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
+        let pend = streams[si].0.submit(data.clone()).expect("submit");
+        pending.push((si, data, pend));
+    }
+    for (si, data, pend) in pending {
+        let resp = pend.recv().expect("response");
+        let regs = &streams[si].1;
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x), "stream {si}");
+        }
+    }
 }

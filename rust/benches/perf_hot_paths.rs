@@ -21,7 +21,7 @@
 //! `harness = false` bench targets from rotting.
 
 use grau::act::{Activation, FoldedActivation};
-use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
+use grau::api::{Backend, ServiceBuilder};
 use grau::fit::greedy::{select_breakpoints, GreedyOptions};
 use grau::fit::lsq::fit_lsq;
 use grau::fit::pipeline::{fit_folded, FitOptions};
@@ -147,21 +147,22 @@ fn main() {
         ("service functional 4w", Backend::Functional, 4),
         ("service cycle-sim 1w", Backend::CycleSim, 1),
     ] {
-        let svc = ActivationService::start(ServiceConfig {
-            workers,
-            backend,
-            ..Default::default()
-        });
-        svc.register(0, fit.apot.regs.clone(), ApproxKind::Apot);
-        svc.register(1, fit.pot.regs.clone(), ApproxKind::Pot);
+        let svc = ServiceBuilder::new().workers(workers).backend(backend).start();
+        let streams = [
+            svc.register(fit.apot.regs.clone(), ApproxKind::Apot).unwrap(),
+            svc.register(fit.pot.regs.clone(), ApproxKind::Pot).unwrap(),
+        ];
         let data: Vec<i32> = (0..4096).map(|i| (i as i32 % 6000) - 3000).collect();
         let rep = Bencher::new(label).elements(8 * 4096).min_time_ms(500).run(|| {
-            let pend: Vec<_> = (0..8).map(|i| svc.submit(i % 2, data.clone())).collect();
+            let pend: Vec<_> = (0..8usize)
+                .map(|i| streams[i % 2].submit(data.clone()).unwrap())
+                .collect();
             for p in pend {
                 p.recv().unwrap();
             }
         });
         let _ = rep;
+        drop(streams);
         svc.shutdown();
     }
 
@@ -208,24 +209,21 @@ fn main() {
     // --- §Perf L3 optimization: stream-affinity routing vs shared queue
     println!("\nperf: service reconfigs — shared queue vs stream affinity (12 streams, 4 workers)");
     for affinity in [false, true] {
-        let svc = ActivationService::start(ServiceConfig {
-            workers: 4,
-            affinity,
-            ..Default::default()
-        });
-        for i in 0..12u64 {
-            svc.register(i, fit.apot.regs.clone(), ApproxKind::Apot);
-        }
+        let svc = ServiceBuilder::new().workers(4).affinity(affinity).start();
+        let streams: Vec<_> = (0..12)
+            .map(|_| svc.register(fit.apot.regs.clone(), ApproxKind::Apot).unwrap())
+            .collect();
         let data: Vec<i32> = (0..2048).collect();
         let t0 = std::time::Instant::now();
         let mut pend = Vec::new();
-        for i in 0..600u64 {
-            pend.push(svc.submit(i % 12, data.clone()));
+        for i in 0..600usize {
+            pend.push(streams[i % 12].submit(data.clone()).unwrap());
         }
         for p in pend {
             p.recv().unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
+        drop(streams);
         let m = svc.shutdown();
         println!(
             "  affinity={affinity:<5} reconfigs {:>4} ({} cycles)  {:.2} Melem/s",

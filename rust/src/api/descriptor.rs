@@ -1,0 +1,461 @@
+//! Serializable unit descriptors — the deployable configuration
+//! artifact of one GRAU stream.
+//!
+//! The paper's runtime reconfiguration rewrites a register file; this
+//! module gives that register file a *stable, versioned, on-disk form*:
+//! a [`UnitDescriptor`] is everything needed to reconstruct an
+//! activation unit in another process — register contents, approximation
+//! family, input/output bit widths, the backend [`UnitKind`] it should
+//! run on, and fit provenance.  `fit::pipeline` emits descriptors,
+//! `runtime::manifest` loads banks of them from disk, and both the
+//! activation service and the QNN engine build units *from descriptors*
+//! through the `hw::unit` registry, so fit → file → serving is a
+//! bit-exact round trip (property-tested in
+//! `rust/tests/api_descriptor.rs`).
+//!
+//! The JSON schema (version 1):
+//!
+//! ```json
+//! {
+//!   "format": "grau-unit-descriptor",
+//!   "version": 1,
+//!   "unit": "plan",
+//!   "approx": "apot",
+//!   "in_bits": 32,
+//!   "out_bits": 8,
+//!   "registers": {
+//!     "n_bits": 8, "n_segments": 2, "shift_lo": 0, "n_shifts": 4,
+//!     "thresholds": [0],
+//!     "x0": [0, 0], "y0": [0, 0], "sign": [1, 1], "mask": [0, 1]
+//!   },
+//!   "provenance": {"function": "relu", "rmse_lsb": 0.31,
+//!                  "source": "fit::pipeline"}
+//! }
+//! ```
+//!
+//! Unknown formats and future versions are rejected on parse (never
+//! silently reinterpreted), and every numeric field is range-checked
+//! before a [`GrauRegisters`] is constructed, so a malformed file can
+//! fail with a typed error but can never panic the loader.
+
+use std::path::Path;
+
+use crate::error::{ensure, Context, Result};
+use crate::fit::ApproxKind;
+use crate::hw::unit::{build_functional_unit, build_unit, ActivationUnit, FunctionalUnit, UnitKind};
+use crate::hw::{GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Format tag every descriptor file carries.
+pub const DESCRIPTOR_FORMAT: &str = "grau-unit-descriptor";
+
+/// Current descriptor schema version.  Parsing rejects any other value.
+pub const DESCRIPTOR_VERSION: u32 = 1;
+
+/// Where a descriptor came from: the fitted function and its fit error.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    /// name of the fitted activation (e.g. `"silu"`, `"site3/ch7"`)
+    pub function: String,
+    /// RMS fit error in output LSBs, when the producer measured one
+    pub rmse_lsb: Option<f64>,
+    /// producing component (e.g. `"fit::pipeline"`)
+    pub source: String,
+}
+
+/// A versioned, JSON-serializable "reconfiguration bitstream": one
+/// activation unit configuration that can leave the process and be
+/// rebuilt bit-exactly elsewhere.
+///
+/// ```
+/// use grau::api::UnitDescriptor;
+/// use grau::fit::ApproxKind;
+/// use grau::hw::{FunctionalUnit, GrauRegisters};
+///
+/// let mut regs = GrauRegisters::new(8, 1, 0, 4);
+/// regs.mask[0] = 0b0001; // identity slope
+/// let d = UnitDescriptor::new(regs.clone(), ApproxKind::Pot);
+/// let text = d.to_json().to_string();
+/// let back = UnitDescriptor::parse(&text).unwrap();
+/// assert_eq!(back, d);
+/// let unit = back.build_functional().unwrap();
+/// assert_eq!(unit.eval_ref(37), regs.eval(37));
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnitDescriptor {
+    /// schema version (always [`DESCRIPTOR_VERSION`] for in-memory values)
+    pub version: u32,
+    /// backend the unit should be constructed on
+    pub unit: UnitKind,
+    /// approximation family the register file encodes
+    pub approx: ApproxKind,
+    /// MAC input width in bits (the accumulator feeding the unit)
+    pub in_bits: u8,
+    /// quantized output width in bits (mirrors `regs.n_bits`)
+    pub out_bits: u8,
+    /// the register file itself (unused trailing slots normalized)
+    pub regs: GrauRegisters,
+    pub provenance: Option<Provenance>,
+}
+
+impl UnitDescriptor {
+    /// Wrap a register file as a descriptor on the default backend
+    /// ([`UnitKind::Plan`], the compiled functional fast path).  Unused
+    /// register slots beyond `n_segments` are reset to their
+    /// constructor defaults so serialization is canonical.
+    pub fn new(regs: GrauRegisters, approx: ApproxKind) -> UnitDescriptor {
+        let mut regs = regs;
+        for j in regs.n_segments.max(1) - 1..MAX_SEGMENTS - 1 {
+            regs.thresholds[j] = PAD_THRESHOLD;
+        }
+        for j in regs.n_segments..MAX_SEGMENTS {
+            regs.x0[j] = 0;
+            regs.y0[j] = 0;
+            regs.sign[j] = 1;
+            regs.mask[j] = 0;
+        }
+        UnitDescriptor {
+            version: DESCRIPTOR_VERSION,
+            unit: UnitKind::Plan,
+            approx,
+            in_bits: 32,
+            out_bits: regs.n_bits,
+            regs,
+            provenance: None,
+        }
+    }
+
+    /// Pin the descriptor to a specific backend.
+    pub fn with_unit(mut self, unit: UnitKind) -> UnitDescriptor {
+        self.unit = unit;
+        self
+    }
+
+    /// Attach fit provenance.
+    pub fn with_provenance(mut self, p: Provenance) -> UnitDescriptor {
+        self.provenance = Some(p);
+        self
+    }
+
+    /// Check every invariant a well-formed descriptor must satisfy,
+    /// including that the pinned backend can realize the register file
+    /// bit-exactly ([`UnitKind::check`]).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.version == DESCRIPTOR_VERSION,
+            "unsupported descriptor version {} (this build reads version {DESCRIPTOR_VERSION})",
+            self.version
+        );
+        let r = &self.regs;
+        ensure!(
+            (1..=MAX_SEGMENTS).contains(&r.n_segments),
+            "n_segments {} outside 1..={MAX_SEGMENTS}",
+            r.n_segments
+        );
+        ensure!(
+            matches!(r.n_shifts, 4 | 8 | 16),
+            "n_shifts {} is not a supported window length (4/8/16)",
+            r.n_shifts
+        );
+        ensure!(
+            (1..=16).contains(&r.n_bits),
+            "n_bits {} outside 1..=16",
+            r.n_bits
+        );
+        ensure!(
+            r.shift_lo as u32 + r.n_shifts as u32 <= 32,
+            "shift window [{}..{}] exceeds the 32-bit shifter range",
+            r.shift_lo,
+            r.shift_lo as u32 + r.n_shifts as u32
+        );
+        ensure!(
+            self.out_bits == r.n_bits,
+            "out_bits {} disagrees with registers.n_bits {}",
+            self.out_bits,
+            r.n_bits
+        );
+        ensure!(
+            (1..=32).contains(&self.in_bits),
+            "in_bits {} outside 1..=32",
+            self.in_bits
+        );
+        for j in 0..r.n_segments {
+            ensure!(
+                r.sign[j] == 1 || r.sign[j] == -1,
+                "segment {j}: sign {} must be +1 or -1",
+                r.sign[j]
+            );
+            ensure!(
+                u64::from(r.mask[j]) < 1u64 << r.n_shifts,
+                "segment {j}: mask {:#x} wider than the {}-shift window",
+                r.mask[j],
+                r.n_shifts
+            );
+        }
+        self.unit
+            .check(r, self.approx)
+            .with_context(|| format!("backend '{}' cannot realize this register file", self.unit.name()))
+    }
+
+    /// Serialize to the version-1 JSON schema.
+    pub fn to_json(&self) -> Json {
+        let r = &self.regs;
+        let ints = |vals: &[i32]| arr(vals.iter().map(|&v| num(v as f64)));
+        let mut fields = vec![
+            ("format", s(DESCRIPTOR_FORMAT)),
+            ("version", num(self.version as f64)),
+            ("unit", s(self.unit.name())),
+            ("approx", s(self.approx.slug())),
+            ("in_bits", num(self.in_bits as f64)),
+            ("out_bits", num(self.out_bits as f64)),
+            (
+                "registers",
+                obj(vec![
+                    ("n_bits", num(r.n_bits as f64)),
+                    ("n_segments", num(r.n_segments as f64)),
+                    ("shift_lo", num(r.shift_lo as f64)),
+                    ("n_shifts", num(r.n_shifts as f64)),
+                    ("thresholds", ints(&r.thresholds[..r.n_segments - 1])),
+                    ("x0", ints(&r.x0[..r.n_segments])),
+                    ("y0", ints(&r.y0[..r.n_segments])),
+                    ("sign", ints(&r.sign[..r.n_segments])),
+                    (
+                        "mask",
+                        arr(r.mask[..r.n_segments].iter().map(|&m| num(m as f64))),
+                    ),
+                ]),
+            ),
+        ];
+        if let Some(p) = &self.provenance {
+            let mut prov = vec![("function", s(&p.function)), ("source", s(&p.source))];
+            if let Some(e) = p.rmse_lsb {
+                prov.push(("rmse_lsb", num(e)));
+            }
+            fields.push(("provenance", obj(prov)));
+        }
+        obj(fields)
+    }
+
+    /// Deserialize and validate a parsed JSON value.
+    pub fn from_json(j: &Json) -> Result<UnitDescriptor> {
+        let format = j.get("format").as_str().context("descriptor missing 'format'")?;
+        ensure!(
+            format == DESCRIPTOR_FORMAT,
+            "not a unit descriptor (format {format:?}, want {DESCRIPTOR_FORMAT:?})"
+        );
+        let version = int_field(j.get("version"), "version", 0, u32::MAX as i64)? as u32;
+        ensure!(
+            version == DESCRIPTOR_VERSION,
+            "unsupported descriptor version {version} (this build reads version {DESCRIPTOR_VERSION})"
+        );
+        let unit_name = j.get("unit").as_str().context("descriptor missing 'unit'")?;
+        let unit = UnitKind::parse(unit_name)
+            .with_context(|| format!("unknown unit backend {unit_name:?}"))?;
+        let approx_name = j.get("approx").as_str().context("descriptor missing 'approx'")?;
+        let approx = ApproxKind::parse_slug(approx_name)
+            .with_context(|| format!("unknown approximation family {approx_name:?}"))?;
+        let in_bits = int_field(j.get("in_bits"), "in_bits", 1, 32)? as u8;
+        let out_bits = int_field(j.get("out_bits"), "out_bits", 1, 16)? as u8;
+
+        let rj = j.get("registers");
+        ensure!(rj.as_obj().is_some(), "descriptor missing 'registers' object");
+        let n_bits = int_field(rj.get("n_bits"), "registers.n_bits", 1, 16)? as u8;
+        let n_segments =
+            int_field(rj.get("n_segments"), "registers.n_segments", 1, MAX_SEGMENTS as i64)? as usize;
+        let shift_lo = int_field(rj.get("shift_lo"), "registers.shift_lo", 0, 31)? as u8;
+        let n_shifts = int_field(rj.get("n_shifts"), "registers.n_shifts", 4, 16)? as u8;
+        ensure!(
+            matches!(n_shifts, 4 | 8 | 16),
+            "registers.n_shifts {n_shifts} is not a supported window length (4/8/16)"
+        );
+        let mut regs = GrauRegisters::new(n_bits, n_segments, shift_lo, n_shifts);
+        let ths = int_array(rj.get("thresholds"), "registers.thresholds", n_segments - 1)?;
+        regs.thresholds[..n_segments - 1].copy_from_slice(&ths);
+        regs.x0[..n_segments]
+            .copy_from_slice(&int_array(rj.get("x0"), "registers.x0", n_segments)?);
+        regs.y0[..n_segments]
+            .copy_from_slice(&int_array(rj.get("y0"), "registers.y0", n_segments)?);
+        regs.sign[..n_segments]
+            .copy_from_slice(&int_array(rj.get("sign"), "registers.sign", n_segments)?);
+        let masks = rj.get("mask").as_arr().context("registers.mask missing")?;
+        ensure!(
+            masks.len() == n_segments,
+            "registers.mask has {} entries, want {n_segments}",
+            masks.len()
+        );
+        for (jdx, m) in masks.iter().enumerate() {
+            regs.mask[jdx] =
+                int_field(m, "registers.mask entry", 0, u32::MAX as i64)? as u32;
+        }
+
+        let provenance = match j.get("provenance") {
+            Json::Null => None,
+            p => Some(Provenance {
+                function: p.get("function").as_str().unwrap_or("").to_string(),
+                rmse_lsb: p.get("rmse_lsb").as_f64(),
+                source: p.get("source").as_str().unwrap_or("").to_string(),
+            }),
+        };
+
+        let d = UnitDescriptor {
+            version,
+            unit,
+            approx,
+            in_bits,
+            out_bits,
+            regs,
+            provenance,
+        };
+        d.validate()?;
+        Ok(d)
+    }
+
+    /// Parse a descriptor from JSON text.
+    pub fn parse(text: &str) -> Result<UnitDescriptor> {
+        let j = Json::parse(text).context("parse unit descriptor JSON")?;
+        UnitDescriptor::from_json(&j)
+    }
+
+    /// Write the descriptor to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("write unit descriptor {path:?}"))
+    }
+
+    /// Load and validate a descriptor file.
+    pub fn load(path: &Path) -> Result<UnitDescriptor> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read unit descriptor {path:?}"))?;
+        UnitDescriptor::parse(&text).with_context(|| format!("load unit descriptor {path:?}"))
+    }
+
+    /// Construct the unit this descriptor describes through the backend
+    /// registry (validating first).
+    pub fn build(&self) -> Result<Box<dyn ActivationUnit>> {
+        self.validate()?;
+        build_unit(self.unit, &self.regs, self.approx)
+    }
+
+    /// Construct the thread-shareable functional form (what the QNN
+    /// engine stores per site/channel).  Fails for cycle-accurate
+    /// backends, whose evaluation mutates pipeline state.
+    pub fn build_functional(&self) -> Result<Box<dyn FunctionalUnit + Send + Sync>> {
+        self.validate()?;
+        build_functional_unit(self.unit, &self.regs, self.approx)
+    }
+}
+
+/// Integer field accessor: present, integral, and inside `[lo, hi]`.
+fn int_field(v: &Json, name: &str, lo: i64, hi: i64) -> Result<i64> {
+    let f = v.as_f64().with_context(|| format!("{name} missing or not a number"))?;
+    ensure!(f.fract() == 0.0, "{name} must be an integer, got {f}");
+    let i = f as i64;
+    ensure!(
+        (lo..=hi).contains(&i),
+        "{name} {i} outside the valid range [{lo}, {hi}]"
+    );
+    Ok(i)
+}
+
+/// Fixed-length i32 array field.
+fn int_array(v: &Json, name: &str, want: usize) -> Result<Vec<i32>> {
+    let a = v.as_arr().with_context(|| format!("{name} missing or not an array"))?;
+    ensure!(a.len() == want, "{name} has {} entries, want {want}", a.len());
+    a.iter()
+        .map(|e| int_field(e, name, i32::MIN as i64, i32::MAX as i64).map(|i| i as i32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_regs() -> GrauRegisters {
+        let mut r = GrauRegisters::new(8, 3, 2, 8);
+        r.thresholds[..2].copy_from_slice(&[-100, 250]);
+        r.x0[..3].copy_from_slice(&[-500, -100, 250]);
+        r.y0[..3].copy_from_slice(&[-90, -10, 80]);
+        r.sign[..3].copy_from_slice(&[1, 1, -1]);
+        r.mask[..3].copy_from_slice(&[0b0001, 0b0110, 0b1000]);
+        r
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let d = UnitDescriptor::new(demo_regs(), ApproxKind::Apot)
+            .with_unit(UnitKind::Reference)
+            .with_provenance(Provenance {
+                function: "silu".into(),
+                rmse_lsb: Some(0.42),
+                source: "fit::pipeline".into(),
+            });
+        let text = d.to_json().to_string();
+        let back = UnitDescriptor::parse(&text).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn normalizes_unused_register_slots() {
+        let mut regs = demo_regs();
+        regs.x0[5] = 999; // junk beyond n_segments
+        regs.mask[7] = 0xff;
+        let d = UnitDescriptor::new(regs, ApproxKind::Apot);
+        assert_eq!(d.regs.x0[5], 0);
+        assert_eq!(d.regs.mask[7], 0);
+        let back = UnitDescriptor::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn rejects_wrong_format_and_version() {
+        let d = UnitDescriptor::new(demo_regs(), ApproxKind::Apot);
+        let mut j = d.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("format".into(), s("something-else"));
+        }
+        assert!(UnitDescriptor::from_json(&j).is_err());
+        let mut j = d.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), num(2.0));
+        }
+        let e = UnitDescriptor::from_json(&j).unwrap_err();
+        assert!(format!("{e:#}").contains("version 2"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_fields() {
+        let d = UnitDescriptor::new(demo_regs(), ApproxKind::Apot);
+        // mask wider than the shift window
+        let mut bad = d.clone();
+        bad.regs.mask[0] = 1 << 9;
+        assert!(bad.validate().is_err());
+        // zero sign
+        let mut bad = d.clone();
+        bad.regs.sign[1] = 0;
+        assert!(bad.validate().is_err());
+        // out_bits disagreeing with the register file
+        let mut bad = d.clone();
+        bad.out_bits = 4;
+        assert!(bad.validate().is_err());
+        // backend that cannot realize the file: MT needs flat steps
+        let bad = d.with_unit(UnitKind::Mt);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn built_units_match_source_registers() {
+        let regs = demo_regs();
+        let d = UnitDescriptor::new(regs.clone(), ApproxKind::Apot);
+        let unit = d.build_functional().unwrap();
+        for x in (-2000..2000).step_by(17) {
+            assert_eq!(unit.eval_ref(x), regs.eval(x), "x={x}");
+        }
+        let mut hw = d.clone().with_unit(UnitKind::Pipelined).build().unwrap();
+        let xs: Vec<i32> = (-600..600).step_by(7).collect();
+        let mut out = Vec::new();
+        hw.eval_batch(&xs, &mut out);
+        for (x, y) in xs.iter().zip(&out) {
+            assert_eq!(*y, regs.eval(*x), "pipelined x={x}");
+        }
+    }
+}

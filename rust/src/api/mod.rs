@@ -1,0 +1,48 @@
+//! The crate's public serving surface: serializable unit descriptors
+//! and the typed stream-handle service facade.
+//!
+//! GRAU's premise is that one hardware unit is *reconfigured* per
+//! layer/precision at runtime.  This layer makes "a configuration" a
+//! first-class artifact and "a stream" a first-class capability:
+//!
+//! * [`UnitDescriptor`] ([`descriptor`]) — a versioned, JSON-serializable
+//!   reconfiguration bitstream (register file + approximation family +
+//!   bit widths + backend + fit provenance).  `fit::pipeline` emits
+//!   them ([`crate::fit::pipeline::FitResult::descriptor`]),
+//!   [`crate::runtime::manifest::DescriptorBank`] stores banks of them
+//!   on disk, and the service and QNN engine construct units *from*
+//!   them — fit → file → serving is a bit-exact round trip.
+//! * [`ServiceBuilder`] / [`Service`] / [`StreamHandle`] ([`service`]) —
+//!   the only public way to drive the L3 activation service.  Raw `u64`
+//!   stream ids never escape: registering returns a handle that scopes
+//!   submission, reconfiguration, and per-stream metrics, and evicts its
+//!   stream on drop.  Failures are typed [`ServiceError`]s.
+//!
+//! ```
+//! use grau::api::{ServiceBuilder, UnitDescriptor};
+//! use grau::fit::ApproxKind;
+//! use grau::hw::GrauRegisters;
+//!
+//! // a configuration artifact (normally emitted by fit::pipeline)...
+//! let mut regs = GrauRegisters::new(8, 1, 0, 4);
+//! regs.mask[0] = 0b0001;
+//! let json = UnitDescriptor::new(regs, ApproxKind::Pot).to_json().to_string();
+//!
+//! // ...crosses a process boundary and drives the service
+//! let d = UnitDescriptor::parse(&json).unwrap();
+//! let svc = ServiceBuilder::new().workers(1).start();
+//! let stream = svc.register_descriptor(&d).unwrap();
+//! assert_eq!(stream.call(vec![5, 9000]).unwrap().data, vec![5, 127]);
+//! svc.shutdown();
+//! ```
+
+pub mod descriptor;
+pub mod service;
+
+pub use descriptor::{Provenance, UnitDescriptor, DESCRIPTOR_FORMAT, DESCRIPTOR_VERSION};
+pub use service::{Pending, Service, ServiceBuilder, ServiceError, StreamHandle, StreamMetrics};
+
+// the service facade speaks these types directly
+pub use crate::coordinator::service::{ActResponse, Backend, MetricsSnapshot, StreamError};
+// on-disk banks of descriptors live with the other manifest loaders
+pub use crate::runtime::manifest::DescriptorBank;

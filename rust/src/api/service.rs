@@ -1,0 +1,645 @@
+//! The typed service facade: [`ServiceBuilder`] → [`Service`] →
+//! [`StreamHandle`].
+//!
+//! The engine room ([`crate::coordinator::service`]) routes requests by
+//! raw `u64` stream ids; this module is the only public way to drive it.
+//! Registering a configuration returns a [`StreamHandle`] that *owns*
+//! its stream: all submission, reconfiguration, and per-stream metrics
+//! are scoped to the handle, stream ids never escape, and dropping the
+//! handle evicts the stream from the service registry.  Admission
+//! control and worker failures surface as typed [`ServiceError`]s
+//! (`Busy` / `Closed` / `UnknownStream` / ...), never as ad-hoc strings.
+//!
+//! Lifecycle rules (regression-tested in
+//! `rust/tests/service_integration.rs`):
+//!
+//! * [`Service::shutdown`] drains every in-flight request — already
+//!   submitted [`Pending`]s still resolve afterwards.
+//! * Handles outliving the service are safe: operations return
+//!   [`ServiceError::Closed`] and dropping the last handle after
+//!   shutdown neither panics nor leaks a worker.
+//! * Dropping the [`Service`] *without* calling `shutdown` keeps the
+//!   workers alive until the last handle drops, then joins them.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, RwLock};
+
+use crate::api::descriptor::UnitDescriptor;
+use crate::coordinator::service::{
+    ActResponse, ActivationService, Backend, Metrics, MetricsSnapshot, ServiceConfig, StreamError,
+};
+use crate::fit::ApproxKind;
+use crate::hw::unit::UnitKind;
+use crate::hw::GrauRegisters;
+
+/// Typed failure taxonomy of the service facade.
+#[derive(Debug)]
+pub enum ServiceError {
+    /// Admission control: the configured in-flight limit is reached.
+    /// Consume (or drop) outstanding [`Pending`] responses to free slots.
+    Busy { in_flight: u64, limit: u64 },
+    /// The service has been shut down.
+    Closed,
+    /// The worker saw a stream id that is not (or no longer) registered.
+    UnknownStream(u64),
+    /// A registration / reconfiguration was rejected up front
+    /// (malformed descriptor, backend outside its representable domain).
+    InvalidConfig(String),
+    /// The worker rejected the stream's registered configuration.
+    Rejected { stream: u64, reason: String },
+    /// The response channel died (a worker panicked).
+    Disconnected,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Busy { in_flight, limit } => {
+                write!(f, "service busy: {in_flight} requests in flight (limit {limit})")
+            }
+            ServiceError::Closed => write!(f, "service is shut down"),
+            ServiceError::UnknownStream(id) => write!(f, "stream {id} not registered"),
+            ServiceError::InvalidConfig(reason) => write!(f, "invalid configuration: {reason}"),
+            ServiceError::Rejected { stream, reason } => {
+                write!(f, "stream {stream} rejected: {reason}")
+            }
+            ServiceError::Disconnected => write!(f, "response channel disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<StreamError> for ServiceError {
+    fn from(e: StreamError) -> ServiceError {
+        match e {
+            StreamError::UnknownStream(id) => ServiceError::UnknownStream(id),
+            StreamError::Rejected { stream, reason } => ServiceError::Rejected { stream, reason },
+        }
+    }
+}
+
+/// Fluent construction of an activation service — replaces field-poking
+/// a config struct, and is the only public way to start one.
+///
+/// ```
+/// use grau::api::{Backend, ServiceBuilder};
+/// use grau::fit::ApproxKind;
+/// use grau::hw::GrauRegisters;
+///
+/// let svc = ServiceBuilder::new()
+///     .workers(2)
+///     .backend(Backend::Functional)
+///     .start();
+/// let mut regs = GrauRegisters::new(8, 1, 0, 4);
+/// regs.mask[0] = 0b0010; // slope 2^-1
+/// let stream = svc.register(regs, ApproxKind::Pot).unwrap();
+/// assert_eq!(stream.call(vec![-64, 0, 64]).unwrap().data, vec![-32, 0, 32]);
+/// svc.shutdown();
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServiceBuilder {
+    config: ServiceConfig,
+    queue_limit: Option<u64>,
+}
+
+impl Default for ServiceBuilder {
+    fn default() -> Self {
+        ServiceBuilder {
+            config: ServiceConfig::default(),
+            queue_limit: None,
+        }
+    }
+}
+
+impl ServiceBuilder {
+    pub fn new() -> ServiceBuilder {
+        ServiceBuilder::default()
+    }
+
+    /// Worker thread count (Pjrt always runs single-worker).
+    pub fn workers(mut self, n: usize) -> ServiceBuilder {
+        self.config.workers = n;
+        self
+    }
+
+    /// Dynamic-batcher coalescing limit, in elements.
+    pub fn max_batch(mut self, n: usize) -> ServiceBuilder {
+        self.config.max_batch = n;
+        self
+    }
+
+    /// Service-wide default backend (streams can still pin their own).
+    pub fn backend(mut self, b: Backend) -> ServiceBuilder {
+        self.config.backend = b;
+        self
+    }
+
+    /// Stream→worker hash affinity (default on).
+    pub fn affinity(mut self, on: bool) -> ServiceBuilder {
+        self.config.affinity = on;
+        self
+    }
+
+    /// Artifacts directory (needed by the Pjrt backend).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> ServiceBuilder {
+        self.config.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Admission control: cap requests submitted but not yet consumed
+    /// (via [`Pending::recv`] or drop).  Over the cap, `submit` returns
+    /// [`ServiceError::Busy`] instead of queueing unboundedly.
+    pub fn queue_limit(mut self, n: u64) -> ServiceBuilder {
+        self.queue_limit = Some(n);
+        self
+    }
+
+    /// Start the workers and return the facade.
+    pub fn start(self) -> Service {
+        let svc = ActivationService::start(self.config);
+        Service {
+            core: Arc::new(Core {
+                metrics: Arc::clone(&svc.metrics),
+                inner: RwLock::new(Some(svc)),
+                closed: AtomicBool::new(false),
+                queue_limit: self.queue_limit,
+                submitted: AtomicU64::new(0),
+                consumed: AtomicU64::new(0),
+                next_stream: AtomicU64::new(0),
+            }),
+        }
+    }
+}
+
+/// Shared state behind the facade: the engine room (taken at shutdown),
+/// service-wide metrics, and the admission counters.
+struct Core {
+    inner: RwLock<Option<ActivationService>>,
+    metrics: Arc<Metrics>,
+    closed: AtomicBool,
+    queue_limit: Option<u64>,
+    /// requests admitted through any handle
+    submitted: AtomicU64,
+    /// responses consumed (or abandoned) by their [`Pending`]
+    consumed: AtomicU64,
+    next_stream: AtomicU64,
+}
+
+impl Core {
+    fn with_service<T>(&self, f: impl FnOnce(&ActivationService) -> T) -> Result<T, ServiceError> {
+        let guard = self.inner.read().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
+            Some(svc) if !self.closed.load(Ordering::Acquire) => Ok(f(svc)),
+            _ => Err(ServiceError::Closed),
+        }
+    }
+
+    /// Reserve an in-flight slot.  Returns whether a slot was actually
+    /// counted (no limit configured ⇒ nothing to release later).
+    fn admit(&self) -> Result<bool, ServiceError> {
+        let Some(limit) = self.queue_limit else {
+            return Ok(false);
+        };
+        let prev = self.submitted.fetch_add(1, Ordering::AcqRel);
+        let consumed = self.consumed.load(Ordering::Acquire);
+        let in_flight = prev.saturating_sub(consumed);
+        if in_flight >= limit {
+            self.submitted.fetch_sub(1, Ordering::AcqRel);
+            return Err(ServiceError::Busy { in_flight, limit });
+        }
+        Ok(true)
+    }
+
+    fn release(&self) {
+        self.consumed.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn take_service(&self) -> Option<ActivationService> {
+        self.closed.store(true, Ordering::SeqCst);
+        self.inner.write().unwrap_or_else(|e| e.into_inner()).take()
+    }
+}
+
+impl Drop for Core {
+    fn drop(&mut self) {
+        // the facade was dropped without an explicit shutdown: join the
+        // workers so they never outlive the last handle
+        self.closed.store(true, Ordering::SeqCst);
+        if let Some(svc) = self
+            .inner
+            .get_mut()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+        {
+            svc.shutdown();
+        }
+    }
+}
+
+/// The activation service facade.  Cheap to clone; all clones share one
+/// worker pool.  See the [module docs](crate::api::service) for
+/// lifecycle rules.
+#[derive(Clone)]
+pub struct Service {
+    core: Arc<Core>,
+}
+
+impl Service {
+    /// Shorthand for [`ServiceBuilder::new`].
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::new()
+    }
+
+    /// Register a stream on the service-wide default backend, returning
+    /// the handle that owns it.  Representable-domain violations surface
+    /// here as [`ServiceError::InvalidConfig`], not on the first call.
+    pub fn register(
+        &self,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+    ) -> Result<StreamHandle, ServiceError> {
+        self.register_impl(regs, kind, None)
+    }
+
+    /// Register a stream pinned to a specific registry backend (e.g. a
+    /// cycle-sim validation stream alongside functional traffic).
+    pub fn register_unit(
+        &self,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+        unit: UnitKind,
+    ) -> Result<StreamHandle, ServiceError> {
+        self.register_impl(regs, kind, Some(unit))
+    }
+
+    /// Register a stream from a serialized [`UnitDescriptor`] — the
+    /// fit → file → service round trip.  The descriptor's pinned backend
+    /// is honored.
+    pub fn register_descriptor(&self, d: &UnitDescriptor) -> Result<StreamHandle, ServiceError> {
+        d.validate()
+            .map_err(|e| ServiceError::InvalidConfig(format!("{e:#}")))?;
+        // validate() already proved unit/regs compatibility — skip the
+        // eager re-check in register_impl
+        self.register_checked(d.regs.clone(), d.approx, Some(d.unit))
+    }
+
+    fn register_impl(
+        &self,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+        unit: Option<UnitKind>,
+    ) -> Result<StreamHandle, ServiceError> {
+        // eager representable-domain check against the backend the
+        // stream will actually run on
+        let effective = unit.or_else(|| {
+            self.core
+                .with_service(|svc| svc.config.backend.default_unit())
+                .ok()
+                .flatten()
+        });
+        if let Some(k) = effective {
+            if let Err(e) = k.check(&regs, kind) {
+                return Err(ServiceError::InvalidConfig(format!(
+                    "backend '{}': {e:#}",
+                    k.name()
+                )));
+            }
+        }
+        self.register_checked(regs, kind, unit)
+    }
+
+    fn register_checked(
+        &self,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+        unit: Option<UnitKind>,
+    ) -> Result<StreamHandle, ServiceError> {
+        let id = self.core.with_service(|svc| {
+            let id = self.core.next_stream.fetch_add(1, Ordering::Relaxed);
+            match unit {
+                Some(k) => svc.register_unit(id, regs, kind, k),
+                None => svc.register(id, regs, kind),
+            }
+            id
+        })?;
+        Ok(StreamHandle {
+            core: Arc::clone(&self.core),
+            id,
+            stats: Arc::new(StreamStats::default()),
+        })
+    }
+
+    /// Service-wide metrics (usable before and after shutdown).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.core.metrics.snapshot()
+    }
+
+    /// Stop accepting work, drain every in-flight request, join the
+    /// workers, and return the final metrics.  Outstanding
+    /// [`StreamHandle`]s and [`Pending`]s stay safe to use: submissions
+    /// return [`ServiceError::Closed`], already-submitted responses
+    /// still resolve.
+    pub fn shutdown(self) -> MetricsSnapshot {
+        match self.core.take_service() {
+            Some(svc) => svc.shutdown(),
+            None => self.core.metrics.snapshot(),
+        }
+    }
+}
+
+/// Per-stream counters, tracked handle-side.
+#[derive(Default)]
+struct StreamStats {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    elements_in: AtomicU64,
+    elements_out: AtomicU64,
+    latency_us_sum: AtomicU64,
+    latency_us_max: AtomicU64,
+}
+
+/// Snapshot of one stream's metrics (see [`StreamHandle::metrics`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamMetrics {
+    /// requests submitted through the handle
+    pub submitted: u64,
+    /// responses received successfully via [`Pending::recv`] / `call`
+    pub completed: u64,
+    /// responses that carried a worker-side error
+    pub errors: u64,
+    pub elements_in: u64,
+    pub elements_out: u64,
+    pub latency_us_sum: u64,
+    pub latency_us_max: u64,
+}
+
+impl StreamMetrics {
+    /// Mean latency over the responses this handle consumed.
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed + self.errors;
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_us_sum as f64 / n as f64
+        }
+    }
+}
+
+/// Owned access to one registered stream.  All submission and
+/// reconfiguration goes through the handle; dropping it evicts the
+/// stream from the service registry.
+pub struct StreamHandle {
+    core: Arc<Core>,
+    id: u64,
+    stats: Arc<StreamStats>,
+}
+
+impl StreamHandle {
+    /// Submit asynchronously.  The returned [`Pending`] resolves to the
+    /// response; dropping it discards the response safely.
+    pub fn submit(&self, data: Vec<i32>) -> Result<Pending, ServiceError> {
+        let n = data.len() as u64;
+        let counted = self.core.admit()?;
+        let rx = match self.core.with_service(|svc| svc.submit(self.id, data)) {
+            Ok(rx) => rx,
+            Err(e) => {
+                if counted {
+                    self.core.release();
+                }
+                return Err(e);
+            }
+        };
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.elements_in.fetch_add(n, Ordering::Relaxed);
+        Ok(Pending {
+            rx,
+            core: Arc::clone(&self.core),
+            stats: Arc::clone(&self.stats),
+            counted,
+            settled: false,
+        })
+    }
+
+    /// Submit several requests back-to-back (they may coalesce into one
+    /// worker batch).  On error, responses already submitted by this
+    /// call are discarded.
+    pub fn submit_batch<I>(&self, batches: I) -> Result<Vec<Pending>, ServiceError>
+    where
+        I: IntoIterator<Item = Vec<i32>>,
+    {
+        let mut out = Vec::new();
+        for data in batches {
+            out.push(self.submit(data)?);
+        }
+        Ok(out)
+    }
+
+    /// Blocking convenience call: submit + receive.
+    pub fn call(&self, data: Vec<i32>) -> Result<ActResponse, ServiceError> {
+        self.submit(data)?.recv()
+    }
+
+    /// Runtime reconfiguration from a serialized descriptor: replace
+    /// this stream's register file / family / backend.  The worker
+    /// replays the register writes (counted in the reconfig metrics) on
+    /// the stream's next request.
+    pub fn reconfigure(&self, d: &UnitDescriptor) -> Result<(), ServiceError> {
+        d.validate()
+            .map_err(|e| ServiceError::InvalidConfig(format!("{e:#}")))?;
+        self.core.with_service(|svc| {
+            svc.register_unit(self.id, d.regs.clone(), d.approx, d.unit);
+        })
+    }
+
+    /// This stream's metrics (tracked handle-side).
+    pub fn metrics(&self) -> StreamMetrics {
+        let s = &self.stats;
+        StreamMetrics {
+            submitted: s.submitted.load(Ordering::Relaxed),
+            completed: s.completed.load(Ordering::Relaxed),
+            errors: s.errors.load(Ordering::Relaxed),
+            elements_in: s.elements_in.load(Ordering::Relaxed),
+            elements_out: s.elements_out.load(Ordering::Relaxed),
+            latency_us_sum: s.latency_us_sum.load(Ordering::Relaxed),
+            latency_us_max: s.latency_us_max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for StreamHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamHandle").field("id", &self.id).finish()
+    }
+}
+
+impl Drop for StreamHandle {
+    fn drop(&mut self) {
+        // evict the stream; after shutdown there is nothing to evict and
+        // this must stay a safe no-op (regression-tested)
+        let _ = self.core.with_service(|svc| svc.deregister(self.id));
+    }
+}
+
+/// An in-flight response.  Consume with [`Pending::recv`]; dropping it
+/// abandons the response (the worker's send is lossy-safe) and frees
+/// the admission slot either way.
+pub struct Pending {
+    rx: Receiver<ActResponse>,
+    core: Arc<Core>,
+    stats: Arc<StreamStats>,
+    counted: bool,
+    settled: bool,
+}
+
+impl Pending {
+    /// Block for the response.  Worker-side failures come back as typed
+    /// errors ([`ServiceError::UnknownStream`] / [`ServiceError::Rejected`]).
+    pub fn recv(mut self) -> Result<ActResponse, ServiceError> {
+        let got = self.rx.recv();
+        self.settle();
+        let mut resp = got.map_err(|_| ServiceError::Disconnected)?;
+        self.stats
+            .latency_us_sum
+            .fetch_add(resp.latency_us, Ordering::Relaxed);
+        self.stats
+            .latency_us_max
+            .fetch_max(resp.latency_us, Ordering::Relaxed);
+        if let Some(e) = resp.error.take() {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(e.into());
+        }
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .elements_out
+            .fetch_add(resp.data.len() as u64, Ordering::Relaxed);
+        Ok(resp)
+    }
+
+    fn settle(&mut self) {
+        if !self.settled {
+            self.settled = true;
+            if self.counted {
+                self.core.release();
+            }
+        }
+    }
+}
+
+impl Drop for Pending {
+    fn drop(&mut self) {
+        self.settle();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::act::{Activation, FoldedActivation};
+    use crate::fit::pipeline::{fit_folded, FitOptions};
+
+    fn demo_regs(act: Activation) -> GrauRegisters {
+        let f = FoldedActivation::new(0.004, 0.0, act, 1.0 / 120.0, 8);
+        fit_folded(&f, -1000, 1000, FitOptions::default()).apot.regs
+    }
+
+    #[test]
+    fn handle_scoped_roundtrip_and_metrics() {
+        let svc = ServiceBuilder::new().workers(2).start();
+        let regs = demo_regs(Activation::Sigmoid);
+        let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+        let data: Vec<i32> = (-300..300).collect();
+        let resp = h.call(data.clone()).unwrap();
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x));
+        }
+        let m = h.metrics();
+        assert_eq!(m.submitted, 1);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.elements_in, 600);
+        assert_eq!(m.elements_out, 600);
+        assert!(m.mean_latency_us() <= m.latency_us_max as f64);
+        drop(h);
+        let snap = svc.shutdown();
+        assert_eq!(snap.requests, 1);
+    }
+
+    #[test]
+    fn dropping_a_handle_evicts_its_stream() {
+        let svc = ServiceBuilder::new().workers(1).start();
+        let a = svc.register(demo_regs(Activation::Relu), ApproxKind::Apot).unwrap();
+        let b = svc.register(demo_regs(Activation::Silu), ApproxKind::Apot).unwrap();
+        let count = |svc: &Service| {
+            svc.core
+                .with_service(|s| s.stream_count())
+                .expect("service running")
+        };
+        assert_eq!(count(&svc), 2);
+        drop(a);
+        assert_eq!(count(&svc), 1);
+        b.call(vec![1, 2, 3]).unwrap();
+        drop(b);
+        assert_eq!(count(&svc), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected_at_registration() {
+        let svc = ServiceBuilder::new().workers(1).start();
+        // fitted (non-flat) registers cannot run on the MT baseline
+        let err = svc
+            .register_unit(demo_regs(Activation::Silu), ApproxKind::Apot, UnitKind::Mt)
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidConfig(_)), "{err}");
+        assert!(format!("{err}").contains("flat step"), "{err}");
+        // PWLF slopes have no cycle-accurate encoding
+        let err = svc
+            .register_unit(
+                demo_regs(Activation::Relu),
+                ApproxKind::Pwlf,
+                UnitKind::Pipelined,
+            )
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidConfig(_)), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn queue_limit_returns_typed_busy() {
+        let svc = ServiceBuilder::new().workers(1).queue_limit(1).start();
+        let h = svc.register(demo_regs(Activation::Relu), ApproxKind::Apot).unwrap();
+        // one un-consumed response occupies the single slot...
+        let pend = h.submit(vec![1, 2, 3]).unwrap();
+        let err = h.submit(vec![4]).unwrap_err();
+        assert!(
+            matches!(err, ServiceError::Busy { in_flight: 1, limit: 1 }),
+            "{err}"
+        );
+        // ...and consuming it frees the slot
+        pend.recv().unwrap();
+        h.call(vec![5]).unwrap();
+        // dropping (not recv-ing) a Pending also releases its slot
+        drop(h.submit(vec![6]).unwrap());
+        h.call(vec![7]).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn clones_share_one_pool_and_close_together() {
+        let svc = ServiceBuilder::new().workers(1).start();
+        let svc2 = svc.clone();
+        let h = svc2.register(demo_regs(Activation::Relu), ApproxKind::Apot).unwrap();
+        h.call(vec![1]).unwrap();
+        let m = svc.shutdown();
+        assert_eq!(m.requests, 1);
+        assert!(matches!(
+            svc2.register(demo_regs(Activation::Relu), ApproxKind::Apot),
+            Err(ServiceError::Closed)
+        ));
+        assert_eq!(svc2.metrics().requests, 1);
+    }
+}

@@ -22,12 +22,17 @@
 //!   fallback.
 //!
 //! The service-wide backend is only a *default*: individual streams can
-//! pin any registry backend via
-//! [`register_unit`](ActivationService::register_unit), so a cycle-sim
-//! validation stream can run alongside functional traffic on the same
-//! worker bank.  Any future backend plugs in by implementing
-//! [`ActivationUnit`] and registering a [`UnitKind`] — the worker loop
-//! is backend-agnostic.
+//! pin any registry backend (via `grau::api::Service::register_unit` or
+//! a descriptor's pinned [`UnitKind`]), so a cycle-sim validation stream
+//! can run alongside functional traffic on the same worker bank.  Any
+//! future backend plugs in by implementing [`ActivationUnit`] and
+//! registering a [`UnitKind`] — the worker loop is backend-agnostic.
+//!
+//! This module is the *engine room*: streams are keyed by raw `u64` ids
+//! internally, but those ids never cross the crate boundary.  The public
+//! client surface is the typed facade in [`crate::api`] —
+//! `ServiceBuilder` constructs the service and every registration
+//! returns a `StreamHandle` that scopes submission to its own stream.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -52,8 +57,23 @@ pub enum Backend {
     Pjrt,
 }
 
+impl Backend {
+    /// The registry backend this service-wide default maps to.  `None`
+    /// for [`Backend::Pjrt`]: the offload wrapper accepts any register
+    /// file through its compiled-plan fallback.
+    pub fn default_unit(self) -> Option<UnitKind> {
+        match self {
+            Backend::Functional => Some(UnitKind::Plan),
+            Backend::CycleSim => Some(UnitKind::Pipelined),
+            Backend::Pjrt => None,
+        }
+    }
+}
+
+/// Raw service knobs.  Constructed through `grau::api::ServiceBuilder`;
+/// not part of the public surface.
 #[derive(Clone, Debug)]
-pub struct ServiceConfig {
+pub(crate) struct ServiceConfig {
     pub workers: usize,
     pub max_batch: usize,
     pub backend: Backend,
@@ -78,20 +98,42 @@ impl Default for ServiceConfig {
     }
 }
 
-pub struct ActRequest {
+pub(crate) struct ActRequest {
     pub stream_id: u64,
     pub data: Vec<i32>,
     pub resp: Sender<ActResponse>,
     pub t_submit: Instant,
 }
 
+/// Typed per-request failure a worker reports back through
+/// [`ActResponse::error`].  The api facade maps these onto its
+/// `ServiceError` taxonomy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamError {
+    /// The stream id was never registered (or was evicted).
+    UnknownStream(u64),
+    /// The stream's registered configuration cannot run on its backend.
+    Rejected { stream: u64, reason: String },
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::UnknownStream(id) => write!(f, "stream {id} not registered"),
+            StreamError::Rejected { stream, reason } => write!(f, "stream {stream}: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
 #[derive(Debug)]
 pub struct ActResponse {
     pub data: Vec<i32>,
     pub latency_us: u64,
-    /// Why the request failed (`data` is empty in that case), e.g.
-    /// `"stream 7 not registered"`.  `None` on success.
-    pub error: Option<String>,
+    /// Why the request failed (`data` is empty in that case).  `None`
+    /// on success.
+    pub error: Option<StreamError>,
 }
 
 /// Number of log-scale latency buckets: bucket 0 holds 0 µs, bucket
@@ -288,17 +330,20 @@ impl WorkerQueue {
 /// The L3 activation service: a bank of worker-owned activation units
 /// behind a stream-affine router and dynamic batcher.
 ///
+/// Constructed and driven through the typed facade in [`crate::api`] —
+/// the raw `u64`-stream methods below are crate-internal:
+///
 /// ```
-/// use grau::coordinator::service::{ActivationService, ServiceConfig};
+/// use grau::api::ServiceBuilder;
 /// use grau::fit::ApproxKind;
 /// use grau::hw::GrauRegisters;
 ///
-/// let svc = ActivationService::start(ServiceConfig { workers: 1, ..Default::default() });
+/// let svc = ServiceBuilder::new().workers(1).start();
 /// // a single-segment unit with slope 2^-1
 /// let mut regs = GrauRegisters::new(8, 1, 0, 4);
 /// regs.mask[0] = 0b0010;
-/// svc.register(7, regs, ApproxKind::Pot);
-/// let resp = svc.call(7, vec![-64, 0, 64]).unwrap();
+/// let stream = svc.register(regs, ApproxKind::Pot).unwrap();
+/// let resp = stream.call(vec![-64, 0, 64]).unwrap();
 /// assert_eq!(resp.data, vec![-32, 0, 32]);
 /// svc.shutdown();
 /// ```
@@ -309,12 +354,12 @@ pub struct ActivationService {
     worker_tx: Vec<Sender<ActRequest>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     registry: Registry,
-    pub metrics: Arc<Metrics>,
-    pub config: ServiceConfig,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) config: ServiceConfig,
 }
 
 impl ActivationService {
-    pub fn start(config: ServiceConfig) -> ActivationService {
+    pub(crate) fn start(config: ServiceConfig) -> ActivationService {
         let registry: Registry = Arc::new(RwLock::new(HashMap::new()));
         let metrics = Arc::new(Metrics::default());
         let n = if config.backend == Backend::Pjrt {
@@ -364,7 +409,7 @@ impl ActivationService {
 
     /// Register / replace a stream's GRAU configuration on the
     /// service-wide default backend.
-    pub fn register(&self, stream_id: u64, regs: GrauRegisters, kind: ApproxKind) {
+    pub(crate) fn register(&self, stream_id: u64, regs: GrauRegisters, kind: ApproxKind) {
         self.registry.write().unwrap().insert(
             stream_id,
             StreamConfig {
@@ -378,7 +423,7 @@ impl ActivationService {
     /// Register / replace a stream pinned to a specific activation-unit
     /// backend, overriding the service default — e.g. a cycle-sim
     /// validation stream alongside functional traffic.
-    pub fn register_unit(
+    pub(crate) fn register_unit(
         &self,
         stream_id: u64,
         regs: GrauRegisters,
@@ -395,10 +440,22 @@ impl ActivationService {
         );
     }
 
+    /// Evict a stream: subsequent requests for this id get
+    /// [`StreamError::UnknownStream`].  The resident unit in a worker's
+    /// bank is reclaimed lazily (on bank overflow), not eagerly.
+    pub(crate) fn deregister(&self, stream_id: u64) {
+        self.registry.write().unwrap().remove(&stream_id);
+    }
+
+    /// Number of currently registered streams.
+    pub(crate) fn stream_count(&self) -> usize {
+        self.registry.read().unwrap().len()
+    }
+
     /// Submit asynchronously; returns the response receiver.  Failures
     /// (unregistered stream, unrepresentable configuration) are reported
     /// through [`ActResponse::error`], never by dropping the channel.
-    pub fn submit(&self, stream_id: u64, data: Vec<i32>) -> Receiver<ActResponse> {
+    pub(crate) fn submit(&self, stream_id: u64, data: Vec<i32>) -> Receiver<ActResponse> {
         let (rtx, rrx) = channel();
         let req = ActRequest {
             stream_id,
@@ -419,7 +476,7 @@ impl ActivationService {
 
     /// Blocking convenience call.  Returns a typed error when the worker
     /// reports a failure (e.g. calling an unregistered stream).
-    pub fn call(&self, stream_id: u64, data: Vec<i32>) -> Result<ActResponse> {
+    pub(crate) fn call(&self, stream_id: u64, data: Vec<i32>) -> Result<ActResponse> {
         let rx = self.submit(stream_id, data);
         let resp = rx.recv()?;
         if let Some(e) = &resp.error {
@@ -430,7 +487,11 @@ impl ActivationService {
         Ok(resp)
     }
 
-    pub fn shutdown(mut self) -> MetricsSnapshot {
+    /// Drop the submit side of every queue and join the workers.  The
+    /// mpsc receivers hand out buffered requests before reporting
+    /// disconnection, so every request submitted before shutdown is
+    /// still answered (drain semantics; integration-tested).
+    pub(crate) fn shutdown(mut self) -> MetricsSnapshot {
         drop(self.tx.take());
         self.worker_tx.clear();
         for w in self.workers.drain(..) {
@@ -510,10 +571,9 @@ fn worker_loop(
     } else {
         None
     };
-    let default_kind = match cfg.backend {
-        Backend::Functional => WorkerUnitKind::Registry(UnitKind::Plan),
-        Backend::CycleSim => WorkerUnitKind::Registry(UnitKind::Pipelined),
-        Backend::Pjrt => WorkerUnitKind::PjrtOffloaded,
+    let default_kind = match cfg.backend.default_unit() {
+        Some(k) => WorkerUnitKind::Registry(k),
+        None => WorkerUnitKind::PjrtOffloaded,
     };
 
     loop {
@@ -544,7 +604,7 @@ fn worker_loop(
                 Some(e) => e.clone(),
                 None => {
                     for r in group {
-                        respond_error(r, format!("stream {sid} not registered"), &metrics);
+                        respond_error(r, StreamError::UnknownStream(sid), &metrics);
                     }
                     i = j;
                     continue;
@@ -559,7 +619,14 @@ fn worker_loop(
             if let WorkerUnitKind::Registry(k) = want {
                 if let Err(e) = k.check(&entry.regs, entry.kind) {
                     for r in group {
-                        respond_error(r, format!("stream {sid}: {e:#}"), &metrics);
+                        respond_error(
+                            r,
+                            StreamError::Rejected {
+                                stream: sid,
+                                reason: format!("{e:#}"),
+                            },
+                            &metrics,
+                        );
                     }
                     i = j;
                     continue;
@@ -590,7 +657,14 @@ fn worker_loop(
                         Ok(u) => (u, reconfigure_cost(&entry.regs)),
                         Err(e) => {
                             for r in group {
-                                respond_error(r, format!("stream {sid}: {e:#}"), &metrics);
+                                respond_error(
+                                    r,
+                                    StreamError::Rejected {
+                                        stream: sid,
+                                        reason: format!("{e:#}"),
+                                    },
+                                    &metrics,
+                                );
                             }
                             i = j;
                             continue;
@@ -657,11 +731,11 @@ fn respond(req: &ActRequest, data: Vec<i32>, metrics: &Metrics) {
     finish(req, data, None, metrics)
 }
 
-fn respond_error(req: &ActRequest, error: String, metrics: &Metrics) {
+fn respond_error(req: &ActRequest, error: StreamError, metrics: &Metrics) {
     finish(req, Vec::new(), Some(error), metrics)
 }
 
-fn finish(req: &ActRequest, data: Vec<i32>, error: Option<String>, metrics: &Metrics) {
+fn finish(req: &ActRequest, data: Vec<i32>, error: Option<StreamError>, metrics: &Metrics) {
     let lat = req.t_submit.elapsed().as_micros() as u64;
     metrics.requests.fetch_add(1, Ordering::Relaxed);
     metrics
@@ -937,11 +1011,11 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("not registered"), "got: {msg}");
         assert!(msg.contains("777"), "got: {msg}");
-        // the async path reports the same failure without closing the
-        // response channel
+        // the async path reports the same typed failure without closing
+        // the response channel
         let resp = svc.submit(777, vec![1]).recv().expect("channel stays open");
         assert!(resp.data.is_empty());
-        assert!(resp.error.unwrap().contains("not registered"));
+        assert_eq!(resp.error, Some(StreamError::UnknownStream(777)));
         svc.shutdown();
     }
 

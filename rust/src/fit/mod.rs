@@ -98,6 +98,26 @@ impl ApproxKind {
             ApproxKind::Apot => "APoT-PWLF",
         }
     }
+
+    /// Stable lowercase identifier used by the serialized descriptor
+    /// format (`crate::api`) and CLI flags.
+    pub fn slug(self) -> &'static str {
+        match self {
+            ApproxKind::Pwlf => "pwlf",
+            ApproxKind::Pot => "pot",
+            ApproxKind::Apot => "apot",
+        }
+    }
+
+    /// Inverse of [`ApproxKind::slug`].
+    pub fn parse_slug(s: &str) -> Option<ApproxKind> {
+        match s {
+            "pwlf" => Some(ApproxKind::Pwlf),
+            "pot" => Some(ApproxKind::Pot),
+            "apot" => Some(ApproxKind::Apot),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +143,14 @@ mod tests {
         assert_eq!(p.segment_of(0), 1);
         assert_eq!(p.segment_of(99), 1);
         assert_eq!(p.segment_of(100), 2);
+    }
+
+    #[test]
+    fn approx_slug_roundtrip() {
+        for k in [ApproxKind::Pwlf, ApproxKind::Pot, ApproxKind::Apot] {
+            assert_eq!(ApproxKind::parse_slug(k.slug()), Some(k));
+        }
+        assert_eq!(ApproxKind::parse_slug("nope"), None);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! Figure 2).
 
 use crate::act::FoldedActivation;
+use crate::api::descriptor::{Provenance, UnitDescriptor};
 use crate::fit::greedy::{select_breakpoints, GreedyOptions};
 use crate::fit::lsq::fit_lsq;
 use crate::fit::search::{search_window, WindowSearchResult};
@@ -81,6 +82,22 @@ impl FitResult {
             ApproxKind::Pot => self.rmse_pot,
             ApproxKind::Apot => self.rmse_apot,
         }
+    }
+
+    /// Export one fitted family as a serializable configuration
+    /// artifact (see [`crate::api`]): the register file plus provenance
+    /// (the fitted `function` name and this fit's RMS error).  The
+    /// descriptor defaults to the compiled-plan backend; re-pin with
+    /// [`UnitDescriptor::with_unit`].
+    ///
+    /// Panics for [`ApproxKind::Pwlf`] (float slopes have no register
+    /// encoding), like [`FitResult::registers`].
+    pub fn descriptor(&self, kind: ApproxKind, function: &str) -> UnitDescriptor {
+        UnitDescriptor::new(self.registers(kind).clone(), kind).with_provenance(Provenance {
+            function: function.to_string(),
+            rmse_lsb: Some(self.rmse(kind)),
+            source: "fit::pipeline".to_string(),
+        })
     }
 }
 
@@ -225,6 +242,22 @@ mod tests {
         // hardware mismatch rate vs exact black box should be small
         let rate = mismatch_rate(&r.apot.regs, &folded(Activation::Relu), -2000, 2000, 2000);
         assert!(rate < 0.35, "mismatch {rate}");
+    }
+
+    #[test]
+    fn fitted_descriptor_round_trips_bit_exactly() {
+        let r = fit_folded(&folded(Activation::Silu), -1000, 1000, FitOptions::default());
+        let d = r.descriptor(ApproxKind::Apot, "silu");
+        let back = UnitDescriptor::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(back, d);
+        let unit = back.build_functional().unwrap();
+        for x in (-2000..2000i32).step_by(13) {
+            assert_eq!(unit.eval_ref(x), r.apot.regs.eval(x), "x={x}");
+        }
+        let p = back.provenance.unwrap();
+        assert_eq!(p.function, "silu");
+        assert_eq!(p.source, "fit::pipeline");
+        assert!(p.rmse_lsb.unwrap() >= 0.0);
     }
 
     #[test]

@@ -37,8 +37,15 @@
 //!   router, dynamic batcher, runtime-reconfiguration scheduler over a
 //!   bank of GRAU units), the QAT training orchestrator, and the
 //!   experiment harness that regenerates every table and figure.
+//! * [`api`] — the public serving surface on top of all of the above:
+//!   versioned, JSON-serializable [`api::UnitDescriptor`] configuration
+//!   artifacts (fit → file → service/QNN is a bit-exact round trip) and
+//!   the typed service facade ([`api::ServiceBuilder`] /
+//!   [`api::StreamHandle`]) — raw stream ids never cross the crate
+//!   boundary.
 
 pub mod act;
+pub mod api;
 pub mod coordinator;
 pub mod error;
 pub mod fit;

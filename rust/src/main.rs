@@ -15,9 +15,9 @@ use std::path::PathBuf;
 
 use grau::error::{bail, Context, Result};
 
+use grau::api::{Backend, DescriptorBank, ServiceBuilder, StreamHandle, UnitDescriptor};
 use grau::coordinator::experiments::{self, Ctx};
 use grau::coordinator::fitting::{eval_mode, fit_model_with_ranges, SweepOptions};
-use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
 use grau::coordinator::trainer::{dataset_for, train_config};
 use grau::fit::pipeline::Fitter;
 use grau::fit::ApproxKind;
@@ -35,6 +35,13 @@ fn main() {
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn ensure_streams(handles: &[StreamHandle]) -> Result<()> {
+    if handles.is_empty() {
+        bail!("no streams registered — the unit bank is empty");
+    }
+    Ok(())
 }
 
 fn run() -> Result<()> {
@@ -81,6 +88,22 @@ fn run() -> Result<()> {
             let orig = exact.evaluate(&splits.test, opts.eval_samples, opts.threads);
             let ranges = exact.calibrate(&splits.train, opts.calib_samples);
             let fits = fit_model_with_ranges(&exact, &ranges, opts);
+            // export every per-(site, channel) APoT register file as a
+            // serializable descriptor bank (`grau serve --units FILE`
+            // loads it on the other side)
+            if let Some(path) = args.get("export-units") {
+                let mut bank = DescriptorBank::new(config);
+                for (site, chans) in fits.apot.iter().enumerate() {
+                    for (ch, regs) in chans.iter().enumerate() {
+                        bank.insert(
+                            format!("site{site}/ch{ch}"),
+                            UnitDescriptor::new(regs.clone(), ApproxKind::Apot),
+                        );
+                    }
+                }
+                bank.save(std::path::Path::new(path))?;
+                println!("exported {} unit descriptors to {path}", bank.len());
+            }
             println!("config {config}: original top1 {:.4} top5 {:.4}", orig.top1, orig.top5);
             for kind in [ApproxKind::Pwlf, ApproxKind::Pot, ApproxKind::Apot] {
                 let r = eval_mode(&tr.graph, &tr.bundle, fits.act_mode(kind), &splits.test, opts);
@@ -99,33 +122,54 @@ fn run() -> Result<()> {
                 "pjrt" => Backend::Pjrt,
                 _ => Backend::Functional,
             };
-            let svc = ActivationService::start(ServiceConfig {
-                workers: args.get_usize("workers", 4),
-                max_batch: args.get_usize("max-batch", 8192),
-                backend,
-                affinity: args.get_or("affinity", "on") != "off",
-                artifacts_dir: artifacts_dir(&args),
-            });
-            // register a bank of demo streams (fitted sigmoid/silu/relu)
-            use grau::act::{Activation, FoldedActivation};
-            use grau::fit::pipeline::{fit_folded, FitOptions};
-            for (i, act) in [Activation::Relu, Activation::Sigmoid, Activation::Silu]
-                .iter()
-                .enumerate()
-            {
-                let f = FoldedActivation::new(0.004, 0.0, *act, 1.0 / 120.0, 8);
-                let fr = fit_folded(
-                    &f,
-                    -1000,
-                    1000,
-                    FitOptions {
-                        n_shifts: 16,
-                        // the PJRT offload kernel is compiled for shift_lo=0
-                        ..Default::default()
-                    },
-                );
-                svc.register(i as u64, fr.apot.regs, ApproxKind::Apot);
+            let svc = ServiceBuilder::new()
+                .workers(args.get_usize("workers", 4))
+                .max_batch(args.get_usize("max-batch", 8192))
+                .backend(backend)
+                .affinity(args.get_or("affinity", "on") != "off")
+                .artifacts_dir(artifacts_dir(&args))
+                .start();
+            // the stream bank: a descriptor file from disk (`--units`),
+            // or a freshly fitted sigmoid/silu/relu demo trio
+            let bank = if let Some(path) = args.get("units") {
+                DescriptorBank::load(std::path::Path::new(path))?
+            } else {
+                use grau::act::{Activation, FoldedActivation};
+                use grau::fit::pipeline::{fit_folded, FitOptions};
+                let mut bank = DescriptorBank::new("serve-demo");
+                for act in [Activation::Relu, Activation::Sigmoid, Activation::Silu] {
+                    let f = FoldedActivation::new(0.004, 0.0, act, 1.0 / 120.0, 8);
+                    let fr = fit_folded(
+                        &f,
+                        -1000,
+                        1000,
+                        FitOptions {
+                            n_shifts: 16,
+                            // the PJRT offload kernel is compiled for shift_lo=0
+                            ..Default::default()
+                        },
+                    );
+                    let name = format!("{act:?}").to_lowercase();
+                    bank.insert(name.clone(), fr.descriptor(ApproxKind::Apot, &name));
+                }
+                bank
+            };
+            if let Some(path) = args.get("export-units") {
+                bank.save(std::path::Path::new(path))?;
+                println!("exported {} unit descriptors to {path}", bank.len());
             }
+            // register on the service-wide backend chosen by --backend
+            // (a descriptor's own pin would override it — serve's whole
+            // point is exercising the selected backend, so the register
+            // files ride the default like the pre-facade demo did)
+            let handles: Vec<StreamHandle> = bank
+                .iter()
+                .map(|(name, d)| {
+                    svc.register(d.regs.clone(), d.approx)
+                        .with_context(|| format!("register stream {name:?}"))
+                })
+                .collect::<Result<_>>()?;
+            ensure_streams(&handles)?;
             let n_req = args.get_usize("requests", 1000);
             let chunk = args.get_usize("chunk", 4096);
             let mut rng = Rng::new(1);
@@ -134,7 +178,7 @@ fn run() -> Result<()> {
             for i in 0..n_req {
                 let data: Vec<i32> =
                     (0..chunk).map(|_| rng.range_i64(-3000, 3000) as i32).collect();
-                pend.push(svc.submit((i % 3) as u64, data));
+                pend.push(handles[i % handles.len()].submit(data)?);
             }
             for p in pend {
                 p.recv()?;
@@ -195,7 +239,11 @@ grau — GRAU reproduction launcher
   list                      list artifact configs
   train --config NAME       train one config through the PJRT runtime
   eval  --config NAME       original vs PWLF/PoT/APoT accuracy
+                            (--export-units FILE writes the fitted
+                             per-channel descriptor bank)
   serve [--backend ...]     run the activation service demo
+                            (--units FILE serves a descriptor bank;
+                             --export-units FILE writes the demo bank)
   table1|table3|table4|table5|table6|fig1|fig2 [--quick]
   hw-report                 alias of table6
 flags: --artifacts DIR --steps N --segments S --shifts E --quick";

@@ -21,9 +21,10 @@
 //! (`rust/tests/qnn_parity.rs`, plus the `perf_hot_paths` bench which
 //! asserts equality on its own workload).
 
-use crate::error::{bail, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::act::{qrange, Activation, FoldedActivation};
+use crate::api::descriptor::UnitDescriptor;
 use crate::fit::{ApproxKind, Pwlf};
 use crate::hw::mt::MtUnit;
 use crate::hw::unit::{build_functional_unit, FunctionalUnit, UnitKind};
@@ -45,6 +46,13 @@ pub enum ActMode {
     Pwlf(Vec<Vec<Pwlf>>),
     Grau(Vec<Vec<GrauRegisters>>),
     Mt(Vec<Vec<MtUnit>>),
+    /// Units reconstructed from serialized [`UnitDescriptor`]s (see
+    /// [`crate::api`]) — the fit → file → engine deployment path.  Each
+    /// descriptor's pinned backend is honored; cycle-accurate backends
+    /// are rejected at engine construction (their evaluation is
+    /// stateful), everything else evaluates bit-for-bit identically to
+    /// a directly constructed unit.
+    Descriptors(Vec<Vec<UnitDescriptor>>),
 }
 
 impl ActMode {
@@ -54,6 +62,7 @@ impl ActMode {
             ActMode::Pwlf(_) => "pwlf",
             ActMode::Grau(_) => "grau",
             ActMode::Mt(_) => "mt",
+            ActMode::Descriptors(_) => "descriptor",
         }
     }
 }
@@ -287,6 +296,19 @@ impl Engine {
                         .collect()
                 })
                 .collect(),
+            ActMode::Descriptors(sites) => {
+                let mut all = Vec::with_capacity(sites.len());
+                for (si, chans) in sites.iter().enumerate() {
+                    let mut row = Vec::with_capacity(chans.len());
+                    for (ch, d) in chans.iter().enumerate() {
+                        row.push(d.build_functional().with_context(|| {
+                            format!("descriptor unit at site {si} channel {ch}")
+                        })?);
+                    }
+                    all.push(row);
+                }
+                all
+            }
             _ => Vec::new(),
         };
         Ok(Engine {
@@ -344,7 +366,9 @@ impl Engine {
         match &self.act_mode {
             ActMode::Exact => f.eval(mac as i64),
             ActMode::Pwlf(v) => v[site][ch].eval(mac as i64),
-            ActMode::Grau(_) | ActMode::Mt(_) => self.units[site][ch].eval_ref(mac),
+            ActMode::Grau(_) | ActMode::Mt(_) | ActMode::Descriptors(_) => {
+                self.units[site][ch].eval_ref(mac)
+            }
         }
     }
 
@@ -571,7 +595,7 @@ impl Engine {
                         *o = pw.eval(m as i64);
                     }
                 }
-                ActMode::Grau(_) | ActMode::Mt(_) => {
+                ActMode::Grau(_) | ActMode::Mt(_) | ActMode::Descriptors(_) => {
                     unreachable!("unit modes dispatch through the unit bank above")
                 }
             }
@@ -1062,6 +1086,38 @@ mod tests {
         // relu fold is piecewise linear -> APoT16 at 8 segments is near-exact
         for (a, b) in le.iter().zip(&lg) {
             assert!((a - b).abs() < 0.06, "{le:?} vs {lg:?}");
+        }
+    }
+
+    #[test]
+    fn descriptor_mode_matches_direct_grau_mode_bit_for_bit() {
+        use crate::fit::pipeline::{fit_folded, FitOptions};
+        let (g, b) = tiny();
+        let exact = Engine::new(g.clone(), &b, ActMode::Exact).unwrap();
+        let mut regs = Vec::new();
+        for ch in 0..3 {
+            let f = exact.folded(0, ch);
+            regs.push(fit_folded(&f, -200, 200, FitOptions::default()).apot.regs);
+        }
+        // serialize every register file through JSON, then build one
+        // engine from the descriptors and one directly from the regs
+        let descs: Vec<UnitDescriptor> = regs
+            .iter()
+            .map(|r| {
+                let d = UnitDescriptor::new(r.clone(), crate::fit::ApproxKind::Apot);
+                UnitDescriptor::parse(&d.to_json().to_string()).unwrap()
+            })
+            .collect();
+        let direct = Engine::new(g.clone(), &b, ActMode::Grau(vec![regs])).unwrap();
+        let from_desc = Engine::new(g, &b, ActMode::Descriptors(vec![descs])).unwrap();
+        assert_eq!(from_desc.act_mode().name(), "descriptor");
+        for i in 0..8 {
+            let x = [1.0f32 - i as f32 * 0.3, -0.5 + i as f32 * 0.2, 0.25, 2.0 - i as f32];
+            assert_eq!(
+                direct.forward_sample(&x, None),
+                from_desc.forward_sample(&x, None),
+                "sample {i}"
+            );
         }
     }
 

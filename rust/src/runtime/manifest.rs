@@ -1,12 +1,20 @@
-//! Artifact manifest parsing (`artifacts/{name}.manifest.json`) — the
-//! contract between `python/compile/aot.py` and the Rust runtime.
+//! Artifact manifest parsing — the on-disk contracts the runtime loads:
+//!
+//! * [`Manifest`] (`artifacts/{name}.manifest.json`) — the contract
+//!   between `python/compile/aot.py` and the Rust runtime.
+//! * [`DescriptorBank`] (`*.units.json`) — a named bank of serialized
+//!   [`UnitDescriptor`]s, the deployable reconfiguration artifact the
+//!   fitting pipeline exports and the service / QNN engine load (see
+//!   [`crate::api`]).
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use crate::error::{Context, Result};
+use crate::api::descriptor::UnitDescriptor;
+use crate::error::{ensure, Context, Result};
 
 use crate::qnn::graph::ModelGraph;
-use crate::util::json::Json;
+use crate::util::json::{num, obj, s, Json};
 
 #[derive(Clone, Debug)]
 pub struct LeafInfo {
@@ -123,5 +131,178 @@ impl Manifest {
             .iter()
             .filter_map(|v| v.as_str().map(str::to_string))
             .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Descriptor banks: named collections of unit descriptors on disk
+// ---------------------------------------------------------------------------
+
+/// Format tag every bank file carries.
+pub const BANK_FORMAT: &str = "grau-unit-bank";
+
+/// Current bank schema version.  Loading rejects any other value.
+pub const BANK_VERSION: u32 = 1;
+
+/// A named, ordered bank of [`UnitDescriptor`]s — the deployable
+/// artifact between offline fitting and the online service: one file
+/// holds every per-stream configuration of a model (or scenario), keyed
+/// by a stable stream name (e.g. `"site3/ch17"` or `"silu"`).
+///
+/// ```no_run
+/// use std::path::Path;
+/// use grau::api::{DescriptorBank, ServiceBuilder};
+///
+/// let bank = DescriptorBank::load(Path::new("artifacts/cnv.units.json")).unwrap();
+/// let svc = ServiceBuilder::new().start();
+/// for (name, d) in bank.iter() {
+///     let stream = svc.register_descriptor(d).unwrap();
+///     println!("{name}: {:?}", stream);
+/// }
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DescriptorBank {
+    pub name: String,
+    units: BTreeMap<String, UnitDescriptor>,
+}
+
+impl DescriptorBank {
+    pub fn new(name: impl Into<String>) -> DescriptorBank {
+        DescriptorBank {
+            name: name.into(),
+            units: BTreeMap::new(),
+        }
+    }
+
+    /// Insert / replace one named descriptor.
+    pub fn insert(&mut self, key: impl Into<String>, d: UnitDescriptor) {
+        self.units.insert(key.into(), d);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&UnitDescriptor> {
+        self.units.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Iterate `(stream name, descriptor)` pairs in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &UnitDescriptor)> {
+        self.units.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let units = Json::Obj(
+            self.units
+                .iter()
+                .map(|(k, d)| (k.clone(), d.to_json()))
+                .collect(),
+        );
+        obj(vec![
+            ("format", s(BANK_FORMAT)),
+            ("version", num(BANK_VERSION as f64)),
+            ("name", s(&self.name)),
+            ("units", units),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DescriptorBank> {
+        let format = j.get("format").as_str().context("bank missing 'format'")?;
+        ensure!(
+            format == BANK_FORMAT,
+            "not a unit bank (format {format:?}, want {BANK_FORMAT:?})"
+        );
+        let version = j.get("version").as_f64().context("bank missing 'version'")?;
+        ensure!(
+            version.fract() == 0.0 && version as i64 == BANK_VERSION as i64,
+            "unsupported bank version {version} (this build reads version {BANK_VERSION})"
+        );
+        let mut bank = DescriptorBank::new(j.get("name").as_str().unwrap_or(""));
+        let units = j.get("units").as_obj().context("bank missing 'units'")?;
+        for (key, dj) in units {
+            let d = UnitDescriptor::from_json(dj)
+                .with_context(|| format!("bank unit {key:?}"))?;
+            bank.units.insert(key.clone(), d);
+        }
+        Ok(bank)
+    }
+
+    /// Write the bank to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("write unit bank {path:?}"))
+    }
+
+    /// Load and validate a bank file (every descriptor is validated;
+    /// one malformed entry fails the whole load with its key in the
+    /// error chain).
+    pub fn load(path: &Path) -> Result<DescriptorBank> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read unit bank {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse unit bank {path:?}"))?;
+        DescriptorBank::from_json(&j).with_context(|| format!("load unit bank {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fit::ApproxKind;
+    use crate::hw::GrauRegisters;
+
+    fn demo_descriptor(slope_bit: u32) -> UnitDescriptor {
+        let mut regs = GrauRegisters::new(8, 1, 0, 4);
+        regs.mask[0] = slope_bit;
+        UnitDescriptor::new(regs, ApproxKind::Pot)
+    }
+
+    #[test]
+    fn bank_json_roundtrip() {
+        let mut bank = DescriptorBank::new("demo");
+        bank.insert("relu", demo_descriptor(0b0001));
+        bank.insert("half", demo_descriptor(0b0010));
+        let back = DescriptorBank::from_json(&bank.to_json()).unwrap();
+        assert_eq!(back, bank);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("half").unwrap().regs.mask[0], 0b0010);
+    }
+
+    #[test]
+    fn bank_rejects_wrong_format_version_and_bad_units() {
+        let bank = DescriptorBank::new("demo");
+        let mut j = bank.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), num(99.0));
+        }
+        assert!(DescriptorBank::from_json(&j).is_err());
+        // fractional versions must not truncate into acceptance
+        let mut j = bank.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), num(1.9));
+        }
+        assert!(DescriptorBank::from_json(&j).is_err());
+        let mut j = bank.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("format".into(), s("not-a-bank"));
+        }
+        assert!(DescriptorBank::from_json(&j).is_err());
+        // a malformed member descriptor names its key in the error
+        let mut bad = DescriptorBank::new("demo");
+        bad.insert("broken", demo_descriptor(0b0001));
+        let mut j = bad.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(units)) = m.get_mut("units") {
+                if let Some(Json::Obj(d)) = units.get_mut("broken") {
+                    d.insert("version".into(), num(7.0));
+                }
+            }
+        }
+        let e = DescriptorBank::from_json(&j).unwrap_err();
+        assert!(format!("{e:#}").contains("broken"), "{e:#}");
     }
 }

@@ -11,7 +11,7 @@
 pub mod manifest;
 pub mod xla;
 
-pub use manifest::Manifest;
+pub use manifest::{DescriptorBank, Manifest};
 
 use std::path::Path;
 

@@ -1,0 +1,246 @@
+//! Property tests for the `grau::api` descriptor layer: randomized
+//! `UnitDescriptor`s must survive serialize → parse → build-unit with
+//! bit-for-bit `eval` parity against the source `GrauRegisters`, banks
+//! must round-trip through real files, malformed/wrong-version inputs
+//! must be rejected, and the QNN engine must evaluate descriptors
+//! identically to directly constructed units.
+
+use grau::act::qrange;
+use grau::api::{DescriptorBank, Provenance, UnitDescriptor};
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::hw::unit::UnitKind;
+use grau::hw::{FunctionalUnit, GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use grau::qnn::synth::residual_qnn;
+use grau::qnn::{ActMode, Engine};
+use grau::util::json::Json;
+use grau::util::rng::Rng;
+
+/// Randomized register file over the full parameter grid (1/2/4/6/8-bit,
+/// 1-8 segments, 4/8/16-shift windows) — only used slots are populated,
+/// matching every real producer.
+fn random_regs(rng: &mut Rng, th_lo: i64, th_hi: i64) -> GrauRegisters {
+    let n_bits = [1u8, 2, 4, 6, 8][rng.range_usize(0, 5)];
+    let segs = rng.range_usize(1, MAX_SEGMENTS + 1);
+    let n_shifts = [4u8, 8, 16][rng.range_usize(0, 3)];
+    let shift_lo = rng.range_i64(0, 8) as u8;
+    let mut r = GrauRegisters::new(n_bits, segs, shift_lo, n_shifts);
+    let mut ths: Vec<i32> = (0..segs - 1)
+        .map(|_| rng.range_i64(th_lo, th_hi) as i32)
+        .collect();
+    ths.sort_unstable();
+    ths.dedup();
+    while ths.len() < segs - 1 {
+        ths.push(*ths.last().unwrap_or(&0) + 1 + ths.len() as i32);
+    }
+    ths.sort_unstable();
+    r.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
+    r.thresholds[..segs - 1].copy_from_slice(&ths[..segs - 1]);
+    for j in 0..segs {
+        r.x0[j] = rng.range_i64(-50_000, 50_000) as i32;
+        let (qmin, qmax) = qrange(n_bits);
+        r.y0[j] = rng.range_i64(qmin as i64, qmax as i64 + 1) as i32;
+        r.sign[j] = if rng.uniform() < 0.5 { 1 } else { -1 };
+        r.mask[j] = (rng.next_u64() as u32) & ((1u32 << n_shifts) - 1);
+    }
+    r
+}
+
+#[test]
+fn prop_descriptor_json_roundtrip_builds_bit_exact_units() {
+    // serialize → parse → build → eval parity with the source register
+    // file over its threshold span, for every always-exact backend
+    let mut rng = Rng::new(20_260_727);
+    for case in 0..200 {
+        let (lo, hi) = if case % 2 == 0 {
+            (-50_000i64, 50_000i64)
+        } else {
+            (-120i64, 120i64)
+        };
+        let regs = random_regs(&mut rng, lo, hi);
+        let unit_kind = [UnitKind::Plan, UnitKind::Reference][case % 2];
+        let d = UnitDescriptor::new(regs.clone(), ApproxKind::Apot)
+            .with_unit(unit_kind)
+            .with_provenance(Provenance {
+                function: format!("case{case}"),
+                rmse_lsb: Some(case as f64 * 0.25),
+                source: "prop-test".into(),
+            });
+        let text = d.to_json().to_string();
+        let back = UnitDescriptor::parse(&text).expect("round trip parse");
+        assert_eq!(back, d, "case {case}");
+
+        let unit = back.build_functional().expect("build");
+        let mut xs: Vec<i32> = (0..64)
+            .map(|_| rng.range_i64(lo * 2, hi * 2) as i32)
+            .collect();
+        // exercise the threshold boundaries exactly
+        for &t in &regs.thresholds[..regs.n_segments - 1] {
+            xs.extend([t - 1, t, t + 1]);
+        }
+        xs.extend([i32::MIN / 2, -1, 0, 1, i32::MAX / 2]);
+        for &x in &xs {
+            assert_eq!(
+                unit.eval_ref(x),
+                regs.eval(x),
+                "case {case} ({unit_kind:?}) x={x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bank_file_roundtrip() {
+    // many descriptors through a real file: save → load → identical
+    let mut rng = Rng::new(7);
+    let mut bank = DescriptorBank::new("prop");
+    let mut sources = Vec::new();
+    for i in 0..24 {
+        let regs = random_regs(&mut rng, -2000, 2000);
+        bank.insert(format!("unit{i:02}"), UnitDescriptor::new(regs.clone(), ApproxKind::Pot));
+        sources.push(regs);
+    }
+    let path = std::env::temp_dir().join("grau_api_descriptor_prop.units.json");
+    bank.save(&path).expect("save bank");
+    let loaded = DescriptorBank::load(&path).expect("load bank");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, bank);
+    for (i, regs) in sources.iter().enumerate() {
+        let d = loaded.get(&format!("unit{i:02}")).expect("key present");
+        let unit = d.build_functional().expect("build");
+        for x in (-4000..4000).step_by(61) {
+            assert_eq!(unit.eval_ref(x), regs.eval(x), "unit{i:02} x={x}");
+        }
+    }
+}
+
+#[test]
+fn malformed_and_wrong_version_descriptors_are_rejected() {
+    let mut rng = Rng::new(99);
+    let good = UnitDescriptor::new(random_regs(&mut rng, -500, 500), ApproxKind::Apot);
+    let text = good.to_json().to_string();
+    // baseline sanity: the untouched text parses
+    UnitDescriptor::parse(&text).expect("good descriptor parses");
+
+    let mutate = |key: &str, val: Json| {
+        let mut j = Json::parse(&text).unwrap();
+        if let Json::Obj(m) = &mut j {
+            m.insert(key.into(), val);
+        }
+        j.to_string()
+    };
+    let mutate_regs = |key: &str, val: Json| {
+        let mut j = Json::parse(&text).unwrap();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Obj(r)) = m.get_mut("registers") {
+                r.insert(key.into(), val);
+            }
+        }
+        j.to_string()
+    };
+
+    let cases: Vec<(&str, String)> = vec![
+        ("truncated JSON", text[..text.len() / 2].to_string()),
+        ("not JSON at all", "thresholds: 1 2 3".into()),
+        ("wrong format tag", mutate("format", Json::Str("grau-weights".into()))),
+        ("future version", mutate("version", Json::Num(2.0))),
+        ("unknown backend", mutate("unit", Json::Str("quantum".into()))),
+        ("unknown family", mutate("approx", Json::Str("float64".into()))),
+        ("fractional version", mutate("version", Json::Num(1.5))),
+        ("missing registers", mutate("registers", Json::Null)),
+        ("segment count 0", mutate_regs("n_segments", Json::Num(0.0))),
+        ("segment count 9", mutate_regs("n_segments", Json::Num(9.0))),
+        ("bad window length", mutate_regs("n_shifts", Json::Num(5.0))),
+        ("thresholds not an array", mutate_regs("thresholds", Json::Num(3.0))),
+        ("sign out of domain", mutate_regs("sign", {
+            let segs = good.regs.n_segments;
+            Json::Arr(vec![Json::Num(0.0); segs])
+        })),
+        ("mask wider than window", mutate_regs("mask", {
+            let segs = good.regs.n_segments;
+            Json::Arr(vec![Json::Num((1u64 << 20) as f64); segs])
+        })),
+    ];
+    for (what, bad) in cases {
+        assert!(
+            UnitDescriptor::parse(&bad).is_err(),
+            "{what} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn qnn_engine_runs_descriptor_banks_bit_exactly() {
+    // acceptance path: fit every activation site of a synthetic QNN,
+    // serialize the whole model as a descriptor bank through a file,
+    // and hold the descriptor-built engine bit-for-bit equal to the
+    // engine built directly from the fitted register files
+    let (graph, bundle) = residual_qnn(6, 2, 3, 4, 11);
+    let exact = Engine::new(graph.clone(), &bundle, ActMode::Exact).unwrap();
+    let mut rng = Rng::new(3);
+    let sample = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    };
+    let in_len = 6 * 6 * 2;
+
+    // calibrate MAC ranges on a few random samples
+    let mut ranges = exact.empty_ranges();
+    for _ in 0..4 {
+        exact.forward_sample(&sample(&mut rng, in_len), Some(&mut ranges));
+    }
+
+    // fit each (site, channel) and export the bank
+    let mut bank = DescriptorBank::new("synth_res");
+    let mut site_regs: Vec<Vec<GrauRegisters>> = Vec::new();
+    for (site, chans) in exact.site_channels().iter().enumerate() {
+        let mut regs_row = Vec::new();
+        for ch in 0..*chans {
+            let f = exact.folded(site, ch);
+            let (lo, hi) = ranges.ranges[site][ch];
+            let (lo, hi) = if lo > hi {
+                (-1000i64, 1000i64)
+            } else {
+                (lo as i64 - 100, hi as i64 + 100)
+            };
+            let fit = fit_folded(
+                &f,
+                lo,
+                hi.max(lo + 2),
+                FitOptions { segments: 4, samples: 200, ..Default::default() },
+            );
+            bank.insert(
+                format!("site{site}/ch{ch:02}"),
+                fit.descriptor(ApproxKind::Apot, &format!("site{site}/ch{ch}")),
+            );
+            regs_row.push(fit.apot.regs);
+        }
+        site_regs.push(regs_row);
+    }
+    let path = std::env::temp_dir().join("grau_api_descriptor_qnn.units.json");
+    bank.save(&path).expect("save bank");
+    let loaded = DescriptorBank::load(&path).expect("load bank");
+    std::fs::remove_file(&path).ok();
+
+    // rebuild the per-site descriptor table from the loaded bank
+    let descs: Vec<Vec<UnitDescriptor>> = exact
+        .site_channels()
+        .iter()
+        .enumerate()
+        .map(|(site, chans)| {
+            (0..*chans)
+                .map(|ch| loaded.get(&format!("site{site}/ch{ch:02}")).unwrap().clone())
+                .collect()
+        })
+        .collect();
+
+    let direct = Engine::new(graph.clone(), &bundle, ActMode::Grau(site_regs)).unwrap();
+    let from_file = Engine::new(graph, &bundle, ActMode::Descriptors(descs)).unwrap();
+    for i in 0..6 {
+        let x = sample(&mut rng, in_len);
+        assert_eq!(
+            direct.forward_sample(&x, None),
+            from_file.forward_sample(&x, None),
+            "sample {i}: descriptor-built engine diverged"
+        );
+    }
+}

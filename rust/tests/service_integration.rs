@@ -1,8 +1,10 @@
 //! Integration: the L3 activation service under concurrent multi-stream
-//! load, across backends, checked bit-exactly against the registry.
+//! load, across backends, driven entirely through the typed `grau::api`
+//! facade (builder + stream handles — no raw stream ids) and checked
+//! bit-exactly against the registered configurations.
 
 use grau::act::{Activation, FoldedActivation};
-use grau::coordinator::service::{ActivationService, Backend, ServiceConfig};
+use grau::api::{Backend, Pending, ServiceBuilder, ServiceError, StreamHandle, UnitDescriptor};
 use grau::fit::pipeline::{fit_folded, FitOptions};
 use grau::fit::ApproxKind;
 use grau::hw::unit::UnitKind;
@@ -26,30 +28,41 @@ fn fitted(act: Activation, window16: bool) -> GrauRegisters {
 #[test]
 fn concurrent_multistream_bit_exact() {
     for backend in [Backend::Functional, Backend::CycleSim] {
-        let svc = ActivationService::start(ServiceConfig {
-            workers: 4,
-            max_batch: 4096,
-            backend,
-            ..Default::default()
-        });
+        let svc = ServiceBuilder::new()
+            .workers(4)
+            .max_batch(4096)
+            .backend(backend)
+            .start();
         let acts = [Activation::Relu, Activation::Sigmoid, Activation::Silu];
         let regs: Vec<GrauRegisters> = acts.iter().map(|&a| fitted(a, false)).collect();
-        for (i, r) in regs.iter().enumerate() {
-            svc.register(i as u64, r.clone(), ApproxKind::Apot);
-        }
+        let streams: Vec<StreamHandle> = regs
+            .iter()
+            .map(|r| svc.register(r.clone(), ApproxKind::Apot).expect("register"))
+            .collect();
         let mut rng = Rng::new(1);
-        let mut pending = Vec::new();
+        let mut pending: Vec<(usize, Vec<i32>, Pending)> = Vec::new();
         for i in 0..60 {
-            let sid = (i % 3) as u64;
+            let si = i % 3;
             let data: Vec<i32> = (0..500).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
-            pending.push((sid, data.clone(), svc.submit(sid, data)));
+            let p = streams[si].submit(data.clone()).expect("submit");
+            pending.push((si, data, p));
         }
-        for (sid, data, rx) in pending {
-            let resp = rx.recv().expect("response");
+        for (si, data, p) in pending {
+            let resp = p.recv().expect("response");
             for (x, y) in data.iter().zip(&resp.data) {
-                assert_eq!(*y, regs[sid as usize].eval(*x), "{backend:?} stream {sid}");
+                assert_eq!(*y, regs[si].eval(*x), "{backend:?} stream {si}");
             }
         }
+        // per-stream metrics are scoped to each handle
+        for s in &streams {
+            let m = s.metrics();
+            assert_eq!(m.submitted, 20);
+            assert_eq!(m.completed, 20);
+            assert_eq!(m.elements_in, 20 * 500);
+            assert_eq!(m.elements_out, 20 * 500);
+            assert_eq!(m.errors, 0);
+        }
+        drop(streams);
         let m = svc.shutdown();
         assert_eq!(m.requests, 60);
         assert_eq!(m.elements, 60 * 500);
@@ -61,18 +74,20 @@ fn concurrent_multistream_bit_exact() {
 
 #[test]
 fn metrics_conserved_under_load() {
-    let svc = ActivationService::start(ServiceConfig {
-        workers: 3,
-        ..Default::default()
-    });
-    svc.register(0, fitted(Activation::Sigmoid, false), ApproxKind::Apot);
-    let mut pending = Vec::new();
-    for _ in 0..200 {
-        pending.push(svc.submit(0, vec![1, 2, 3, 4, 5]));
-    }
+    let svc = ServiceBuilder::new().workers(3).start();
+    let stream = svc
+        .register(fitted(Activation::Sigmoid, false), ApproxKind::Apot)
+        .expect("register");
+    let pending = stream
+        .submit_batch((0..200).map(|_| vec![1, 2, 3, 4, 5]))
+        .expect("submit batch");
     for p in pending {
         p.recv().unwrap();
     }
+    let sm = stream.metrics();
+    assert_eq!(sm.submitted, 200);
+    assert_eq!(sm.completed, 200);
+    drop(stream);
     let m = svc.shutdown();
     assert_eq!(m.requests, 200);
     assert_eq!(m.elements, 1000);
@@ -84,27 +99,22 @@ fn metrics_conserved_under_load() {
 fn shared_queue_shutdown_answers_all_in_flight() {
     // affinity: false — all workers contend on one queue.  Shutting
     // down with requests still in flight must drain the queue: every
-    // request gets a successful response and the counters reconcile
-    // (requests submitted == responses accounted).
-    let svc = ActivationService::start(ServiceConfig {
-        workers: 3,
-        affinity: false,
-        ..Default::default()
-    });
+    // already-submitted request gets a successful response and the
+    // counters reconcile (requests submitted == responses accounted).
+    let svc = ServiceBuilder::new().workers(3).affinity(false).start();
     let regs = fitted(Activation::Sigmoid, false);
-    svc.register(0, regs.clone(), ApproxKind::Apot);
+    let stream = svc.register(regs.clone(), ApproxKind::Apot).expect("register");
     let data: Vec<i32> = (-40..40).collect();
     let mut pending = Vec::new();
     for _ in 0..300 {
-        pending.push(svc.submit(0, data.clone()));
+        pending.push(stream.submit(data.clone()).expect("submit"));
     }
     // no recv before shutdown: the workers drain the backlog while the
     // service joins them
     let m = svc.shutdown();
     let mut answered = 0u64;
-    for rx in &pending {
-        let resp = rx.recv().expect("in-flight request answered during shutdown");
-        assert!(resp.error.is_none());
+    for p in pending {
+        let resp = p.recv().expect("in-flight request answered during shutdown");
         for (x, y) in data.iter().zip(&resp.data) {
             assert_eq!(*y, regs.eval(*x));
         }
@@ -114,37 +124,105 @@ fn shared_queue_shutdown_answers_all_in_flight() {
     assert_eq!(m.requests, 300, "every submitted request is accounted");
     assert_eq!(m.elements, 300 * data.len() as u64);
     assert_eq!(m.latency_buckets.iter().sum::<u64>(), m.requests);
+    // the handle outlived the service: submissions now fail typed, and
+    // dropping the last handle must not panic or leak a worker
+    assert!(matches!(stream.submit(vec![1]), Err(ServiceError::Closed)));
+    drop(stream);
+}
+
+#[test]
+fn handle_drop_after_shutdown_is_safe() {
+    // regression (shutdown drain semantics for handle-owned streams):
+    // the service can be shut down while handles are still alive;
+    // every later handle operation reports Closed and the final drop —
+    // with the handle as the last owner of the shared core — must not
+    // panic or leak a worker
+    let svc = ServiceBuilder::new().workers(2).start();
+    let stream = svc
+        .register(fitted(Activation::Relu, false), ApproxKind::Apot)
+        .expect("register");
+    stream.call(vec![1, 2, 3]).expect("call");
+    let m = svc.shutdown(); // consumes the service; `stream` survives it
+    assert_eq!(m.requests, 1);
+    assert!(matches!(stream.call(vec![4]), Err(ServiceError::Closed)));
+    assert!(matches!(
+        stream.reconfigure(&UnitDescriptor::new(
+            fitted(Activation::Silu, false),
+            ApproxKind::Apot
+        )),
+        Err(ServiceError::Closed)
+    ));
+    drop(stream); // last reference to the shared core
+}
+
+#[test]
+fn reconfigure_swaps_registers_on_a_live_stream() {
+    let svc = ServiceBuilder::new().workers(1).start();
+    let mut a = GrauRegisters::new(8, 1, 0, 4);
+    a.mask[0] = 0b0001; // identity slope
+    let mut b = a.clone();
+    b.mask[0] = 0b0010; // slope 1/2
+    let stream = svc.register(a, ApproxKind::Pot).expect("register");
+    assert_eq!(stream.call(vec![40]).unwrap().data, vec![40]);
+    stream
+        .reconfigure(&UnitDescriptor::new(b, ApproxKind::Pot))
+        .expect("reconfigure");
+    assert_eq!(stream.call(vec![40]).unwrap().data, vec![20]);
+    drop(stream);
+    let m = svc.shutdown();
+    assert!(m.reconfigs >= 2, "reconfigs {}", m.reconfigs);
+}
+
+#[test]
+fn descriptor_roundtrip_through_service_is_bit_exact() {
+    // fit -> descriptor -> JSON text -> parse -> service: the served
+    // stream evaluates bit-for-bit like the directly fitted registers
+    let f = FoldedActivation::new(0.004, 0.0, Activation::Silu, 1.0 / 120.0, 8);
+    let fit = fit_folded(&f, -1000, 1000, FitOptions::default());
+    let json = fit.descriptor(ApproxKind::Apot, "silu").to_json().to_string();
+    let d = UnitDescriptor::parse(&json).expect("parse descriptor");
+    let svc = ServiceBuilder::new().workers(1).start();
+    let stream = svc.register_descriptor(&d).expect("register descriptor");
+    let data: Vec<i32> = (-3000..3000).step_by(7).collect();
+    let resp = stream.call(data.clone()).unwrap();
+    for (x, y) in data.iter().zip(&resp.data) {
+        assert_eq!(*y, fit.apot.regs.eval(*x), "x={x}");
+    }
+    drop(stream);
+    svc.shutdown();
 }
 
 #[test]
 fn mixed_backends_share_one_worker_bank_under_load() {
-    // one Functional-default service; stream 2 is pinned to the
-    // cycle-accurate simulator and stream 3 to the serialized one —
-    // all three streams must stay bit-exact and the pinned streams
-    // must account simulated cycles
-    let svc = ActivationService::start(ServiceConfig {
-        workers: 2,
-        ..Default::default()
-    });
+    // one Functional-default service; one stream is pinned to the
+    // cycle-accurate simulator and one to the serialized one — all
+    // three streams must stay bit-exact and the pinned streams must
+    // account simulated cycles
+    let svc = ServiceBuilder::new().workers(2).start();
     let acts = [Activation::Relu, Activation::Sigmoid, Activation::Silu];
     let regs: Vec<GrauRegisters> = acts.iter().map(|&a| fitted(a, false)).collect();
-    svc.register(1, regs[0].clone(), ApproxKind::Apot);
-    svc.register_unit(2, regs[1].clone(), ApproxKind::Apot, UnitKind::Pipelined);
-    svc.register_unit(3, regs[2].clone(), ApproxKind::Apot, UnitKind::Serial);
+    let streams = [
+        svc.register(regs[0].clone(), ApproxKind::Apot).expect("register"),
+        svc.register_unit(regs[1].clone(), ApproxKind::Apot, UnitKind::Pipelined)
+            .expect("register pipelined"),
+        svc.register_unit(regs[2].clone(), ApproxKind::Apot, UnitKind::Serial)
+            .expect("register serial"),
+    ];
     let mut rng = Rng::new(7);
-    let mut pending = Vec::new();
+    let mut pending: Vec<(usize, Vec<i32>, Pending)> = Vec::new();
     for i in 0..45 {
-        let sid = 1 + (i % 3) as u64;
+        let si = i % 3;
         let data: Vec<i32> = (0..200).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
-        pending.push((sid, data.clone(), svc.submit(sid, data)));
+        let p = streams[si].submit(data.clone()).expect("submit");
+        pending.push((si, data, p));
     }
-    for (sid, data, rx) in pending {
-        let resp = rx.recv().expect("response");
-        assert!(resp.error.is_none(), "stream {sid}: {:?}", resp.error);
+    for (si, data, p) in pending {
+        let resp = p.recv().expect("response");
         for (x, y) in data.iter().zip(&resp.data) {
-            assert_eq!(*y, regs[(sid - 1) as usize].eval(*x), "stream {sid}");
+            assert_eq!(*y, regs[si].eval(*x), "stream {si}");
         }
     }
+    drop(streams);
     let m = svc.shutdown();
     assert_eq!(m.requests, 45);
     // the two cycle-accurate streams ran 15 requests x 200 elements each
@@ -158,12 +236,11 @@ fn pjrt_offload_backend_matches_functional() {
         eprintln!("skipping: service artifact missing (run `make artifacts`)");
         return;
     }
-    let svc = ActivationService::start(ServiceConfig {
-        workers: 1,
-        backend: Backend::Pjrt,
-        artifacts_dir: dir.to_path_buf(),
-        ..Default::default()
-    });
+    let svc = ServiceBuilder::new()
+        .workers(1)
+        .backend(Backend::Pjrt)
+        .artifacts_dir(dir)
+        .start();
     // the offload kernel is compiled for shift_lo=0, 16 shifts, 8-bit
     let regs = fitted(Activation::Silu, true);
     if regs.shift_lo != 0 {
@@ -171,11 +248,12 @@ fn pjrt_offload_backend_matches_functional() {
         svc.shutdown();
         return;
     }
-    svc.register(0, regs.clone(), ApproxKind::Apot);
+    let stream = svc.register(regs.clone(), ApproxKind::Apot).expect("register");
     let data: Vec<i32> = (-3000..3000).step_by(3).collect();
-    let resp = svc.call(0, data.clone()).expect("pjrt call");
+    let resp = stream.call(data.clone()).expect("pjrt call");
     for (x, y) in data.iter().zip(&resp.data) {
         assert_eq!(*y, regs.eval(*x), "pjrt offload x={x}");
     }
+    drop(stream);
     svc.shutdown();
 }
