@@ -27,6 +27,18 @@ cargo build --release --benches --examples
 step "cargo test -q"
 cargo test -q
 
+# Second pass with the std::arch lane kernel compiled in, so both
+# GrauPlan::eval_into paths stay green.  The AVX2 kernel is runtime-
+# detected, but there is no point building the feature on a host whose
+# ISA can never take the path, so gate on x86_64 + avx2.
+step "cargo build + test --features simd (std::arch kernel path)"
+if [ "$(uname -m)" = "x86_64" ] && grep -q avx2 /proc/cpuinfo 2>/dev/null; then
+    cargo build --release --features simd
+    cargo test -q --features simd
+else
+    printf 'ci.sh: WARNING: host ISA lacks AVX2 (or is not x86_64); simd feature step skipped\n'
+fi
+
 step "cargo clippy --all-targets -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings

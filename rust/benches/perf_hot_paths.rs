@@ -11,14 +11,19 @@
 //!                 fitter, the paper's "4 minutes per fit -> fast" claim;
 //!   ablations   — APoT vs PoT at equal budget, segments vs exponents.
 //!
-//! Machine-readable output: the QNN rows are also written to
-//! `BENCH_qnn.json` (`[{bench, ns_per_elem, speedup}, ...]`) so
-//! CHANGES.md bench deltas can be recorded mechanically — see
-//! docs/EXPERIMENTS.md §Perf for the convention.
+//! Machine-readable output: the QNN rows are written to
+//! `BENCH_qnn.json` and the plan-kernel rows to `BENCH_plan.json`
+//! (`[{bench, ns_per_elem, ...}, ...]`) so CHANGES.md bench deltas can
+//! be recorded mechanically — see docs/EXPERIMENTS.md §Perf for the
+//! convention.  Full (non-smoke) runs additionally gate the chunked
+//! plan kernel's speedup over scalar `GrauPlan::eval` at
+//! [`PLAN_KERNEL_FLOOR`], so the kernel cannot silently regress to the
+//! scalar rate.
 //!
-//! `GRAU_BENCH_SMOKE=1` runs only the QNN forward block on tiny shapes
-//! with short timings — the CI smoke gate (`ci.sh`) that keeps the
-//! `harness = false` bench targets from rotting.
+//! `GRAU_BENCH_SMOKE=1` runs only the QNN forward and plan-kernel
+//! blocks on tiny shapes with short timings — the CI smoke gate
+//! (`ci.sh`) that keeps the `harness = false` bench targets from
+//! rotting.
 
 use grau::act::{Activation, FoldedActivation};
 use grau::api::{Backend, ServiceBuilder};
@@ -41,9 +46,14 @@ fn main() {
     let smoke = std::env::var_os("GRAU_BENCH_SMOKE").is_some();
     bench_header("perf_hot_paths", "EXPERIMENTS.md §Perf — per-layer hot paths");
     if smoke {
-        println!("(GRAU_BENCH_SMOKE set: tiny-shape QNN forward smoke only)");
+        println!("(GRAU_BENCH_SMOKE set: tiny-shape QNN forward + plan-kernel smoke only)");
         let rows = qnn_forward_block(true);
         write_bench_json(&rows);
+        // smoke exercises the kernels + bit-exactness asserts but never
+        // writes BENCH_plan.json: unlike the regenerated-per-run
+        // BENCH_qnn.json, that file is a committed baseline, and tiny-
+        // shape CI numbers must not clobber it
+        let _ = plan_kernel_block(true);
         return;
     }
 
@@ -73,41 +83,13 @@ fn main() {
     let qnn_rows = qnn_forward_block(false);
     write_bench_json(&qnn_rows);
 
-    // --- activation eval: scalar registers vs compiled plan vs LUT --------
-    // The 8-bit service workload: one APoT-fitted register file, inputs
-    // sweeping the doubled MAC range (same shape the L3 rows stream).
+    // --- plan kernels: scalar vs branchless SoA chunks vs std::arch -------
+    let plan_rows = plan_kernel_block(false);
+    write_plan_json(&plan_rows);
+
+    // fitted register file for the registry and service blocks below
     let fit = fit_folded(&f, -1000, 1000, FitOptions::default());
-    println!("\nperf: activation eval — scalar vs compiled plan vs direct LUT (8-bit workload)");
     let regs = fit.apot.regs.clone();
-    let plan = GrauPlan::new(&regs);
-    let lut = LutUnit::from_folded(&f, -3000, 3000);
-    let xs: Vec<i32> = (0..65_536).map(|i| (i as i32 % 6000) - 3000).collect();
-    let n = xs.len() as u64;
-    let rep_scalar = Bencher::new("GrauRegisters::eval (scalar, per element)")
-        .elements(n)
-        .run(|| xs.iter().map(|&x| regs.eval(x) as i64).sum::<i64>());
-    Bencher::new("GrauPlan::eval (compiled, per element)")
-        .elements(n)
-        .run(|| xs.iter().map(|&x| plan.eval(x) as i64).sum::<i64>());
-    let mut plan_out: Vec<i32> = Vec::new();
-    let rep_batch = Bencher::new("GrauPlan::eval_batch (compiled, chunked)")
-        .elements(n)
-        .run(|| {
-            plan.eval_batch(&xs, &mut plan_out);
-            plan_out.last().copied()
-        });
-    Bencher::new("LutUnit::eval (direct table, upper bound)")
-        .elements(n)
-        .run(|| xs.iter().map(|&x| lut.eval(x) as i64).sum::<i64>());
-    println!(
-        "  plan eval_batch speedup over scalar eval: {:.2}x  (dense table: {})",
-        rep_scalar.mean_ns / rep_batch.mean_ns,
-        plan.has_dense_table()
-    );
-    // bit-exactness sanity on the bench workload itself
-    for &x in xs.iter().step_by(997) {
-        assert_eq!(plan.eval(x), regs.eval(x), "plan/scalar diverge at x={x}");
-    }
 
     // --- hw::unit registry: one loop drives every backend ------------------
     // (replaces the old hand-rolled per-unit comparisons: each registered
@@ -379,5 +361,140 @@ fn write_bench_json(rows: &[BenchRow]) {
     match std::fs::write("BENCH_qnn.json", format!("{doc}\n")) {
         Ok(()) => println!("\nwrote BENCH_qnn.json ({} rows)", rows.len()),
         Err(e) => println!("\nWARNING: could not write BENCH_qnn.json: {e}"),
+    }
+}
+
+/// Floor on the chunked plan kernel's speedup over scalar
+/// `GrauPlan::eval` on the 8-bit service workload.  Asserted in full
+/// runs so the speedup is gated, not anecdotal; skipped in smoke runs
+/// (tiny shapes and short timings are too noisy to gate on).
+const PLAN_KERNEL_FLOOR: f64 = 1.3;
+
+/// The plan-kernel comparison on the 8-bit service workload: one
+/// APoT-fitted register file, inputs sweeping the doubled MAC range
+/// (the same shape the L3 service rows stream).  Benches the scalar
+/// oracle, the compiled scalar plan, the dispatching lane kernel
+/// (`eval_into` — AVX2 when the `simd` feature and host allow), the
+/// pinned portable chunked kernel, and the direct-LUT upper bound;
+/// asserts bit-exactness on the workload itself and, in full runs, the
+/// [`PLAN_KERNEL_FLOOR`] throughput gate.
+fn plan_kernel_block(smoke: bool) -> Vec<BenchRow> {
+    let tag = if smoke { "smoke_" } else { "" };
+    let (samples_n, mt) = if smoke { (3usize, 20u64) } else { (10, 300) };
+    let f = FoldedActivation::new(0.004, 0.05, Activation::Silu, 1.0 / 120.0, 8);
+    let fit = fit_folded(&f, -1000, 1000, FitOptions::default());
+    let regs = fit.apot.regs.clone();
+    let plan = GrauPlan::new(&regs);
+    let lut = LutUnit::from_folded(&f, -3000, 3000);
+    let n_elems = if smoke { 8_192usize } else { 65_536 };
+    let xs: Vec<i32> = (0..n_elems).map(|i| (i as i32 % 6000) - 3000).collect();
+    let n = xs.len() as u64;
+
+    println!(
+        "\nperf: plan kernels — scalar vs branchless SoA chunks vs std::arch (8-bit workload)"
+    );
+    println!(
+        "  simd kernel: available {}  plan-compatible {}  (dense table: {})",
+        GrauPlan::simd_available(),
+        plan.simd_compatible(),
+        plan.has_dense_table()
+    );
+    let rep_scalar = Bencher::new("GrauRegisters::eval (scalar oracle, per element)")
+        .elements(n)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| xs.iter().map(|&x| regs.eval(x) as i64).sum::<i64>());
+    let rep_plan = Bencher::new("GrauPlan::eval (compiled scalar, per element)")
+        .elements(n)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| xs.iter().map(|&x| plan.eval(x) as i64).sum::<i64>());
+    let mut out = vec![0i32; xs.len()];
+    let rep_kernel = Bencher::new("GrauPlan::eval_into (dispatching lane kernel)")
+        .elements(n)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| {
+            plan.eval_into(&xs, &mut out);
+            out.last().copied()
+        });
+    let rep_portable = Bencher::new("GrauPlan::eval_into_portable (chunked kernel)")
+        .elements(n)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| {
+            plan.eval_into_portable(&xs, &mut out);
+            out.last().copied()
+        });
+    let rep_lut = Bencher::new("LutUnit::eval (direct table, upper bound)")
+        .elements(n)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| xs.iter().map(|&x| lut.eval(x) as i64).sum::<i64>());
+
+    let over_oracle = rep_scalar.mean_ns / rep_kernel.mean_ns;
+    let over_plan_scalar = rep_plan.mean_ns / rep_kernel.mean_ns;
+    println!(
+        "  lane kernel speedup: {over_oracle:.2}x over the scalar oracle, \
+         {over_plan_scalar:.2}x over compiled scalar eval"
+    );
+
+    // bit-exactness on the bench workload itself: both kernels against
+    // the oracle, every element
+    plan.eval_into(&xs, &mut out);
+    for (&x, &y) in xs.iter().zip(&out) {
+        assert_eq!(y, regs.eval(x), "lane kernel diverges from oracle at x={x}");
+    }
+    plan.eval_into_portable(&xs, &mut out);
+    for (&x, &y) in xs.iter().zip(&out) {
+        assert_eq!(y, regs.eval(x), "portable kernel diverges from oracle at x={x}");
+    }
+
+    if !smoke {
+        assert!(
+            over_plan_scalar >= PLAN_KERNEL_FLOOR,
+            "plan kernel regression: eval_into is only {over_plan_scalar:.2}x compiled scalar \
+             eval (floor {PLAN_KERNEL_FLOOR}x) on the 8-bit service workload"
+        );
+    }
+
+    let base = rep_scalar.mean_ns;
+    vec![
+        (format!("{tag}scalar_oracle_eval"), rep_scalar.mean_ns / n as f64, 1.0),
+        (
+            format!("{tag}plan_scalar_eval"),
+            rep_plan.mean_ns / n as f64,
+            base / rep_plan.mean_ns,
+        ),
+        (
+            format!("{tag}plan_kernel_eval_into"),
+            rep_kernel.mean_ns / n as f64,
+            base / rep_kernel.mean_ns,
+        ),
+        (
+            format!("{tag}plan_kernel_portable"),
+            rep_portable.mean_ns / n as f64,
+            base / rep_portable.mean_ns,
+        ),
+        (format!("{tag}lut_direct"), rep_lut.mean_ns / n as f64, base / rep_lut.mean_ns),
+    ]
+}
+
+/// Write the machine-readable plan-kernel rows — `BENCH_plan.json` is
+/// the kernel's before/after baseline (speedups are relative to the
+/// scalar `GrauRegisters::eval` oracle row; the `simd` field records
+/// whether the `std::arch` kernel was available for the run).
+fn write_plan_json(rows: &[BenchRow]) {
+    let doc: Json = arr(rows.iter().map(|(name, nspe, sp)| {
+        obj(vec![
+            ("bench", jstr(name)),
+            ("ns_per_elem", num(*nspe)),
+            ("speedup_vs_scalar", num(*sp)),
+            ("simd", Json::Bool(GrauPlan::simd_available())),
+        ])
+    }));
+    match std::fs::write("BENCH_plan.json", format!("{doc}\n")) {
+        Ok(()) => println!("wrote BENCH_plan.json ({} rows)", rows.len()),
+        Err(e) => println!("WARNING: could not write BENCH_plan.json: {e}"),
     }
 }

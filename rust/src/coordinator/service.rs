@@ -555,8 +555,10 @@ fn worker_loop(
     let mut units: HashMap<u64, CachedUnit> = HashMap::new();
     // reusable group-batch buffers: same-stream request groups are
     // concatenated into one contiguous stream and evaluated with a
-    // single eval_batch call (one dispatch, one pipeline fill), then
-    // split back into per-request responses.  Capacity retained across
+    // single eval_batch call (one dispatch into the plan's branchless
+    // lane kernel for functional backends, one pipeline fill for the
+    // cycle-accurate ones), then split back into per-request
+    // responses.  Capacity retained across
     // groups is capped so one oversized burst doesn't pin its
     // high-water memory for the worker's lifetime.
     const MAX_RETAINED_GROUP_ELEMS: usize = 1 << 20;

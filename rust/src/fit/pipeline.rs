@@ -166,11 +166,21 @@ pub fn unit_mismatch_rate(
     n: usize,
 ) -> f64 {
     let samples = f.sample(lo, hi, n);
+    // chunked through eval_slice so plan-backed units take the batched
+    // lane kernel; stack buffers keep the validator allocation-free
+    const CHUNK: usize = 256;
+    let mut xs = [0i32; CHUNK];
+    let mut ys = [0i32; CHUNK];
     let mut bad = 0usize;
-    for &(x, _) in &samples {
-        let x32 = x.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
-        if unit.eval_ref(x32) != f.eval(x) {
-            bad += 1;
+    for group in samples.chunks(CHUNK) {
+        for (slot, &(x, _)) in xs.iter_mut().zip(group) {
+            *slot = x.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+        }
+        unit.eval_slice(&xs[..group.len()], &mut ys[..group.len()]);
+        for (&(x, _), &q) in group.iter().zip(&ys) {
+            if q != f.eval(x) {
+                bad += 1;
+            }
         }
     }
     bad as f64 / samples.len() as f64

@@ -46,13 +46,24 @@ fn clamp_i32(v: i64) -> i32 {
 /// samples — the scoring primitive the window search (and any future
 /// fitter) drives through the `hw::unit` trait layer.
 pub fn unit_sse(unit: &dyn FunctionalUnit, samples: &[(i64, f64)]) -> f64 {
-    samples
-        .iter()
-        .map(|&(x, y)| {
-            let d = unit.eval_ref(clamp_i32(x)) as f64 - y;
-            d * d
-        })
-        .sum()
+    // chunked through eval_slice so plan-backed units take the batched
+    // lane kernel instead of per-element dispatch; stack buffers keep
+    // the scorer allocation-free
+    const CHUNK: usize = 256;
+    let mut xs = [0i32; CHUNK];
+    let mut ys = [0i32; CHUNK];
+    let mut sse = 0.0;
+    for group in samples.chunks(CHUNK) {
+        for (slot, &(x, _)) in xs.iter_mut().zip(group) {
+            *slot = clamp_i32(x);
+        }
+        unit.eval_slice(&xs[..group.len()], &mut ys[..group.len()]);
+        for (&(_, y), &q) in group.iter().zip(&ys) {
+            let d = q as f64 - y;
+            sse += d * d;
+        }
+    }
+    sse
 }
 
 /// Quantized-output SSE of a register file against float samples.

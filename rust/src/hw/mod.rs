@@ -7,7 +7,10 @@
 //!   cycle-accurate simulators below must agree with.
 //! * [`plan`] — compiled evaluation plans ([`GrauPlan`]): the per-stream
 //!   work of `eval` (threshold search, mask bit-scan) hoisted to
-//!   reconfigure time, with a batched bit-exact fast path.
+//!   reconfigure time into structure-of-arrays segment rails, with a
+//!   branchless lane-chunked batch kernel (and an optional `std::arch`
+//!   AVX2 path behind the `simd` feature) that stays bit-exact to
+//!   [`GrauRegisters::eval`].
 //! * [`shifter`] — the 1-bit right-shifter units of Figure 4.
 //! * [`pipeline`] / [`serial`] — cycle-accurate pipelined (Figure 6) and
 //!   serialized (Figure 5) GRAU implementations.

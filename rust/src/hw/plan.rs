@@ -5,37 +5,60 @@
 //! over the shifter mask to accumulate the shift sum.  The register file
 //! is tiny and *static between reconfigurations* (paper §II-B: runtime
 //! reconfiguration only "reloads the value of thresholds and shifter
-//! settings"), so all of that per-input work can be hoisted to
-//! reconfigure time:
+//! settings"), so all of that per-input work is hoisted to reconfigure
+//! time, twice over:
 //!
-//! * the shifter mask of each segment is unrolled into an explicit list
-//!   of absolute shift amounts (no bit-scan on the stream path);
-//! * `y0`, `sign`, and the output clamp rails are widened to `i64` once;
-//! * for small register files (`n_bits <= 8`) whose thresholds span at
-//!   most [`DENSE_TABLE_MAX`] integers, the threshold search is replaced
-//!   by a dense segment-index table — one byte per input value between
-//!   the lowest and highest threshold, with the two out-of-span answers
-//!   (`0` below, `n_segments - 1` above) resolved by a range check.
+//! * **scalar form** — per-segment unrolled shift lists plus, for small
+//!   register files (`n_bits <= 8`, threshold span within
+//!   [`DENSE_TABLE_MAX`]), a dense segment-index table; this is what
+//!   [`GrauPlan::eval`] / [`GrauPlan::segment`] use;
+//! * **structure-of-arrays rails** — the same constants transposed into
+//!   parallel arrays indexed by segment (`i64`-widened thresholds padded
+//!   with a never-fires sentinel, `x0`/`y0`/`sign`, and the shift lists
+//!   unrolled to a uniform depth of `(shift, live-mask)` slot rails).
+//!   The batched kernel behind [`GrauPlan::eval_into`] walks inputs in
+//!   fixed [`LANES`]-wide chunks over these rails with **no per-element
+//!   branching**: the segment index is a branchless count of passed
+//!   thresholds, dead shift slots contribute exactly zero through an
+//!   all-ones/zero `live` mask (`(dx >> shift) & live`), and the output
+//!   clamp lowers to min/max.  Every lane in a chunk executes the same
+//!   instruction sequence, which is precisely the shape autovectorizers
+//!   (and the optional `std::arch` path below) want — the software
+//!   mirror of the paper's claim that the GRAU datapath is branch-free
+//!   comparators + shifters per element.
 //!
-//! [`GrauPlan::eval`] and [`GrauPlan::eval_batch`] are **bit-for-bit
-//! identical** to [`GrauRegisters::eval`] for every `i32` input — the
-//! shift sum is an exact `i64` addition, so unrolling cannot change the
-//! result, and `rust/tests/proptest_invariants.rs` enforces equality over
-//! randomized register files.  This is the same precompute-then-stream
-//! structure FINN-style dataflow accelerators exploit: compile once per
-//! reconfiguration, then stream MAC outputs through the compiled form.
+//! With the `simd` cargo feature on an `x86_64` host, `eval_into`
+//! dispatches to an AVX2 kernel (`std::arch` intrinsics, runtime
+//! `is_x86_feature_detected!` check) that evaluates four 64-bit lanes
+//! per vector op using gathers over the same rails; any plan the vector
+//! encoding cannot express (see [`GrauPlan::simd_compatible`]) and any
+//! host without AVX2 falls back to the portable chunked kernel.  Both
+//! kernels finish sub-[`LANES`] remainders through the scalar form, so
+//! slice length never changes results.
+//!
+//! [`GrauPlan::eval`], [`GrauPlan::eval_into`], and
+//! [`GrauPlan::eval_batch`] are **bit-for-bit identical** to
+//! [`GrauRegisters::eval`] for every `i32` input — the shift sum is an
+//! exact `i64` addition, so neither unrolling nor reordering can change
+//! the result.  `rust/tests/proptest_invariants.rs` and the differential
+//! battery in `rust/tests/plan_kernel_differential.rs` enforce equality
+//! over randomized register files and boundary slice lengths.  This is
+//! the same precompute-then-stream structure FINN-style dataflow
+//! accelerators exploit: compile once per reconfiguration, then stream
+//! MAC outputs through the compiled form.
 
 use crate::act::qrange;
-use crate::hw::GrauRegisters;
+use crate::hw::{GrauRegisters, MAX_SEGMENTS};
 
 /// Upper bound on dense segment-table entries (one byte each).  Threshold
 /// spans wider than this fall back to the linear threshold search.
 pub const DENSE_TABLE_MAX: i64 = 1 << 16;
 
-/// Elements per chunk in [`GrauPlan::eval_batch`]: segment indices for a
-/// whole chunk are resolved first, then the arithmetic pass runs — the
-/// two loops are independent, which keeps both tight.
-const BATCH_CHUNK: usize = 256;
+/// Lane width of the portable chunked kernel: inputs are processed in
+/// fixed chunks of this many elements, every lane executing the same
+/// branch-free instruction sequence (remainders finish through the
+/// scalar form).  Tests pin slice lengths around this boundary.
+pub const LANES: usize = 8;
 
 /// One segment's precomputed constants: anchor, bias, sign, and the
 /// unrolled absolute shift amounts its mask encodes.
@@ -52,7 +75,7 @@ struct PlanSegment {
     shifts: [u32; 32],
 }
 
-/// How the plan maps an input to its segment index.
+/// How the scalar plan form maps an input to its segment index.
 #[derive(Clone, Debug)]
 enum SegLookup {
     /// single segment — no thresholds at all
@@ -62,6 +85,65 @@ enum SegLookup {
     Dense { lo: i32, idx: Box<[u8]> },
     /// linear count of passed thresholds (the scalar model's search)
     Search { thresholds: Vec<i32> },
+}
+
+/// Structure-of-arrays segment rails: the plan's constants transposed
+/// into parallel arrays indexed by segment, sized for [`MAX_SEGMENTS`]
+/// so lookups never bound-check against `n_segments`.
+///
+/// * `thr` — thresholds widened to `i64`, unused slots padded with
+///   `i64::MAX` (no `i32` input ever passes one, so a fixed-width count
+///   over all `MAX_SEGMENTS - 1` slots equals the scalar model's count
+///   over the used slots);
+/// * `shifts` / `lives` — the per-segment shift lists unrolled to a
+///   uniform depth (the max live-shift count across segments), stored
+///   slot-major (`[depth][MAX_SEGMENTS]`): slot `k` of segment `j` holds
+///   a shift amount and an all-ones mask when live, or `(0, 0)` when
+///   dead — `(dx >> shift) & live` then contributes exactly zero for
+///   dead slots, with no branch on the per-segment count.
+#[derive(Clone, Debug)]
+struct Rails {
+    thr: [i64; MAX_SEGMENTS - 1],
+    x0: [i64; MAX_SEGMENTS],
+    y0: [i64; MAX_SEGMENTS],
+    sign: [i64; MAX_SEGMENTS],
+    /// slot-major `[depth][MAX_SEGMENTS]` shift amounts (dead slots 0)
+    shifts: Vec<i64>,
+    /// slot-major `[depth][MAX_SEGMENTS]` live masks (`-1` live, `0` dead)
+    lives: Vec<i64>,
+}
+
+impl Rails {
+    fn build(regs: &GrauRegisters, segs: &[PlanSegment]) -> Rails {
+        let mut rails = Rails {
+            thr: [i64::MAX; MAX_SEGMENTS - 1],
+            x0: [0; MAX_SEGMENTS],
+            y0: [0; MAX_SEGMENTS],
+            sign: [0; MAX_SEGMENTS],
+            shifts: Vec::new(),
+            lives: Vec::new(),
+        };
+        for (slot, &t) in rails
+            .thr
+            .iter_mut()
+            .zip(&regs.thresholds[..regs.n_segments - 1])
+        {
+            *slot = t as i64;
+        }
+        let depth = segs.iter().map(|s| s.n as usize).max().unwrap_or(0);
+        rails.shifts = vec![0i64; depth * MAX_SEGMENTS];
+        rails.lives = vec![0i64; depth * MAX_SEGMENTS];
+        for (j, seg) in segs.iter().enumerate() {
+            rails.x0[j] = seg.x0;
+            rails.y0[j] = seg.y0;
+            rails.sign[j] = seg.sign;
+            for k in 0..seg.n as usize {
+                rails.shifts[k * MAX_SEGMENTS + j] = seg.shifts[k] as i64;
+                rails.lives[k * MAX_SEGMENTS + j] = -1;
+            }
+        }
+        rails
+    }
 }
 
 /// A compiled evaluation plan: everything [`GrauRegisters::eval`] derives
@@ -88,6 +170,7 @@ enum SegLookup {
 pub struct GrauPlan {
     segs: Vec<PlanSegment>,
     lookup: SegLookup,
+    rails: Rails,
     qmin: i64,
     qmax: i64,
     n_bits: u8,
@@ -104,13 +187,14 @@ impl GrauPlan {
     /// Compile a plan without the dense table.  Used where plans are
     /// short-lived (the fit window search builds one per candidate and
     /// scores only ~1000 samples through it, so table construction would
-    /// dominate).
+    /// dominate).  The SoA rails are always built — they are a few fixed
+    /// arrays, not a table.
     pub fn without_table(regs: &GrauRegisters) -> GrauPlan {
         GrauPlan::with_table_cap(regs, 0)
     }
 
     fn with_table_cap(regs: &GrauRegisters, cap: i64) -> GrauPlan {
-        let segs = (0..regs.n_segments)
+        let segs: Vec<PlanSegment> = (0..regs.n_segments)
             .map(|j| {
                 // unroll EVERY set mask bit (not just the n_shifts
                 // window) — GrauRegisters::eval's bit-scan does the
@@ -164,10 +248,12 @@ impl GrauPlan {
             }
         };
 
+        let rails = Rails::build(regs, &segs);
         let (qmin, qmax) = qrange(regs.n_bits);
         GrauPlan {
             segs,
             lookup,
+            rails,
             qmin: qmin as i64,
             qmax: qmax as i64,
             n_bits: regs.n_bits,
@@ -219,21 +305,97 @@ impl GrauPlan {
         self.eval_in_segment(self.segment(x), x)
     }
 
+    /// One [`LANES`]-wide chunk through the SoA rails, branch-free:
+    /// segment indices are a fixed-width count of passed thresholds
+    /// (padded slots never fire), the shift sum walks uniform-depth
+    /// `(shift, live)` slot rails where dead slots contribute zero via
+    /// their mask, and the clamp lowers to min/max.  All per-lane
+    /// variation is data (gathered segment constants), not control flow.
+    #[inline]
+    fn eval_chunk(&self, xs: &[i32; LANES], out: &mut [i32; LANES]) {
+        let r = &self.rails;
+        let mut seg = [0usize; LANES];
+        for &thr in &r.thr {
+            for (s, &x) in seg.iter_mut().zip(xs.iter()) {
+                *s += (x as i64 >= thr) as usize;
+            }
+        }
+        let mut dx = [0i64; LANES];
+        for ((d, &x), &s) in dx.iter_mut().zip(xs.iter()).zip(&seg) {
+            *d = x as i64 - r.x0[s];
+        }
+        let mut acc = [0i64; LANES];
+        for (shift_row, live_row) in r
+            .shifts
+            .chunks_exact(MAX_SEGMENTS)
+            .zip(r.lives.chunks_exact(MAX_SEGMENTS))
+        {
+            for ((a, &d), &s) in acc.iter_mut().zip(&dx).zip(&seg) {
+                *a += (d >> shift_row[s]) & live_row[s];
+            }
+        }
+        for ((o, &a), &s) in out.iter_mut().zip(&acc).zip(&seg) {
+            *o = (r.y0[s] + r.sign[s] * a).clamp(self.qmin, self.qmax) as i32;
+        }
+    }
+
     /// Evaluate a stream into a preallocated slice
     /// (`out.len() == xs.len()`) — the allocation-free form the QNN
     /// engine's channel-major epilogues stream whole channel planes
-    /// through.  Processes fixed chunks: segment indices for the whole
-    /// chunk are resolved before the arithmetic pass.
+    /// through, and the service's coalesced batch path dispatches to.
+    ///
+    /// Dispatches to the `std::arch` AVX2 kernel when the `simd` feature
+    /// is compiled, the host supports it, and the plan is
+    /// [`simd_compatible`](GrauPlan::simd_compatible); otherwise runs
+    /// the portable chunked kernel.  Both are bit-for-bit identical to
+    /// [`GrauRegisters::eval`] per element.
     pub fn eval_into(&self, xs: &[i32], out: &mut [i32]) {
         debug_assert_eq!(xs.len(), out.len());
-        let mut seg = [0u8; BATCH_CHUNK];
-        for (chunk, ochunk) in xs.chunks(BATCH_CHUNK).zip(out.chunks_mut(BATCH_CHUNK)) {
-            for (s, &x) in seg.iter_mut().zip(chunk.iter()) {
-                *s = self.segment(x) as u8;
-            }
-            for (i, (o, &x)) in ochunk.iter_mut().zip(chunk.iter()).enumerate() {
-                *o = self.eval_in_segment(seg[i] as usize, x);
-            }
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if self.simd_compatible() && simd::eval_into(self, xs, out) {
+            return;
+        }
+        self.eval_into_portable(xs, out);
+    }
+
+    /// The portable [`LANES`]-chunked branchless kernel, bypassing the
+    /// `std::arch` dispatch — public so differential tests and benches
+    /// can pin this path explicitly even when the `simd` feature is
+    /// compiled.  Remainder elements finish through the scalar form.
+    pub fn eval_into_portable(&self, xs: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        for (xc, oc) in xs.chunks_exact(LANES).zip(out.chunks_exact_mut(LANES)) {
+            self.eval_chunk(xc.try_into().unwrap(), oc.try_into().unwrap());
+        }
+        let done = xs.len() - xs.len() % LANES;
+        for (o, &x) in out[done..].iter_mut().zip(&xs[done..]) {
+            *o = self.eval(x);
+        }
+    }
+
+    /// Can the `std::arch` lane kernel realize this plan bit-exactly?
+    /// The vector path encodes segment signs as conditional-negate /
+    /// zero masks, so it requires every `sign` in `{-1, 0, 1}` — always
+    /// true for fitted register files; hand-built files outside that set
+    /// fall back to the portable kernel (which multiplies by the raw
+    /// sign and is exact for any value).
+    pub fn simd_compatible(&self) -> bool {
+        self.rails.sign[..self.segs.len()]
+            .iter()
+            .all(|&s| (-1..=1).contains(&s))
+    }
+
+    /// Is the `std::arch` lane kernel compiled in *and* usable on this
+    /// host?  `false` without the `simd` cargo feature, on non-x86_64
+    /// targets, or when the CPU lacks AVX2.
+    pub fn simd_available() -> bool {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        {
+            is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        {
+            false
         }
     }
 
@@ -265,6 +427,94 @@ impl GrauPlan {
     /// Did this plan qualify for the dense segment-index table?
     pub fn has_dense_table(&self) -> bool {
         matches!(self.lookup, SegLookup::Dense { .. })
+    }
+}
+
+/// The `std::arch` AVX2 lane kernel: four 64-bit lanes per vector op
+/// over the same SoA rails the portable kernel walks.  Per-lane segment
+/// constants arrive by `vpgatherqq`; the arithmetic right shift by
+/// per-lane amounts (no `vpsravq` below AVX-512) is emulated over the
+/// logical `vpsrlvq` with the standard bias trick, which is exact for
+/// shift amounts 0..=63.  Sub-4 remainders finish through the scalar
+/// form.  Dispatch (from [`GrauPlan::eval_into`]) pre-checks
+/// [`GrauPlan::simd_compatible`] and the runtime AVX2 probe.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use super::{GrauPlan, MAX_SEGMENTS};
+    use std::arch::x86_64::*;
+
+    /// Evaluate through the AVX2 kernel when the host supports it;
+    /// `false` means the caller must take the portable kernel.
+    pub(super) fn eval_into(plan: &GrauPlan, xs: &[i32], out: &mut [i32]) -> bool {
+        if !is_x86_feature_detected!("avx2") {
+            return false;
+        }
+        unsafe { eval_into_avx2(plan, xs, out) };
+        true
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn eval_into_avx2(plan: &GrauPlan, xs: &[i32], out: &mut [i32]) {
+        let r = &plan.rails;
+        let depth = r.shifts.len() / MAX_SEGMENTS;
+        let ones = _mm256_set1_epi64x(-1);
+        let bias = _mm256_set1_epi64x(i64::MIN);
+        let qmin = _mm256_set1_epi64x(plan.qmin);
+        let qmax = _mm256_set1_epi64x(plan.qmax);
+        let zero = _mm256_setzero_si256();
+        // picks the low dword of each 64-bit lane (little-endian) when
+        // narrowing the clamped result back to i32
+        let pack = _mm256_setr_epi32(0, 2, 4, 6, 0, 0, 0, 0);
+        let n = xs.len() / 4 * 4;
+        let mut i = 0usize;
+        while i < n {
+            // widen 4 x i32 -> 4 x i64 lanes
+            let x32 = _mm_loadu_si128(xs.as_ptr().add(i) as *const __m128i);
+            let x = _mm256_cvtepi32_epi64(x32);
+            // branchless segment index: count passed thresholds.
+            // x >= t  <=>  !(t > x); the negated compare mask is -1 per
+            // passed lane, so subtracting it increments the count.
+            let mut seg = zero;
+            for &t in r.thr.iter() {
+                let not_passed = _mm256_cmpgt_epi64(_mm256_set1_epi64x(t), x);
+                seg = _mm256_sub_epi64(seg, _mm256_xor_si256(not_passed, ones));
+            }
+            // gather per-lane segment constants off the rails
+            let x0 = _mm256_i64gather_epi64::<8>(r.x0.as_ptr(), seg);
+            let dx = _mm256_sub_epi64(x, x0);
+            let dxb = _mm256_xor_si256(dx, bias);
+            let mut acc = zero;
+            for k in 0..depth {
+                let row = k * MAX_SEGMENTS;
+                let sh = _mm256_i64gather_epi64::<8>(r.shifts.as_ptr().add(row), seg);
+                let lv = _mm256_i64gather_epi64::<8>(r.lives.as_ptr().add(row), seg);
+                // arithmetic >> by per-lane amounts over the logical
+                // shift: ((dx ^ MIN) >>l n) - (MIN >>l n)
+                let term =
+                    _mm256_sub_epi64(_mm256_srlv_epi64(dxb, sh), _mm256_srlv_epi64(bias, sh));
+                acc = _mm256_add_epi64(acc, _mm256_and_si256(term, lv));
+            }
+            let y0 = _mm256_i64gather_epi64::<8>(r.y0.as_ptr(), seg);
+            let sg = _mm256_i64gather_epi64::<8>(r.sign.as_ptr(), seg);
+            // sign in {-1, 0, 1}: conditional negate (xor/sub against the
+            // sign-negative mask) then zero out sign-0 lanes
+            let neg = _mm256_cmpgt_epi64(zero, sg);
+            let live = _mm256_xor_si256(_mm256_cmpeq_epi64(sg, zero), ones);
+            let signed = _mm256_and_si256(_mm256_sub_epi64(_mm256_xor_si256(acc, neg), neg), live);
+            let mut y = _mm256_add_epi64(y0, signed);
+            // clamp to the output rails (no 64-bit min/max below AVX-512)
+            y = _mm256_blendv_epi8(y, qmax, _mm256_cmpgt_epi64(y, qmax));
+            y = _mm256_blendv_epi8(y, qmin, _mm256_cmpgt_epi64(qmin, y));
+            let packed = _mm256_permutevar8x32_epi32(y, pack);
+            _mm_storeu_si128(
+                out.as_mut_ptr().add(i) as *mut __m128i,
+                _mm256_castsi256_si128(packed),
+            );
+            i += 4;
+        }
+        for (o, &x) in out[n..].iter_mut().zip(&xs[n..]) {
+            *o = plan.eval(x);
+        }
     }
 }
 
@@ -318,6 +568,49 @@ mod tests {
     }
 
     #[test]
+    fn chunked_kernel_handles_remainder_lengths() {
+        // 0, 1, LANES-1, LANES, LANES+1, and a multi-chunk odd length:
+        // the remainder loop must agree with the lane kernel bit-for-bit
+        let r = demo_regs();
+        let plan = GrauPlan::new(&r);
+        for len in [0usize, 1, LANES - 1, LANES, LANES + 1, 3 * LANES + 5] {
+            let xs: Vec<i32> = (0..len as i32).map(|i| i * 211 - 2000).collect();
+            let mut out = vec![i32::MIN; len];
+            plan.eval_into(&xs, &mut out);
+            let mut portable = vec![i32::MIN; len];
+            plan.eval_into_portable(&xs, &mut portable);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(out[i], r.eval(x), "len={len} x={x}");
+                assert_eq!(portable[i], r.eval(x), "portable len={len} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_unit_sign_files_stay_exact_and_refuse_simd() {
+        // hand-built sign outside {-1, 0, 1}: the portable kernel
+        // multiplies by the raw sign (exact), and the vector encoding
+        // reports itself incompatible so dispatch can never take it
+        let mut r = GrauRegisters::new(8, 2, 1, 4);
+        r.thresholds[0] = 7;
+        r.sign[0] = 3;
+        r.sign[1] = 0;
+        r.mask[0] = 0b0101;
+        r.mask[1] = 0b0011;
+        r.y0[1] = 42;
+        let plan = GrauPlan::new(&r);
+        assert!(!plan.simd_compatible());
+        let xs: Vec<i32> = (-40..40).collect();
+        let mut out = vec![0i32; xs.len()];
+        plan.eval_into(&xs, &mut out);
+        for (y, &x) in out.iter().zip(&xs) {
+            assert_eq!(*y, r.eval(x), "x={x}");
+        }
+        // the sign-0 upper segment is flat at its bias
+        assert_eq!(plan.eval(1000), 42);
+    }
+
+    #[test]
     fn segment_boundaries_match() {
         let r = demo_regs();
         let plan = GrauPlan::new(&r);
@@ -363,5 +656,12 @@ mod tests {
             assert_eq!(plan.eval(x), r.eval(x), "x={x}");
         }
         assert_eq!(plan.eval(-100), -7); // flat segment returns its bias
+        // the rails carry the full 16-deep unroll: batch path agrees too
+        let xs: Vec<i32> = (-200..200).collect();
+        let mut out = vec![0i32; xs.len()];
+        plan.eval_into(&xs, &mut out);
+        for (y, &x) in out.iter().zip(&xs) {
+            assert_eq!(*y, r.eval(x), "x={x}");
+        }
     }
 }

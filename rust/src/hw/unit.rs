@@ -175,6 +175,8 @@ impl FunctionalUnit for GrauPlan {
         GrauPlan::eval_batch(self, xs, out)
     }
     fn eval_slice(&self, xs: &[i32], out: &mut [i32]) {
+        // the branchless SoA lane kernel (AVX2 when the `simd` feature
+        // and host allow, portable chunks otherwise)
         GrauPlan::eval_into(self, xs, out)
     }
 }

@@ -1,0 +1,222 @@
+//! Differential battery: the branchless plan kernels against the
+//! scalar register-file oracle.
+//!
+//! `GrauRegisters::eval` is the bit-exactness oracle (the single source
+//! of truth the Pallas kernel and cycle simulators also answer to); the
+//! compiled plan's batched kernels — the portable `LANES`-chunked SoA
+//! kernel, and the `std::arch` AVX2 kernel when the `simd` feature is
+//! compiled — must equal it bit-for-bit for every input, register file,
+//! and slice length.  Seeded randomized generation (hand-rolled —
+//! proptest is not vendored offline) sweeps:
+//!
+//! * 1/2/4/6/8-bit output widths and 1-8 segments;
+//! * all n_shifts windows (4/8/16) and shift_lo positions;
+//! * narrow threshold spans (dense segment-index table) and wide spans
+//!   (linear-search fallback), including unsorted threshold order;
+//! * degenerate files: single segment, zero masks (flat segments),
+//!   saturating y0 at i32 extremes, sign 0, and sign outside {-1,0,1}
+//!   (which must refuse the SIMD encoding and stay exact portably);
+//! * inputs at threshold neighbourhoods and i32 extremes;
+//! * slice lengths 0/1/LANES-1/LANES/LANES+1 (and multi-chunk odd
+//!   lengths) to pin the remainder loop.
+
+use grau::act::qrange;
+use grau::hw::plan::LANES;
+use grau::hw::{GrauPlan, GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use grau::util::rng::Rng;
+
+/// An adversarial random register file.  `th_lo..th_hi` picks the
+/// threshold span (narrow spans compile to the dense segment table,
+/// wide spans to the linear search); `wild_sign` additionally draws
+/// signs outside `{-1, 0, 1}` to force the portable fallback.
+fn random_regs(rng: &mut Rng, th_lo: i64, th_hi: i64, wild_sign: bool) -> GrauRegisters {
+    let n_bits = [1u8, 2, 4, 6, 8][rng.range_usize(0, 5)];
+    let segs = rng.range_usize(1, MAX_SEGMENTS + 1);
+    let n_shifts = [4u8, 8, 16][rng.range_usize(0, 3)];
+    let shift_lo = rng.range_i64(0, 8) as u8;
+    let mut r = GrauRegisters::new(n_bits, segs, shift_lo, n_shifts);
+    let mut ths: Vec<i32> = (0..segs - 1)
+        .map(|_| rng.range_i64(th_lo, th_hi) as i32)
+        .collect();
+    ths.sort_unstable();
+    ths.dedup();
+    while ths.len() < segs - 1 {
+        ths.push(*ths.last().unwrap_or(&0) + 1 + ths.len() as i32);
+    }
+    // the oracle counts passed thresholds without assuming sorted order;
+    // shuffle so the battery covers unsorted register programming too
+    for i in (1..ths.len()).rev() {
+        ths.swap(i, rng.range_usize(0, i + 1));
+    }
+    r.thresholds = [PAD_THRESHOLD; MAX_SEGMENTS - 1];
+    r.thresholds[..segs - 1].copy_from_slice(&ths);
+    let (qmin, qmax) = qrange(n_bits);
+    for j in 0..segs {
+        r.x0[j] = rng.range_i64(-50_000, 50_000) as i32;
+        // mostly in-range biases, sometimes saturating extremes so the
+        // clamp rails are genuinely exercised
+        r.y0[j] = match rng.range_usize(0, 8) {
+            0 => i32::MAX,
+            1 => i32::MIN,
+            _ => rng.range_i64(qmin as i64, qmax as i64 + 1) as i32,
+        };
+        r.sign[j] = if wild_sign && rng.uniform() < 0.3 {
+            [-3, 3, 5][rng.range_usize(0, 3)]
+        } else {
+            [-1, 0, 1][rng.range_usize(0, 3)]
+        };
+        // mix of zero (flat), full-window, and random masks
+        r.mask[j] = match rng.range_usize(0, 6) {
+            0 => 0,
+            1 => (1u32 << n_shifts) - 1,
+            _ => (rng.next_u64() as u32) & ((1u32 << n_shifts) - 1),
+        };
+    }
+    r
+}
+
+/// Adversarial input pool for a register file: threshold neighbourhoods,
+/// anchor neighbourhoods, i32 extremes, and uniform draws.
+fn input_pool(rng: &mut Rng, r: &GrauRegisters, n_random: usize) -> Vec<i32> {
+    let mut xs = vec![0, 1, -1, i32::MIN, i32::MIN + 1, i32::MAX - 1, i32::MAX];
+    for &t in &r.thresholds[..r.n_segments - 1] {
+        xs.extend([t.saturating_sub(1), t, t.saturating_add(1)]);
+    }
+    for &a in &r.x0[..r.n_segments] {
+        xs.extend([a.saturating_sub(1), a, a.saturating_add(1)]);
+    }
+    xs.extend(
+        (0..n_random).map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64 + 1) as i32),
+    );
+    xs
+}
+
+/// Assert every batched path equals the oracle on `xs`: dispatching
+/// `eval_into` (dense-table and table-less plans), the pinned portable
+/// kernel, `eval_batch`, and scalar `eval`.
+fn check_all_paths(r: &GrauRegisters, xs: &[i32], ctx: &str) {
+    let plan = GrauPlan::new(r);
+    let lean = GrauPlan::without_table(r);
+    let want: Vec<i32> = xs.iter().map(|&x| r.eval(x)).collect();
+
+    let mut out = vec![i32::MIN; xs.len()];
+    plan.eval_into(xs, &mut out);
+    assert_eq!(out, want, "{ctx}: eval_into (dense)");
+
+    out.fill(i32::MIN);
+    lean.eval_into(xs, &mut out);
+    assert_eq!(out, want, "{ctx}: eval_into (lean)");
+
+    out.fill(i32::MIN);
+    plan.eval_into_portable(xs, &mut out);
+    assert_eq!(out, want, "{ctx}: eval_into_portable");
+
+    let mut batch = Vec::new();
+    plan.eval_batch(xs, &mut batch);
+    assert_eq!(batch, want, "{ctx}: eval_batch");
+
+    for (&x, &w) in xs.iter().zip(&want) {
+        assert_eq!(plan.eval(x), w, "{ctx}: scalar eval x={x}");
+    }
+}
+
+#[test]
+fn differential_randomized_register_files() {
+    let mut rng = Rng::new(0x6E55_A201);
+    for case in 0..120 {
+        // alternate dense-table spans, search-fallback spans, and a
+        // wild-sign slice that must take the portable kernel
+        let (lo, hi, wild) = match case % 4 {
+            0 => (-120i64, 120i64, false),
+            1 => (-2_000_000i64, 2_000_000i64, false),
+            2 => (-50_000i64, 50_000i64, false),
+            _ => (-50_000i64, 50_000i64, true),
+        };
+        let r = random_regs(&mut rng, lo, hi, wild);
+        if wild && !r.sign[..r.n_segments].iter().all(|&s| (-1..=1).contains(&s)) {
+            assert!(
+                !GrauPlan::new(&r).simd_compatible(),
+                "case {case}: wild sign must refuse the SIMD encoding"
+            );
+        }
+        let xs = input_pool(&mut rng, &r, 96);
+        check_all_paths(&r, &xs, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn boundary_slice_lengths_pin_remainder_handling() {
+    // the chunk seam is where lane kernels go wrong: 0, 1, LANES-1,
+    // LANES, LANES+1, and multi-chunk lengths straddling the SIMD
+    // 4-lane and portable 8-lane widths
+    let mut rng = Rng::new(0xBEEF_0006);
+    for case in 0..24 {
+        let r = random_regs(&mut rng, -900, 900, false);
+        let pool = input_pool(&mut rng, &r, 4 * LANES);
+        for len in [
+            0usize,
+            1,
+            LANES - 1,
+            LANES,
+            LANES + 1,
+            2 * LANES - 3,
+            2 * LANES + 3,
+            61,
+        ] {
+            let xs: Vec<i32> = (0..len).map(|i| pool[i % pool.len()]).collect();
+            check_all_paths(&r, &xs, &format!("case {case} len {len}"));
+        }
+    }
+}
+
+#[test]
+fn degenerate_single_segment_and_saturating_files() {
+    // single segment, no thresholds, full mask: pure shift-sum + clamp
+    let mut single = GrauRegisters::new(2, 1, 0, 16);
+    single.mask[0] = 0xffff;
+    let xs: Vec<i32> = vec![i32::MIN, -5, -1, 0, 1, 5, i32::MAX];
+    check_all_paths(&single, &xs, "single-segment full-mask");
+
+    // every segment pinned at a saturating bias: output must clamp to
+    // the 1-bit rails for every input
+    let mut sat = GrauRegisters::new(1, 4, 0, 4);
+    sat.thresholds[..3].copy_from_slice(&[-10, 0, 10]);
+    for j in 0..4 {
+        sat.y0[j] = if j % 2 == 0 { i32::MAX } else { i32::MIN };
+        sat.sign[j] = if j % 2 == 0 { 1 } else { -1 };
+        sat.mask[j] = 0b1111;
+    }
+    let (qmin, qmax) = qrange(1);
+    let pool: Vec<i32> = (-30..30).chain([i32::MIN, i32::MAX]).collect();
+    check_all_paths(&sat, &pool, "saturating biases");
+    let plan = GrauPlan::new(&sat);
+    for &x in &pool {
+        let y = plan.eval(x);
+        assert!(y == qmin || y == qmax, "x={x}: saturating file must pin to a rail, got {y}");
+    }
+
+    // all-flat file (every mask zero): constant per segment
+    let mut flat = GrauRegisters::new(8, 3, 2, 8);
+    flat.thresholds[..2].copy_from_slice(&[-7, 7]);
+    flat.y0[..3].copy_from_slice(&[-100, 0, 100]);
+    check_all_paths(&flat, &(-20..20).collect::<Vec<i32>>(), "all-flat");
+}
+
+/// With the `simd` feature compiled on a capable host, the dispatching
+/// path actually is the AVX2 kernel — re-run a randomized sweep so the
+/// feature build cannot silently pass on the portable kernel alone.
+#[cfg(feature = "simd")]
+#[test]
+fn simd_dispatch_matches_oracle_when_available() {
+    if !GrauPlan::simd_available() {
+        eprintln!("simd feature compiled but host lacks AVX2; dispatch covered by portable path");
+        return;
+    }
+    let mut rng = Rng::new(0x51D_CAFE);
+    for case in 0..60 {
+        let (lo, hi) = if case % 2 == 0 { (-300i64, 300i64) } else { (-1_000_000, 1_000_000) };
+        let r = random_regs(&mut rng, lo, hi, false);
+        let xs = input_pool(&mut rng, &r, 128);
+        check_all_paths(&r, &xs, &format!("simd case {case}"));
+    }
+}

@@ -176,6 +176,60 @@ fn prop_forward_batch_matches_naive_pwlf_mode() {
 }
 
 #[test]
+fn grau_unit_bank_steady_state_zero_alloc_and_bit_exact() {
+    // the SoA plan kernel through the full engine: GRAU unit banks over
+    // every activation site, channel planes streamed through eval_slice.
+    // Steady-state passes must not allocate (the lane kernel works in
+    // the caller's scratch planes) and batched logits must stay
+    // bit-for-bit equal to the naive per-element oracle path.
+    let (graph, bundle) = residual_qnn(8, 3, 4, 6, 77);
+    let exact = Engine::new(graph.clone(), &bundle, ActMode::Exact).unwrap();
+    let site_regs: Vec<Vec<GrauRegisters>> = exact
+        .site_channels()
+        .iter()
+        .map(|&chs| (0..chs).map(mk_regs).collect())
+        .collect();
+    let eng = Engine::new(graph, &bundle, ActMode::Grau(site_regs)).unwrap();
+
+    let mut rng = Rng::new(0x5151);
+    let dim = 8 * 8 * 3;
+    let mut scratch = Scratch::new();
+    let x0: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+    eng.forward_into(&x0, &mut scratch, None);
+    let warm = scratch.alloc_events();
+    assert!(warm > 0, "first pass must size the arena");
+    for pass in 0..10 {
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal_f32()).collect();
+        eng.forward_into(&x, &mut scratch, None);
+        assert_eq!(
+            scratch.alloc_events(),
+            warm,
+            "steady-state pass {pass} allocated through the unit-bank epilogue"
+        );
+    }
+
+    let n = 6usize;
+    let xs: Vec<f32> = (0..n * dim).map(|_| rng.normal_f32()).collect();
+    let data = Dataset {
+        x: xs,
+        y: vec![0; n],
+        n,
+        dim,
+        n_classes: eng.graph.n_classes,
+    };
+    let c = eng.graph.n_classes;
+    let batch = eng.forward_batch(&data, n, 2);
+    for i in 0..n {
+        let naive = eng.forward_sample_naive(data.sample(i), None);
+        assert_eq!(
+            &batch[i * c..(i + 1) * c],
+            &naive[..],
+            "batch row {i} diverges from the naive oracle"
+        );
+    }
+}
+
+#[test]
 fn scratch_arena_is_allocation_free_in_steady_state() {
     let (graph, bundle) = residual_qnn(8, 3, 4, 6, 5);
     let eng = Engine::new(graph, &bundle, ActMode::Exact).unwrap();
