@@ -27,6 +27,13 @@ cargo build --release --benches --examples
 step "cargo test -q"
 cargo test -q
 
+# The sharded-service battery is part of the tier-1 suite above, but it
+# is also the PR gate for the coordinator sharding work, so run it by
+# name with output visible: a hang (stuck steal/drain) or flake here
+# must be attributable to a specific case, not a silent `-q` timeout.
+step "sharded-service battery (cargo test --test service_sharding)"
+cargo test --release --test service_sharding
+
 # Second pass with the std::arch lane kernel compiled in, so both
 # GrauPlan::eval_into paths stay green.  The AVX2 kernel is runtime-
 # detected, but there is no point building the feature on a host whose
@@ -55,6 +62,16 @@ fi
 step "bench smoke (GRAU_BENCH_SMOKE=1 cargo bench --bench perf_hot_paths)"
 if cargo bench --help >/dev/null 2>&1; then
     GRAU_BENCH_SMOKE=1 cargo bench --bench perf_hot_paths
+else
+    printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
+fi
+
+# Service load-generator smoke: one deliberate-overload point asserting
+# the sharding PR's acceptance gate (nonzero shed rate, bounded p99).
+# Assert-only — smoke runs never write BENCH_service.json.
+step "service bench smoke (GRAU_BENCH_SMOKE=1 cargo bench --bench perf_service)"
+if cargo bench --help >/dev/null 2>&1; then
+    GRAU_BENCH_SMOKE=1 cargo bench --bench perf_service
 else
     printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
 fi

@@ -1,0 +1,313 @@
+//! §Perf service bench: open-loop load generator for the sharded
+//! multi-tenant activation service.
+//!
+//! Models the serving workload the sharding PR targets: a large
+//! population of short-lived streams owned by tenants whose popularity
+//! is Zipf-skewed (rank 0 receives a large fraction of all traffic),
+//! arriving on an *open-loop* schedule — arrivals are paced by a clock,
+//! not by completions, so an overloaded service sees its queue grow
+//! instead of the generator politely slowing down.  Stream churn
+//! (periodic re-registration) exercises the quota/LRU eviction path
+//! while the run is hot.
+//!
+//! Per load point the generator reports offered vs achieved throughput,
+//! p50/p99/p999 latency from the service's own log-scale histogram, and
+//! the shed rate.  Machine-readable rows go to `BENCH_service.json`
+//! (same recording convention as `BENCH_qnn.json` — regenerated per
+//! run, gitignored; see docs/EXPERIMENTS.md §Service load).
+//!
+//! `GRAU_BENCH_SMOKE=1` runs a single deliberate-overload point with a
+//! tiny request budget and asserts the PR's acceptance gate — nonzero
+//! shed rate with bounded p99 — without writing the JSON file.
+
+use std::time::{Duration, Instant};
+
+use grau::act::{Activation, FoldedActivation};
+use grau::api::{Pending, ServiceBuilder, ServiceError, StreamHandle, Tenant, TenantSpec};
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::hw::GrauRegisters;
+use grau::util::bench::bench_header;
+use grau::util::json::{arr, num, obj, s as jstr, Json};
+use grau::util::rng::{Rng, Zipf};
+
+/// Elements per request: short activation bursts, the "millions of
+/// small streams" regime rather than the bulk-batch regime.
+const PAYLOAD: usize = 64;
+/// Shard shed limit in elements — 64 queued requests' worth, so
+/// overload trips the graded watermarks quickly and p99 stays bounded
+/// by a short queue instead of growing with the backlog.
+const SHED_LIMIT: usize = 64 * PAYLOAD;
+/// Every Nth arrival on a tenant retires one of its streams and
+/// registers a fresh one (short-lived stream churn).
+const CHURN_PERIOD: usize = 16;
+
+struct PointReport {
+    label: String,
+    offered_eps: f64,
+    achieved_eps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    p999_us: u64,
+    shed_rate: f64,
+    submitted: u64,
+    shed: u64,
+}
+
+fn main() {
+    let smoke = std::env::var_os("GRAU_BENCH_SMOKE").is_some();
+    bench_header(
+        "perf_service",
+        "EXPERIMENTS.md §Service load — sharded multi-tenant serving under open-loop load",
+    );
+
+    let f = FoldedActivation::new(0.004, 0.05, Activation::Silu, 1.0 / 120.0, 8);
+    let regs = fit_folded(&f, -1000, 1000, FitOptions::default()).apot.regs;
+
+    let (workers, shards, tenants) = if smoke { (2usize, 2usize, 8usize) } else { (4, 4, 32) };
+    let capacity = calibrate_capacity(&regs, workers, shards, smoke);
+    println!(
+        "calibrated closed-loop capacity: {:.0} req/s ({workers} workers, {shards} shards, {PAYLOAD}-elem requests)\n",
+        capacity
+    );
+
+    let points: &[(f64, &str)] = if smoke {
+        &[(4.0, "smoke_service_load_x4")]
+    } else {
+        &[
+            (0.5, "service_load_x0.5"),
+            (1.0, "service_load_x1"),
+            (2.0, "service_load_x2"),
+            (4.0, "service_load_x4"),
+        ]
+    };
+
+    let mut rows = Vec::new();
+    for &(mult, label) in points {
+        let offered = capacity * mult;
+        // 2 s of offered arrivals per point (capped); smoke keeps it tiny
+        let n_requests = if smoke {
+            2_000
+        } else {
+            ((offered * 2.0) as usize).clamp(10_000, 200_000)
+        };
+        let rep = run_point(label, &regs, workers, shards, tenants, offered, n_requests, smoke);
+        print_point(&rep);
+        rows.push(rep);
+    }
+
+    if smoke {
+        // the PR's acceptance gate: deliberate overload must shed
+        // (graded admission working) while p99 stays bounded by the
+        // short shard queues (no collapse into unbounded backlog)
+        let rep = &rows[0];
+        assert!(
+            rep.shed > 0,
+            "overload at {:.0} req/s shed nothing — graded admission inert",
+            rep.offered_eps
+        );
+        assert!(
+            rep.p99_us < 1_000_000,
+            "p99 {}µs under bounded-queue overload — shedding failed to cap the backlog",
+            rep.p99_us
+        );
+        println!(
+            "\nsmoke gate OK: shed {} of {} ({:.1}%), p99 {}µs",
+            rep.shed,
+            rep.submitted,
+            rep.shed_rate * 100.0,
+            rep.p99_us
+        );
+        // smoke never writes BENCH_service.json: tiny CI runs must not
+        // masquerade as recordable load curves
+        return;
+    }
+    write_service_json(&rows);
+}
+
+/// Closed-loop capacity probe: keep the pipe full (2 in-flight requests
+/// per worker across anonymous streams) and count completions.  Only
+/// used to place the open-loop load points relative to this machine.
+fn calibrate_capacity(regs: &GrauRegisters, workers: usize, shards: usize, smoke: bool) -> f64 {
+    let svc = ServiceBuilder::new().workers(workers).shards(shards).start();
+    let streams: Vec<StreamHandle> = (0..workers * 2)
+        .map(|_| svc.register(regs.clone(), ApproxKind::Apot).unwrap())
+        .collect();
+    let data: Vec<i32> = (0..PAYLOAD as i32).map(|i| (i * 97) % 6000 - 3000).collect();
+    let budget = Duration::from_millis(if smoke { 100 } else { 400 });
+    let mut done = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed() < budget {
+        let pend: Vec<Pending> = streams
+            .iter()
+            .map(|h| h.submit(data.clone()).unwrap())
+            .collect();
+        for p in pend {
+            p.recv().unwrap();
+            done += 1;
+        }
+    }
+    let eps = done as f64 / t0.elapsed().as_secs_f64();
+    drop(streams);
+    svc.shutdown();
+    eps.max(1.0)
+}
+
+/// One open-loop load point: a fresh sharded service, `tenants` tenants
+/// with cycling priorities and 4-stream quotas, Zipf-skewed tenant
+/// choice, clock-paced arrivals at `offered` req/s with stream churn.
+#[allow(clippy::too_many_arguments)]
+fn run_point(
+    label: &str,
+    regs: &GrauRegisters,
+    workers: usize,
+    shards: usize,
+    tenants: usize,
+    offered: f64,
+    n_requests: usize,
+    smoke: bool,
+) -> PointReport {
+    let svc = ServiceBuilder::new()
+        .workers(workers)
+        .shards(shards)
+        .shed_limit(SHED_LIMIT)
+        .start();
+    let tens: Vec<Tenant> = (0..tenants)
+        .map(|t| {
+            svc.tenant(
+                TenantSpec::new(format!("tenant-{t}"))
+                    .priority((t % 4) as u8)
+                    .max_streams(4),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut handles: Vec<Vec<StreamHandle>> = tens
+        .iter()
+        .map(|t| {
+            (0..4)
+                .map(|_| t.register(regs.clone(), ApproxKind::Apot).unwrap())
+                .collect()
+        })
+        .collect();
+
+    // precompute the whole arrival plan so the hot loop only paces,
+    // submits, and counts
+    let zipf = Zipf::new(tenants, 1.1);
+    let mut rng = Rng::new(0x5EED_0007);
+    let plan: Vec<(usize, usize, bool)> = (0..n_requests)
+        .map(|i| {
+            (
+                zipf.sample(&mut rng),
+                rng.range_usize(0, 4),
+                i % CHURN_PERIOD == CHURN_PERIOD - 1,
+            )
+        })
+        .collect();
+    let data: Vec<i32> = (0..PAYLOAD as i32).map(|i| (i * 131) % 6000 - 3000).collect();
+
+    let interval_ns = (1e9 / offered) as u64;
+    let mut pend: Vec<Pending> = Vec::with_capacity(n_requests);
+    let mut shed = 0u64;
+    let t0 = Instant::now();
+    for (i, &(t, slot, churn)) in plan.iter().enumerate() {
+        pace(t0, i as u64 * interval_ns);
+        if churn {
+            // retire the slot's stream and register a fresh one: the old
+            // handle's drop deregisters it (short-lived stream model)
+            handles[t][slot] = tens[t].register(regs.clone(), ApproxKind::Apot).unwrap();
+        }
+        match handles[t][slot].submit(data.clone()) {
+            Ok(p) => pend.push(p),
+            Err(ServiceError::Busy { .. }) | Err(ServiceError::Rejected { .. }) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let offered_realized = plan.len() as f64 / t0.elapsed().as_secs_f64();
+
+    // drain everything admitted; churn-orphaned requests answer
+    // UnknownStream and count as errors, not achieved throughput
+    let mut ok = 0u64;
+    let mut errs = 0u64;
+    for p in pend {
+        match p.recv() {
+            Ok(_) => ok += 1,
+            Err(_) => errs += 1,
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    drop(handles);
+    drop(tens);
+    let m = svc.shutdown();
+    if !smoke {
+        assert_eq!(m.shed, shed, "service shed counter disagrees with the generator");
+    }
+    let _ = errs;
+
+    PointReport {
+        label: label.to_string(),
+        offered_eps: offered_realized,
+        achieved_eps: ok as f64 / elapsed,
+        p50_us: m.p50_latency_us(),
+        p99_us: m.p99_latency_us(),
+        p999_us: m.p999_latency_us(),
+        shed_rate: shed as f64 / plan.len() as f64,
+        submitted: plan.len() as u64,
+        shed,
+    }
+}
+
+/// Busy-wait (with coarse sleep for long gaps) until `target_ns` after
+/// `start` — open-loop pacing that does not drift with completions.
+fn pace(start: Instant, target_ns: u64) {
+    loop {
+        let el = start.elapsed().as_nanos() as u64;
+        if el >= target_ns {
+            return;
+        }
+        let rem = target_ns - el;
+        if rem > 200_000 {
+            std::thread::sleep(Duration::from_nanos(rem - 100_000));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+fn print_point(r: &PointReport) {
+    println!(
+        "point {:<22} offered {:>9.0} req/s  achieved {:>9.0} req/s  p50 {:>6}µs  p99 {:>7}µs  p999 {:>7}µs  shed {:>5.1}% ({}/{})",
+        r.label,
+        r.offered_eps,
+        r.achieved_eps,
+        r.p50_us,
+        r.p99_us,
+        r.p999_us,
+        r.shed_rate * 100.0,
+        r.shed,
+        r.submitted
+    );
+}
+
+/// `BENCH_service.json`: one row per load point, regenerated per run
+/// (gitignored, like `BENCH_qnn.json`) — see docs/EXPERIMENTS.md
+/// §Service load for the recording convention.
+fn write_service_json(rows: &[PointReport]) {
+    let doc: Json = arr(rows.iter().map(|r| {
+        obj(vec![
+            ("bench", jstr(&r.label)),
+            ("offered_eps", num(r.offered_eps)),
+            ("achieved_eps", num(r.achieved_eps)),
+            ("p50_us", num(r.p50_us as f64)),
+            ("p99_us", num(r.p99_us as f64)),
+            ("p999_us", num(r.p999_us as f64)),
+            ("shed_rate", num(r.shed_rate)),
+            ("requests", num(r.submitted as f64)),
+            ("shed", num(r.shed as f64)),
+        ])
+    }));
+    match std::fs::write("BENCH_service.json", format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote BENCH_service.json ({} rows)", rows.len()),
+        Err(e) => println!("\nWARNING: could not write BENCH_service.json: {e}"),
+    }
+}

@@ -40,9 +40,13 @@ pub mod descriptor;
 pub mod service;
 
 pub use descriptor::{Provenance, UnitDescriptor, DESCRIPTOR_FORMAT, DESCRIPTOR_VERSION};
-pub use service::{Pending, Service, ServiceBuilder, ServiceError, StreamHandle, StreamMetrics};
+pub use service::{
+    Pending, Service, ServiceBuilder, ServiceError, StreamHandle, StreamMetrics, Tenant, TenantSpec,
+};
 
 // the service facade speaks these types directly
-pub use crate::coordinator::service::{ActResponse, Backend, MetricsSnapshot, StreamError};
+pub use crate::coordinator::service::{
+    ActResponse, Backend, MetricsSnapshot, StreamError, PRIORITY_LEVELS,
+};
 // on-disk banks of descriptors live with the other manifest loaders
 pub use crate::runtime::manifest::DescriptorBank;

@@ -29,6 +29,7 @@ use std::sync::{Arc, RwLock};
 use crate::api::descriptor::UnitDescriptor;
 use crate::coordinator::service::{
     ActResponse, ActivationService, Backend, Metrics, MetricsSnapshot, ServiceConfig, StreamError,
+    SubmitError, TenantState, PRIORITY_LEVELS,
 };
 use crate::fit::ApproxKind;
 use crate::hw::unit::UnitKind;
@@ -77,6 +78,31 @@ impl From<StreamError> for ServiceError {
         match e {
             StreamError::UnknownStream(id) => ServiceError::UnknownStream(id),
             StreamError::Rejected { stream, reason } => ServiceError::Rejected { stream, reason },
+        }
+    }
+}
+
+impl From<SubmitError> for ServiceError {
+    fn from(e: SubmitError) -> ServiceError {
+        match e {
+            // the shard is over the full shed limit: same contract as the
+            // facade's own queue-limit backpressure
+            SubmitError::Saturated { depth, limit } => ServiceError::Busy {
+                in_flight: depth as u64,
+                limit: limit as u64,
+            },
+            SubmitError::Shed {
+                stream,
+                tenant,
+                depth,
+                limit,
+            } => ServiceError::Rejected {
+                stream,
+                reason: format!(
+                    "shed under overload: tenant {tenant:?} over its priority allowance \
+                     (shard depth {depth}, shed limit {limit})"
+                ),
+            },
         }
     }
 }
@@ -137,9 +163,31 @@ impl ServiceBuilder {
         self
     }
 
-    /// Stream→worker hash affinity (default on).
+    /// Stream→worker hash affinity (default on).  Honored when
+    /// [`ServiceBuilder::shards`] is unset: `true` maps to one shard per
+    /// worker, `false` to a single shared shard.
     pub fn affinity(mut self, on: bool) -> ServiceBuilder {
         self.config.affinity = on;
+        self
+    }
+
+    /// Explicit shard count.  Streams hash by tenant (anonymous streams
+    /// by id) onto shards; workers are homed round-robin and steal work
+    /// across shards when their home runs dry.
+    pub fn shards(mut self, n: usize) -> ServiceBuilder {
+        self.config.shards = Some(n);
+        self
+    }
+
+    /// Load-shedding watermark, in queued elements per shard.  Under
+    /// overload, admission degrades by tenant priority: priority-`p`
+    /// submissions fail once the shard's queued depth exceeds
+    /// `limit * (p + 1) / PRIORITY_LEVELS` — low-priority tenants get
+    /// [`ServiceError::Rejected`] first, and anonymous/top-priority
+    /// traffic gets [`ServiceError::Busy`] only past the full limit.
+    /// Keeps p99 latency bounded instead of queueing without end.
+    pub fn shed_limit(mut self, elems: usize) -> ServiceBuilder {
+        self.config.shed_limit = Some(elems);
         self
     }
 
@@ -221,6 +269,46 @@ impl Core {
         self.closed.store(true, Ordering::SeqCst);
         self.inner.write().unwrap_or_else(|e| e.into_inner()).take()
     }
+
+    /// Shared registration path for [`Service`] and [`Tenant`]: allocate
+    /// a fresh stream id, register it (optionally tenant-scoped), and
+    /// wrap it in a handle.  `eager_check` runs the representable-domain
+    /// check against the backend the stream will actually run on, so
+    /// misconfigurations surface here instead of on the first call.
+    fn register_stream(
+        self: &Arc<Self>,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+        unit: Option<UnitKind>,
+        eager_check: bool,
+        tenant: Option<Arc<TenantState>>,
+    ) -> Result<StreamHandle, ServiceError> {
+        if eager_check {
+            let effective = unit.or_else(|| {
+                self.with_service(|svc| svc.config.backend.default_unit())
+                    .ok()
+                    .flatten()
+            });
+            if let Some(k) = effective {
+                if let Err(e) = k.check(&regs, kind) {
+                    return Err(ServiceError::InvalidConfig(format!(
+                        "backend '{}': {e:#}",
+                        k.name()
+                    )));
+                }
+            }
+        }
+        let id = self.with_service(move |svc| {
+            let id = self.next_stream.fetch_add(1, Ordering::Relaxed);
+            svc.register_with(id, regs, kind, unit, tenant);
+            id
+        })?;
+        Ok(StreamHandle {
+            core: Arc::clone(self),
+            id,
+            stats: Arc::new(StreamStats::default()),
+        })
+    }
 }
 
 impl Drop for Core {
@@ -261,7 +349,7 @@ impl Service {
         regs: GrauRegisters,
         kind: ApproxKind,
     ) -> Result<StreamHandle, ServiceError> {
-        self.register_impl(regs, kind, None)
+        self.core.register_stream(regs, kind, None, true, None)
     }
 
     /// Register a stream pinned to a specific registry backend (e.g. a
@@ -272,7 +360,7 @@ impl Service {
         kind: ApproxKind,
         unit: UnitKind,
     ) -> Result<StreamHandle, ServiceError> {
-        self.register_impl(regs, kind, Some(unit))
+        self.core.register_stream(regs, kind, Some(unit), true, None)
     }
 
     /// Register a stream from a serialized [`UnitDescriptor`] — the
@@ -282,53 +370,22 @@ impl Service {
         d.validate()
             .map_err(|e| ServiceError::InvalidConfig(format!("{e:#}")))?;
         // validate() already proved unit/regs compatibility — skip the
-        // eager re-check in register_impl
-        self.register_checked(d.regs.clone(), d.approx, Some(d.unit))
+        // eager re-check
+        self.core
+            .register_stream(d.regs.clone(), d.approx, Some(d.unit), false, None)
     }
 
-    fn register_impl(
-        &self,
-        regs: GrauRegisters,
-        kind: ApproxKind,
-        unit: Option<UnitKind>,
-    ) -> Result<StreamHandle, ServiceError> {
-        // eager representable-domain check against the backend the
-        // stream will actually run on
-        let effective = unit.or_else(|| {
-            self.core
-                .with_service(|svc| svc.config.backend.default_unit())
-                .ok()
-                .flatten()
-        });
-        if let Some(k) = effective {
-            if let Err(e) = k.check(&regs, kind) {
-                return Err(ServiceError::InvalidConfig(format!(
-                    "backend '{}': {e:#}",
-                    k.name()
-                )));
-            }
-        }
-        self.register_checked(regs, kind, unit)
-    }
-
-    fn register_checked(
-        &self,
-        regs: GrauRegisters,
-        kind: ApproxKind,
-        unit: Option<UnitKind>,
-    ) -> Result<StreamHandle, ServiceError> {
-        let id = self.core.with_service(|svc| {
-            let id = self.core.next_stream.fetch_add(1, Ordering::Relaxed);
-            match unit {
-                Some(k) => svc.register_unit(id, regs, kind, k),
-                None => svc.register(id, regs, kind),
-            }
-            id
-        })?;
-        Ok(StreamHandle {
+    /// Get or create a named tenant: the unit of shard placement, stream
+    /// quota, and shedding priority.  The name is the identity — asking
+    /// for an existing tenant returns it with its original priority and
+    /// quota, ignoring the new spec's values.
+    pub fn tenant(&self, spec: TenantSpec) -> Result<Tenant, ServiceError> {
+        let state = self
+            .core
+            .with_service(|svc| svc.tenant(&spec.name, spec.priority, spec.max_streams))?;
+        Ok(Tenant {
             core: Arc::clone(&self.core),
-            id,
-            stats: Arc::new(StreamStats::default()),
+            state,
         })
     }
 
@@ -347,6 +404,116 @@ impl Service {
             Some(svc) => svc.shutdown(),
             None => self.core.metrics.snapshot(),
         }
+    }
+}
+
+/// Declarative description of a tenant, passed to [`Service::tenant`].
+///
+/// ```
+/// use grau::api::TenantSpec;
+/// let spec = TenantSpec::new("batch-jobs").priority(0).max_streams(16);
+/// ```
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    name: String,
+    priority: u8,
+    max_streams: Option<usize>,
+}
+
+impl TenantSpec {
+    /// A tenant at top priority (shed last) with no stream quota.
+    pub fn new(name: impl Into<String>) -> TenantSpec {
+        TenantSpec {
+            name: name.into(),
+            priority: PRIORITY_LEVELS - 1,
+            max_streams: None,
+        }
+    }
+
+    /// Shedding priority, `0..PRIORITY_LEVELS` (clamped).  Lower is shed
+    /// earlier under overload; the default is the top priority.
+    pub fn priority(mut self, p: u8) -> TenantSpec {
+        self.priority = p.min(PRIORITY_LEVELS - 1);
+        self
+    }
+
+    /// Cap concurrently registered streams; registering past the cap
+    /// evicts the tenant's least-recently-used stream.
+    pub fn max_streams(mut self, n: usize) -> TenantSpec {
+        self.max_streams = Some(n);
+        self
+    }
+}
+
+/// A named tenant: registrations through it share one shard (placement
+/// by tenant-name hash), count against its stream quota, and inherit its
+/// shedding priority.  Cheap to clone.
+#[derive(Clone)]
+pub struct Tenant {
+    core: Arc<Core>,
+    state: Arc<TenantState>,
+}
+
+impl Tenant {
+    pub fn name(&self) -> &str {
+        &self.state.name
+    }
+
+    /// Shedding priority (0 = shed first).
+    pub fn priority(&self) -> u8 {
+        self.state.priority
+    }
+
+    /// Currently registered streams owned by this tenant.
+    pub fn stream_count(&self) -> usize {
+        self.state.stream_count()
+    }
+
+    /// Register a tenant-scoped stream on the service default backend.
+    /// May evict the tenant's least-recently-used stream if the quota is
+    /// full — the evicted handle's submissions then return
+    /// [`ServiceError::UnknownStream`].
+    pub fn register(
+        &self,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+    ) -> Result<StreamHandle, ServiceError> {
+        self.core
+            .register_stream(regs, kind, None, true, Some(Arc::clone(&self.state)))
+    }
+
+    /// Register a tenant-scoped stream pinned to a registry backend.
+    pub fn register_unit(
+        &self,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+        unit: UnitKind,
+    ) -> Result<StreamHandle, ServiceError> {
+        self.core
+            .register_stream(regs, kind, Some(unit), true, Some(Arc::clone(&self.state)))
+    }
+
+    /// Register a tenant-scoped stream from a serialized descriptor.
+    pub fn register_descriptor(&self, d: &UnitDescriptor) -> Result<StreamHandle, ServiceError> {
+        d.validate()
+            .map_err(|e| ServiceError::InvalidConfig(format!("{e:#}")))?;
+        self.core.register_stream(
+            d.regs.clone(),
+            d.approx,
+            Some(d.unit),
+            false,
+            Some(Arc::clone(&self.state)),
+        )
+    }
+}
+
+impl std::fmt::Debug for Tenant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tenant")
+            .field("name", &self.state.name)
+            .field("priority", &self.state.priority)
+            .field("max_streams", &self.state.max_streams)
+            .finish()
     }
 }
 
@@ -400,12 +567,22 @@ pub struct StreamHandle {
 
 impl StreamHandle {
     /// Submit asynchronously.  The returned [`Pending`] resolves to the
-    /// response; dropping it discards the response safely.
+    /// response; dropping it discards the response safely.  Under a
+    /// configured shed limit, overload surfaces here deterministically:
+    /// [`ServiceError::Rejected`] when this stream's tenant priority is
+    /// being shed, [`ServiceError::Busy`] when the shard is saturated
+    /// even for top-priority traffic.
     pub fn submit(&self, data: Vec<i32>) -> Result<Pending, ServiceError> {
         let n = data.len() as u64;
         let counted = self.core.admit()?;
         let rx = match self.core.with_service(|svc| svc.submit(self.id, data)) {
-            Ok(rx) => rx,
+            Ok(Ok(rx)) => rx,
+            Ok(Err(shed)) => {
+                if counted {
+                    self.core.release();
+                }
+                return Err(shed.into());
+            }
             Err(e) => {
                 if counted {
                     self.core.release();
@@ -626,6 +803,42 @@ mod tests {
         drop(h.submit(vec![6]).unwrap());
         h.call(vec![7]).unwrap();
         svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_builder_is_bit_exact_and_stamps_seq() {
+        let regs = demo_regs(Activation::Sigmoid);
+        let svc = ServiceBuilder::new().workers(4).shards(2).start();
+        let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+        let data: Vec<i32> = (-400..400).collect();
+        let resp = h.call(data.clone()).unwrap();
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x));
+        }
+        assert_eq!(resp.stream_seq, 1);
+        assert_eq!(h.call(vec![1]).unwrap().stream_seq, 2);
+        drop(h);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tenant_quota_eviction_surfaces_unknown_stream() {
+        let svc = ServiceBuilder::new().workers(1).start();
+        let t = svc
+            .tenant(TenantSpec::new("acme").priority(1).max_streams(1))
+            .unwrap();
+        let a = t.register(demo_regs(Activation::Relu), ApproxKind::Apot).unwrap();
+        a.call(vec![1]).unwrap();
+        // quota of 1: registering b evicts a (the LRU stream)
+        let b = t.register(demo_regs(Activation::Silu), ApproxKind::Apot).unwrap();
+        assert_eq!(t.stream_count(), 1);
+        let err = a.call(vec![2]).unwrap_err();
+        assert!(matches!(err, ServiceError::UnknownStream(_)), "{err}");
+        b.call(vec![3]).unwrap();
+        drop(a);
+        drop(b);
+        let m = svc.shutdown();
+        assert_eq!(m.evictions, 1);
     }
 
     #[test]

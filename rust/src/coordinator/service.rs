@@ -2,13 +2,26 @@
 //!
 //! Models the activation subsystem of a QNN accelerator as a service: a
 //! request is a stream of MAC outputs tagged with a *stream id* (one per
-//! layer/channel-group configuration).  Requests are routed by stream
-//! affinity to worker threads; each worker owns a bank of
-//! [`ActivationUnit`] trait objects — one per stream it has served —
-//! and *reconfigures* a unit (reload thresholds + shifter settings, the
-//! paper's runtime reconfiguration) whenever a stream's registered
-//! configuration changes.  A dynamic batcher coalesces same-stream
-//! requests up to `max_batch` elements to amortize reconfiguration.
+//! layer/channel-group configuration).  Streams hash onto *shards* —
+//! by descriptor-bank tenant when one is attached, by stream id
+//! otherwise — and each shard owns a FIFO of per-stream mailbox tokens
+//! that any worker may *steal* when its home shard runs dry
+//! ([`crate::util::threadpool::WorkQueues`]).  A stream has at most one
+//! live token, so exactly one worker drains its mailbox at a time:
+//! same-stream requests coalesce up to `max_batch` elements into one
+//! unit evaluation and responses leave in submission order even across
+//! steals.  Each worker owns a bank of [`ActivationUnit`] trait objects
+//! (LRU-bounded) and *reconfigures* a unit (reload thresholds + shifter
+//! settings, the paper's runtime reconfiguration) whenever a stream's
+//! registered configuration changes.
+//!
+//! Under overload the service degrades instead of queueing without
+//! bound: with a `shed_limit` configured, a shard's queued-element depth
+//! gates admission by tenant priority (lowest priority shed first,
+//! graded watermarks; see [`ActivationService::submit`]), keeping p99
+//! latency bounded while top-priority traffic still gets the full
+//! queue.  Tenants also carry stream quotas enforced by LRU eviction
+//! over their registered streams.
 //!
 //! Backends are registry entries over the `hw::unit` layer:
 //!
@@ -35,12 +48,12 @@
 //! returns a `StreamHandle` that scopes submission to its own stream.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{ensure, Context, Error, Result};
 
@@ -48,6 +61,7 @@ use crate::fit::ApproxKind;
 use crate::hw::pipeline::CycleStats;
 use crate::hw::unit::{build_unit, reconfigure_cost, ActivationUnit, UnitKind};
 use crate::hw::{GrauPlan, GrauRegisters};
+use crate::util::threadpool::{Pop, WorkQueues};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
@@ -77,11 +91,20 @@ pub(crate) struct ServiceConfig {
     pub workers: usize,
     pub max_batch: usize,
     pub backend: Backend,
-    /// Route each stream to a fixed worker (hash affinity).  Keeps a
-    /// stream's unit resident in "its" worker's bank, so reconfiguration
-    /// only happens on (re-)registration or cache overflow — the §Perf
-    /// optimization that removed per-batch reconfigs (EXPERIMENTS.md).
+    /// Legacy routing knob, honored when `shards` is unset: `true` maps
+    /// to one shard per worker (stream-affine placement that keeps a
+    /// stream's unit resident in "its" worker's bank — the §Perf
+    /// optimization that removed per-batch reconfigs, EXPERIMENTS.md),
+    /// `false` to a single shared shard every worker drains.
     pub affinity: bool,
+    /// Explicit shard count.  Workers are homed on shards round-robin
+    /// and steal across them when their home shard runs dry.
+    pub shards: Option<usize>,
+    /// Load-shedding watermark in queued elements per shard.  `None`
+    /// (default) queues without bound; `Some(limit)` grades admission by
+    /// tenant priority: priority `p` traffic is shed once its shard's
+    /// depth exceeds `limit * (p + 1) / PRIORITY_LEVELS`.
+    pub shed_limit: Option<usize>,
     /// artifacts dir (needed for the Pjrt backend)
     pub artifacts_dir: std::path::PathBuf,
 }
@@ -93,6 +116,8 @@ impl Default for ServiceConfig {
             max_batch: 8192,
             backend: Backend::Functional,
             affinity: true,
+            shards: None,
+            shed_limit: None,
             artifacts_dir: std::path::PathBuf::from("artifacts"),
         }
     }
@@ -127,10 +152,62 @@ impl std::fmt::Display for StreamError {
 
 impl std::error::Error for StreamError {}
 
+/// How many distinct scheduling priorities the load shedder grades
+/// traffic into.  Priority `PRIORITY_LEVELS - 1` — the default for
+/// anonymous (tenant-less) streams — is shed last; priority 0 first.
+pub const PRIORITY_LEVELS: u8 = 4;
+
+/// Synchronous admission failure from [`ActivationService::submit`]: the
+/// request was *never enqueued* (distinct from [`StreamError`], which is
+/// reported asynchronously through the response channel).  The api
+/// facade maps `Shed` → `ServiceError::Rejected` and `Saturated` →
+/// `ServiceError::Busy`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Load shedding dropped the request: its shard sits above the
+    /// queued-element allowance for this tenant's priority while
+    /// higher-priority traffic is still admitted.
+    Shed {
+        stream: u64,
+        tenant: String,
+        depth: usize,
+        limit: usize,
+    },
+    /// The shard is over the full shed limit — even top-priority
+    /// traffic is being turned away.
+    Saturated { depth: usize, limit: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Shed {
+                stream,
+                tenant,
+                depth,
+                limit,
+            } => write!(
+                f,
+                "stream {stream} (tenant {tenant:?}) shed: shard depth {depth} over priority allowance (limit {limit})"
+            ),
+            SubmitError::Saturated { depth, limit } => {
+                write!(f, "service saturated: shard depth {depth} over shed limit {limit}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 #[derive(Debug)]
 pub struct ActResponse {
     pub data: Vec<i32>,
     pub latency_us: u64,
+    /// Per-stream completion sequence number (1-based, strictly
+    /// increasing in submission order — a stream's requests are answered
+    /// FIFO even across shard steals).  0 for responses generated on the
+    /// submit path (e.g. unknown stream).
+    pub stream_seq: u64,
     /// Why the request failed (`data` is empty in that case).  `None`
     /// on success.
     pub error: Option<StreamError>,
@@ -175,6 +252,12 @@ pub struct Metrics {
     pub reconfigs: AtomicU64,
     pub reconfig_cycles: AtomicU64,
     pub sim_cycles: AtomicU64,
+    /// requests refused at admission by the load shedder
+    pub shed: AtomicU64,
+    /// stream tokens a worker took from a shard other than its home
+    pub stolen: AtomicU64,
+    /// streams evicted by a tenant's LRU quota
+    pub evictions: AtomicU64,
     pub latency_us_sum: AtomicU64,
     pub latency_us_max: AtomicU64,
     pub latency: LatencyHistogram,
@@ -189,6 +272,9 @@ impl Metrics {
             reconfigs: self.reconfigs.load(Ordering::Relaxed),
             reconfig_cycles: self.reconfig_cycles.load(Ordering::Relaxed),
             sim_cycles: self.sim_cycles.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            stolen: self.stolen.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
             latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
             latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
             latency_buckets: self.latency.snapshot(),
@@ -204,6 +290,12 @@ pub struct MetricsSnapshot {
     pub reconfigs: u64,
     pub reconfig_cycles: u64,
     pub sim_cycles: u64,
+    /// requests refused at admission by the load shedder
+    pub shed: u64,
+    /// stream tokens a worker took from a shard other than its home
+    pub stolen: u64,
+    /// streams evicted by a tenant's LRU quota
+    pub evictions: u64,
     pub latency_us_sum: u64,
     pub latency_us_max: u64,
     /// log-scale latency histogram (see [`LatencyHistogram`])
@@ -219,6 +311,9 @@ impl Default for MetricsSnapshot {
             reconfigs: 0,
             reconfig_cycles: 0,
             sim_cycles: 0,
+            shed: 0,
+            stolen: 0,
+            evictions: 0,
             latency_us_sum: 0,
             latency_us_max: 0,
             latency_buckets: [0; LATENCY_BUCKETS],
@@ -263,6 +358,11 @@ impl MetricsSnapshot {
     pub fn p99_latency_us(&self) -> u64 {
         self.latency_percentile_us(99.0)
     }
+
+    /// 99.9th-percentile request latency (µs, log-bucket upper bound).
+    pub fn p999_latency_us(&self) -> u64 {
+        self.latency_percentile_us(99.9)
+    }
 }
 
 /// Per-stream registration: register file, approximation family, and an
@@ -274,57 +374,103 @@ struct StreamConfig {
     unit: Option<UnitKind>,
 }
 
-type Registry = Arc<RwLock<HashMap<u64, StreamConfig>>>;
-
-/// A worker's request source.  Affinity mode gives every worker
-/// exclusive ownership of its queue, so it can block in `recv` with no
-/// idle spin; the shared queue keeps the mutex + short-timeout poll
-/// (blocking in `recv` while holding the mutex would starve the other
-/// workers).
-enum WorkerQueue {
-    Owned(Receiver<ActRequest>),
-    Shared(Arc<Mutex<Receiver<ActRequest>>>),
+/// A descriptor-bank tenant: the unit of placement (all its streams
+/// hash to one shard), quota (`max_streams`, enforced by LRU eviction
+/// over its registered streams), and shedding priority.
+pub(crate) struct TenantState {
+    pub(crate) name: String,
+    /// 0..PRIORITY_LEVELS; higher survives overload longer
+    pub(crate) priority: u8,
+    pub(crate) max_streams: Option<usize>,
+    lru: Mutex<TenantLru>,
 }
 
-impl WorkerQueue {
-    /// Next request, or `None` to poll again, or `Err(())` on shutdown.
-    fn recv_first(&self) -> std::result::Result<Option<ActRequest>, ()> {
-        match self {
-            WorkerQueue::Owned(rx) => match rx.recv() {
-                Ok(r) => Ok(Some(r)),
-                Err(_) => Err(()),
-            },
-            WorkerQueue::Shared(m) => {
-                let guard = m.lock().unwrap();
-                match guard.recv_timeout(std::time::Duration::from_millis(1)) {
-                    Ok(r) => Ok(Some(r)),
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(None),
-                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(()),
-                }
-            }
-        }
+#[derive(Default)]
+struct TenantLru {
+    clock: u64,
+    last_use: HashMap<u64, u64>,
+}
+
+impl TenantState {
+    fn touch(&self, stream: u64) {
+        let mut l = self.lru.lock().unwrap();
+        l.clock += 1;
+        let now = l.clock;
+        l.last_use.insert(stream, now);
     }
 
-    /// Opportunistically drain more requests up to `max_batch` elements.
-    fn coalesce(&self, batch: &mut Vec<ActRequest>, mut elems: usize, max_batch: usize) {
-        let guard;
-        let rx: &Receiver<ActRequest> = match self {
-            WorkerQueue::Owned(rx) => rx,
-            WorkerQueue::Shared(m) => {
-                guard = m.lock().unwrap();
-                &guard
-            }
-        };
-        while elems < max_batch {
-            match rx.try_recv() {
-                Ok(r) => {
-                    elems += r.data.len();
-                    batch.push(r);
-                }
-                Err(_) => break,
-            }
-        }
+    fn forget(&self, stream: u64) {
+        self.lru.lock().unwrap().last_use.remove(&stream);
     }
+
+    pub(crate) fn stream_count(&self) -> usize {
+        self.lru.lock().unwrap().last_use.len()
+    }
+
+    /// Record that `stream` is being registered; if that would exceed
+    /// the quota, pick (and forget) the least-recently-used stream as
+    /// the eviction victim.
+    fn admit(&self, stream: u64) -> Option<u64> {
+        let mut l = self.lru.lock().unwrap();
+        let victim = match self.max_streams {
+            Some(q) if !l.last_use.contains_key(&stream) && l.last_use.len() >= q => {
+                l.last_use.iter().min_by_key(|&(_, &t)| t).map(|(&id, _)| id)
+            }
+            _ => None,
+        };
+        if let Some(v) = victim {
+            l.last_use.remove(&v);
+        }
+        l.clock += 1;
+        let now = l.clock;
+        l.last_use.insert(stream, now);
+        victim
+    }
+}
+
+/// Per-stream FIFO mailbox.  The scheduling invariant that makes work
+/// stealing order-safe: a stream has at most one live *token* (queued on
+/// a shard or held by a worker) — tracked by `scheduled` — so exactly
+/// one worker drains the mailbox at a time and responses leave in
+/// submission order.
+struct Mailbox {
+    q: VecDeque<ActRequest>,
+    /// a token for this stream is live
+    scheduled: bool,
+    /// set on eviction: queued requests were answered `UnknownStream`
+    /// and later submissions bounce at the registry
+    dead: bool,
+}
+
+/// One registered stream: placement, tenant link, current configuration
+/// (replaced in-place on re-registration so queued requests survive),
+/// mailbox, and the response sequence counter.
+struct StreamEntry {
+    id: u64,
+    shard: usize,
+    tenant: Option<Arc<TenantState>>,
+    cfg: RwLock<StreamConfig>,
+    mail: Mutex<Mailbox>,
+    /// per-stream completion counter, stamped on worker responses as
+    /// [`ActResponse::stream_seq`] (the FIFO oracle)
+    seq: AtomicU64,
+}
+
+type Registry = Arc<RwLock<HashMap<u64, Arc<StreamEntry>>>>;
+
+/// FNV-1a over a tenant name: stable text hash for shard placement.
+fn hash_name(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Key → shard (fibonacci hashing over the upper bits).
+fn shard_of(key: u64, n_shards: usize) -> usize {
+    (key.wrapping_mul(0x9e3779b97f4a7c15) >> 32) as usize % n_shards
 }
 
 /// The L3 activation service: a bank of worker-owned activation units
@@ -348,76 +494,92 @@ impl WorkerQueue {
 /// svc.shutdown();
 /// ```
 pub struct ActivationService {
-    /// shared queue (affinity = false)
-    tx: Option<Sender<ActRequest>>,
-    /// per-worker queues (affinity = true)
-    worker_tx: Vec<Sender<ActRequest>>,
+    /// per-shard token queues with work stealing
+    queues: Arc<WorkQueues<Arc<StreamEntry>>>,
+    /// queued elements per shard — the admission-control signal
+    shard_depth: Arc<Vec<AtomicUsize>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     registry: Registry,
+    tenants: Mutex<HashMap<String, Arc<TenantState>>>,
     pub(crate) metrics: Arc<Metrics>,
     pub(crate) config: ServiceConfig,
+    n_shards: usize,
 }
 
 impl ActivationService {
     pub(crate) fn start(config: ServiceConfig) -> ActivationService {
         let registry: Registry = Arc::new(RwLock::new(HashMap::new()));
         let metrics = Arc::new(Metrics::default());
-        let n = if config.backend == Backend::Pjrt {
+        // topology: Pjrt is single-worker (the executable lives on the
+        // worker thread); otherwise an explicit `shards` wins, and the
+        // legacy knob maps affinity=true to one shard per worker (the
+        // old per-worker queue) and affinity=false to one shared shard
+        let n_workers = if config.backend == Backend::Pjrt {
             1
         } else {
             config.workers.max(1)
         };
-        let mut workers = Vec::with_capacity(n);
-        let mut worker_tx = Vec::new();
-        let mut shared_tx = None;
-        if config.affinity {
-            // one queue per worker, exclusively owned; the submit path
-            // routes by stream hash and the worker blocks in recv
-            for wid in 0..n {
-                let (tx, rx) = channel::<ActRequest>();
-                worker_tx.push(tx);
-                let registry = Arc::clone(&registry);
-                let metrics = Arc::clone(&metrics);
-                let cfg = config.clone();
-                workers.push(std::thread::spawn(move || {
-                    worker_loop(wid, WorkerQueue::Owned(rx), registry, metrics, cfg);
-                }));
-            }
+        let n_shards = if config.backend == Backend::Pjrt {
+            1
         } else {
-            let (tx, rx) = channel::<ActRequest>();
-            shared_tx = Some(tx);
-            let rx = Arc::new(Mutex::new(rx));
-            for wid in 0..n {
-                let rx = Arc::clone(&rx);
-                let registry = Arc::clone(&registry);
-                let metrics = Arc::clone(&metrics);
-                let cfg = config.clone();
-                workers.push(std::thread::spawn(move || {
-                    worker_loop(wid, WorkerQueue::Shared(rx), registry, metrics, cfg);
-                }));
+            match config.shards {
+                Some(s) => s.max(1),
+                None if config.affinity => n_workers,
+                None => 1,
             }
+        };
+        let queues: Arc<WorkQueues<Arc<StreamEntry>>> = Arc::new(WorkQueues::new(n_shards));
+        let shard_depth: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_shards).map(|_| AtomicUsize::new(0)).collect());
+        let mut workers = Vec::with_capacity(n_workers);
+        for wid in 0..n_workers {
+            let queues = Arc::clone(&queues);
+            let shard_depth = Arc::clone(&shard_depth);
+            let metrics = Arc::clone(&metrics);
+            let cfg = config.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(wid % n_shards, queues, shard_depth, metrics, cfg);
+            }));
         }
         ActivationService {
-            tx: shared_tx,
-            worker_tx,
+            queues,
+            shard_depth,
             workers,
             registry,
+            tenants: Mutex::new(HashMap::new()),
             metrics,
             config,
+            n_shards,
         }
+    }
+
+    pub(crate) fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Get or create a tenant.  The name is the identity: an existing
+    /// tenant keeps its original priority and quota.
+    pub(crate) fn tenant(
+        &self,
+        name: &str,
+        priority: u8,
+        max_streams: Option<usize>,
+    ) -> Arc<TenantState> {
+        let mut tenants = self.tenants.lock().unwrap();
+        Arc::clone(tenants.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(TenantState {
+                name: name.to_string(),
+                priority: priority.min(PRIORITY_LEVELS - 1),
+                max_streams,
+                lru: Mutex::new(TenantLru::default()),
+            })
+        }))
     }
 
     /// Register / replace a stream's GRAU configuration on the
     /// service-wide default backend.
     pub(crate) fn register(&self, stream_id: u64, regs: GrauRegisters, kind: ApproxKind) {
-        self.registry.write().unwrap().insert(
-            stream_id,
-            StreamConfig {
-                regs,
-                kind,
-                unit: None,
-            },
-        );
+        self.register_with(stream_id, regs, kind, None, None);
     }
 
     /// Register / replace a stream pinned to a specific activation-unit
@@ -430,21 +592,88 @@ impl ActivationService {
         kind: ApproxKind,
         unit: UnitKind,
     ) {
-        self.registry.write().unwrap().insert(
-            stream_id,
-            StreamConfig {
-                regs,
-                kind,
-                unit: Some(unit),
-            },
-        );
+        self.register_with(stream_id, regs, kind, Some(unit), None);
+    }
+
+    /// Register / replace a stream.  A new stream is placed on its
+    /// tenant's shard (anonymous streams hash by id); re-registration
+    /// swaps the configuration in place, so requests already queued in
+    /// the mailbox are not lost.  Returns the stream id the tenant's
+    /// LRU quota evicted to make room, if any.
+    pub(crate) fn register_with(
+        &self,
+        stream_id: u64,
+        regs: GrauRegisters,
+        kind: ApproxKind,
+        unit: Option<UnitKind>,
+        tenant: Option<Arc<TenantState>>,
+    ) -> Option<u64> {
+        let cfg = StreamConfig { regs, kind, unit };
+        let victim;
+        {
+            let mut reg = self.registry.write().unwrap();
+            if let Some(entry) = reg.get(&stream_id) {
+                *entry.cfg.write().unwrap() = cfg;
+                if let Some(t) = &entry.tenant {
+                    t.touch(stream_id);
+                }
+                return None;
+            }
+            let shard = match &tenant {
+                Some(t) => shard_of(hash_name(&t.name), self.n_shards),
+                None => shard_of(stream_id, self.n_shards),
+            };
+            victim = tenant.as_ref().and_then(|t| t.admit(stream_id));
+            reg.insert(
+                stream_id,
+                Arc::new(StreamEntry {
+                    id: stream_id,
+                    shard,
+                    tenant,
+                    cfg: RwLock::new(cfg),
+                    mail: Mutex::new(Mailbox {
+                        q: VecDeque::new(),
+                        scheduled: false,
+                        dead: false,
+                    }),
+                    seq: AtomicU64::new(0),
+                }),
+            );
+        }
+        if let Some(v) = victim {
+            self.evict(v);
+            self.metrics.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        victim
     }
 
     /// Evict a stream: subsequent requests for this id get
-    /// [`StreamError::UnknownStream`].  The resident unit in a worker's
-    /// bank is reclaimed lazily (on bank overflow), not eagerly.
+    /// [`StreamError::UnknownStream`], and requests still queued in its
+    /// mailbox are answered with the same error immediately.  The
+    /// resident unit in a worker's bank is reclaimed lazily (by the
+    /// bank's LRU), not eagerly.
     pub(crate) fn deregister(&self, stream_id: u64) {
-        self.registry.write().unwrap().remove(&stream_id);
+        self.evict(stream_id);
+    }
+
+    fn evict(&self, stream_id: u64) {
+        let entry = self.registry.write().unwrap().remove(&stream_id);
+        let Some(entry) = entry else { return };
+        if let Some(t) = &entry.tenant {
+            t.forget(stream_id);
+        }
+        let drained: Vec<ActRequest> = {
+            let mut mail = entry.mail.lock().unwrap();
+            mail.dead = true;
+            mail.q.drain(..).collect()
+        };
+        let elems: usize = drained.iter().map(|r| r.data.len()).sum();
+        if elems > 0 {
+            self.shard_depth[entry.shard].fetch_sub(elems, Ordering::Relaxed);
+        }
+        for r in &drained {
+            respond_error(r, StreamError::UnknownStream(stream_id), &self.metrics, 0);
+        }
     }
 
     /// Number of currently registered streams.
@@ -452,10 +681,22 @@ impl ActivationService {
         self.registry.read().unwrap().len()
     }
 
-    /// Submit asynchronously; returns the response receiver.  Failures
-    /// (unregistered stream, unrepresentable configuration) are reported
-    /// through [`ActResponse::error`], never by dropping the channel.
-    pub(crate) fn submit(&self, stream_id: u64, data: Vec<i32>) -> Receiver<ActResponse> {
+    /// Submit asynchronously; on admission returns the response
+    /// receiver.  Per-stream failures (unregistered stream,
+    /// unrepresentable configuration) are reported through
+    /// [`ActResponse::error`], never by dropping the channel.
+    ///
+    /// With a `shed_limit` configured, admission is graded by tenant
+    /// priority: the request is refused with a [`SubmitError`] — never
+    /// enqueued — when its shard's queued-element depth exceeds
+    /// `limit * (priority + 1) / PRIORITY_LEVELS`.  Anonymous streams
+    /// run at top priority, so they are shed last, and only once the
+    /// shard is over the full limit (`Saturated`).
+    pub(crate) fn submit(
+        &self,
+        stream_id: u64,
+        data: Vec<i32>,
+    ) -> std::result::Result<Receiver<ActResponse>, SubmitError> {
         let (rtx, rrx) = channel();
         let req = ActRequest {
             stream_id,
@@ -463,21 +704,66 @@ impl ActivationService {
             resp: rtx,
             t_submit: Instant::now(),
         };
-        if self.config.affinity {
-            // stream -> worker hash affinity (fibonacci hashing)
-            let w = (stream_id.wrapping_mul(0x9e3779b97f4a7c15) >> 32) as usize
-                % self.worker_tx.len();
-            self.worker_tx[w].send(req).ok();
-        } else {
-            self.tx.as_ref().expect("service running").send(req).ok();
+        let entry = self.registry.read().unwrap().get(&stream_id).cloned();
+        let Some(entry) = entry else {
+            respond_error(&req, StreamError::UnknownStream(stream_id), &self.metrics, 0);
+            return Ok(rrx);
+        };
+        if let Some(limit) = self.config.shed_limit {
+            let depth = self.shard_depth[entry.shard].load(Ordering::Relaxed);
+            let priority = entry
+                .tenant
+                .as_ref()
+                .map(|t| t.priority)
+                .unwrap_or(PRIORITY_LEVELS - 1);
+            let allowed = limit * (priority as usize + 1) / PRIORITY_LEVELS as usize;
+            if depth > allowed {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(if priority == PRIORITY_LEVELS - 1 {
+                    SubmitError::Saturated { depth, limit }
+                } else {
+                    SubmitError::Shed {
+                        stream: stream_id,
+                        tenant: entry
+                            .tenant
+                            .as_ref()
+                            .map(|t| t.name.clone())
+                            .unwrap_or_default(),
+                        depth,
+                        limit,
+                    }
+                });
+            }
         }
-        rrx
+        if let Some(t) = &entry.tenant {
+            t.touch(stream_id);
+        }
+        let mut mail = entry.mail.lock().unwrap();
+        if mail.dead {
+            drop(mail);
+            respond_error(&req, StreamError::UnknownStream(stream_id), &self.metrics, 0);
+            return Ok(rrx);
+        }
+        self.shard_depth[entry.shard].fetch_add(req.data.len(), Ordering::Relaxed);
+        mail.q.push_back(req);
+        let push_token = !mail.scheduled;
+        if push_token {
+            mail.scheduled = true;
+        }
+        drop(mail);
+        if push_token {
+            self.queues.push(entry.shard, Arc::clone(&entry));
+        }
+        Ok(rrx)
     }
 
-    /// Blocking convenience call.  Returns a typed error when the worker
-    /// reports a failure (e.g. calling an unregistered stream).
+    /// Blocking convenience call.  Returns a typed error when the
+    /// request is shed at admission or the worker reports a failure
+    /// (e.g. calling an unregistered stream).
     pub(crate) fn call(&self, stream_id: u64, data: Vec<i32>) -> Result<ActResponse> {
-        let rx = self.submit(stream_id, data);
+        let rx = self.submit(stream_id, data).map_err(|e| {
+            Error::msg(format!("activation call on stream {stream_id} rejected: {e}"))
+        })?;
         let resp = rx.recv()?;
         if let Some(e) = &resp.error {
             return Err(Error::msg(format!(
@@ -487,24 +773,35 @@ impl ActivationService {
         Ok(resp)
     }
 
-    /// Drop the submit side of every queue and join the workers.  The
-    /// mpsc receivers hand out buffered requests before reporting
-    /// disconnection, so every request submitted before shutdown is
-    /// still answered (drain semantics; integration-tested).
+    /// Close the shard queues and join the workers.  Closed queues still
+    /// hand out every queued token, and a worker only exits after a full
+    /// empty scan, so every request submitted before shutdown is still
+    /// answered (drain semantics; integration-tested across shards).
     pub(crate) fn shutdown(mut self) -> MetricsSnapshot {
-        drop(self.tx.take());
-        self.worker_tx.clear();
+        self.join_workers();
+        self.metrics.snapshot()
+    }
+
+    fn join_workers(&mut self) {
+        self.queues.close();
         for w in self.workers.drain(..) {
             w.join().ok();
         }
-        self.metrics.snapshot()
+    }
+}
+
+impl Drop for ActivationService {
+    fn drop(&mut self) {
+        // a service dropped without an explicit shutdown must not leak
+        // parked worker threads
+        self.join_workers();
     }
 }
 
 /// Upper bound on per-worker cached units.  A plan's dense segment table
 /// can reach 64 KiB, so an unbounded bank over many short-lived streams
-/// would dwarf the registry; on overflow the bank is simply cleared
-/// (units rebuild on demand, each rebuild accounted as a reconfig).
+/// would dwarf the registry; on overflow the least-recently-used unit is
+/// evicted (it rebuilds on demand, accounted as a reconfig).
 const MAX_WORKER_UNITS: usize = 1024;
 
 /// Which unit a worker runs for a stream: a registry backend, or the
@@ -522,7 +819,63 @@ struct CachedUnit {
     src: GrauRegisters,
     kind: ApproxKind,
     unit_kind: WorkerUnitKind,
+    last_use: u64,
     unit: Box<dyn ActivationUnit>,
+}
+
+/// A worker's bank of resident units with single-entry LRU eviction at
+/// [`MAX_WORKER_UNITS`] — the "reconfigured unit bank" the tenant quota
+/// story evicts over.
+struct UnitBank {
+    units: HashMap<u64, CachedUnit>,
+    clock: u64,
+}
+
+impl UnitBank {
+    fn new() -> UnitBank {
+        UnitBank {
+            units: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// Fetch + touch.
+    fn get_mut(&mut self, sid: u64) -> Option<&mut CachedUnit> {
+        self.clock += 1;
+        let now = self.clock;
+        self.units.get_mut(&sid).map(|c| {
+            c.last_use = now;
+            c
+        })
+    }
+
+    fn remove(&mut self, sid: u64) -> Option<CachedUnit> {
+        self.units.remove(&sid)
+    }
+
+    /// Evict the least-recently-used resident unit while the bank is
+    /// full and `sid` is not already resident.
+    fn make_room(&mut self, sid: u64) {
+        while self.units.len() >= MAX_WORKER_UNITS && !self.units.contains_key(&sid) {
+            let victim = self
+                .units
+                .iter()
+                .min_by_key(|(_, c)| c.last_use)
+                .map(|(&id, _)| id);
+            match victim {
+                Some(v) => {
+                    self.units.remove(&v);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn insert(&mut self, sid: u64, mut cached: CachedUnit) {
+        self.clock += 1;
+        cached.last_use = self.clock;
+        self.units.insert(sid, cached);
+    }
 }
 
 fn make_unit(
@@ -542,25 +895,24 @@ fn make_unit(
 }
 
 fn worker_loop(
-    _wid: usize,
-    queue: WorkerQueue,
-    registry: Registry,
+    home: usize,
+    queues: Arc<WorkQueues<Arc<StreamEntry>>>,
+    shard_depth: Arc<Vec<AtomicUsize>>,
     metrics: Arc<Metrics>,
     cfg: ServiceConfig,
 ) {
-    // per-worker state: a bank of trait-object units, one per stream
-    // this worker has served (bounded by the streams routed here), each
-    // keyed by the registration it was built from — re-registrations
-    // and backend changes trigger a (counted) reconfiguration
-    let mut units: HashMap<u64, CachedUnit> = HashMap::new();
-    // reusable group-batch buffers: same-stream request groups are
+    // per-worker state: an LRU bank of trait-object units, one per
+    // stream this worker has served, each keyed by the registration it
+    // was built from — re-registrations and backend changes trigger a
+    // (counted) reconfiguration
+    let mut bank = UnitBank::new();
+    // reusable group-batch buffers: a drained mailbox batch is
     // concatenated into one contiguous stream and evaluated with a
     // single eval_batch call (one dispatch into the plan's branchless
     // lane kernel for functional backends, one pipeline fill for the
-    // cycle-accurate ones), then split back into per-request
-    // responses.  Capacity retained across
-    // groups is capped so one oversized burst doesn't pin its
-    // high-water memory for the worker's lifetime.
+    // cycle-accurate ones), then split back into per-request responses.
+    // Capacity retained across groups is capped so one oversized burst
+    // doesn't pin its high-water memory for the worker's lifetime.
     const MAX_RETAINED_GROUP_ELEMS: usize = 1 << 20;
     let mut concat: Vec<i32> = Vec::new();
     let mut group_out: Vec<i32> = Vec::new();
@@ -579,47 +931,137 @@ fn worker_loop(
     };
 
     loop {
-        // Take one request (blocking on an owned queue, polling on the
-        // shared one), then opportunistically coalesce more requests up
-        // to max_batch elements.
-        let first = match queue.recv_first() {
-            Ok(Some(r)) => r,
-            Ok(None) => continue,
-            Err(()) => return,
-        };
-        let mut batch: Vec<ActRequest> = vec![first];
-        let elems = batch[0].data.len();
-        queue.coalesce(&mut batch, elems, cfg.max_batch);
-
-        // group by stream id to batch reconfigurations
-        batch.sort_by_key(|r| r.stream_id);
-        let mut i = 0usize;
-        while i < batch.len() {
-            let sid = batch[i].stream_id;
-            let mut j = i;
-            while j < batch.len() && batch[j].stream_id == sid {
-                j += 1;
-            }
-            let group = &batch[i..j];
-
-            let entry = match registry.read().unwrap().get(&sid) {
-                Some(e) => e.clone(),
-                None => {
-                    for r in group {
-                        respond_error(r, StreamError::UnknownStream(sid), &metrics);
-                    }
-                    i = j;
-                    continue;
+        // take one stream token: home shard first, then steal
+        let entry = match queues.pop(home, Duration::from_millis(1)) {
+            Pop::Item { item, stolen } => {
+                if stolen {
+                    metrics.stolen.fetch_add(1, Ordering::Relaxed);
                 }
-            };
-            let want = entry
-                .unit
-                .map(WorkerUnitKind::Registry)
-                .unwrap_or(default_kind);
-            // representable-domain pre-check, so neither the build nor a
-            // later trait reconfigure can panic the worker
-            if let WorkerUnitKind::Registry(k) = want {
-                if let Err(e) = k.check(&entry.regs, entry.kind) {
+                item
+            }
+            Pop::Empty => continue,
+            Pop::Closed => return,
+        };
+
+        // drain this stream's mailbox up to max_batch elements; the
+        // token stays `scheduled` while we hold it, so no other worker
+        // can interleave with this stream (per-request FIFO holds even
+        // when the token was stolen)
+        let mut batch: Vec<ActRequest> = Vec::new();
+        let mut elems = 0usize;
+        {
+            let mut mail = entry.mail.lock().unwrap();
+            while let Some(front_len) = mail.q.front().map(|r| r.data.len()) {
+                if !batch.is_empty() && elems + front_len > cfg.max_batch {
+                    break;
+                }
+                let r = mail.q.pop_front().expect("front observed");
+                elems += r.data.len();
+                batch.push(r);
+            }
+        }
+        if elems > 0 {
+            shard_depth[entry.shard].fetch_sub(elems, Ordering::Relaxed);
+        }
+        if !batch.is_empty() {
+            process_group(
+                &entry,
+                &batch,
+                &mut bank,
+                &mut concat,
+                &mut group_out,
+                &metrics,
+                &offload,
+                default_kind,
+            );
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            // shrink_to never drops below len, so empty the (already
+            // fully consumed) buffers first
+            concat.clear();
+            group_out.clear();
+            if concat.capacity() > MAX_RETAINED_GROUP_ELEMS {
+                concat.shrink_to(MAX_RETAINED_GROUP_ELEMS);
+            }
+            if group_out.capacity() > MAX_RETAINED_GROUP_ELEMS {
+                group_out.shrink_to(MAX_RETAINED_GROUP_ELEMS);
+            }
+        }
+
+        // re-arm: hand the token back if more mail arrived while we
+        // were processing, else mark the stream unscheduled.  Both arms
+        // run under the mail lock, so a concurrent submit either sees
+        // `scheduled` still true (we re-push) or pushes a fresh token
+        // itself — never both, never neither.
+        let mut mail = entry.mail.lock().unwrap();
+        if mail.q.is_empty() {
+            mail.scheduled = false;
+        } else {
+            drop(mail);
+            queues.push(entry.shard, Arc::clone(&entry));
+        }
+    }
+}
+
+/// Evaluate one drained mailbox batch (all same stream) and answer every
+/// request, stamping per-stream sequence numbers in submission order.
+#[allow(clippy::too_many_arguments)]
+fn process_group(
+    entry: &StreamEntry,
+    group: &[ActRequest],
+    bank: &mut UnitBank,
+    concat: &mut Vec<i32>,
+    group_out: &mut Vec<i32>,
+    metrics: &Metrics,
+    offload: &Option<Rc<RefCell<PjrtOffload>>>,
+    default_kind: WorkerUnitKind,
+) {
+    let sid = entry.id;
+    let next_seq = || entry.seq.fetch_add(1, Ordering::Relaxed) + 1;
+    let scfg = entry.cfg.read().unwrap().clone();
+    let want = scfg
+        .unit
+        .map(WorkerUnitKind::Registry)
+        .unwrap_or(default_kind);
+    // representable-domain pre-check, so neither the build nor a later
+    // trait reconfigure can panic the worker
+    if let WorkerUnitKind::Registry(k) = want {
+        if let Err(e) = k.check(&scfg.regs, scfg.kind) {
+            for r in group {
+                respond_error(
+                    r,
+                    StreamError::Rejected {
+                        stream: sid,
+                        reason: format!("{e:#}"),
+                    },
+                    metrics,
+                    next_seq(),
+                );
+            }
+            return;
+        }
+    }
+
+    // reconfigure when the resident unit (if any) holds a different
+    // registration: stream re-registered, family changed, or pinned to
+    // a different backend
+    let stale = match bank.get_mut(sid) {
+        Some(c) => c.src != scfg.regs || c.kind != scfg.kind || c.unit_kind != want,
+        None => true,
+    };
+    if stale {
+        bank.make_room(sid);
+        let (unit, cost) = match bank.remove(sid) {
+            // same backend: replay the runtime reconfiguration on the
+            // existing unit (counts flush costs etc.)
+            Some(mut c) if c.unit_kind == want => {
+                let cost = c.unit.reconfigure(&scfg.regs, scfg.kind);
+                (c.unit, cost)
+            }
+            // new stream or backend change: build a fresh unit and
+            // charge the register-write floor for loading it
+            _ => match make_unit(want, &scfg.regs, scfg.kind, offload) {
+                Ok(u) => (u, reconfigure_cost(&scfg.regs)),
+                Err(e) => {
                     for r in group {
                         respond_error(
                             r,
@@ -627,117 +1069,72 @@ fn worker_loop(
                                 stream: sid,
                                 reason: format!("{e:#}"),
                             },
-                            &metrics,
+                            metrics,
+                            next_seq(),
                         );
                     }
-                    i = j;
-                    continue;
+                    return;
                 }
-            }
+            },
+        };
+        metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
+        metrics.reconfig_cycles.fetch_add(cost, Ordering::Relaxed);
+        bank.insert(
+            sid,
+            CachedUnit {
+                src: scfg.regs.clone(),
+                kind: scfg.kind,
+                unit_kind: want,
+                last_use: 0,
+                unit,
+            },
+        );
+    }
 
-            // reconfigure when the resident unit (if any) holds a
-            // different registration: stream re-registered, family
-            // changed, or pinned to a different backend
-            let stale = units
-                .get(&sid)
-                .map(|c| c.src != entry.regs || c.kind != entry.kind || c.unit_kind != want)
-                .unwrap_or(true);
-            if stale {
-                if units.len() >= MAX_WORKER_UNITS && !units.contains_key(&sid) {
-                    units.clear();
-                }
-                let (unit, cost) = match units.remove(&sid) {
-                    // same backend: replay the runtime reconfiguration on
-                    // the existing unit (counts flush costs etc.)
-                    Some(mut c) if c.unit_kind == want => {
-                        let cost = c.unit.reconfigure(&entry.regs, entry.kind);
-                        (c.unit, cost)
-                    }
-                    // new stream or backend change: build a fresh unit and
-                    // charge the register-write floor for loading it
-                    _ => match make_unit(want, &entry.regs, entry.kind, &offload) {
-                        Ok(u) => (u, reconfigure_cost(&entry.regs)),
-                        Err(e) => {
-                            for r in group {
-                                respond_error(
-                                    r,
-                                    StreamError::Rejected {
-                                        stream: sid,
-                                        reason: format!("{e:#}"),
-                                    },
-                                    &metrics,
-                                );
-                            }
-                            i = j;
-                            continue;
-                        }
-                    },
-                };
-                metrics.reconfigs.fetch_add(1, Ordering::Relaxed);
-                metrics.reconfig_cycles.fetch_add(cost, Ordering::Relaxed);
-                units.insert(
-                    sid,
-                    CachedUnit {
-                        src: entry.regs.clone(),
-                        kind: entry.kind,
-                        unit_kind: want,
-                        unit,
-                    },
-                );
-            }
-
-            let cached = units.get_mut(&sid).expect("unit resident after staleness check");
-            if group.len() == 1 {
-                // single request: evaluate straight into the response's
-                // own buffer (the response owns its output)
-                let r = &group[0];
-                let mut data = Vec::new();
-                let stats = cached.unit.eval_batch(&r.data, &mut data);
-                metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
-                respond(r, data, &metrics);
-            } else {
-                // coalesced same-stream group: one contiguous stream
-                // through the unit (amortizes dispatch and — for the
-                // cycle-accurate backends — the pipeline fill), then
-                // split the outputs back per request
-                concat.clear();
-                for r in group {
-                    concat.extend_from_slice(&r.data);
-                }
-                let stats = cached.unit.eval_batch(&concat, &mut group_out);
-                metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
-                let mut off = 0usize;
-                for r in group {
-                    let next = off + r.data.len();
-                    respond(r, group_out[off..next].to_vec(), &metrics);
-                    off = next;
-                }
-                // shrink_to never drops below len, so empty the
-                // (already fully consumed) buffers first
-                concat.clear();
-                group_out.clear();
-                if concat.capacity() > MAX_RETAINED_GROUP_ELEMS {
-                    concat.shrink_to(MAX_RETAINED_GROUP_ELEMS);
-                }
-                if group_out.capacity() > MAX_RETAINED_GROUP_ELEMS {
-                    group_out.shrink_to(MAX_RETAINED_GROUP_ELEMS);
-                }
-            }
-            metrics.batches.fetch_add(1, Ordering::Relaxed);
-            i = j;
+    let cached = bank.get_mut(sid).expect("unit resident after staleness check");
+    if group.len() == 1 {
+        // single request: evaluate straight into the response's own
+        // buffer (the response owns its output)
+        let r = &group[0];
+        let mut data = Vec::new();
+        let stats = cached.unit.eval_batch(&r.data, &mut data);
+        metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
+        respond(r, data, metrics, next_seq());
+    } else {
+        // coalesced same-stream group: one contiguous stream through
+        // the unit (amortizes dispatch and — for the cycle-accurate
+        // backends — the pipeline fill), then split the outputs back
+        // per request, in mailbox (= submission) order
+        concat.clear();
+        for r in group {
+            concat.extend_from_slice(&r.data);
+        }
+        let stats = cached.unit.eval_batch(concat, group_out);
+        metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
+        let mut off = 0usize;
+        for r in group {
+            let next = off + r.data.len();
+            respond(r, group_out[off..next].to_vec(), metrics, next_seq());
+            off = next;
         }
     }
 }
 
-fn respond(req: &ActRequest, data: Vec<i32>, metrics: &Metrics) {
-    finish(req, data, None, metrics)
+fn respond(req: &ActRequest, data: Vec<i32>, metrics: &Metrics, stream_seq: u64) {
+    finish(req, data, None, metrics, stream_seq)
 }
 
-fn respond_error(req: &ActRequest, error: StreamError, metrics: &Metrics) {
-    finish(req, Vec::new(), Some(error), metrics)
+fn respond_error(req: &ActRequest, error: StreamError, metrics: &Metrics, stream_seq: u64) {
+    finish(req, Vec::new(), Some(error), metrics, stream_seq)
 }
 
-fn finish(req: &ActRequest, data: Vec<i32>, error: Option<StreamError>, metrics: &Metrics) {
+fn finish(
+    req: &ActRequest,
+    data: Vec<i32>,
+    error: Option<StreamError>,
+    metrics: &Metrics,
+    stream_seq: u64,
+) {
     let lat = req.t_submit.elapsed().as_micros() as u64;
     metrics.requests.fetch_add(1, Ordering::Relaxed);
     metrics
@@ -750,6 +1147,7 @@ fn finish(req: &ActRequest, data: Vec<i32>, error: Option<StreamError>, metrics:
         .send(ActResponse {
             data,
             latency_us: lat,
+            stream_seq,
             error,
         })
         .ok();
@@ -913,11 +1311,11 @@ mod tests {
             });
             svc.register(4, regs.clone(), ApproxKind::Apot);
             let big: Vec<i32> = (0..200_000).map(|j| j % 4001 - 2000).collect();
-            let first = svc.submit(4, big.clone());
+            let first = svc.submit(4, big.clone()).unwrap();
             let pend: Vec<(Vec<i32>, _)> = (0..32i32)
                 .map(|k| {
                     let data: Vec<i32> = (0..20).map(|j| k * 37 - j * 11).collect();
-                    let rx = svc.submit(4, data.clone());
+                    let rx = svc.submit(4, data.clone()).unwrap();
                     (data, rx)
                 })
                 .collect();
@@ -1015,10 +1413,85 @@ mod tests {
         assert!(msg.contains("777"), "got: {msg}");
         // the async path reports the same typed failure without closing
         // the response channel
-        let resp = svc.submit(777, vec![1]).recv().expect("channel stays open");
+        let resp = svc
+            .submit(777, vec![1])
+            .unwrap()
+            .recv()
+            .expect("channel stays open");
         assert!(resp.data.is_empty());
+        assert_eq!(resp.stream_seq, 0);
         assert_eq!(resp.error, Some(StreamError::UnknownStream(777)));
         svc.shutdown();
+    }
+
+    #[test]
+    fn tenant_quota_evicts_lru_stream() {
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let regs = demo_regs(Activation::Sigmoid);
+        let t = svc.tenant("acme", 1, Some(2));
+        assert_eq!(svc.register_with(10, regs.clone(), ApproxKind::Apot, None, Some(Arc::clone(&t))), None);
+        assert_eq!(svc.register_with(11, regs.clone(), ApproxKind::Apot, None, Some(Arc::clone(&t))), None);
+        // touch 10 so 11 becomes the LRU victim
+        svc.call(10, vec![1]).unwrap();
+        let evicted = svc.register_with(12, regs.clone(), ApproxKind::Apot, None, Some(Arc::clone(&t)));
+        assert_eq!(evicted, Some(11));
+        assert_eq!(t.stream_count(), 2);
+        assert_eq!(svc.stream_count(), 2);
+        // the evicted stream now reports UnknownStream
+        let resp = svc.submit(11, vec![1]).unwrap().recv().unwrap();
+        assert_eq!(resp.error, Some(StreamError::UnknownStream(11)));
+        let m = svc.shutdown();
+        assert_eq!(m.evictions, 1);
+    }
+
+    #[test]
+    fn shed_errors_are_typed_and_graded() {
+        // a 1-worker, 1-shard service stalled by a huge request sheds
+        // deterministically: depth stays above the watermark while the
+        // worker is busy, low-priority tenants get Shed, anonymous
+        // (top-priority) traffic gets Saturated only over the full limit
+        let svc = ActivationService::start(ServiceConfig {
+            workers: 1,
+            shards: Some(1),
+            shed_limit: Some(1_000),
+            ..Default::default()
+        });
+        let regs = demo_regs(Activation::Sigmoid);
+        let low = svc.tenant("background", 0, None);
+        svc.register(1, regs.clone(), ApproxKind::Apot);
+        svc.register_with(2, regs.clone(), ApproxKind::Apot, None, Some(low));
+        // occupy the worker, then fill the queue past the full limit
+        let stall = svc.submit(1, vec![0; 4_000_000]).unwrap();
+        let mut filler = Vec::new();
+        loop {
+            match svc.submit(1, vec![0; 200]) {
+                Ok(rx) => filler.push(rx),
+                Err(SubmitError::Saturated { depth, limit }) => {
+                    assert!(depth > limit, "depth {depth} limit {limit}");
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+            assert!(filler.len() < 100_000, "never saturated");
+        }
+        // low priority (0) allowance is limit/4: already far exceeded
+        match svc.submit(2, vec![7]) {
+            Err(SubmitError::Shed { stream, tenant, .. }) => {
+                assert_eq!(stream, 2);
+                assert_eq!(tenant, "background");
+            }
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        // admitted requests all complete; shed ones were never enqueued
+        assert!(stall.recv().unwrap().error.is_none());
+        for rx in filler {
+            assert!(rx.recv().unwrap().error.is_none());
+        }
+        let m = svc.shutdown();
+        assert!(m.shed >= 2, "shed {}", m.shed);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! grau train  --config t1_mlp_full8 [--steps N] [--no-cache]
 //! grau fit    --config t3_sfc_silu  [--segments 6] [--shifts 8] [--kind apot]
 //! grau eval   --config ...          (original vs PWLF/PoT/APoT accuracy)
-//! grau serve  [--workers 4] [--backend functional|cyclesim|pjrt] [--requests N]
+//! grau serve  [--workers 4] [--shards N] [--shed-limit ELEMS]
+//!             [--backend functional|cyclesim|pjrt] [--requests N]
 //! grau hw-report                    (Table VI)
 //! grau table1|table3|table4|table5|table6|fig1|fig2 [--quick]
 //! grau e2e                          (full pipeline on CNV-mixed)
@@ -122,13 +123,20 @@ fn run() -> Result<()> {
                 "pjrt" => Backend::Pjrt,
                 _ => Backend::Functional,
             };
-            let svc = ServiceBuilder::new()
+            let mut builder = ServiceBuilder::new()
                 .workers(args.get_usize("workers", 4))
                 .max_batch(args.get_usize("max-batch", 8192))
                 .backend(backend)
                 .affinity(args.get_or("affinity", "on") != "off")
-                .artifacts_dir(artifacts_dir(&args))
-                .start();
+                .artifacts_dir(artifacts_dir(&args));
+            // explicit shard-queue topology (default: affinity-derived)
+            if args.get("shards").is_some() {
+                builder = builder.shards(args.get_usize("shards", 1));
+            }
+            if args.get("shed-limit").is_some() {
+                builder = builder.shed_limit(args.get_usize("shed-limit", 0));
+            }
+            let svc = builder.start();
             // the stream bank: a descriptor file from disk (`--units`),
             // or a freshly fitted sigmoid/silu/relu demo trio
             let bank = if let Some(path) = args.get("units") {
@@ -187,8 +195,9 @@ fn run() -> Result<()> {
             let m = svc.shutdown();
             println!(
                 "served {} requests / {} elements in {:.3}s -> {:.2} Melem/s; \
-                 batches {} reconfigs {} (cycles {}), latency mean {:.0}µs \
-                 p50 {}µs p99 {}µs max {}µs",
+                 batches {} reconfigs {} (cycles {}), stolen {} shed {} \
+                 evictions {}, latency mean {:.0}µs p50 {}µs p99 {}µs \
+                 p999 {}µs max {}µs",
                 m.requests,
                 m.elements,
                 dt,
@@ -196,9 +205,13 @@ fn run() -> Result<()> {
                 m.batches,
                 m.reconfigs,
                 m.reconfig_cycles,
+                m.stolen,
+                m.shed,
+                m.evictions,
                 m.mean_latency_us(),
                 m.p50_latency_us(),
                 m.p99_latency_us(),
+                m.p999_latency_us(),
                 m.latency_us_max
             );
         }
@@ -243,7 +256,9 @@ grau — GRAU reproduction launcher
                              per-channel descriptor bank)
   serve [--backend ...]     run the activation service demo
                             (--units FILE serves a descriptor bank;
-                             --export-units FILE writes the demo bank)
+                             --export-units FILE writes the demo bank;
+                             --shards N / --shed-limit ELEMS pick the
+                             shard-queue topology and overload policy)
   table1|table3|table4|table5|table6|fig1|fig2 [--quick]
   hw-report                 alias of table6
 flags: --artifacts DIR --steps N --segments S --shifts E --quick";

@@ -99,6 +99,52 @@ impl Rng {
     }
 }
 
+/// Zipf-distributed sampler over `0..n` with exponent `s`:
+/// `P(k) ∝ (k + 1)^-s`.  The CDF is precomputed once so each draw is a
+/// single uniform plus a binary search — cheap enough for the service
+/// load generator to pick a tenant per simulated request.  Rank 0 is the
+/// most popular item, matching the skewed-tenant-popularity model.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf over empty support");
+        assert!(s >= 0.0 && s.is_finite(), "Zipf exponent {s}");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        // guard against rounding leaving the last CDF entry below 1.0
+        *cdf.last_mut().unwrap() = 1.0;
+        Zipf { cdf }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Exact probability mass of rank `k` (for chi-square style checks).
+    pub fn pmf(&self, k: usize) -> f64 {
+        let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - lo
+    }
+
+    /// Draw one rank in `0..n` using `rng`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +179,35 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.05, "mean {mean}");
         assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_head_dominates_and_is_deterministic() {
+        let z = Zipf::new(100, 1.1);
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let mut head = 0usize;
+        for _ in 0..10_000 {
+            let ka = z.sample(&mut a);
+            assert_eq!(ka, z.sample(&mut b));
+            assert!(ka < 100);
+            if ka < 10 {
+                head += 1;
+            }
+        }
+        // with s=1.1 over 100 ranks, the top-10 mass is ~0.66
+        assert!(head > 5_500, "head {head}");
+        let mass: f64 = (0..100).map(|k| z.pmf(k)).sum();
+        assert!((mass - 1.0).abs() < 1e-12);
+        assert!(z.pmf(0) > z.pmf(1) && z.pmf(1) > z.pmf(50));
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_uniform() {
+        let z = Zipf::new(8, 0.0);
+        for k in 0..8 {
+            assert!((z.pmf(k) - 0.125).abs() < 1e-12);
+        }
     }
 
     #[test]

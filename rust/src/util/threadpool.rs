@@ -1,6 +1,10 @@
-//! Minimal scoped thread pool (rayon substitute) for data-parallel loops.
+//! Minimal scoped thread pool (rayon substitute) for data-parallel loops,
+//! plus the sharded work-stealing queue the activation service runs on.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 /// Run `f(&mut state, i)` for every `i in 0..n` across `threads` OS
 /// threads, where each worker thread owns one `state` value built by
@@ -72,6 +76,112 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
     out.into_iter().map(|o| o.unwrap()).collect()
 }
 
+/// Result of [`WorkQueues::pop`].
+#[derive(Debug)]
+pub enum Pop<T> {
+    /// An item was obtained; `stolen` is true when it came from a queue
+    /// other than the caller's home shard.
+    Item { item: T, stolen: bool },
+    /// The timeout elapsed with every queue empty (queues still open).
+    Empty,
+    /// The queues are closed and a full scan found every queue empty.
+    Closed,
+}
+
+/// A fixed set of FIFO queues, one per shard, with work stealing.
+///
+/// Each worker has a *home* shard it pops from first; when the home
+/// queue is empty it scans the other shards round-robin (starting at
+/// `home + 1`) and steals from the *front* of the first non-empty queue
+/// it finds — front-stealing keeps stolen work in arrival order, which
+/// the service relies on for per-stream FIFO.  Waiting uses a short
+/// `Condvar` timeout on the home queue so a worker parked on an idle
+/// shard still re-scans its siblings periodically even if no push ever
+/// notifies it.
+pub struct WorkQueues<T> {
+    shards: Vec<(Mutex<VecDeque<T>>, Condvar)>,
+    closed: AtomicBool,
+}
+
+impl<T> WorkQueues<T> {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        WorkQueues {
+            shards: (0..n).map(|_| (Mutex::new(VecDeque::new()), Condvar::new())).collect(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue `item` on `shard` and wake one waiter parked there.
+    /// Items pushed after `close` are still drained: workers only stop
+    /// once a post-close scan finds every queue empty.
+    pub fn push(&self, shard: usize, item: T) {
+        let (lock, cv) = &self.shards[shard % self.shards.len()];
+        lock.lock().unwrap().push_back(item);
+        cv.notify_one();
+    }
+
+    /// Pop for a worker homed on `home`: own front, else steal the front
+    /// of another shard, else wait on the home condvar up to `timeout`.
+    pub fn pop(&self, home: usize, timeout: Duration) -> Pop<T> {
+        let n = self.shards.len();
+        let home = home % n;
+        // 1. home queue
+        {
+            let (lock, _) = &self.shards[home];
+            if let Some(item) = lock.lock().unwrap().pop_front() {
+                return Pop::Item { item, stolen: false };
+            }
+        }
+        // 2. steal scan
+        for off in 1..n {
+            let (lock, _) = &self.shards[(home + off) % n];
+            if let Some(item) = lock.lock().unwrap().pop_front() {
+                return Pop::Item { item, stolen: true };
+            }
+        }
+        // 3. every queue was empty at scan time; if closed, we are done
+        if self.closed.load(Ordering::SeqCst) {
+            return Pop::Closed;
+        }
+        // 4. park briefly on the home queue, then let caller retry
+        let (lock, cv) = &self.shards[home];
+        let guard = lock.lock().unwrap();
+        let (mut guard, _timed_out) = cv.wait_timeout(guard, timeout).unwrap();
+        match guard.pop_front() {
+            Some(item) => Pop::Item { item, stolen: false },
+            None => Pop::Empty,
+        }
+    }
+
+    /// Close the queues and wake every waiter.  Already-queued items are
+    /// still handed out; `pop` returns `Closed` only once all queues are
+    /// observed empty after the close.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        for (_, cv) in &self.shards {
+            cv.notify_all();
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Queued item count on one shard (diagnostic; racy by nature).
+    pub fn len(&self, shard: usize) -> usize {
+        self.shards[shard % self.shards.len()].0.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|(l, _)| l.lock().unwrap().is_empty())
+    }
+}
+
 /// Default worker count: physical parallelism minus one, at least 1.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
@@ -128,6 +238,91 @@ mod tests {
         assert_eq!(visits.load(Ordering::Relaxed), 200);
         let s = states.load(Ordering::Relaxed);
         assert!((1..=4).contains(&s), "states {s}");
+    }
+
+    #[test]
+    fn work_queues_fifo_per_shard() {
+        let q: WorkQueues<u32> = WorkQueues::new(2);
+        q.push(0, 1);
+        q.push(0, 2);
+        q.push(1, 10);
+        match q.pop(0, Duration::from_millis(1)) {
+            Pop::Item { item, stolen } => {
+                assert_eq!(item, 1);
+                assert!(!stolen);
+            }
+            other => panic!("{other:?}"),
+        }
+        match q.pop(0, Duration::from_millis(1)) {
+            Pop::Item { item, .. } => assert_eq!(item, 2),
+            other => panic!("{other:?}"),
+        }
+        // home now empty: shard 1's front is stolen
+        match q.pop(0, Duration::from_millis(1)) {
+            Pop::Item { item, stolen } => {
+                assert_eq!(item, 10);
+                assert!(stolen);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(q.pop(0, Duration::from_millis(1)), Pop::Empty));
+    }
+
+    #[test]
+    fn work_queues_drain_after_close() {
+        let q: WorkQueues<u32> = WorkQueues::new(3);
+        q.push(2, 7);
+        q.close();
+        // queued work survives close...
+        match q.pop(0, Duration::from_millis(1)) {
+            Pop::Item { item, stolen } => {
+                assert_eq!(item, 7);
+                assert!(stolen);
+            }
+            other => panic!("{other:?}"),
+        }
+        // ...and only then do workers see Closed
+        assert!(matches!(q.pop(0, Duration::from_millis(1)), Pop::Closed));
+        assert!(q.is_closed());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn work_queues_cross_thread_steal() {
+        use std::sync::Arc;
+        let q: Arc<WorkQueues<usize>> = Arc::new(WorkQueues::new(4));
+        let total = 400usize;
+        // everything lands on shard 0; three thieves homed elsewhere
+        // must still drain it all
+        for i in 0..total {
+            q.push(0, i);
+        }
+        q.close();
+        let seen = Arc::new(AtomicUsize::new(0));
+        let stolen = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for home in 1..4 {
+            let q = Arc::clone(&q);
+            let seen = Arc::clone(&seen);
+            let stolen_n = Arc::clone(&stolen);
+            joins.push(std::thread::spawn(move || loop {
+                match q.pop(home, Duration::from_millis(1)) {
+                    Pop::Item { stolen, .. } => {
+                        seen.fetch_add(1, Ordering::Relaxed);
+                        if stolen {
+                            stolen_n.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Pop::Empty => continue,
+                    Pop::Closed => break,
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(seen.load(Ordering::Relaxed), total);
+        assert_eq!(stolen.load(Ordering::Relaxed), total);
     }
 
     #[test]

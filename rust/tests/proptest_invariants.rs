@@ -8,7 +8,8 @@ use grau::fit::pipeline::{fit_samples, FitOptions};
 use grau::fit::slope::quantize_slope;
 use grau::fit::ApproxKind;
 use grau::hw::{GrauPlan, GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
-use grau::util::rng::Rng;
+use grau::api::MetricsSnapshot;
+use grau::util::rng::{Rng, Zipf};
 
 fn random_regs(rng: &mut Rng) -> GrauRegisters {
     let n_bits = [1u8, 2, 4, 8][rng.range_usize(0, 4)];
@@ -220,6 +221,100 @@ fn prop_fit_error_monotone_in_segments() {
             e8.rmse_pwlf,
             e4.rmse_pwlf
         );
+    }
+}
+
+#[test]
+fn prop_zipf_sampler_matches_pmf_chi_square() {
+    // Pearson chi-square goodness-of-fit of the sampler against its own
+    // pmf: 200k seeded draws over 40 ranks, s = 1.2.  With df = 39 the
+    // statistic concentrates around 39 (sd ≈ 8.8); 100 is ~7 sd out, so
+    // the deterministic seed passes with enormous margin while any
+    // off-by-one in the CDF search or a mis-normalized pmf blows far
+    // past it.
+    let z = Zipf::new(40, 1.2);
+    let mut rng = Rng::new(20_260_807);
+    let draws = 200_000usize;
+    let mut counts = vec![0u64; z.n()];
+    for _ in 0..draws {
+        let k = z.sample(&mut rng);
+        assert!(k < z.n());
+        counts[k] += 1;
+    }
+    let mut chi2 = 0.0f64;
+    for k in 0..z.n() {
+        let expect = z.pmf(k) * draws as f64;
+        // chi-square validity needs every cell's expected count >= ~5
+        assert!(expect > 5.0, "rank {k} expected count {expect}");
+        let d = counts[k] as f64 - expect;
+        chi2 += d * d / expect;
+    }
+    assert!(chi2 < 100.0, "chi2 {chi2} rejects the Zipf shape");
+    // and the pmf itself is strictly head-heavy
+    for k in 1..z.n() {
+        assert!(z.pmf(k) < z.pmf(k - 1), "pmf not decreasing at rank {k}");
+    }
+}
+
+#[test]
+fn prop_latency_histogram_quantiles_within_bucket() {
+    // the log-scale histogram reports a bucket upper bound; for every
+    // adversarial latency set, p50/p99/p999 must land in the same
+    // power-of-two bucket as the exact ceil-rank quantile — i.e. never
+    // below it and within 2x of it.
+    fn bucket(us: u64) -> usize {
+        ((64 - us.leading_zeros()) as usize).min(63)
+    }
+    fn exact_percentile(sorted: &[u64], pct: f64) -> u64 {
+        let total = sorted.len() as u64;
+        let rank = (((pct / 100.0) * total as f64).ceil() as u64).clamp(1, total);
+        sorted[(rank - 1) as usize]
+    }
+    let mut cases: Vec<Vec<u64>> = vec![
+        vec![5; 1000],                   // degenerate: all equal
+        vec![1023, 1024, 1025],          // straddles a power-of-two boundary
+        vec![0],                         // single zero (bucket 0)
+        vec![7],                         // single value
+        // heavy tail: 999 fast requests, one catastrophic straggler
+        (0..1000).map(|i| if i < 999 { 1 } else { 1 << 40 }).collect(),
+        // bimodal: the p50/p99 split sits between the modes
+        (0..1000).map(|i| if i % 2 == 0 { 3 } else { 100_000 }).collect(),
+    ];
+    let mut rng = Rng::new(123_456);
+    for _ in 0..50 {
+        // log-uniform magnitudes with uniform jitter inside each octave
+        let n = 1 + rng.range_usize(0, 5000);
+        cases.push(
+            (0..n)
+                .map(|_| {
+                    let base = 1u64 << rng.range_usize(0, 41);
+                    base + rng.next_u64() % base.max(1)
+                })
+                .collect(),
+        );
+    }
+    for (ci, case) in cases.iter().enumerate() {
+        let mut snap = MetricsSnapshot::default();
+        for &us in case {
+            snap.latency_buckets[bucket(us)] += 1;
+        }
+        let mut sorted = case.clone();
+        sorted.sort_unstable();
+        for pct in [50.0, 99.0, 99.9] {
+            let got = snap.latency_percentile_us(pct);
+            let exact = exact_percentile(&sorted, pct);
+            assert_eq!(
+                bucket(got),
+                bucket(exact),
+                "case {ci} p{pct}: got {got}, exact {exact}"
+            );
+            if exact == 0 {
+                assert_eq!(got, 0, "case {ci} p{pct}");
+            } else {
+                assert!(got >= exact, "case {ci} p{pct}: {got} < exact {exact}");
+                assert!(got < 2 * exact, "case {ci} p{pct}: {got} >= 2x exact {exact}");
+            }
+        }
     }
 }
 

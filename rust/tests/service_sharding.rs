@@ -1,0 +1,322 @@
+//! The sharded-service battery: seeded, deterministic proofs that the
+//! multi-tenant sharded coordinator behaves exactly like the unsharded
+//! one — bit-exact outputs, identical typed errors, per-stream FIFO —
+//! plus liveness under a stalled shard, quota/LRU eviction order,
+//! priority-ordered shedding, and shutdown drain across shards.
+//!
+//! Everything runs through the typed `grau::api` facade; raw stream ids
+//! never appear.
+
+use grau::act::{Activation, FoldedActivation};
+use grau::api::{Pending, ServiceBuilder, ServiceError, Tenant, TenantSpec};
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::hw::GrauRegisters;
+use grau::util::rng::Rng;
+
+fn fitted(act: Activation, window16: bool) -> GrauRegisters {
+    let f = FoldedActivation::new(0.004, 0.0, act, 1.0 / 120.0, 8);
+    let r = fit_folded(
+        &f,
+        -1000,
+        1000,
+        FitOptions {
+            n_shifts: if window16 { 16 } else { 8 },
+            ..Default::default()
+        },
+    );
+    r.apot.regs
+}
+
+/// One seeded mixed-tenant workload: 8 streams (6 tenant-scoped across 3
+/// priorities, 2 anonymous), 240 requests in 10 waves, outputs checked
+/// against the register-file oracle, plus a deterministic quota eviction
+/// whose typed error is part of the trace.  Returns the full response
+/// trace (per-stream sequence numbers + output data) for cross-topology
+/// comparison.
+fn run_workload(shards: usize) -> Vec<(u64, Vec<i32>)> {
+    let svc = ServiceBuilder::new()
+        .workers(4)
+        .max_batch(1024)
+        .shards(shards)
+        .start();
+    let tenants: Vec<Tenant> = [("alpha", 0u8), ("beta", 1), ("gamma", 2)]
+        .iter()
+        .map(|(n, p)| svc.tenant(TenantSpec::new(*n).priority(*p)).unwrap())
+        .collect();
+    let acts = [
+        Activation::Sigmoid,
+        Activation::Silu,
+        Activation::Relu,
+        Activation::Tanh,
+    ];
+    let mut regs_for = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let r = fitted(acts[i % 4], i % 2 == 0);
+        let h = if i < 6 {
+            tenants[i % 3].register(r.clone(), ApproxKind::Apot).unwrap()
+        } else {
+            svc.register(r.clone(), ApproxKind::Apot).unwrap()
+        };
+        regs_for.push(r);
+        handles.push(h);
+    }
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut results = Vec::new();
+    for _wave in 0..10 {
+        let mut pend = Vec::new();
+        for _ in 0..24 {
+            let si = rng.range_usize(0, 8);
+            let len = 1 + rng.range_usize(0, 200);
+            let data: Vec<i32> = (0..len).map(|_| rng.range_i64(-4000, 4000) as i32).collect();
+            pend.push((si, data.clone(), handles[si].submit(data).unwrap()));
+        }
+        for (si, data, p) in pend {
+            let resp = p.recv().expect("response");
+            for (x, y) in data.iter().zip(&resp.data) {
+                assert_eq!(*y, regs_for[si].eval(*x), "oracle, stream {si}, shards {shards}");
+            }
+            results.push((resp.stream_seq, resp.data));
+        }
+    }
+    // identical typed errors across topologies: a quota-evicted stream's
+    // handle answers UnknownStream on both
+    let q = svc.tenant(TenantSpec::new("evictee").max_streams(1)).unwrap();
+    let old = q.register(regs_for[0].clone(), ApproxKind::Apot).unwrap();
+    let fresh = q.register(regs_for[1].clone(), ApproxKind::Apot).unwrap();
+    let err = old.call(vec![1, 2]).unwrap_err();
+    assert!(
+        matches!(err, ServiceError::UnknownStream(_)),
+        "shards {shards}: {err}"
+    );
+    drop(handles);
+    drop(old);
+    drop(fresh);
+    let m = svc.shutdown();
+    // 240 worker responses + 1 UnknownStream response for the evictee
+    assert_eq!(m.requests, 241, "shards {shards}");
+    results.push((m.evictions, vec![m.requests as i32]));
+    results
+}
+
+#[test]
+fn sharded_matches_unsharded_bit_for_bit() {
+    // the PR's core acceptance oracle: same seed, same submission order,
+    // 1 shard vs 4 shards — the full response trace (outputs, per-stream
+    // sequence numbers, typed errors, eviction counts) must be identical
+    let unsharded = run_workload(1);
+    let sharded = run_workload(4);
+    assert_eq!(unsharded, sharded);
+}
+
+#[test]
+fn work_stealing_drains_a_stalled_shard() {
+    // With 2 shards, the fibonacci stream hash places handle ids 0 and 2
+    // on shard 0 and id 1 on shard 1.  A huge request occupies one
+    // worker with stream 0; the other worker (homed on the idle shard)
+    // must steal stream 2's token so the small request is served without
+    // waiting for the stall to clear.  The steal counter is asserted
+    // with retries against scheduler flukes; correctness of the small
+    // response is asserted on every attempt.
+    let regs = fitted(Activation::Sigmoid, false);
+    let mut stole = false;
+    for _attempt in 0..5 {
+        let svc = ServiceBuilder::new().workers(2).shards(2).start();
+        let s0 = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+        let s1 = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+        let s2 = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+        let pend_big = s0.submit(vec![123; 8_000_000]).unwrap();
+        let small: Vec<i32> = (-100..100).collect();
+        let resp = s2.call(small.clone()).unwrap();
+        for (x, y) in small.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x));
+        }
+        assert!(pend_big.recv().unwrap().error.is_none());
+        drop((s0, s1, s2));
+        let m = svc.shutdown();
+        if m.stolen > 0 {
+            stole = true;
+            break;
+        }
+    }
+    assert!(stole, "no attempt recorded a work steal");
+}
+
+#[test]
+fn tenant_quota_evicts_in_lru_order() {
+    let svc = ServiceBuilder::new().workers(1).start();
+    let t = svc
+        .tenant(TenantSpec::new("quota").priority(3).max_streams(2))
+        .unwrap();
+    let regs = fitted(Activation::Relu, false);
+    let h1 = t.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let h2 = t.register(regs.clone(), ApproxKind::Apot).unwrap();
+    // touching h1 makes h2 the least-recently-used stream
+    h1.call(vec![1]).unwrap();
+    let h3 = t.register(regs.clone(), ApproxKind::Apot).unwrap();
+    assert!(
+        matches!(h2.call(vec![2]), Err(ServiceError::UnknownStream(_))),
+        "h2 must be the first eviction victim"
+    );
+    h1.call(vec![3]).unwrap();
+    // LRU order is now h1 (touched before h3 registered)... no: the call
+    // above re-touched it, so h3 is LRU next — touch h3 back ahead and
+    // assert the *untouched* stream goes
+    h3.call(vec![4]).unwrap();
+    let h4 = t.register(regs.clone(), ApproxKind::Apot).unwrap();
+    assert!(
+        matches!(h1.call(vec![5]), Err(ServiceError::UnknownStream(_))),
+        "h1 was least recently used at the second eviction"
+    );
+    h3.call(vec![6]).unwrap();
+    h4.call(vec![7]).unwrap();
+    assert_eq!(t.stream_count(), 2);
+    drop((h1, h2, h3, h4));
+    let m = svc.shutdown();
+    assert_eq!(m.evictions, 2);
+}
+
+#[test]
+fn shedding_is_priority_ordered_and_typed() {
+    // a single stalled worker with a small shed limit makes overload
+    // deterministic: admitted filler keeps the shard depth above every
+    // allowance, so a low-priority tenant sees Rejected while anonymous
+    // (top-priority) traffic sees Busy — and everything admitted before
+    // saturation still completes
+    let svc = ServiceBuilder::new()
+        .workers(1)
+        .shards(1)
+        .shed_limit(1_000)
+        .start();
+    let low = svc.tenant(TenantSpec::new("low").priority(0)).unwrap();
+    let regs = fitted(Activation::Sigmoid, false);
+    let anon = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let hl = low.register(regs.clone(), ApproxKind::Apot).unwrap();
+    // below the watermark, low priority is admitted like everyone else
+    hl.call(vec![1]).unwrap();
+    // occupy the worker, then flood past the full limit
+    let stall = anon.submit(vec![0; 4_000_000]).unwrap();
+    let mut admitted = Vec::new();
+    loop {
+        match anon.submit(vec![0; 200]) {
+            Ok(p) => admitted.push(p),
+            Err(ServiceError::Busy { in_flight, limit }) => {
+                assert!(in_flight > limit, "Busy carries the shard depth");
+                break;
+            }
+            Err(e) => panic!("anonymous overload must be Busy, got {e}"),
+        }
+        assert!(admitted.len() < 100_000, "service never saturated");
+    }
+    // the low-priority tenant's allowance (limit/4) is far exceeded
+    match hl.submit(vec![7]) {
+        Err(ServiceError::Rejected { reason, .. }) => {
+            assert!(reason.contains("shed"), "{reason}");
+            assert!(reason.contains("low"), "{reason}");
+        }
+        Err(e) => panic!("low priority must be Rejected, got {e}"),
+        Ok(_) => panic!("low priority must be shed under overload"),
+    }
+    // bounded queue ⇒ bounded drain: every admitted request resolves
+    assert!(stall.recv().unwrap().error.is_none());
+    for p in admitted {
+        assert!(p.recv().unwrap().error.is_none());
+    }
+    drop((anon, hl));
+    let m = svc.shutdown();
+    assert!(m.shed >= 2, "shed {}", m.shed);
+}
+
+#[test]
+fn shutdown_drains_in_flight_across_shards() {
+    let svc = ServiceBuilder::new()
+        .workers(4)
+        .shards(4)
+        .max_batch(256)
+        .start();
+    let regs = fitted(Activation::Silu, false);
+    let handles: Vec<_> = (0..8)
+        .map(|_| svc.register(regs.clone(), ApproxKind::Apot).unwrap())
+        .collect();
+    let mut rng = Rng::new(11);
+    let mut pend: Vec<(Vec<i32>, Pending)> = Vec::new();
+    for i in 0..400 {
+        let data: Vec<i32> = (0..50).map(|_| rng.range_i64(-3000, 3000) as i32).collect();
+        pend.push((data.clone(), handles[i % 8].submit(data).unwrap()));
+    }
+    // shutdown closes the shard queues but drains every queued token
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 400);
+    for (data, p) in pend {
+        let resp = p.recv().expect("drained responses still resolve");
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x));
+        }
+    }
+    // handles outliving shutdown stay safe to drop
+    drop(handles);
+}
+
+#[test]
+fn handle_drop_releases_tenant_quota() {
+    let svc = ServiceBuilder::new().workers(1).start();
+    let t = svc.tenant(TenantSpec::new("drop").max_streams(1)).unwrap();
+    let regs = fitted(Activation::Relu, false);
+    let h1 = t.register(regs.clone(), ApproxKind::Apot).unwrap();
+    assert_eq!(t.stream_count(), 1);
+    // an explicit drop deregisters the stream and frees the quota slot,
+    // so the next registration needs no eviction
+    drop(h1);
+    assert_eq!(t.stream_count(), 0);
+    let h2 = t.register(regs.clone(), ApproxKind::Apot).unwrap();
+    h2.call(vec![3]).unwrap();
+    drop(h2);
+    let m = svc.shutdown();
+    assert_eq!(m.evictions, 0, "drop is a deregistration, not a quota eviction");
+
+    // regression: dropping a tenant-scoped handle after shutdown must
+    // stay a safe no-op
+    let svc2 = ServiceBuilder::new().workers(1).start();
+    let t2 = svc2.tenant(TenantSpec::new("drop").max_streams(1)).unwrap();
+    let h = t2.register(regs, ApproxKind::Apot).unwrap();
+    svc2.shutdown();
+    drop(h);
+}
+
+#[test]
+fn coalesced_interleaved_tenants_keep_per_stream_fifo() {
+    // the satellite fix's regression oracle: two tenants interleaved on
+    // one shard with two workers competing (and stealing) — the
+    // coalesced same-stream batch path must answer each stream's
+    // requests strictly in submission order, proven by the per-stream
+    // sequence stamp
+    let svc = ServiceBuilder::new().workers(2).shards(1).max_batch(64).start();
+    let ta = svc.tenant(TenantSpec::new("a").priority(2)).unwrap();
+    let tb = svc.tenant(TenantSpec::new("b").priority(1)).unwrap();
+    let ra = fitted(Activation::Sigmoid, false);
+    let rb = fitted(Activation::Silu, false);
+    let ha = ta.register(ra.clone(), ApproxKind::Apot).unwrap();
+    let hb = tb.register(rb.clone(), ApproxKind::Apot).unwrap();
+    let mut rng = Rng::new(2026);
+    let mut pend: Vec<(usize, Vec<i32>, Pending)> = Vec::new();
+    for i in 0..300 {
+        let (h, s) = if i % 2 == 0 { (&ha, 0) } else { (&hb, 1) };
+        let len = 1 + rng.range_usize(0, 40);
+        let data: Vec<i32> = (0..len).map(|_| rng.range_i64(-2000, 2000) as i32).collect();
+        pend.push((s, data.clone(), h.submit(data).unwrap()));
+    }
+    let mut next_seq = [1u64, 1u64];
+    for (s, data, p) in pend {
+        let resp = p.recv().expect("response");
+        let regs = if s == 0 { &ra } else { &rb };
+        for (x, y) in data.iter().zip(&resp.data) {
+            assert_eq!(*y, regs.eval(*x), "stream {s}");
+        }
+        assert_eq!(resp.stream_seq, next_seq[s], "FIFO violated on stream {s}");
+        next_seq[s] += 1;
+    }
+    drop((ha, hb));
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 300);
+}
