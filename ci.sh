@@ -76,6 +76,35 @@ else
     printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
 fi
 
+# DSE bench smoke: tiny grid through all four explorer configurations
+# (naive / +cache / +parallel / +prune), asserting identical fronts and
+# counter reconciliation.  Assert-only — smoke never writes
+# BENCH_dse.json.
+step "dse bench smoke (GRAU_BENCH_SMOKE=1 cargo bench --bench perf_dse)"
+if cargo bench --help >/dev/null 2>&1; then
+    GRAU_BENCH_SMOKE=1 cargo bench --bench perf_dse
+else
+    printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
+fi
+
+# Explorer CLI smoke: a tiny grid through `grau explore`, exporting the
+# front's descriptor banks and reloading bank 0 into a live service
+# (ServiceBuilder) via `grau serve --units`.
+step "grau explore tiny-grid smoke (+ bank reload through the service)"
+EXPLORE_DIR="$(mktemp -d)"
+trap 'rm -rf "$EXPLORE_DIR"' EXIT
+cargo run --release -- explore --model gap --size 5 --seed 3 \
+    --segments 4,8 --exponents 8 --data 48 --calib 8 --eval-samples 24 \
+    --fit-samples 150 --match-target 0.75 \
+    --export-banks "$EXPLORE_DIR" | tee "$EXPLORE_DIR/explore.out"
+grep -q 'explored' "$EXPLORE_DIR/explore.out"
+grep -q '#0:' "$EXPLORE_DIR/explore.out" || {
+    printf 'ci.sh: ERROR: explore produced an empty front\n'; exit 1; }
+test -s "$EXPLORE_DIR/front-0.json" || {
+    printf 'ci.sh: ERROR: explore exported no descriptor bank\n'; exit 1; }
+cargo run --release -- serve --units "$EXPLORE_DIR/front-0.json" \
+    --workers 2 --requests 8 --chunk 64 >/dev/null
+
 # Facade smoke: run the migrated examples on tiny inputs so regressions
 # in the grau::api surface (builder, stream handles, descriptors) fail
 # the gate, not just compile.  e2e_pipeline needs training artifacts, so

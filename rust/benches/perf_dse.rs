@@ -1,0 +1,235 @@
+//! §DSE bench: the parallel mixed-precision explorer vs the naive
+//! sequential sweep, on the same grid and model.
+//!
+//! Four configurations gate each mechanism of the explorer PR
+//! individually on the reference grid (a 4-site residual QNN, 3
+//! segment budgets per site → 81 candidate assignments):
+//!
+//! 1. `naive`      — 1 thread, no fit cache, no pruning: what the old
+//!                   `dse::sweep` loop would have paid, candidate by
+//!                   candidate.
+//! 2. `+cache`     — 1 thread, memoized fits: layers sharing a folded
+//!                   function / MAC-range bucket / precision pay one
+//!                   fit across all 81 candidates.
+//! 3. `+parallel`  — memoized fits, all workers: one `Scratch` arena +
+//!                   prediction buffer per worker.
+//! 4. `+prune`     — the full explorer: cost-bound pruning against the
+//!                   running front skips provably dominated candidates
+//!                   before any fit or forward pass.
+//!
+//! Full runs write `BENCH_dse.json` (regenerated per run, gitignored —
+//! see docs/EXPERIMENTS.md §DSE) and assert the PR's acceptance gate:
+//! full-explorer wall clock ≥ threads/2 × faster than `naive`, nonzero
+//! fit-cache hits, nonzero pruned candidates, and a front identical to
+//! the naive run's.  `GRAU_BENCH_SMOKE=1` shrinks the grid/model and
+//! runs the identity + reconciliation asserts only, without the JSON.
+
+use std::time::Instant;
+
+use grau::fit::ApproxKind;
+use grau::hw::dse::{ExploreGrid, ExploreReport, Explorer, ExplorerOptions};
+use grau::qnn::synth::residual_qnn;
+use grau::util::bench::bench_header;
+use grau::util::dataset::{teacher_images, Dataset};
+use grau::util::json::{arr, num, obj, s as jstr, Json};
+use grau::util::threadpool::default_threads;
+
+struct Config {
+    label: &'static str,
+    threads: usize,
+    memoize: bool,
+    prune: bool,
+}
+
+struct Row {
+    label: &'static str,
+    wall_s: f64,
+    speedup: f64,
+    candidates: usize,
+    evaluated: usize,
+    pruned: usize,
+    cache_hits: u64,
+    cache_misses: u64,
+    front: usize,
+}
+
+fn main() {
+    let smoke = std::env::var_os("GRAU_BENCH_SMOKE").is_some();
+    bench_header(
+        "perf_dse",
+        "EXPERIMENTS.md §DSE — memoized/parallel/pruned explorer vs naive sequential sweep",
+    );
+
+    // the mechanisms under test are all multiplicative in thread count;
+    // cap the pool so the asserted floor stays honest on huge hosts
+    let threads = default_threads().min(8).max(1);
+    let (model_size, grid, eval, fit_samples) = if smoke {
+        // tiny: 2 options over 4 sites = 16 candidates
+        (5usize, two_option_grid(), 16usize, 120usize)
+    } else {
+        // reference grid: 3 segment budgets over 4 sites = 81 candidates
+        (6usize, reference_grid(), 96usize, 300usize)
+    };
+    let data = teacher_images(eval.max(32), model_size, 3, 10, 42);
+
+    let configs = [
+        Config { label: "naive", threads: 1, memoize: false, prune: false },
+        Config { label: "+cache", threads: 1, memoize: true, prune: false },
+        Config { label: "+parallel", threads, memoize: true, prune: false },
+        Config { label: "+prune", threads, memoize: true, prune: true },
+    ];
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut reports: Vec<ExploreReport> = Vec::new();
+    for c in &configs {
+        let opts = ExplorerOptions {
+            threads: c.threads,
+            prune: c.prune,
+            memoize: c.memoize,
+            calib_samples: 16,
+            eval_samples: eval,
+            fit_samples,
+            // a permissive iso-accuracy bar: candidates matching >= 75%
+            // of the exact engine's argmaxes saturate the score axis,
+            // which is what lets the cost bound prune the costly tail
+            match_target: 0.75,
+        };
+        let t0 = Instant::now();
+        let report = run(model_size, &grid, &data, opts);
+        let wall = t0.elapsed().as_secs_f64();
+        let st = report.stats;
+        let speedup = rows.first().map(|n| n.wall_s / wall).unwrap_or(1.0);
+        println!(
+            "{:<10} {:>7.3}s  speedup {:>5.2}x  evaluated {:>3}/{:<3} pruned {:>3}  cache {}h/{}m  front {}",
+            c.label,
+            wall,
+            speedup,
+            st.evaluated,
+            st.candidates,
+            st.pruned,
+            st.fit_cache_hits,
+            st.fit_cache_misses,
+            report.front.len()
+        );
+        rows.push(Row {
+            label: c.label,
+            wall_s: wall,
+            speedup,
+            candidates: st.candidates,
+            evaluated: st.evaluated,
+            pruned: st.pruned,
+            cache_hits: st.fit_cache_hits,
+            cache_misses: st.fit_cache_misses,
+            front: report.front.len(),
+        });
+        reports.push(report);
+    }
+
+    // every configuration must land on the same front — the perf
+    // mechanisms are not allowed to change the answer
+    let naive = &reports[0];
+    for (r, c) in reports.iter().zip(&configs).skip(1) {
+        assert_eq!(
+            r.front.len(),
+            naive.front.len(),
+            "{}: front size diverged from naive",
+            c.label
+        );
+        for (rank, (a, b)) in r.front.iter().zip(&naive.front).enumerate() {
+            assert_eq!(a.choices, b.choices, "{} rank {rank}", c.label);
+            assert_eq!((a.lut, a.depth), (b.lut, b.depth), "{} rank {rank}", c.label);
+            assert_eq!(
+                a.fidelity.to_bits(),
+                b.fidelity.to_bits(),
+                "{} rank {rank}",
+                c.label
+            );
+        }
+        assert_eq!(
+            r.stats.evaluated + r.stats.pruned,
+            r.stats.candidates,
+            "{}: counters do not reconcile",
+            c.label
+        );
+    }
+    assert!(!naive.front.is_empty(), "empty front");
+    assert!(
+        rows[1].cache_hits > 0,
+        "+cache run recorded no fit-cache hits — memoization inert"
+    );
+
+    if smoke {
+        println!("\nsmoke gate OK: identical fronts across all 4 configs ({} points)", naive.front.len());
+        // smoke never writes BENCH_dse.json: tiny CI grids must not
+        // masquerade as recordable exploration curves
+        return;
+    }
+
+    // full-run acceptance gate (ISSUE 8): the stacked mechanisms must
+    // buy at least threads/2 over the naive sequential sweep, with both
+    // the cache and the pruner demonstrably firing
+    let full = rows.last().unwrap();
+    let floor = threads as f64 / 2.0;
+    assert!(
+        full.speedup >= floor,
+        "full explorer speedup {:.2}x below the {floor:.1}x floor ({threads} threads)",
+        full.speedup
+    );
+    assert!(full.cache_hits > 0, "full run recorded no fit-cache hits");
+    assert!(full.pruned > 0, "full run pruned nothing — cost bound inert");
+    println!(
+        "\ngate OK: {:.2}x >= {floor:.1}x floor, {} cache hits, {} pruned",
+        full.speedup, full.cache_hits, full.pruned
+    );
+    write_json(&rows, threads);
+}
+
+fn reference_grid() -> ExploreGrid {
+    ExploreGrid {
+        precisions: vec![8],
+        segments: vec![4, 6, 8],
+        exponents: vec![16],
+        kinds: vec![ApproxKind::Apot],
+    }
+}
+
+fn two_option_grid() -> ExploreGrid {
+    ExploreGrid {
+        precisions: vec![8],
+        segments: vec![4, 8],
+        exponents: vec![16],
+        kinds: vec![ApproxKind::Apot],
+    }
+}
+
+fn run(size: usize, grid: &ExploreGrid, data: &Dataset, opts: ExplorerOptions) -> ExploreReport {
+    let (graph, bundle) = residual_qnn(size, 3, 8, 8, 1);
+    Explorer::new(graph, &bundle, data, grid.clone(), opts)
+        .expect("explorer")
+        .explore()
+        .expect("explore")
+}
+
+/// `BENCH_dse.json`: one row per configuration, regenerated per run
+/// (gitignored) — see docs/EXPERIMENTS.md §DSE for the recording
+/// convention.
+fn write_json(rows: &[Row], threads: usize) {
+    let doc: Json = arr(rows.iter().map(|r| {
+        obj(vec![
+            ("bench", jstr(r.label)),
+            ("wall_s", num(r.wall_s)),
+            ("speedup_vs_naive", num(r.speedup)),
+            ("threads", num(threads as f64)),
+            ("candidates", num(r.candidates as f64)),
+            ("evaluated", num(r.evaluated as f64)),
+            ("pruned", num(r.pruned as f64)),
+            ("fit_cache_hits", num(r.cache_hits as f64)),
+            ("fit_cache_misses", num(r.cache_misses as f64)),
+            ("front_points", num(r.front as f64)),
+        ])
+    }));
+    match std::fs::write("BENCH_dse.json", format!("{doc}\n")) {
+        Ok(()) => println!("wrote BENCH_dse.json ({} rows)", rows.len()),
+        Err(e) => println!("WARNING: could not write BENCH_dse.json: {e}"),
+    }
+}

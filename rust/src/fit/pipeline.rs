@@ -2,7 +2,12 @@
 //! PoT-PWLF / APoT-PWLF artifacts (paper §II-A, the four columns of
 //! Figure 2).
 
-use crate::act::FoldedActivation;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::act::{Activation, FoldedActivation};
 use crate::api::descriptor::{Provenance, UnitDescriptor};
 use crate::fit::greedy::{select_breakpoints, GreedyOptions};
 use crate::fit::lsq::fit_lsq;
@@ -155,6 +160,157 @@ pub fn fit_samples(samples: &[(i64, f64)], n_bits: u8, opts: FitOptions) -> FitR
     }
 }
 
+// ---------------------------------------------------------------------------
+// Memoized fitting (the design-space explorer's substrate)
+// ---------------------------------------------------------------------------
+
+/// Canonicalize a calibrated MAC range into a power-of-two bucket that
+/// *contains* it: both endpoints are pushed outward to multiples of a
+/// granularity `g = next_pow2(span / 8)`.  Nearby calibrated ranges
+/// (e.g. per-channel extents that differ by a few MAC counts) collapse
+/// onto the same bucket, so their fits share one [`FitCache`] entry —
+/// and because the bucket is what actually gets fitted, cached and
+/// uncached paths see byte-identical fit inputs.
+pub fn bucket_range(lo: i64, hi: i64) -> (i64, i64) {
+    debug_assert!(lo <= hi, "range ({lo}, {hi})");
+    let span = (hi - lo).max(1);
+    let g = ((span / 8).max(1) as u64).next_power_of_two() as i64;
+    let b_lo = lo.div_euclid(g) * g;
+    let b_hi = match hi.rem_euclid(g) {
+        0 => hi,
+        r => hi + (g - r),
+    };
+    (b_lo, b_hi)
+}
+
+/// Canonical memoization key of one [`fit_folded`] call: every input
+/// that can influence the result, with floats captured bit-exactly
+/// (`f64::to_bits`) and enums flattened to stable discriminants.  Two
+/// calls with equal keys are guaranteed to produce identical
+/// [`FitResult`]s — the whole pipeline is deterministic in its inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FitKey {
+    a: u64,
+    b: u64,
+    act: Activation,
+    s_out: u64,
+    n_bits: u8,
+    lo: i64,
+    hi: i64,
+    fitter: u8,
+    segments: usize,
+    n_shifts: u8,
+    samples: usize,
+    min_gap: i64,
+    eps: u64,
+}
+
+impl FitKey {
+    /// The canonical key for fitting `f` over `[lo, hi]` with `opts`.
+    pub fn canonical(f: &FoldedActivation, lo: i64, hi: i64, opts: FitOptions) -> FitKey {
+        FitKey {
+            a: f.a.to_bits(),
+            b: f.b.to_bits(),
+            act: f.act,
+            s_out: f.s_out.to_bits(),
+            n_bits: f.n_bits,
+            lo,
+            hi,
+            fitter: match opts.fitter {
+                Fitter::Greedy => 0,
+                Fitter::Lsq => 1,
+            },
+            segments: opts.segments,
+            n_shifts: opts.n_shifts,
+            samples: opts.samples,
+            min_gap: opts.min_gap,
+            eps: opts.eps.to_bits(),
+        }
+    }
+
+    fn shard(&self, n_shards: usize) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.hash(&mut h);
+        (h.finish() % n_shards as u64) as usize
+    }
+}
+
+/// Sharded memo table over [`fit_folded`]: fits keyed by [`FitKey`]
+/// behind per-shard `RwLock`s, so concurrent explorer workers whose
+/// candidates share a per-layer choice pay `fit_samples` once and read
+/// the cached [`FitResult`] thereafter.
+///
+/// Misses compute *outside* the shard lock (a fit is milliseconds; the
+/// lock is nanoseconds), so two workers racing on the same key may both
+/// compute — the pipeline is deterministic, both produce identical
+/// results, and `or_insert` keeps the first.  Hit/miss counters are the
+/// explorer's `fit_cache_hits`/`fit_cache_misses` report fields.
+pub struct FitCache {
+    shards: Vec<RwLock<HashMap<FitKey, Arc<FitResult>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl FitCache {
+    pub fn new() -> FitCache {
+        FitCache::with_shards(16)
+    }
+
+    pub fn with_shards(n_shards: usize) -> FitCache {
+        FitCache {
+            shards: (0..n_shards.max(1)).map(|_| RwLock::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Memoized [`fit_folded`]: returns the cached result for the
+    /// canonical key, computing (and caching) it on first use.
+    pub fn fit_folded(
+        &self,
+        f: &FoldedActivation,
+        mac_lo: i64,
+        mac_hi: i64,
+        opts: FitOptions,
+    ) -> Arc<FitResult> {
+        let key = FitKey::canonical(f, mac_lo, mac_hi, opts);
+        let shard = &self.shards[key.shard(self.shards.len())];
+        if let Some(hit) = shard.read().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let computed = Arc::new(fit_folded(f, mac_lo, mac_hi, opts));
+        let mut map = shard.write().unwrap();
+        Arc::clone(map.entry(key).or_insert(computed))
+    }
+
+    /// Cache hits since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (= fits actually computed, up to benign races).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct fits currently cached.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for FitCache {
+    fn default() -> Self {
+        FitCache::new()
+    }
+}
+
 /// Re-validate any functional activation unit against the *exact*
 /// quantized black box: fraction of integer points in `[lo, hi]` where
 /// the unit's output differs from `f.eval`.
@@ -291,6 +447,44 @@ mod tests {
             let mt: i32 = -128 + th.iter().filter(|&&t| (x as i32) >= t).count() as i32;
             assert_eq!(mt, f.eval(x), "x={x}");
         }
+    }
+
+    #[test]
+    fn fit_cache_hits_return_the_identical_result() {
+        let cache = FitCache::new();
+        let f = folded(Activation::Silu);
+        let opts = FitOptions { samples: 300, ..Default::default() };
+        let first = cache.fit_folded(&f, -1000, 1000, opts);
+        let again = cache.fit_folded(&f, -1000, 1000, opts);
+        assert!(Arc::ptr_eq(&first, &again), "hit must return the cached Arc");
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+        // bit-identical to the uncached pipeline
+        let raw = fit_folded(&f, -1000, 1000, opts);
+        assert_eq!(raw.apot.regs, first.apot.regs);
+        assert_eq!(raw.rmse_apot.to_bits(), first.rmse_apot.to_bits());
+        // any differing input is a different key
+        cache.fit_folded(&f, -1000, 1008, opts);
+        cache.fit_folded(&f, -1000, 1000, FitOptions { segments: 4, samples: 300, ..Default::default() });
+        let mut g = f.clone();
+        g.n_bits = 6;
+        cache.fit_folded(&g, -1000, 1000, opts);
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn bucket_range_contains_and_canonicalizes() {
+        for (lo, hi) in [(-997i64, 1003i64), (-1000, 1000), (0, 7), (-5, -1), (13, 13)] {
+            let (b_lo, b_hi) = bucket_range(lo, hi);
+            assert!(b_lo <= lo && b_hi >= hi, "({lo},{hi}) -> ({b_lo},{b_hi})");
+        }
+        // nearby ranges collapse onto one bucket
+        assert_eq!(bucket_range(-997, 1003), bucket_range(-1000, 1000));
+        // the canonical bucket of an already-aligned range is itself
+        let b = bucket_range(-997, 1003);
+        assert_eq!(b, (-1024, 1024));
+        assert_eq!(bucket_range(b.0, b.1), b);
     }
 
     #[test]

@@ -341,6 +341,82 @@ mod tests {
         assert!(big.lut > 30 * grau.lut);
     }
 
+    // -- monotonicity properties the DSE bound pruner depends on --
+    // `hw::dse::Explorer` claims candidates in ascending modelled-LUT
+    // order and skips everything costlier than a saturated front point;
+    // that is only sound while `estimate` stays monotone in each knob.
+
+    #[test]
+    fn grau_lut_and_depth_monotone_in_segments_and_exponents() {
+        for kind in [ApproxKind::Pot, ApproxKind::Apot] {
+            for e in [4u32, 8, 16] {
+                let mut prev: Option<HwCost> = None;
+                for s in 1..=8u32 {
+                    let c = estimate(UnitKind::GrauPipelined { kind, segments: s, exponents: e });
+                    assert!(c.lut > 0 && c.ff > 0, "{kind:?} s={s} e={e}: {c:?}");
+                    if let Some(p) = prev {
+                        assert!(c.lut >= p.lut, "{kind:?} e={e}: lut fell at s={s}");
+                        assert!(c.depth_8bit >= p.depth_8bit, "{kind:?} e={e}: depth fell at s={s}");
+                    }
+                    prev = Some(c);
+                }
+            }
+            for s in 1..=8u32 {
+                let mut prev: Option<HwCost> = None;
+                for e in [4u32, 8, 16] {
+                    let c = estimate(UnitKind::GrauPipelined { kind, segments: s, exponents: e });
+                    if let Some(p) = prev {
+                        assert!(c.lut >= p.lut, "{kind:?} s={s}: lut fell at e={e}");
+                        assert!(c.depth_8bit >= p.depth_8bit, "{kind:?} s={s}: depth fell at e={e}");
+                    }
+                    prev = Some(c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_and_depth_monotone_in_bit_width() {
+        let mut prev: Option<(HwCost, HwCost, HwCost)> = None;
+        for b in 2..=10u8 {
+            let mp = estimate(UnitKind::MtPipelined { n_bits: b });
+            let ms = estimate(UnitKind::MtSerial { n_bits: b });
+            let dl = estimate(UnitKind::DirectLut { addr_bits: 12, n_bits: b });
+            if let Some((pp, ps, pd)) = prev {
+                assert!(mp.lut >= pp.lut && mp.depth_8bit >= pp.depth_8bit, "MtPipelined at {b}b");
+                assert!(ms.lut >= ps.lut && ms.depth_8bit >= ps.depth_8bit, "MtSerial at {b}b");
+                assert!(dl.lut >= pd.lut && dl.depth_8bit >= pd.depth_8bit, "DirectLut at {b}b");
+            }
+            prev = Some((mp, ms, dl));
+        }
+        // DirectLut is also monotone in the address window
+        let mut prev = 0u32;
+        for a in 8..=18u32 {
+            let c = estimate(UnitKind::DirectLut { addr_bits: a, n_bits: 8 });
+            assert!(c.lut >= prev, "DirectLut lut fell at addr_bits={a}");
+            prev = c.lut;
+        }
+    }
+
+    #[test]
+    fn adp_pdp_strictly_positive_everywhere() {
+        let mut kinds: Vec<UnitKind> = table_vi_instances().into_iter().map(|(_, k)| k).collect();
+        // off-table corners: smallest legal GRAU, widest window, LUT unit
+        for kind in [ApproxKind::Pot, ApproxKind::Apot] {
+            kinds.push(UnitKind::GrauPipelined { kind, segments: 1, exponents: 4 });
+            kinds.push(UnitKind::GrauPipelined { kind, segments: 8, exponents: 16 });
+            kinds.push(UnitKind::GrauSerial { kind });
+        }
+        kinds.push(UnitKind::DirectLut { addr_bits: 8, n_bits: 2 });
+        kinds.push(UnitKind::MtSerial { n_bits: 2 });
+        for k in kinds {
+            let c = estimate(k);
+            assert!(c.adp() > 0.0, "{k:?}: adp {}", c.adp());
+            assert!(c.pdp() > 0.0, "{k:?}: pdp {}", c.pdp());
+            assert!(c.power_w > 0.0 && c.delay_ns > 0.0, "{k:?}: {c:?}");
+        }
+    }
+
     #[test]
     fn sixteen_table_instances() {
         let rows = table_vi_instances();

@@ -1,16 +1,60 @@
-//! Design-space exploration over (segments × exponent-window) — the
-//! quantitative backing for the paper's abstract claim that "the best
-//! trade-off is usually achieved with 6–8 segments".
+//! Design-space exploration: the parallel mixed-precision explorer.
 //!
-//! For a set of folded activations, each (S, E) point gets an
-//! approximation-error score (mean APoT RMSE in output LSBs) and a
-//! hardware cost (pipelined APoT LUTs from the calibrated model); the
-//! Pareto front identifies the non-dominated configurations.
+//! [`Explorer`] searches per-layer (precision × segments ×
+//! exponent-window × slope-family backend) assignments for a
+//! `qnn::graph` model and emits a Pareto front of (QNN accuracy,
+//! LUT/cycle cost) points, each carrying a deployable
+//! [`DescriptorBank`] so any explored configuration reaches the
+//! activation service unchanged.  Three stacked perf mechanisms:
+//!
+//! 1. **Memoized fitting** — every per-(site, channel) fit goes through
+//!    a [`FitCache`] keyed by the canonical (folded params, bucketed MAC
+//!    range, precision, [`FitOptions`]) hash, so the `K^L` candidate
+//!    assignments over `K` per-layer options pay only `K × L × channels`
+//!    distinct `fit_samples` calls instead of one per candidate layer.
+//! 2. **Parallel candidate evaluation** — candidates stream through
+//!    [`parallel_for_init`] with one QNN [`Scratch`] arena + one
+//!    prediction buffer per worker; accuracy is scored by argmax
+//!    agreement with the exact engine over a calibration batch
+//!    ([`Engine::predict_batch_into`]), not per-sample RMSE proxies.
+//! 3. **Monotone-bound pruning** — a candidate's hardware cost is known
+//!    exactly from the (monotone) [`estimate`] model before any fit or
+//!    forward pass.  Candidates are claimed in ascending-cost order;
+//!    once the running front (a mutex-guarded incremental Pareto set)
+//!    holds a point at the maximum achievable score, every
+//!    not-yet-claimed candidate of strictly higher cost — or equal cost
+//!    with a later candidate index, the final front's tie-break — is
+//!    provably dominated (its score is capped at that same maximum) and
+//!    is skipped before fitting.  The skip rule only ever consults
+//!    *evaluated* points, so the surviving front is identical to the
+//!    exhaustive oracle's — `rust/tests/dse_explorer.rs` holds the
+//!    pruned-parallel front bit-for-bit equal to a sequential
+//!    no-pruning run.
+//!
+//! The pre-explorer uniform grid survives as [`sweep`] (single-workload
+//! mean-RMSE scoring, no model, no pruning) for the fig/table callers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::act::FoldedActivation;
-use crate::fit::pipeline::{fit_folded, FitOptions};
+use crate::error::{bail, Result};
+use crate::fit::pipeline::{bucket_range, FitCache, FitOptions};
 use crate::fit::ApproxKind;
 use crate::hw::cost::{estimate, UnitKind};
+use crate::hw::{GrauRegisters, MAX_SEGMENTS};
+use crate::qnn::engine::{ActMode, Engine, MacRanges};
+use crate::qnn::graph::ModelGraph;
+use crate::qnn::tensor::Scratch;
+use crate::qnn::weights::ExportBundle;
+use crate::runtime::manifest::DescriptorBank;
+use crate::util::dataset::Dataset;
+use crate::util::threadpool::{default_threads, parallel_for_init};
+
+// ---------------------------------------------------------------------------
+// The uniform single-workload grid (pre-explorer surface, kept for the
+// fig/table experiment callers)
+// ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
 pub struct DsePoint {
@@ -23,18 +67,27 @@ pub struct DsePoint {
 }
 
 /// Sweep the design space for a workload of folded activations.
+///
+/// **Deprecated surface**: prefer [`Explorer`], which searches
+/// *per-layer* assignments of a full QNN model with memoized fits,
+/// parallel scoring, and bound pruning.  `sweep` remains as the uniform
+/// single-workload grid — one (S, E) choice applied to every folded
+/// activation, scored by mean APoT RMSE, no pruning — and now runs on
+/// the explorer's [`FitCache`] substrate, so a workload repeating a
+/// function/range pays each fit once.
 pub fn sweep(
     workload: &[FoldedActivation],
     mac_range: (i64, i64),
     segments: &[usize],
     exponents: &[u8],
 ) -> Vec<DsePoint> {
+    let cache = FitCache::new();
     let mut points = Vec::new();
     for &s in segments {
         for &e in exponents {
             let mut rmse_sum = 0.0;
             for f in workload {
-                let r = fit_folded(
+                let r = cache.fit_folded(
                     f,
                     mac_range.0,
                     mac_range.1,
@@ -64,19 +117,567 @@ pub fn sweep(
     points
 }
 
-/// Non-dominated subset (minimize rmse AND lut), sorted by LUT.
+/// Non-dominated subset (minimize rmse AND lut), sorted by LUT
+/// ascending — RMSE is strictly decreasing along the returned front.
+///
+/// Dominance: `q` dominates `p` when `q.lut <= p.lut && q.rmse <=
+/// p.rmse` and at least one is strict; points tied *exactly* on both
+/// axes are deduplicated (the earliest input occurrence wins).
+/// Sort-and-sweep, O(n log n): sort by (lut, rmse, input order), keep a
+/// point iff its RMSE strictly improves on everything cheaper or equal.
 pub fn pareto(points: &[DsePoint]) -> Vec<DsePoint> {
-    let mut front: Vec<DsePoint> = points
-        .iter()
-        .filter(|p| {
-            !points
-                .iter()
-                .any(|q| q.lut <= p.lut && q.rmse < p.rmse - 1e-12 && (q.lut < p.lut || q.rmse < p.rmse))
-        })
-        .cloned()
-        .collect();
-    front.sort_by_key(|p| p.lut);
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&i, &j| {
+        points[i]
+            .lut
+            .cmp(&points[j].lut)
+            .then(
+                points[i]
+                    .rmse
+                    .partial_cmp(&points[j].rmse)
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+            .then(i.cmp(&j))
+    });
+    let mut front = Vec::new();
+    let mut best = f64::INFINITY;
+    for &i in &order {
+        if points[i].rmse < best {
+            best = points[i].rmse;
+            front.push(points[i].clone());
+        }
+    }
     front
+}
+
+// ---------------------------------------------------------------------------
+// The per-layer assignment explorer
+// ---------------------------------------------------------------------------
+
+/// One activation site's configuration choice: output precision, GRAU
+/// segment budget, exponent-window length, and the slope family that
+/// selects the cost-model backend ([`UnitKind::GrauPipelined`] with
+/// PoT or APoT coefficients).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerChoice {
+    /// quantized activation output width (bits)
+    pub n_bits: u8,
+    /// GRAU segment count (1..=8)
+    pub segments: usize,
+    /// exponent-window length (4 / 8 / 16 — register-file constraint)
+    pub n_shifts: u8,
+    /// slope family; selects PoT vs APoT datapath cost
+    pub kind: ApproxKind,
+}
+
+impl LayerChoice {
+    /// The cost-model family this choice deploys on.
+    pub fn cost_kind(&self) -> UnitKind {
+        UnitKind::GrauPipelined {
+            kind: self.kind,
+            segments: self.segments as u32,
+            exponents: self.n_shifts as u32,
+        }
+    }
+
+    /// Compact human tag, e.g. `8b/6s/8e/apot`.
+    pub fn label(&self) -> String {
+        format!("{}b/{}s/{}e/{}", self.n_bits, self.segments, self.n_shifts, self.kind.slug())
+    }
+}
+
+/// The per-layer option axes.  Every activation site may pick any
+/// combination of one value per axis, so a model with `L` sites and `K`
+/// axis combinations spans `K^L` candidate assignments.
+#[derive(Clone, Debug)]
+pub struct ExploreGrid {
+    /// output precisions (bits, 2..=16)
+    pub precisions: Vec<u8>,
+    /// segment budgets (1..=8)
+    pub segments: Vec<usize>,
+    /// exponent-window lengths (4 / 8 / 16)
+    pub exponents: Vec<u8>,
+    /// slope families (PoT / APoT)
+    pub kinds: Vec<ApproxKind>,
+}
+
+impl Default for ExploreGrid {
+    /// The paper's headline region: 8-bit outputs, 4/6/8 segments,
+    /// 8/16 exponents, APoT slopes.
+    fn default() -> Self {
+        ExploreGrid {
+            precisions: vec![8],
+            segments: vec![4, 6, 8],
+            exponents: vec![8, 16],
+            kinds: vec![ApproxKind::Apot],
+        }
+    }
+}
+
+impl ExploreGrid {
+    /// The flattened per-layer option list, in canonical (precision,
+    /// segments, exponents, kind) nesting order.
+    pub fn choices(&self) -> Vec<LayerChoice> {
+        let mut out = Vec::new();
+        for &n_bits in &self.precisions {
+            for &segments in &self.segments {
+                for &n_shifts in &self.exponents {
+                    for &kind in &self.kinds {
+                        out.push(LayerChoice { n_bits, segments, n_shifts, kind });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.precisions.is_empty()
+            || self.segments.is_empty()
+            || self.exponents.is_empty()
+            || self.kinds.is_empty()
+        {
+            bail!("explore grid has an empty axis");
+        }
+        for &b in &self.precisions {
+            if !(2..=16).contains(&b) {
+                bail!("precision {b} outside 2..=16 bits");
+            }
+        }
+        for &s in &self.segments {
+            if !(1..=MAX_SEGMENTS).contains(&s) {
+                bail!("segment budget {s} outside 1..={MAX_SEGMENTS}");
+            }
+        }
+        for &e in &self.exponents {
+            if !matches!(e, 4 | 8 | 16) {
+                bail!("exponent window {e} not one of 4/8/16");
+            }
+        }
+        for &k in &self.kinds {
+            if k == ApproxKind::Pwlf {
+                bail!("PWLF has no register encoding — grid kinds must be PoT/APoT");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Explorer knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ExplorerOptions {
+    /// worker threads (0 = [`default_threads`])
+    pub threads: usize,
+    /// enable monotone-bound pruning against the running front
+    pub prune: bool,
+    /// memoize fits in the [`FitCache`] (off = refit every candidate —
+    /// the naive baseline the `perf_dse` bench measures against)
+    pub memoize: bool,
+    /// samples for the MAC-range calibration pass
+    pub calib_samples: usize,
+    /// samples scored per candidate (argmax agreement)
+    pub eval_samples: usize,
+    /// samples per fit ([`FitOptions::samples`])
+    pub fit_samples: usize,
+    /// iso-accuracy saturation target in (0, 1]: candidates matching at
+    /// least `ceil(target × eval_samples)` of the exact engine's
+    /// predictions all score as "matched" and only cost tells them
+    /// apart.  1.0 requires exact agreement.  This is also what makes
+    /// bound pruning bite: the score axis has a *reachable* maximum.
+    pub match_target: f64,
+}
+
+impl Default for ExplorerOptions {
+    fn default() -> Self {
+        ExplorerOptions {
+            threads: 0,
+            prune: true,
+            memoize: true,
+            calib_samples: 32,
+            eval_samples: 128,
+            fit_samples: 400,
+            match_target: 1.0,
+        }
+    }
+}
+
+/// One non-dominated configuration: the per-site assignment, its
+/// accuracy scores, modelled hardware cost, and the deployable bank.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// one [`LayerChoice`] per activation site
+    pub choices: Vec<LayerChoice>,
+    /// fraction of scored samples whose argmax class matches the exact
+    /// engine (the ranked axis, saturated at
+    /// [`ExplorerOptions::match_target`])
+    pub fidelity: f64,
+    /// plain top-1 accuracy against dataset labels (reported, unranked)
+    pub top1: f64,
+    /// summed per-site LUT cost from the calibrated model
+    pub lut: u32,
+    /// deepest per-site pipeline depth (cycles)
+    pub depth: u32,
+    /// per-(site, channel) descriptors — deployable via
+    /// `ServiceBuilder`/`Engine` unchanged
+    pub bank: DescriptorBank,
+}
+
+/// Work counters for one [`Explorer::explore`] run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExploreStats {
+    /// total candidate assignments in the grid
+    pub candidates: usize,
+    /// candidates fitted + forward-scored
+    pub evaluated: usize,
+    /// candidates skipped by the cost bound before any fit/forward
+    pub pruned: usize,
+    pub fit_cache_hits: u64,
+    pub fit_cache_misses: u64,
+}
+
+/// The outcome: Pareto front (LUT ascending) plus work counters.
+#[derive(Clone, Debug)]
+pub struct ExploreReport {
+    pub front: Vec<ParetoPoint>,
+    pub stats: ExploreStats,
+}
+
+/// An evaluated candidate's objective coordinates.
+#[derive(Clone, Copy, Debug)]
+struct Scored {
+    /// candidate index in canonical (mixed-radix) enumeration order —
+    /// the deterministic tie-breaker
+    idx: usize,
+    lut: u32,
+    depth: u32,
+    /// matched reference predictions, saturated at the target
+    score: usize,
+    /// raw matched reference predictions
+    matches: usize,
+    /// raw label hits
+    top1: usize,
+}
+
+/// Incremental non-dominated insert (maximize score, minimize lut).
+/// Exact objective ties are not re-inserted.  Only used for the prune
+/// bound — the final front is recomputed deterministically.
+fn insert_running_front(front: &mut Vec<Scored>, p: Scored) {
+    if front.iter().any(|q| q.score >= p.score && q.lut <= p.lut) {
+        return;
+    }
+    front.retain(|q| !(p.score >= q.score && p.lut <= q.lut));
+    front.push(p);
+}
+
+/// Deterministic final front: sort by (lut, score desc, idx), keep a
+/// point iff its score strictly beats everything cheaper-or-equal.
+/// Exact (score, lut) ties keep the lowest candidate index.
+fn final_front(evaluated: &[Scored]) -> Vec<Scored> {
+    let mut order: Vec<&Scored> = evaluated.iter().collect();
+    order.sort_by(|a, b| {
+        a.lut.cmp(&b.lut).then(b.score.cmp(&a.score)).then(a.idx.cmp(&b.idx))
+    });
+    let mut out: Vec<Scored> = Vec::new();
+    let mut best: Option<usize> = None;
+    for p in order {
+        if best.is_none() || p.score > best.unwrap() {
+            best = Some(p.score);
+            out.push(*p);
+        }
+    }
+    out
+}
+
+/// The parallel mixed-precision design-space explorer (see module doc).
+pub struct Explorer<'a> {
+    exact: Engine,
+    bundle: &'a ExportBundle,
+    data: &'a Dataset,
+    grid: ExploreGrid,
+    opts: ExplorerOptions,
+    cache: FitCache,
+    ranges: MacRanges,
+    /// exact engine's argmax over the scored batch — the reference the
+    /// fidelity axis counts agreement with
+    ref_preds: Vec<usize>,
+}
+
+impl<'a> Explorer<'a> {
+    /// Build the explorer: constructs the exact reference engine,
+    /// calibrates per-(site, channel) MAC ranges, and records the
+    /// reference predictions over the scored batch.
+    pub fn new(
+        graph: ModelGraph,
+        bundle: &'a ExportBundle,
+        data: &'a Dataset,
+        grid: ExploreGrid,
+        opts: ExplorerOptions,
+    ) -> Result<Explorer<'a>> {
+        grid.validate()?;
+        if opts.eval_samples == 0 {
+            bail!("eval_samples must be >= 1");
+        }
+        if !(opts.match_target > 0.0 && opts.match_target <= 1.0) {
+            bail!("match_target {} outside (0, 1]", opts.match_target);
+        }
+        let exact = Engine::new(graph, bundle, ActMode::Exact)?;
+        if exact.site_channels().is_empty() {
+            bail!("model has no activation sites to explore");
+        }
+        let ranges = exact.calibrate(data, opts.calib_samples.max(1));
+        let mut scratch = Scratch::new();
+        let mut ref_preds = Vec::new();
+        exact.predict_batch_into(data, opts.eval_samples, &mut scratch, &mut ref_preds);
+        Ok(Explorer { exact, bundle, data, grid, opts, cache: FitCache::new(), ranges, ref_preds })
+    }
+
+    /// The memo table (hit/miss counters are also in the report stats).
+    pub fn cache(&self) -> &FitCache {
+        &self.cache
+    }
+
+    /// The canonical per-layer option list this run searches over.
+    pub fn choices(&self) -> Vec<LayerChoice> {
+        self.grid.choices()
+    }
+
+    /// Fit domain for (site, channel): the calibrated MAC range with
+    /// the `coordinator::fitting` fallbacks (unobserved → nominal span,
+    /// constant → widened), canonicalized through [`bucket_range`] so
+    /// near-identical channels share cache entries.
+    fn fit_range(&self, site: usize, ch: usize) -> (i64, i64) {
+        let (lo, hi) = self.ranges.ranges[site][ch];
+        let (lo, hi) = (lo as i64, hi as i64);
+        let (lo, hi) = if lo > hi {
+            (-1000, 1000)
+        } else if lo == hi {
+            (lo - 500, hi + 500)
+        } else {
+            (lo, hi)
+        };
+        bucket_range(lo, hi)
+    }
+
+    fn fit_options(&self, choice: LayerChoice) -> FitOptions {
+        FitOptions {
+            segments: choice.segments,
+            n_shifts: choice.n_shifts,
+            samples: self.opts.fit_samples,
+            ..Default::default()
+        }
+    }
+
+    /// Fit one (site, channel) under `choice` — through the memo table
+    /// unless the run is the naive baseline (`memoize: false`).
+    fn fit_regs(&self, site: usize, ch: usize, choice: LayerChoice) -> GrauRegisters {
+        let mut f = self.exact.folded(site, ch);
+        f.n_bits = choice.n_bits;
+        let (lo, hi) = self.fit_range(site, ch);
+        let opts = self.fit_options(choice);
+        if self.opts.memoize {
+            self.cache.fit_folded(&f, lo, hi, opts).registers(choice.kind).clone()
+        } else {
+            crate::fit::pipeline::fit_folded(&f, lo, hi, opts).registers(choice.kind).clone()
+        }
+    }
+
+    /// Decode candidate `idx` (mixed radix over the option list) into
+    /// one choice per site.
+    fn decode(&self, options: &[LayerChoice], idx: usize) -> Vec<LayerChoice> {
+        let k = options.len();
+        let mut rest = idx;
+        let mut out = Vec::with_capacity(self.exact.site_channels().len());
+        for _ in 0..self.exact.site_channels().len() {
+            out.push(options[rest % k]);
+            rest /= k;
+        }
+        out
+    }
+
+    /// Fit + build + score one candidate using the worker's arena and
+    /// prediction buffer.
+    fn eval_candidate(
+        &self,
+        idx: usize,
+        lut: u32,
+        depth: u32,
+        choices: &[LayerChoice],
+        scratch: &mut Scratch,
+        preds: &mut Vec<usize>,
+        target: usize,
+    ) -> Result<Scored> {
+        let mut site_regs: Vec<Vec<GrauRegisters>> = Vec::with_capacity(choices.len());
+        for (site, (&nch, &choice)) in
+            self.exact.site_channels().iter().zip(choices).enumerate()
+        {
+            let mut regs = Vec::with_capacity(nch);
+            for ch in 0..nch {
+                regs.push(self.fit_regs(site, ch, choice));
+            }
+            site_regs.push(regs);
+        }
+        let engine = Engine::new(self.exact.graph.clone(), self.bundle, ActMode::Grau(site_regs))?;
+        engine.predict_batch_into(self.data, self.opts.eval_samples, scratch, preds);
+        debug_assert_eq!(preds.len(), self.ref_preds.len());
+        let matches = preds.iter().zip(&self.ref_preds).filter(|(a, b)| a == b).count();
+        let top1 = preds
+            .iter()
+            .enumerate()
+            .filter(|(i, &p)| p == self.data.y[*i] as usize)
+            .count();
+        Ok(Scored { idx, lut, depth, score: matches.min(target), matches, top1 })
+    }
+
+    /// Rebuild the deployable bank for a front point (pure cache hits
+    /// when memoizing — the fits were already computed during scoring).
+    fn bank_for(&self, rank: usize, choices: &[LayerChoice]) -> DescriptorBank {
+        let mut bank = DescriptorBank::new(format!("dse-front-{rank}"));
+        for (site, (&nch, &choice)) in
+            self.exact.site_channels().iter().zip(choices).enumerate()
+        {
+            for ch in 0..nch {
+                let mut f = self.exact.folded(site, ch);
+                f.n_bits = choice.n_bits;
+                let (lo, hi) = self.fit_range(site, ch);
+                let opts = self.fit_options(choice);
+                let name = format!("site{site}/ch{ch}");
+                let d = if self.opts.memoize {
+                    self.cache.fit_folded(&f, lo, hi, opts).descriptor(choice.kind, &name)
+                } else {
+                    crate::fit::pipeline::fit_folded(&f, lo, hi, opts)
+                        .descriptor(choice.kind, &name)
+                };
+                bank.insert(name, d);
+            }
+        }
+        bank
+    }
+
+    /// Run the search and return the Pareto front + work counters.
+    pub fn explore(&self) -> Result<ExploreReport> {
+        let options = self.grid.choices();
+        let n_sites = self.exact.site_channels().len();
+        let total = match options.len().checked_pow(n_sites as u32) {
+            Some(t) if t <= 1_000_000 => t,
+            _ => bail!(
+                "candidate space {}^{} exceeds 1e6 — shrink the grid",
+                options.len(),
+                n_sites
+            ),
+        };
+        let n_eval = self.opts.eval_samples.min(self.data.n);
+        let target = ((self.opts.match_target * n_eval as f64).ceil() as usize)
+            .clamp(1, n_eval);
+
+        // exact per-candidate cost from the monotone model: summed LUTs,
+        // deepest pipeline.  Cheap (no fit needed), so the "lower bound"
+        // the pruner compares against is tight.
+        let option_cost: Vec<(u32, u32)> = options
+            .iter()
+            .map(|c| {
+                let hc = estimate(c.cost_kind());
+                (hc.lut, hc.depth_8bit)
+            })
+            .collect();
+        let cost_of = |idx: usize| -> (u32, u32) {
+            let k = options.len();
+            let mut rest = idx;
+            let (mut lut, mut depth) = (0u32, 0u32);
+            for _ in 0..n_sites {
+                let (l, d) = option_cost[rest % k];
+                lut += l;
+                depth = depth.max(d);
+                rest /= k;
+            }
+            (lut, depth)
+        };
+        let costs: Vec<(u32, u32)> = (0..total).map(&cost_of).collect();
+
+        // claim order: cost-ascending, candidate index breaking ties.
+        // Purely a throughput heuristic — cheap candidates evaluate
+        // first, so a saturated front point appears as early as
+        // possible and the bound above it prunes the expensive tail.
+        // Soundness never depends on completion order (see the prune
+        // predicate and docs/ARCHITECTURE.md §DSE).
+        let mut order: Vec<usize> = (0..total).collect();
+        order.sort_by_key(|&i| (costs[i].0, i));
+
+        let running: Mutex<(Vec<Scored>, Vec<Scored>)> =
+            Mutex::new((Vec::new(), Vec::new())); // (front, all evaluated)
+        let pruned = AtomicUsize::new(0);
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let threads = if self.opts.threads == 0 { default_threads() } else { self.opts.threads };
+
+        parallel_for_init(
+            total,
+            threads,
+            || (Scratch::new(), Vec::new()),
+            |(scratch, preds), k| {
+                let idx = order[k];
+                let (lut, depth) = costs[idx];
+                if self.opts.prune {
+                    let r = running.lock().unwrap();
+                    // sound skip: an *evaluated* point already matched
+                    // the saturated score at strictly lower cost (or
+                    // equal cost with an earlier candidate index — the
+                    // final front's tie-break), so this candidate
+                    // (score <= target) cannot join the front.  The
+                    // index guard matters: workers complete out of
+                    // order, and an equal-cost later sibling saturating
+                    // first must not evict the representative the
+                    // deterministic tie-break would keep.
+                    if r.0.iter().any(|p| {
+                        p.score == target && (p.lut < lut || (p.lut == lut && p.idx < idx))
+                    }) {
+                        drop(r);
+                        pruned.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                }
+                let choices = self.decode(&options, idx);
+                match self.eval_candidate(idx, lut, depth, &choices, scratch, preds, target) {
+                    Ok(sc) => {
+                        let mut r = running.lock().unwrap();
+                        insert_running_front(&mut r.0, sc);
+                        r.1.push(sc);
+                    }
+                    Err(e) => errors.lock().unwrap().push(format!("candidate {idx}: {e:#}")),
+                }
+            },
+        );
+
+        if let Some(msg) = errors.into_inner().unwrap().into_iter().next() {
+            bail!("explorer evaluation failed: {msg}");
+        }
+        let (_, evaluated) = running.into_inner().unwrap();
+        let front = final_front(&evaluated);
+        let points = front
+            .iter()
+            .enumerate()
+            .map(|(rank, sc)| {
+                let choices = self.decode(&options, sc.idx);
+                let bank = self.bank_for(rank, &choices);
+                ParetoPoint {
+                    choices,
+                    fidelity: sc.matches as f64 / n_eval as f64,
+                    top1: sc.top1 as f64 / n_eval as f64,
+                    lut: sc.lut,
+                    depth: sc.depth,
+                    bank,
+                }
+            })
+            .collect();
+        Ok(ExploreReport {
+            front: points,
+            stats: ExploreStats {
+                candidates: total,
+                evaluated: evaluated.len(),
+                pruned: pruned.load(Ordering::Relaxed),
+                fit_cache_hits: self.cache.hits(),
+                fit_cache_misses: self.cache.misses(),
+            },
+        })
+    }
 }
 
 #[cfg(test)]
@@ -110,9 +711,90 @@ mod tests {
             front.iter().any(|p| p.segments >= 6),
             "front {front:?} should reach 6+ segments"
         );
-        // front must be monotone: lut up => rmse down
+        // front must be monotone: lut up => rmse strictly down
         for w in front.windows(2) {
-            assert!(w[1].rmse <= w[0].rmse + 1e-12);
+            assert!(w[1].lut > w[0].lut);
+            assert!(w[1].rmse < w[0].rmse);
         }
+    }
+
+    fn pt(segments: usize, rmse: f64, lut: u32) -> DsePoint {
+        DsePoint { segments, exponents: 8, rmse, lut, depth: 1 }
+    }
+
+    #[test]
+    fn pareto_drops_equal_rmse_costlier_points_and_duplicates() {
+        // the seed predicate kept both of these classes of point
+        let pts = vec![
+            pt(1, 2.0, 100),
+            pt(2, 2.0, 200), // equal rmse, strictly worse lut: dominated
+            pt(3, 2.0, 100), // exact tie: deduplicated, first wins
+            pt(4, 1.0, 300),
+        ];
+        let front = pareto(&pts);
+        assert_eq!(front.len(), 2);
+        assert_eq!((front[0].segments, front[0].lut), (1, 100));
+        assert_eq!((front[1].segments, front[1].lut), (4, 300));
+    }
+
+    #[test]
+    fn grid_product_and_validation() {
+        let grid = ExploreGrid {
+            precisions: vec![8, 4],
+            segments: vec![4, 6],
+            exponents: vec![8],
+            kinds: vec![ApproxKind::Apot, ApproxKind::Pot],
+        };
+        assert_eq!(grid.choices().len(), 8);
+        assert!(grid.validate().is_ok());
+        let bad = ExploreGrid { exponents: vec![5], ..grid.clone() };
+        assert!(bad.validate().is_err());
+        let bad = ExploreGrid { kinds: vec![ApproxKind::Pwlf], ..grid.clone() };
+        assert!(bad.validate().is_err());
+        let bad = ExploreGrid { segments: vec![], ..grid };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn layer_choice_cost_kind_is_monotone_in_each_knob() {
+        // what the pruner's cost-ascending claim order relies on
+        let base = LayerChoice { n_bits: 8, segments: 4, n_shifts: 8, kind: ApproxKind::Apot };
+        let lut = |c: LayerChoice| estimate(c.cost_kind()).lut;
+        assert!(lut(LayerChoice { segments: 6, ..base }) >= lut(base));
+        assert!(lut(LayerChoice { n_shifts: 16, ..base }) >= lut(base));
+        assert!(lut(LayerChoice { n_bits: 4, ..base }) <= lut(base));
+        assert_eq!(base.label(), "8b/4s/8e/apot");
+    }
+
+    #[test]
+    fn final_front_dedups_and_orders_deterministically() {
+        let sc = |idx, lut, score| Scored { idx, lut, depth: 0, score, matches: score, top1: 0 };
+        let evaluated = vec![
+            sc(5, 100, 10),
+            sc(2, 100, 10), // tie with idx 5: lower idx wins
+            sc(7, 90, 10),  // cheaper at equal score: dominates both
+            sc(1, 200, 12),
+            sc(3, 250, 12), // equal score, worse lut: dominated
+            sc(4, 300, 11), // worse on both axes than idx 1: dominated
+        ];
+        let front = final_front(&evaluated);
+        let got: Vec<(usize, u32, usize)> = front.iter().map(|s| (s.idx, s.lut, s.score)).collect();
+        assert_eq!(got, vec![(7, 90, 10), (1, 200, 12)]);
+    }
+
+    #[test]
+    fn running_front_insert_keeps_non_dominated_set() {
+        let sc = |idx, lut, score| Scored { idx, lut, depth: 0, score, matches: score, top1: 0 };
+        let mut front = Vec::new();
+        insert_running_front(&mut front, sc(0, 100, 10));
+        insert_running_front(&mut front, sc(1, 100, 10)); // tie: not re-inserted
+        assert_eq!(front.len(), 1);
+        insert_running_front(&mut front, sc(2, 50, 12)); // dominates idx 0
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].idx, 2);
+        insert_running_front(&mut front, sc(3, 40, 5)); // cheaper, worse: kept
+        assert_eq!(front.len(), 2);
+        insert_running_front(&mut front, sc(4, 60, 4)); // dominated: dropped
+        assert_eq!(front.len(), 2);
     }
 }

@@ -6,6 +6,8 @@
 //! grau eval   --config ...          (original vs PWLF/PoT/APoT accuracy)
 //! grau serve  [--workers 4] [--shards N] [--shed-limit ELEMS]
 //!             [--backend functional|cyclesim|pjrt] [--requests N]
+//! grau explore [--model gap|residual] [--bits 8] [--segments 4,6,8]
+//!              [--exponents 8,16] [--kinds apot] [--export-banks DIR]
 //! grau hw-report                    (Table VI)
 //! grau table1|table3|table4|table5|table6|fig1|fig2 [--quick]
 //! grau e2e                          (full pipeline on CNV-mixed)
@@ -46,7 +48,10 @@ fn ensure_streams(handles: &[StreamHandle]) -> Result<()> {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse_with_flags(std::env::args().skip(1), &["quick", "no-cache", "verbose"]);
+    let args = Args::parse_with_flags(
+        std::env::args().skip(1),
+        &["quick", "no-cache", "verbose", "no-prune", "no-memoize"],
+    );
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     if args.flag("quick") {
         std::env::set_var("GRAU_QUICK", "1");
@@ -215,6 +220,77 @@ fn run() -> Result<()> {
                 m.latency_us_max
             );
         }
+        "explore" => {
+            use grau::hw::dse::{ExploreGrid, Explorer, ExplorerOptions};
+            use grau::qnn::synth;
+            use grau::util::dataset::teacher_images;
+            let seed = args.get_usize("seed", 1) as u64;
+            let size = args.get_usize("size", 6);
+            let (graph, bundle) = match args.get_or("model", "gap") {
+                "residual" => synth::residual_qnn(size, 3, 8, 8, seed),
+                "gap" => synth::gap_qnn(size, 3, 8, seed),
+                other => bail!("unknown --model {other:?} (gap|residual)"),
+            };
+            // synth models are 10-class heads over [size, size, 3] images
+            let data = teacher_images(args.get_usize("data", 256), size, 3, 10, seed + 1);
+            let list = |key: &str, default: &str| -> Result<Vec<usize>> {
+                args.get_or(key, default)
+                    .split(',')
+                    .map(|t| t.trim().parse::<usize>().with_context(|| format!("--{key} {t:?}")))
+                    .collect()
+            };
+            let grid = ExploreGrid {
+                precisions: list("bits", "8")?.into_iter().map(|b| b as u8).collect(),
+                segments: list("segments", "4,6,8")?,
+                exponents: list("exponents", "8,16")?.into_iter().map(|e| e as u8).collect(),
+                kinds: args
+                    .get_or("kinds", "apot")
+                    .split(',')
+                    .map(|t| match t.trim() {
+                        "pot" => Ok(ApproxKind::Pot),
+                        "apot" => Ok(ApproxKind::Apot),
+                        other => bail!("unknown --kinds entry {other:?} (pot|apot)"),
+                    })
+                    .collect::<Result<_>>()?,
+            };
+            let opts = ExplorerOptions {
+                threads: args.get_usize("threads", 0),
+                prune: !args.flag("no-prune"),
+                memoize: !args.flag("no-memoize"),
+                calib_samples: args.get_usize("calib", 32),
+                eval_samples: args.get_usize("eval-samples", 128),
+                fit_samples: args.get_usize("fit-samples", 400),
+                match_target: args.get_f64("match-target", 1.0),
+            };
+            let explorer = Explorer::new(graph, &bundle, &data, grid, opts)?;
+            let report = explorer.explore()?;
+            let st = &report.stats;
+            println!(
+                "explored {} candidates: {} evaluated, {} pruned; \
+                 fit cache {} hits / {} misses",
+                st.candidates, st.evaluated, st.pruned, st.fit_cache_hits, st.fit_cache_misses
+            );
+            for (rank, p) in report.front.iter().enumerate() {
+                let tags: Vec<String> = p.choices.iter().map(|c| c.label()).collect();
+                println!(
+                    "  #{rank}: fidelity {:.4} top1 {:.4} lut {} depth {}  [{}]",
+                    p.fidelity,
+                    p.top1,
+                    p.lut,
+                    p.depth,
+                    tags.join(" | ")
+                );
+            }
+            if let Some(dir) = args.get("export-banks") {
+                let dir = PathBuf::from(dir);
+                std::fs::create_dir_all(&dir)
+                    .with_context(|| format!("create {}", dir.display()))?;
+                for (rank, p) in report.front.iter().enumerate() {
+                    p.bank.save(&dir.join(format!("front-{rank}.json")))?;
+                }
+                println!("exported {} banks to {}", report.front.len(), dir.display());
+            }
+        }
         "hw-report" | "table6" => {
             let ctx = Ctx::new(&artifacts_dir(&args))?;
             experiments::table6::run(&ctx)?;
@@ -259,6 +335,14 @@ grau — GRAU reproduction launcher
                              --export-units FILE writes the demo bank;
                              --shards N / --shed-limit ELEMS pick the
                              shard-queue topology and overload policy)
+  explore [--model gap|residual] [--size S] [--seed N]
+                            parallel mixed-precision design-space search
+                            (--bits/--segments/--exponents/--kinds comma
+                             lists pick the per-layer axes; --threads N;
+                             --match-target F sets the iso-accuracy bar;
+                             --no-prune / --no-memoize disable the
+                             bound pruner / fit cache; --export-banks DIR
+                             writes one descriptor bank per front point)
   table1|table3|table4|table5|table6|fig1|fig2 [--quick]
   hw-report                 alias of table6
 flags: --artifacts DIR --steps N --segments S --shifts E --quick";

@@ -855,6 +855,36 @@ impl Engine {
         ranges
     }
 
+    /// Argmax predictions over the first `limit` samples, written into
+    /// a caller-owned buffer (cleared first).  This is the design-space
+    /// explorer's scoring entry point: each worker owns one `Scratch`
+    /// arena and one prediction buffer and re-scores every candidate
+    /// with zero per-candidate allocation, then compares the buffer
+    /// against the exact engine's predictions for argmax agreement.
+    /// Deterministic and single-threaded by design — parallelism lives
+    /// at the candidate level, not inside one forward pass.
+    pub fn predict_batch_into(
+        &self,
+        data: &Dataset,
+        limit: usize,
+        scratch: &mut Scratch,
+        preds: &mut Vec<usize>,
+    ) {
+        let n = limit.min(data.n);
+        preds.clear();
+        preds.reserve(n);
+        for i in 0..n {
+            let logits = self.forward_into(data.sample(i), scratch, None);
+            let mut best = 0usize;
+            for (c, &v) in logits.iter().enumerate() {
+                if v > logits[best] {
+                    best = c;
+                }
+            }
+            preds.push(best);
+        }
+    }
+
     /// Accuracy over the first `limit` samples, `threads`-way parallel
     /// (one scratch arena per worker via [`Engine::forward_batch`]).
     pub fn evaluate(&self, data: &Dataset, limit: usize, threads: usize) -> EvalResult {

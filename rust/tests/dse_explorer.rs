@@ -1,0 +1,154 @@
+//! Oracle-identity tests for `hw::dse::Explorer`: the cached, parallel,
+//! bound-pruned explorer must emit exactly the front an exhaustive
+//! sequential sweep finds — same points, same counters reconciliation,
+//! and descriptor banks that survive a file round trip into the
+//! activation service bit-for-bit.
+
+use grau::api::ServiceBuilder;
+use grau::fit::ApproxKind;
+use grau::hw::dse::{ExploreGrid, ExploreReport, Explorer, ExplorerOptions};
+use grau::qnn::synth::residual_qnn;
+use grau::util::dataset::{teacher_images, Dataset};
+
+fn small_grid() -> ExploreGrid {
+    ExploreGrid {
+        precisions: vec![8],
+        segments: vec![2, 4],
+        exponents: vec![8],
+        kinds: vec![ApproxKind::Apot],
+    }
+}
+
+fn run(seed: u64, data: &Dataset, opts: ExplorerOptions) -> ExploreReport {
+    // 4 activation sites × 2 options/site = 16 candidate assignments
+    let (graph, bundle) = residual_qnn(5, 2, 3, 3, seed);
+    let explorer = Explorer::new(graph, &bundle, data, small_grid(), opts).expect("explorer");
+    explorer.explore().expect("explore")
+}
+
+fn fast_opts() -> ExplorerOptions {
+    ExplorerOptions {
+        threads: 4,
+        prune: true,
+        memoize: true,
+        calib_samples: 8,
+        eval_samples: 32,
+        fit_samples: 150,
+        match_target: 0.85,
+    }
+}
+
+/// The exhaustive sequential oracle: one thread, no pruning, and no
+/// memoization, so every candidate is fitted from scratch.
+fn oracle_opts() -> ExplorerOptions {
+    ExplorerOptions {
+        threads: 1,
+        prune: false,
+        memoize: false,
+        ..fast_opts()
+    }
+}
+
+#[test]
+fn explorer_front_identical_to_exhaustive_oracle_across_seeds() {
+    for seed in [1u64, 7, 23] {
+        let data = teacher_images(48, 5, 2, 10, seed + 100);
+        let fast = run(seed, &data, fast_opts());
+        let oracle = run(seed, &data, oracle_opts());
+
+        // counters reconcile: every candidate was either scored or
+        // provably skipped; the oracle skipped nothing
+        assert_eq!(fast.stats.candidates, 16, "seed {seed}");
+        assert_eq!(
+            fast.stats.evaluated + fast.stats.pruned,
+            fast.stats.candidates,
+            "seed {seed}: {:?}",
+            fast.stats
+        );
+        assert_eq!(oracle.stats.pruned, 0, "seed {seed}");
+        assert_eq!(oracle.stats.evaluated, oracle.stats.candidates, "seed {seed}");
+        // the memoized run shares fits across candidates; the oracle
+        // (memoize off) never consults the cache
+        assert!(fast.stats.fit_cache_hits > 0, "seed {seed}: {:?}", fast.stats);
+        assert_eq!(oracle.stats.fit_cache_hits + oracle.stats.fit_cache_misses, 0);
+
+        // the front itself: identical points in identical order, down
+        // to the exact fidelity bits and the serialized banks
+        assert_eq!(fast.front.len(), oracle.front.len(), "seed {seed}");
+        assert!(!fast.front.is_empty(), "seed {seed}: empty front");
+        for (rank, (a, b)) in fast.front.iter().zip(&oracle.front).enumerate() {
+            assert_eq!(a.choices, b.choices, "seed {seed} rank {rank}");
+            assert_eq!(a.lut, b.lut, "seed {seed} rank {rank}");
+            assert_eq!(a.depth, b.depth, "seed {seed} rank {rank}");
+            assert_eq!(
+                a.fidelity.to_bits(),
+                b.fidelity.to_bits(),
+                "seed {seed} rank {rank}"
+            );
+            assert_eq!(a.top1.to_bits(), b.top1.to_bits(), "seed {seed} rank {rank}");
+            assert_eq!(a.bank, b.bank, "seed {seed} rank {rank}: bank diverged");
+            assert_eq!(
+                a.bank.to_json().to_string(),
+                b.bank.to_json().to_string(),
+                "seed {seed} rank {rank}: serialized bank diverged"
+            );
+        }
+
+        // front shape: cost strictly rises, score strictly rises
+        for w in fast.front.windows(2) {
+            assert!(w[1].lut > w[0].lut, "seed {seed}: lut not strictly rising");
+            assert!(
+                w[1].fidelity > w[0].fidelity,
+                "seed {seed}: fidelity not strictly rising"
+            );
+        }
+    }
+}
+
+#[test]
+fn front_banks_round_trip_through_the_service_bit_exactly() {
+    let data = teacher_images(48, 5, 2, 10, 101);
+    let report = run(1, &data, fast_opts());
+    let point = &report.front[0];
+    assert!(!point.bank.is_empty());
+
+    // file round trip
+    let path = std::env::temp_dir().join("grau_dse_front0.units.json");
+    point.bank.save(&path).expect("save bank");
+    let loaded = grau::api::DescriptorBank::load(&path).expect("load bank");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, point.bank);
+
+    // service round trip: every descriptor registers, and the service's
+    // responses are bit-exact against the source register files
+    let svc = ServiceBuilder::new().workers(2).start();
+    let probe: Vec<i32> = (-600..600).step_by(7).collect();
+    for (name, d) in loaded.iter() {
+        let stream = svc
+            .register_descriptor(d)
+            .unwrap_or_else(|e| panic!("register {name}: {e:?}"));
+        let resp = stream.call(probe.clone()).expect("call");
+        let want: Vec<i32> = probe.iter().map(|&x| d.regs.eval(x)).collect();
+        assert_eq!(resp.data, want, "{name}: service output diverged");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn pruning_never_drops_front_points_even_when_it_fires() {
+    // a permissive iso-accuracy bar makes the score axis saturate early,
+    // so the bound pruner actually fires — and the front must still
+    // match the oracle's
+    let data = teacher_images(48, 5, 2, 10, 300);
+    let lax = ExplorerOptions { match_target: 0.5, ..fast_opts() };
+    let fast = run(3, &data, lax);
+    let oracle = run(3, &data, ExplorerOptions { match_target: 0.5, ..oracle_opts() });
+    assert_eq!(fast.front.len(), oracle.front.len());
+    for (a, b) in fast.front.iter().zip(&oracle.front) {
+        assert_eq!(a.choices, b.choices);
+        assert_eq!((a.lut, a.depth), (b.lut, b.depth));
+        assert_eq!(a.fidelity.to_bits(), b.fidelity.to_bits());
+    }
+    // reconciliation again, under a configuration built to prune
+    assert_eq!(fast.stats.evaluated + fast.stats.pruned, fast.stats.candidates);
+}

@@ -225,6 +225,76 @@ fn prop_fit_error_monotone_in_segments() {
 }
 
 #[test]
+fn prop_pareto_front_non_dominated_dropped_dominated_ties_deduped() {
+    use grau::hw::dse::{pareto, DsePoint};
+    // `q` dominates `p`: no worse on both axes, strictly better on one
+    fn dominates(q: &DsePoint, p: &DsePoint) -> bool {
+        q.lut <= p.lut && q.rmse <= p.rmse && (q.lut < p.lut || q.rmse < p.rmse)
+    }
+    let mut rng = Rng::new(20_260_807);
+    for case in 0..300 {
+        // discrete axis values force plenty of exact ties — the class
+        // of input the seed predicate mishandled (kept duplicates and
+        // equal-rmse/costlier points)
+        let n = rng.range_usize(0, 40);
+        let points: Vec<DsePoint> = (0..n)
+            .map(|i| DsePoint {
+                segments: i,
+                exponents: 8,
+                rmse: rng.range_i64(0, 6) as f64 * 0.5,
+                lut: rng.range_i64(1, 7) as u32 * 100,
+                depth: 1,
+            })
+            .collect();
+        let front = pareto(&points);
+        assert!(front.len() <= points.len());
+        assert_eq!(front.is_empty(), points.is_empty(), "case {case}");
+
+        // 1. the front is mutually non-dominated, with no exact ties
+        for (i, p) in front.iter().enumerate() {
+            for (j, q) in front.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                assert!(!dominates(q, p), "case {case}: front point {j} dominates {i}");
+                assert!(
+                    !(q.lut == p.lut && q.rmse == p.rmse),
+                    "case {case}: exact tie survived in the front"
+                );
+            }
+        }
+        // 2. every dropped point is dominated by (or exactly ties) a
+        //    kept point — nothing non-dominated was lost
+        for (i, p) in points.iter().enumerate() {
+            let kept = front
+                .iter()
+                .any(|f| f.lut == p.lut && f.rmse == p.rmse && f.segments == p.segments);
+            if !kept {
+                assert!(
+                    front
+                        .iter()
+                        .any(|f| dominates(f, p) || (f.lut == p.lut && f.rmse == p.rmse)),
+                    "case {case}: dropped point {i} ({p:?}) is not dominated"
+                );
+            }
+        }
+        // 3. sorted by LUT ascending, RMSE strictly falling
+        for w in front.windows(2) {
+            assert!(w[1].lut > w[0].lut, "case {case}: lut order");
+            assert!(w[1].rmse < w[0].rmse, "case {case}: rmse not strictly falling");
+        }
+        // 4. on exact ties the earliest input occurrence wins
+        for f in &front {
+            let first = points
+                .iter()
+                .find(|p| p.lut == f.lut && p.rmse == f.rmse)
+                .expect("front point originates from the input");
+            assert_eq!(first.segments, f.segments, "case {case}: tie-break not first-wins");
+        }
+    }
+}
+
+#[test]
 fn prop_zipf_sampler_matches_pmf_chi_square() {
     // Pearson chi-square goodness-of-fit of the sampler against its own
     // pmf: 200k seeded draws over 40 ranks, s = 1.2.  With df = 39 the
