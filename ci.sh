@@ -34,6 +34,14 @@ cargo test -q
 step "sharded-service battery (cargo test --test service_sharding)"
 cargo test --release --test service_sharding
 
+# Fault drill: the seeded fault-injection battery (worker panics,
+# register bit flips, deadlines, quarantine), run by name with output
+# visible for the same reason as the sharding battery.  An env-armed
+# drill through the `grau serve` CLI runs further down, after the
+# explore smoke has exported a descriptor bank to reuse.
+step "fault drill (cargo test --test service_faults)"
+cargo test --release --test service_faults
+
 # Second pass with the std::arch lane kernel compiled in, so both
 # GrauPlan::eval_into paths stay green.  The AVX2 kernel is runtime-
 # detected, but there is no point building the feature on a host whose
@@ -76,6 +84,17 @@ else
     printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
 fi
 
+# Chaos smoke: same load generator with seeded worker panics and
+# register bit flips armed (GRAU_CHAOS=1).  The bench itself asserts the
+# fault-tolerance acceptance gate: nonzero recoveries and zero lost
+# requests under injection.  Assert-only, never writes BENCH_service.json.
+step "service chaos smoke (GRAU_BENCH_SMOKE=1 GRAU_CHAOS=1 cargo bench --bench perf_service)"
+if cargo bench --help >/dev/null 2>&1; then
+    GRAU_BENCH_SMOKE=1 GRAU_CHAOS=1 cargo bench --bench perf_service
+else
+    printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; chaos smoke skipped\n'
+fi
+
 # DSE bench smoke: tiny grid through all four explorer configurations
 # (naive / +cache / +parallel / +prune), asserting identical fronts and
 # counter reconciliation.  Assert-only — smoke never writes
@@ -104,6 +123,19 @@ test -s "$EXPLORE_DIR/front-0.json" || {
     printf 'ci.sh: ERROR: explore exported no descriptor bank\n'; exit 1; }
 cargo run --release -- serve --units "$EXPLORE_DIR/front-0.json" \
     --workers 2 --requests 8 --chunk 64 >/dev/null
+
+# Env-armed fault drill through the CLI: GRAU_FAULTS parses and arms the
+# seeded plan inside `grau serve`, which must survive the injected
+# worker panics, answer every request (Ok or typed error), and report
+# the drill in its summary.  point prob 1 limit 2: exactly two panics.
+step "grau serve fault drill (GRAU_FAULTS env plan through the CLI)"
+GRAU_FAULTS="seed:7,worker.eval.panic:1:2" \
+    cargo run --release -- serve --units "$EXPLORE_DIR/front-0.json" \
+    --workers 2 --requests 16 --chunk 64 | tee "$EXPLORE_DIR/drill.out"
+grep -q 'fault injection armed' "$EXPLORE_DIR/drill.out" || {
+    printf 'ci.sh: ERROR: serve did not arm the GRAU_FAULTS plan\n'; exit 1; }
+grep -q 'fault drill:' "$EXPLORE_DIR/drill.out" || {
+    printf 'ci.sh: ERROR: serve reported no fault-drill summary\n'; exit 1; }
 
 # Facade smoke: run the migrated examples on tiny inputs so regressions
 # in the grau::api surface (builder, stream handles, descriptors) fail

@@ -19,6 +19,11 @@
 //! `GRAU_BENCH_SMOKE=1` runs a single deliberate-overload point with a
 //! tiny request budget and asserts the PR's acceptance gate — nonzero
 //! shed rate with bounded p99 — without writing the JSON file.
+//!
+//! `GRAU_CHAOS=1` additionally arms a seeded fault plan (worker panics
+//! + register bit flips) for the load points; combined with the smoke
+//! gate it asserts the fault-tolerance acceptance — nonzero
+//! `faults_recovered` with zero lost (never-answered) requests.
 
 use std::time::{Duration, Instant};
 
@@ -52,10 +57,15 @@ struct PointReport {
     shed_rate: f64,
     submitted: u64,
     shed: u64,
+    faults_recovered: u64,
+    /// admitted requests whose response channel died (must stay 0: the
+    /// supervisor answers every request, even under injected panics)
+    lost: u64,
 }
 
 fn main() {
     let smoke = std::env::var_os("GRAU_BENCH_SMOKE").is_some();
+    let chaos = std::env::var_os("GRAU_CHAOS").is_some();
     bench_header(
         "perf_service",
         "EXPERIMENTS.md §Service load — sharded multi-tenant serving under open-loop load",
@@ -70,6 +80,21 @@ fn main() {
         "calibrated closed-loop capacity: {:.0} req/s ({workers} workers, {shards} shards, {PAYLOAD}-elem requests)\n",
         capacity
     );
+
+    // arm chaos after calibration so the capacity probe stays fault-free
+    let _chaos_guard = if chaos {
+        println!("chaos armed: seeded worker panics + register bit flips\n");
+        Some(grau::util::fault::arm(
+            grau::util::fault::FaultPlan::new(7)
+                .point("worker.eval.panic", 0.02)
+                // every initial build and every churn re-registration
+                // rolls this point, so recoveries are all but certain
+                // even on a tiny smoke budget
+                .point("unit.reconfigure.flip", 0.1),
+        ))
+    } else {
+        None
+    };
 
     let points: &[(f64, &str)] = if smoke {
         &[(4.0, "smoke_service_load_x4")]
@@ -111,12 +136,29 @@ fn main() {
             "p99 {}µs under bounded-queue overload — shedding failed to cap the backlog",
             rep.p99_us
         );
+        if chaos {
+            // the fault-tolerance acceptance gate: injection must have
+            // actually fired and been absorbed, and every admitted
+            // request must still have received exactly one response
+            assert!(
+                rep.faults_recovered > 0,
+                "chaos run recovered no faults — injection inert"
+            );
+            assert_eq!(
+                rep.lost, 0,
+                "{} requests lost their response under chaos",
+                rep.lost
+            );
+        }
         println!(
-            "\nsmoke gate OK: shed {} of {} ({:.1}%), p99 {}µs",
+            "\nsmoke gate OK: shed {} of {} ({:.1}%), p99 {}µs, \
+             faults recovered {}, lost {}",
             rep.shed,
             rep.submitted,
             rep.shed_rate * 100.0,
-            rep.p99_us
+            rep.p99_us,
+            rep.faults_recovered,
+            rep.lost
         );
         // smoke never writes BENCH_service.json: tiny CI runs must not
         // masquerade as recordable load curves
@@ -226,12 +268,16 @@ fn run_point(
     let offered_realized = plan.len() as f64 / t0.elapsed().as_secs_f64();
 
     // drain everything admitted; churn-orphaned requests answer
-    // UnknownStream and count as errors, not achieved throughput
+    // UnknownStream (and chaos runs add WorkerFault) — typed errors,
+    // not achieved throughput.  Disconnected means a request was never
+    // answered at all: a lost response, tracked separately.
     let mut ok = 0u64;
     let mut errs = 0u64;
+    let mut lost = 0u64;
     for p in pend {
         match p.recv() {
             Ok(_) => ok += 1,
+            Err(ServiceError::Disconnected) => lost += 1,
             Err(_) => errs += 1,
         }
     }
@@ -254,6 +300,8 @@ fn run_point(
         shed_rate: shed as f64 / plan.len() as f64,
         submitted: plan.len() as u64,
         shed,
+        faults_recovered: m.faults_recovered,
+        lost,
     }
 }
 

@@ -40,10 +40,11 @@
 
 use std::path::Path;
 
-use crate::error::{ensure, Context, Result};
+use crate::error::{ensure, Context, Error, Result};
 use crate::fit::ApproxKind;
 use crate::hw::unit::{build_functional_unit, build_unit, ActivationUnit, FunctionalUnit, UnitKind};
 use crate::hw::{GrauRegisters, MAX_SEGMENTS, PAD_THRESHOLD};
+use crate::util::fsio::atomic_write;
 use crate::util::json::{arr, num, obj, s, Json};
 
 /// Format tag every descriptor file carries.
@@ -147,26 +148,16 @@ impl UnitDescriptor {
             self.version
         );
         let r = &self.regs;
-        ensure!(
-            (1..=MAX_SEGMENTS).contains(&r.n_segments),
-            "n_segments {} outside 1..={MAX_SEGMENTS}",
-            r.n_segments
-        );
-        ensure!(
-            matches!(r.n_shifts, 4 | 8 | 16),
-            "n_shifts {} is not a supported window length (4/8/16)",
-            r.n_shifts
-        );
+        // Structural register invariants (segment counts, shift window,
+        // threshold monotonicity, sign/mask domains) live on the
+        // register file itself so the service integrity path and the
+        // descriptor loader agree on what "corrupt" means.
+        r.validate()
+            .map_err(|e| Error::msg(format!("invalid register file: {e}")))?;
         ensure!(
             (1..=16).contains(&r.n_bits),
             "n_bits {} outside 1..=16",
             r.n_bits
-        );
-        ensure!(
-            r.shift_lo as u32 + r.n_shifts as u32 <= 32,
-            "shift window [{}..{}] exceeds the 32-bit shifter range",
-            r.shift_lo,
-            r.shift_lo as u32 + r.n_shifts as u32
         );
         ensure!(
             self.out_bits == r.n_bits,
@@ -179,19 +170,6 @@ impl UnitDescriptor {
             "in_bits {} outside 1..=32",
             self.in_bits
         );
-        for j in 0..r.n_segments {
-            ensure!(
-                r.sign[j] == 1 || r.sign[j] == -1,
-                "segment {j}: sign {} must be +1 or -1",
-                r.sign[j]
-            );
-            ensure!(
-                u64::from(r.mask[j]) < 1u64 << r.n_shifts,
-                "segment {j}: mask {:#x} wider than the {}-shift window",
-                r.mask[j],
-                r.n_shifts
-            );
-        }
         self.unit
             .check(r, self.approx)
             .with_context(|| format!("backend '{}' cannot realize this register file", self.unit.name()))
@@ -225,6 +203,11 @@ impl UnitDescriptor {
                     ),
                 ]),
             ),
+            // Fletcher-32 over the canonical used-slot word stream —
+            // computed at serialization time (never stored in the
+            // struct, which would go stale under mutation) and
+            // verified on every parse.
+            ("checksum", num(r.fletcher32() as f64)),
         ];
         if let Some(p) = &self.provenance {
             let mut prov = vec![("function", s(&p.function)), ("source", s(&p.source))];
@@ -288,6 +271,21 @@ impl UnitDescriptor {
                 int_field(m, "registers.mask entry", 0, u32::MAX as i64)? as u32;
         }
 
+        // Verify the register checksum when the file carries one
+        // (absent in pre-checksum version-1 files, which stay
+        // loadable; any file this build writes includes it).
+        match j.get("checksum") {
+            Json::Null => {}
+            c => {
+                let want = int_field(c, "checksum", 0, u32::MAX as i64)? as u32;
+                let got = regs.fletcher32();
+                ensure!(
+                    want == got,
+                    "register checksum mismatch: file says {want:#010x}, contents sum to {got:#010x} (corrupt or hand-edited descriptor)"
+                );
+            }
+        }
+
         let provenance = match j.get("provenance") {
             Json::Null => None,
             p => Some(Provenance {
@@ -316,9 +314,11 @@ impl UnitDescriptor {
         UnitDescriptor::from_json(&j)
     }
 
-    /// Write the descriptor to a JSON file.
+    /// Write the descriptor to a JSON file (atomically: staged in a
+    /// same-directory temp file and renamed into place, so a crash
+    /// mid-write can never leave a truncated descriptor on disk).
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())
+        atomic_write(path, &self.to_json().to_string())
             .with_context(|| format!("write unit descriptor {path:?}"))
     }
 
@@ -440,6 +440,33 @@ mod tests {
         // backend that cannot realize the file: MT needs flat steps
         let bad = d.with_unit(UnitKind::Mt);
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn checksum_emitted_and_verified() {
+        let d = UnitDescriptor::new(demo_regs(), ApproxKind::Apot);
+        let j = d.to_json();
+        let sum = j.get("checksum").as_f64().expect("checksum emitted") as u32;
+        assert_eq!(sum, d.regs.fletcher32());
+
+        // Tamper with a register without refreshing the checksum:
+        // the parse must reject the file.
+        let text = j.to_string();
+        let mut tampered = Json::parse(&text).unwrap();
+        if let Json::Obj(m) = &mut tampered {
+            if let Some(Json::Obj(r)) = m.get_mut("registers") {
+                r.insert("y0".into(), arr([num(-90.0), num(-10.0), num(81.0)]));
+            }
+        }
+        let e = UnitDescriptor::from_json(&tampered).unwrap_err();
+        assert!(format!("{e:#}").contains("checksum mismatch"), "{e:#}");
+
+        // A pre-checksum file (field absent) still loads.
+        let mut legacy = Json::parse(&text).unwrap();
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("checksum");
+        }
+        assert_eq!(UnitDescriptor::from_json(&legacy).unwrap(), d);
     }
 
     #[test]

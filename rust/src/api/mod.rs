@@ -41,7 +41,8 @@ pub mod service;
 
 pub use descriptor::{Provenance, UnitDescriptor, DESCRIPTOR_FORMAT, DESCRIPTOR_VERSION};
 pub use service::{
-    Pending, Service, ServiceBuilder, ServiceError, StreamHandle, StreamMetrics, Tenant, TenantSpec,
+    Pending, RetryPolicy, Service, ServiceBuilder, ServiceError, StreamHandle, StreamMetrics,
+    Tenant, TenantSpec,
 };
 
 // the service facade speaks these types directly

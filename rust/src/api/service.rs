@@ -25,6 +25,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, RwLock};
+use std::time::Duration;
 
 use crate::api::descriptor::UnitDescriptor;
 use crate::coordinator::service::{
@@ -50,6 +51,17 @@ pub enum ServiceError {
     InvalidConfig(String),
     /// The worker rejected the stream's registered configuration.
     Rejected { stream: u64, reason: String },
+    /// A worker faulted (panicked or hit a transient hardware error)
+    /// while serving this request.  The stream's unit was quarantined
+    /// and rebuilds from its pinned registration on the next call —
+    /// safe to retry (see [`StreamHandle::call_retry`]).
+    WorkerFault { stream: u64 },
+    /// The request's deadline fired while it was still queued; it was
+    /// expired at dequeue without consuming eval capacity.
+    Expired { stream: u64, waited_us: u64 },
+    /// The stream faulted repeatedly within the service's fault window
+    /// and was evicted.  Re-register to resume.
+    Quarantined { stream: u64 },
     /// The response channel died (a worker panicked).
     Disconnected,
 }
@@ -66,6 +78,15 @@ impl std::fmt::Display for ServiceError {
             ServiceError::Rejected { stream, reason } => {
                 write!(f, "stream {stream} rejected: {reason}")
             }
+            ServiceError::WorkerFault { stream } => {
+                write!(f, "stream {stream}: worker faulted; unit quarantined, safe to retry")
+            }
+            ServiceError::Expired { stream, waited_us } => {
+                write!(f, "stream {stream}: request expired after {waited_us} us queued")
+            }
+            ServiceError::Quarantined { stream } => {
+                write!(f, "stream {stream}: quarantined after repeated faults; re-register")
+            }
             ServiceError::Disconnected => write!(f, "response channel disconnected"),
         }
     }
@@ -78,6 +99,11 @@ impl From<StreamError> for ServiceError {
         match e {
             StreamError::UnknownStream(id) => ServiceError::UnknownStream(id),
             StreamError::Rejected { stream, reason } => ServiceError::Rejected { stream, reason },
+            StreamError::WorkerFault { stream } => ServiceError::WorkerFault { stream },
+            StreamError::Expired { stream, waited_us } => {
+                ServiceError::Expired { stream, waited_us }
+            }
+            StreamError::Quarantined { stream } => ServiceError::Quarantined { stream },
         }
     }
 }
@@ -194,6 +220,23 @@ impl ServiceBuilder {
     /// Artifacts directory (needed by the Pjrt backend).
     pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> ServiceBuilder {
         self.config.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Default per-request deadline, measured from admission.  A request
+    /// still queued when its deadline fires is expired at dequeue with
+    /// [`ServiceError::Expired`] instead of being served late.  Per-call
+    /// overrides via [`StreamHandle::submit_with_deadline`].
+    pub fn default_deadline(mut self, d: Duration) -> ServiceBuilder {
+        self.config.default_deadline = Some(d);
+        self
+    }
+
+    /// Quarantine window: a stream whose worker faults twice within
+    /// this window is evicted with [`ServiceError::Quarantined`] rather
+    /// than rebuilt forever.  Default 2 s.
+    pub fn fault_window(mut self, d: Duration) -> ServiceBuilder {
+        self.config.fault_window = d;
         self
     }
 
@@ -517,6 +560,32 @@ impl std::fmt::Debug for Tenant {
     }
 }
 
+/// Bounded retry policy for [`StreamHandle::call_retry`].  Retries only
+/// *transient* failures — [`ServiceError::Busy`] (admission pressure)
+/// and [`ServiceError::WorkerFault`] (unit quarantined and rebuilding).
+/// Deterministic rejections (`Rejected`, `InvalidConfig`, `Expired`,
+/// `Quarantined`, `UnknownStream`, `Closed`) fail immediately: retrying
+/// them would loop on the same answer.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (3 ⇒ up to 4 attempts total).
+    pub max_retries: u32,
+    /// Backoff before the first retry; doubles each retry.
+    pub base_backoff: Duration,
+    /// Ceiling on the per-retry backoff.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+        }
+    }
+}
+
 /// Per-stream counters, tracked handle-side.
 #[derive(Default)]
 struct StreamStats {
@@ -573,9 +642,32 @@ impl StreamHandle {
     /// being shed, [`ServiceError::Busy`] when the shard is saturated
     /// even for top-priority traffic.
     pub fn submit(&self, data: Vec<i32>) -> Result<Pending, ServiceError> {
+        self.submit_opts(data, None)
+    }
+
+    /// [`submit`](Self::submit) with a per-call deadline overriding the
+    /// service-wide [`ServiceBuilder::default_deadline`].  The clock
+    /// starts now; if the request is still queued when it fires, it is
+    /// expired at dequeue with [`ServiceError::Expired`].
+    pub fn submit_with_deadline(
+        &self,
+        data: Vec<i32>,
+        deadline: Duration,
+    ) -> Result<Pending, ServiceError> {
+        self.submit_opts(data, Some(deadline))
+    }
+
+    fn submit_opts(
+        &self,
+        data: Vec<i32>,
+        deadline: Option<Duration>,
+    ) -> Result<Pending, ServiceError> {
         let n = data.len() as u64;
         let counted = self.core.admit()?;
-        let rx = match self.core.with_service(|svc| svc.submit(self.id, data)) {
+        let rx = match self
+            .core
+            .with_service(|svc| svc.submit_opts(self.id, data, deadline))
+        {
             Ok(Ok(rx)) => rx,
             Ok(Err(shed)) => {
                 if counted {
@@ -618,6 +710,42 @@ impl StreamHandle {
     /// Blocking convenience call: submit + receive.
     pub fn call(&self, data: Vec<i32>) -> Result<ActResponse, ServiceError> {
         self.submit(data)?.recv()
+    }
+
+    /// Blocking call with a per-call deadline (see
+    /// [`submit_with_deadline`](Self::submit_with_deadline)).
+    pub fn call_with_deadline(
+        &self,
+        data: Vec<i32>,
+        deadline: Duration,
+    ) -> Result<ActResponse, ServiceError> {
+        self.submit_with_deadline(data, deadline)?.recv()
+    }
+
+    /// Blocking call with bounded exponential-backoff retries of
+    /// *transient* failures only: [`ServiceError::Busy`] and
+    /// [`ServiceError::WorkerFault`].  Everything else — including
+    /// `Expired` and `Quarantined` — returns immediately, because the
+    /// service would deterministically give the same answer again.
+    pub fn call_retry(
+        &self,
+        data: Vec<i32>,
+        policy: &RetryPolicy,
+    ) -> Result<ActResponse, ServiceError> {
+        let mut backoff = policy.base_backoff;
+        let mut attempt = 0u32;
+        loop {
+            match self.call(data.clone()) {
+                Err(ServiceError::Busy { .. } | ServiceError::WorkerFault { .. })
+                    if attempt < policy.max_retries =>
+                {
+                    attempt += 1;
+                    std::thread::sleep(backoff.min(policy.max_backoff));
+                    backoff = backoff.saturating_mul(2);
+                }
+                other => return other,
+            }
+        }
     }
 
     /// Runtime reconfiguration from a serialized descriptor: replace

@@ -47,8 +47,9 @@
 //! `ServiceBuilder` constructs the service and every registration
 //! returns a `StreamHandle` that scopes submission to its own stream.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -61,6 +62,8 @@ use crate::fit::ApproxKind;
 use crate::hw::pipeline::CycleStats;
 use crate::hw::unit::{build_unit, reconfigure_cost, ActivationUnit, UnitKind};
 use crate::hw::{GrauPlan, GrauRegisters};
+use crate::util::fault;
+use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
 use crate::util::threadpool::{Pop, WorkQueues};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,6 +110,15 @@ pub(crate) struct ServiceConfig {
     pub shed_limit: Option<usize>,
     /// artifacts dir (needed for the Pjrt backend)
     pub artifacts_dir: std::path::PathBuf,
+    /// Deadline stamped on every request that does not carry its own:
+    /// a request still queued when its deadline passes is answered
+    /// [`StreamError::Expired`] at dequeue instead of being served
+    /// late.  `None` (default) queues without expiry.
+    pub default_deadline: Option<Duration>,
+    /// Width of the per-stream quarantine window: a stream whose
+    /// processing faults twice within this span is evicted with
+    /// [`StreamError::Quarantined`] rather than retried forever.
+    pub fault_window: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -119,6 +131,8 @@ impl Default for ServiceConfig {
             shards: None,
             shed_limit: None,
             artifacts_dir: std::path::PathBuf::from("artifacts"),
+            default_deadline: None,
+            fault_window: Duration::from_secs(2),
         }
     }
 }
@@ -128,6 +142,9 @@ pub(crate) struct ActRequest {
     pub data: Vec<i32>,
     pub resp: Sender<ActResponse>,
     pub t_submit: Instant,
+    /// Absolute expiry instant; checked when a worker dequeues the
+    /// request (never while it runs — started work completes).
+    pub deadline: Option<Instant>,
 }
 
 /// Typed per-request failure a worker reports back through
@@ -139,6 +156,17 @@ pub enum StreamError {
     UnknownStream(u64),
     /// The stream's registered configuration cannot run on its backend.
     Rejected { stream: u64, reason: String },
+    /// A worker faulted (panicked or hit a transient reconfigure
+    /// failure) while this request was in flight.  The stream's unit is
+    /// quarantined and rebuilt from its pinned registration on next
+    /// use; the request itself was not served and is safe to retry.
+    WorkerFault { stream: u64 },
+    /// The request's deadline passed while it was still queued; it was
+    /// expired at dequeue instead of being served late.
+    Expired { stream: u64, waited_us: u64 },
+    /// The stream faulted repeatedly within the quarantine window and
+    /// was evicted; re-register it to resume.
+    Quarantined { stream: u64 },
 }
 
 impl std::fmt::Display for StreamError {
@@ -146,6 +174,15 @@ impl std::fmt::Display for StreamError {
         match self {
             StreamError::UnknownStream(id) => write!(f, "stream {id} not registered"),
             StreamError::Rejected { stream, reason } => write!(f, "stream {stream}: {reason}"),
+            StreamError::WorkerFault { stream } => {
+                write!(f, "stream {stream}: worker faulted while serving this request (unit quarantined; safe to retry)")
+            }
+            StreamError::Expired { stream, waited_us } => {
+                write!(f, "stream {stream}: request expired after {waited_us} us queued")
+            }
+            StreamError::Quarantined { stream } => {
+                write!(f, "stream {stream}: quarantined after repeated faults (re-register to resume)")
+            }
         }
     }
 }
@@ -258,6 +295,17 @@ pub struct Metrics {
     pub stolen: AtomicU64,
     /// streams evicted by a tenant's LRU quota
     pub evictions: AtomicU64,
+    /// faults (worker panics, detected flips, transient reconfigure
+    /// errors) the service absorbed and recovered from
+    pub faults_recovered: AtomicU64,
+    /// worker-loop panics caught by the supervisor
+    pub worker_panics: AtomicU64,
+    /// requests expired at dequeue (deadline passed while queued)
+    pub expired: AtomicU64,
+    /// register-file corruption caught by checksum/validity checks
+    pub flips_detected: AtomicU64,
+    /// streams evicted after repeated faults within the quarantine window
+    pub quarantined: AtomicU64,
     pub latency_us_sum: AtomicU64,
     pub latency_us_max: AtomicU64,
     pub latency: LatencyHistogram,
@@ -275,6 +323,11 @@ impl Metrics {
             shed: self.shed.load(Ordering::Relaxed),
             stolen: self.stolen.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            faults_recovered: self.faults_recovered.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            flips_detected: self.flips_detected.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
             latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
             latency_us_max: self.latency_us_max.load(Ordering::Relaxed),
             latency_buckets: self.latency.snapshot(),
@@ -296,6 +349,16 @@ pub struct MetricsSnapshot {
     pub stolen: u64,
     /// streams evicted by a tenant's LRU quota
     pub evictions: u64,
+    /// faults the service absorbed and recovered from
+    pub faults_recovered: u64,
+    /// worker-loop panics caught by the supervisor
+    pub worker_panics: u64,
+    /// requests expired at dequeue (deadline passed while queued)
+    pub expired: u64,
+    /// register-file corruption caught by checksum/validity checks
+    pub flips_detected: u64,
+    /// streams evicted after repeated faults within the quarantine window
+    pub quarantined: u64,
     pub latency_us_sum: u64,
     pub latency_us_max: u64,
     /// log-scale latency histogram (see [`LatencyHistogram`])
@@ -314,6 +377,11 @@ impl Default for MetricsSnapshot {
             shed: 0,
             stolen: 0,
             evictions: 0,
+            faults_recovered: 0,
+            worker_panics: 0,
+            expired: 0,
+            flips_detected: 0,
+            quarantined: 0,
             latency_us_sum: 0,
             latency_us_max: 0,
             latency_buckets: [0; LATENCY_BUCKETS],
@@ -372,6 +440,11 @@ struct StreamConfig {
     regs: GrauRegisters,
     kind: ApproxKind,
     unit: Option<UnitKind>,
+    /// Fletcher-32 of `regs` pinned at registration time: the integrity
+    /// oracle a worker re-verifies against on every reconfigure, so a
+    /// bit upset in the register words crossing to a unit is detected
+    /// and repaired from this pinned registration.
+    pinned_sum: u32,
 }
 
 /// A descriptor-bank tenant: the unit of placement (all its streams
@@ -393,25 +466,25 @@ struct TenantLru {
 
 impl TenantState {
     fn touch(&self, stream: u64) {
-        let mut l = self.lru.lock().unwrap();
+        let mut l = lock_or_recover(&self.lru);
         l.clock += 1;
         let now = l.clock;
         l.last_use.insert(stream, now);
     }
 
     fn forget(&self, stream: u64) {
-        self.lru.lock().unwrap().last_use.remove(&stream);
+        lock_or_recover(&self.lru).last_use.remove(&stream);
     }
 
     pub(crate) fn stream_count(&self) -> usize {
-        self.lru.lock().unwrap().last_use.len()
+        lock_or_recover(&self.lru).last_use.len()
     }
 
     /// Record that `stream` is being registered; if that would exceed
     /// the quota, pick (and forget) the least-recently-used stream as
     /// the eviction victim.
     fn admit(&self, stream: u64) -> Option<u64> {
-        let mut l = self.lru.lock().unwrap();
+        let mut l = lock_or_recover(&self.lru);
         let victim = match self.max_streams {
             Some(q) if !l.last_use.contains_key(&stream) && l.last_use.len() >= q => {
                 l.last_use.iter().min_by_key(|&(_, &t)| t).map(|(&id, _)| id)
@@ -454,6 +527,21 @@ struct StreamEntry {
     /// per-stream completion counter, stamped on worker responses as
     /// [`ActResponse::stream_seq`] (the FIFO oracle)
     seq: AtomicU64,
+    /// instant of the stream's last processing fault — the sliding
+    /// quarantine window: a second fault within
+    /// [`ServiceConfig::fault_window`] evicts the stream
+    last_fault: Mutex<Option<Instant>>,
+}
+
+/// Record a processing fault against `entry`.  Returns `true` when this
+/// is the second fault inside the quarantine window, i.e. the stream
+/// must be evicted instead of silently retried forever.
+fn record_fault(entry: &StreamEntry, window: Duration) -> bool {
+    let mut last = lock_or_recover(&entry.last_fault);
+    let now = Instant::now();
+    let evict = last.map_or(false, |t| now.duration_since(t) <= window);
+    *last = Some(now);
+    evict
 }
 
 type Registry = Arc<RwLock<HashMap<u64, Arc<StreamEntry>>>>;
@@ -536,9 +624,10 @@ impl ActivationService {
             let queues = Arc::clone(&queues);
             let shard_depth = Arc::clone(&shard_depth);
             let metrics = Arc::clone(&metrics);
+            let registry = Arc::clone(&registry);
             let cfg = config.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(wid % n_shards, queues, shard_depth, metrics, cfg);
+                worker_loop(wid % n_shards, queues, shard_depth, metrics, registry, cfg);
             }));
         }
         ActivationService {
@@ -565,7 +654,7 @@ impl ActivationService {
         priority: u8,
         max_streams: Option<usize>,
     ) -> Arc<TenantState> {
-        let mut tenants = self.tenants.lock().unwrap();
+        let mut tenants = lock_or_recover(&self.tenants);
         Arc::clone(tenants.entry(name.to_string()).or_insert_with(|| {
             Arc::new(TenantState {
                 name: name.to_string(),
@@ -608,12 +697,21 @@ impl ActivationService {
         unit: Option<UnitKind>,
         tenant: Option<Arc<TenantState>>,
     ) -> Option<u64> {
-        let cfg = StreamConfig { regs, kind, unit };
+        let pinned_sum = regs.fletcher32();
+        let cfg = StreamConfig {
+            regs,
+            kind,
+            unit,
+            pinned_sum,
+        };
         let victim;
         {
-            let mut reg = self.registry.write().unwrap();
+            let mut reg = write_or_recover(&self.registry);
             if let Some(entry) = reg.get(&stream_id) {
-                *entry.cfg.write().unwrap() = cfg;
+                *write_or_recover(&entry.cfg) = cfg;
+                // a re-registration is an explicit repair: reset the
+                // quarantine window so the fresh config starts clean
+                *lock_or_recover(&entry.last_fault) = None;
                 if let Some(t) = &entry.tenant {
                     t.touch(stream_id);
                 }
@@ -637,6 +735,7 @@ impl ActivationService {
                         dead: false,
                     }),
                     seq: AtomicU64::new(0),
+                    last_fault: Mutex::new(None),
                 }),
             );
         }
@@ -657,28 +756,18 @@ impl ActivationService {
     }
 
     fn evict(&self, stream_id: u64) {
-        let entry = self.registry.write().unwrap().remove(&stream_id);
-        let Some(entry) = entry else { return };
-        if let Some(t) = &entry.tenant {
-            t.forget(stream_id);
-        }
-        let drained: Vec<ActRequest> = {
-            let mut mail = entry.mail.lock().unwrap();
-            mail.dead = true;
-            mail.q.drain(..).collect()
-        };
-        let elems: usize = drained.iter().map(|r| r.data.len()).sum();
-        if elems > 0 {
-            self.shard_depth[entry.shard].fetch_sub(elems, Ordering::Relaxed);
-        }
-        for r in &drained {
-            respond_error(r, StreamError::UnknownStream(stream_id), &self.metrics, 0);
-        }
+        evict_stream(
+            &self.registry,
+            &self.shard_depth,
+            &self.metrics,
+            stream_id,
+            StreamError::UnknownStream(stream_id),
+        );
     }
 
     /// Number of currently registered streams.
     pub(crate) fn stream_count(&self) -> usize {
-        self.registry.read().unwrap().len()
+        read_or_recover(&self.registry).len()
     }
 
     /// Submit asynchronously; on admission returns the response
@@ -697,14 +786,32 @@ impl ActivationService {
         stream_id: u64,
         data: Vec<i32>,
     ) -> std::result::Result<Receiver<ActResponse>, SubmitError> {
+        self.submit_opts(stream_id, data, None)
+    }
+
+    /// [`submit`](Self::submit) with a per-call deadline override
+    /// (`None` falls back to [`ServiceConfig::default_deadline`]).  The
+    /// deadline clock starts at admission; a request still queued when
+    /// it fires is answered [`StreamError::Expired`] at dequeue.
+    pub(crate) fn submit_opts(
+        &self,
+        stream_id: u64,
+        data: Vec<i32>,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<Receiver<ActResponse>, SubmitError> {
+        let _ = fault::fire("queue.push.delay");
         let (rtx, rrx) = channel();
+        let t_submit = Instant::now();
         let req = ActRequest {
             stream_id,
             data,
             resp: rtx,
-            t_submit: Instant::now(),
+            t_submit,
+            deadline: deadline
+                .or(self.config.default_deadline)
+                .map(|d| t_submit + d),
         };
-        let entry = self.registry.read().unwrap().get(&stream_id).cloned();
+        let entry = read_or_recover(&self.registry).get(&stream_id).cloned();
         let Some(entry) = entry else {
             respond_error(&req, StreamError::UnknownStream(stream_id), &self.metrics, 0);
             return Ok(rrx);
@@ -738,7 +845,7 @@ impl ActivationService {
         if let Some(t) = &entry.tenant {
             t.touch(stream_id);
         }
-        let mut mail = entry.mail.lock().unwrap();
+        let mut mail = lock_or_recover(&entry.mail);
         if mail.dead {
             drop(mail);
             respond_error(&req, StreamError::UnknownStream(stream_id), &self.metrics, 0);
@@ -894,11 +1001,44 @@ fn make_unit(
     }
 }
 
+/// Remove a stream from the registry and answer everything still queued
+/// in its mailbox with `error`.  Shared by quota eviction, explicit
+/// deregistration (both answer [`StreamError::UnknownStream`]) and the
+/// worker supervisor's quarantine path
+/// ([`StreamError::Quarantined`]).  Later submissions bounce at the
+/// registry lookup.
+fn evict_stream(
+    registry: &Registry,
+    shard_depth: &[AtomicUsize],
+    metrics: &Metrics,
+    stream_id: u64,
+    error: StreamError,
+) {
+    let entry = write_or_recover(registry).remove(&stream_id);
+    let Some(entry) = entry else { return };
+    if let Some(t) = &entry.tenant {
+        t.forget(stream_id);
+    }
+    let drained: Vec<ActRequest> = {
+        let mut mail = lock_or_recover(&entry.mail);
+        mail.dead = true;
+        mail.q.drain(..).collect()
+    };
+    let elems: usize = drained.iter().map(|r| r.data.len()).sum();
+    if elems > 0 {
+        shard_depth[entry.shard].fetch_sub(elems, Ordering::Relaxed);
+    }
+    for r in &drained {
+        respond_error(r, error.clone(), metrics, 0);
+    }
+}
+
 fn worker_loop(
     home: usize,
     queues: Arc<WorkQueues<Arc<StreamEntry>>>,
     shard_depth: Arc<Vec<AtomicUsize>>,
     metrics: Arc<Metrics>,
+    registry: Registry,
     cfg: ServiceConfig,
 ) {
     // per-worker state: an LRU bank of trait-object units, one per
@@ -942,38 +1082,108 @@ fn worker_loop(
             Pop::Empty => continue,
             Pop::Closed => return,
         };
+        let _ = fault::fire("queue.pop.delay");
 
         // drain this stream's mailbox up to max_batch elements; the
         // token stays `scheduled` while we hold it, so no other worker
         // can interleave with this stream (per-request FIFO holds even
-        // when the token was stolen)
-        let mut batch: Vec<ActRequest> = Vec::new();
-        let mut elems = 0usize;
+        // when the token was stolen).  Requests whose deadline passed
+        // while queued are expired here — at dequeue — rather than
+        // served late; they do not consume eval capacity.  Sequence
+        // numbers are reserved in pop (= submission) order for both
+        // kinds, so stream_seq stays the per-stream FIFO oracle even
+        // though an expiry response can leave before an earlier
+        // request's served response.
+        let now = Instant::now();
+        let mut batch: Vec<(u64, ActRequest)> = Vec::new();
+        let mut expired: Vec<(u64, ActRequest)> = Vec::new();
+        let mut popped_elems = 0usize;
+        let mut batch_elems = 0usize;
         {
-            let mut mail = entry.mail.lock().unwrap();
-            while let Some(front_len) = mail.q.front().map(|r| r.data.len()) {
-                if !batch.is_empty() && elems + front_len > cfg.max_batch {
+            let mut mail = lock_or_recover(&entry.mail);
+            loop {
+                let Some(front) = mail.q.front() else { break };
+                let is_expired = front.deadline.map_or(false, |d| now >= d);
+                let front_len = front.data.len();
+                if !is_expired && !batch.is_empty() && batch_elems + front_len > cfg.max_batch {
                     break;
                 }
                 let r = mail.q.pop_front().expect("front observed");
-                elems += r.data.len();
-                batch.push(r);
+                popped_elems += r.data.len();
+                let seq = entry.seq.fetch_add(1, Ordering::Relaxed) + 1;
+                if is_expired {
+                    expired.push((seq, r));
+                } else {
+                    batch_elems += r.data.len();
+                    batch.push((seq, r));
+                }
             }
         }
-        if elems > 0 {
-            shard_depth[entry.shard].fetch_sub(elems, Ordering::Relaxed);
+        if popped_elems > 0 {
+            shard_depth[entry.shard].fetch_sub(popped_elems, Ordering::Relaxed);
+        }
+        for (seq, r) in &expired {
+            metrics.expired.fetch_add(1, Ordering::Relaxed);
+            let waited_us = r.t_submit.elapsed().as_micros() as u64;
+            respond_error(
+                r,
+                StreamError::Expired {
+                    stream: entry.id,
+                    waited_us,
+                },
+                &metrics,
+                *seq,
+            );
         }
         if !batch.is_empty() {
-            process_group(
-                &entry,
-                &batch,
-                &mut bank,
-                &mut concat,
-                &mut group_out,
-                &metrics,
-                &offload,
-                default_kind,
-            );
+            // Supervision: the group runs under catch_unwind so a
+            // panicking unit (or an injected `.panic` fault) takes down
+            // neither this worker nor unrelated tenants.  `answered`
+            // counts responses already sent, so on a panic only the
+            // unanswered tail gets WorkerFault — never a double answer.
+            let answered = Cell::new(0usize);
+            let unwound = catch_unwind(AssertUnwindSafe(|| {
+                process_group(
+                    &entry,
+                    &batch,
+                    &mut bank,
+                    &mut concat,
+                    &mut group_out,
+                    &metrics,
+                    &offload,
+                    default_kind,
+                    &answered,
+                );
+            }))
+            .is_err();
+            if unwound {
+                // the worker "respawns" in place: quarantine the
+                // stream's resident unit (rebuilt bit-exactly from the
+                // pinned registration on next use), reset the scratch
+                // buffers, answer the unanswered tail, and keep
+                // serving other streams
+                metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                metrics.faults_recovered.fetch_add(1, Ordering::Relaxed);
+                bank.remove(entry.id);
+                for (seq, r) in batch.iter().skip(answered.get()) {
+                    respond_error(
+                        r,
+                        StreamError::WorkerFault { stream: entry.id },
+                        &metrics,
+                        *seq,
+                    );
+                }
+                if record_fault(&entry, cfg.fault_window) {
+                    metrics.quarantined.fetch_add(1, Ordering::Relaxed);
+                    evict_stream(
+                        &registry,
+                        &shard_depth,
+                        &metrics,
+                        entry.id,
+                        StreamError::Quarantined { stream: entry.id },
+                    );
+                }
+            }
             metrics.batches.fetch_add(1, Ordering::Relaxed);
             // shrink_to never drops below len, so empty the (already
             // fully consumed) buffers first
@@ -991,8 +1201,10 @@ fn worker_loop(
         // were processing, else mark the stream unscheduled.  Both arms
         // run under the mail lock, so a concurrent submit either sees
         // `scheduled` still true (we re-push) or pushes a fresh token
-        // itself — never both, never neither.
-        let mut mail = entry.mail.lock().unwrap();
+        // itself — never both, never neither.  A quarantine eviction
+        // above marked the mailbox dead and drained it, so the empty
+        // arm is taken and the token retires.
+        let mut mail = lock_or_recover(&entry.mail);
         if mail.q.is_empty() {
             mail.scheduled = false;
         } else {
@@ -1003,21 +1215,31 @@ fn worker_loop(
 }
 
 /// Evaluate one drained mailbox batch (all same stream) and answer every
-/// request, stamping per-stream sequence numbers in submission order.
+/// request with its pre-reserved sequence number.  `answered` is bumped
+/// after each response so the supervisor in [`worker_loop`] can answer
+/// exactly the unanswered tail if this unwinds mid-group.
 #[allow(clippy::too_many_arguments)]
 fn process_group(
     entry: &StreamEntry,
-    group: &[ActRequest],
+    group: &[(u64, ActRequest)],
     bank: &mut UnitBank,
     concat: &mut Vec<i32>,
     group_out: &mut Vec<i32>,
     metrics: &Metrics,
     offload: &Option<Rc<RefCell<PjrtOffload>>>,
     default_kind: WorkerUnitKind,
+    answered: &Cell<usize>,
 ) {
     let sid = entry.id;
-    let next_seq = || entry.seq.fetch_add(1, Ordering::Relaxed) + 1;
-    let scfg = entry.cfg.read().unwrap().clone();
+    let _ = fault::fire("worker.eval.delay");
+    let _ = fault::fire("worker.eval.panic");
+    let reply_all_error = |err: StreamError| {
+        for (seq, r) in group.iter().skip(answered.get()) {
+            respond_error(r, err.clone(), metrics, *seq);
+            answered.set(answered.get() + 1);
+        }
+    };
+    let scfg = read_or_recover(&entry.cfg).clone();
     let want = scfg
         .unit
         .map(WorkerUnitKind::Registry)
@@ -1026,17 +1248,10 @@ fn process_group(
     // trait reconfigure can panic the worker
     if let WorkerUnitKind::Registry(k) = want {
         if let Err(e) = k.check(&scfg.regs, scfg.kind) {
-            for r in group {
-                respond_error(
-                    r,
-                    StreamError::Rejected {
-                        stream: sid,
-                        reason: format!("{e:#}"),
-                    },
-                    metrics,
-                    next_seq(),
-                );
-            }
+            reply_all_error(StreamError::Rejected {
+                stream: sid,
+                reason: format!("{e:#}"),
+            });
             return;
         }
     }
@@ -1049,30 +1264,59 @@ fn process_group(
         None => true,
     };
     if stale {
+        // Integrity gate on the runtime reconfiguration: `load` models
+        // the register words crossing to the unit (the copy a bit
+        // upset — or the `.flip` fault — corrupts).  Verified against
+        // the checksum pinned at registration plus the structural
+        // validity rules; corruption quarantines the resident unit and
+        // repairs from the pinned registration.
+        let mut load = scfg.regs.clone();
+        let _ = fault::flip_registers("unit.reconfigure.flip", &mut load);
+        let load = if load.fletcher32() != scfg.pinned_sum || load.validate().is_err() {
+            metrics.flips_detected.fetch_add(1, Ordering::Relaxed);
+            bank.remove(sid);
+            let pristine = read_or_recover(&entry.cfg).regs.clone();
+            if pristine.fletcher32() != scfg.pinned_sum || pristine.validate().is_err() {
+                // the registration itself is corrupt: a deterministic
+                // config error the client must repair by re-registering
+                reply_all_error(StreamError::Rejected {
+                    stream: sid,
+                    reason: "register file failed its integrity check (checksum/validity); re-register the stream".into(),
+                });
+                return;
+            }
+            metrics.faults_recovered.fetch_add(1, Ordering::Relaxed);
+            pristine
+        } else {
+            load
+        };
+        // transient reconfigure failure (the `.err` injection point, or
+        // any future fallible register write): typed WorkerFault — the
+        // config itself is fine, so a retry is safe — and the unit is
+        // quarantined for a rebuild on next use
+        if fault::fire("unit.reconfigure.err").is_err() {
+            metrics.faults_recovered.fetch_add(1, Ordering::Relaxed);
+            bank.remove(sid);
+            reply_all_error(StreamError::WorkerFault { stream: sid });
+            return;
+        }
         bank.make_room(sid);
         let (unit, cost) = match bank.remove(sid) {
             // same backend: replay the runtime reconfiguration on the
             // existing unit (counts flush costs etc.)
             Some(mut c) if c.unit_kind == want => {
-                let cost = c.unit.reconfigure(&scfg.regs, scfg.kind);
+                let cost = c.unit.reconfigure(&load, scfg.kind);
                 (c.unit, cost)
             }
             // new stream or backend change: build a fresh unit and
             // charge the register-write floor for loading it
-            _ => match make_unit(want, &scfg.regs, scfg.kind, offload) {
-                Ok(u) => (u, reconfigure_cost(&scfg.regs)),
+            _ => match make_unit(want, &load, scfg.kind, offload) {
+                Ok(u) => (u, reconfigure_cost(&load)),
                 Err(e) => {
-                    for r in group {
-                        respond_error(
-                            r,
-                            StreamError::Rejected {
-                                stream: sid,
-                                reason: format!("{e:#}"),
-                            },
-                            metrics,
-                            next_seq(),
-                        );
-                    }
+                    reply_all_error(StreamError::Rejected {
+                        stream: sid,
+                        reason: format!("{e:#}"),
+                    });
                     return;
                 }
             },
@@ -1095,26 +1339,28 @@ fn process_group(
     if group.len() == 1 {
         // single request: evaluate straight into the response's own
         // buffer (the response owns its output)
-        let r = &group[0];
+        let (seq, r) = &group[0];
         let mut data = Vec::new();
         let stats = cached.unit.eval_batch(&r.data, &mut data);
         metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
-        respond(r, data, metrics, next_seq());
+        respond(r, data, metrics, *seq);
+        answered.set(answered.get() + 1);
     } else {
         // coalesced same-stream group: one contiguous stream through
         // the unit (amortizes dispatch and — for the cycle-accurate
         // backends — the pipeline fill), then split the outputs back
         // per request, in mailbox (= submission) order
         concat.clear();
-        for r in group {
+        for (_, r) in group {
             concat.extend_from_slice(&r.data);
         }
         let stats = cached.unit.eval_batch(concat, group_out);
         metrics.sim_cycles.fetch_add(stats.cycles, Ordering::Relaxed);
         let mut off = 0usize;
-        for r in group {
+        for (seq, r) in group {
             let next = off + r.data.len();
-            respond(r, group_out[off..next].to_vec(), metrics, next_seq());
+            respond(r, group_out[off..next].to_vec(), metrics, *seq);
+            answered.set(answered.get() + 1);
             off = next;
         }
     }

@@ -160,6 +160,84 @@ impl GrauRegisters {
         let lo = self.shift_lo as i32 + self.n_shifts as i32 - 1;
         format!("(2^-{lo} ~ 2^-{hi})")
     }
+
+    /// Structural validity of the register file: the invariants every
+    /// fitted configuration satisfies, checked so a corrupted file (a
+    /// bit upset in a deployed "bitstream", a truncated artifact) is
+    /// detected before it silently evaluates garbage.
+    ///
+    /// `eval` itself tolerates unsorted thresholds, so this is *not*
+    /// called on the hot path — only when register state crosses a
+    /// trust boundary (descriptor load, service reconfigure).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !(1..=MAX_SEGMENTS).contains(&self.n_segments) {
+            return Err(format!("n_segments {} outside 1..={MAX_SEGMENTS}", self.n_segments));
+        }
+        if !matches!(self.n_shifts, 4 | 8 | 16) {
+            return Err(format!("n_shifts {} not one of 4/8/16", self.n_shifts));
+        }
+        if self.shift_lo as u32 + self.n_shifts as u32 > 32 {
+            return Err(format!(
+                "shift window [{}, {}) exceeds 32-bit datapath",
+                self.shift_lo,
+                self.shift_lo as u32 + self.n_shifts as u32
+            ));
+        }
+        let used = &self.thresholds[..self.n_segments - 1];
+        for (i, w) in used.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return Err(format!(
+                    "thresholds not monotone: t[{i}]={} > t[{}]={}",
+                    w[0],
+                    i + 1,
+                    w[1]
+                ));
+            }
+        }
+        for j in 0..self.n_segments {
+            if self.sign[j] != 1 && self.sign[j] != -1 {
+                return Err(format!("sign[{j}]={} not in {{-1, 1}}", self.sign[j]));
+            }
+            if self.mask[j] >> self.n_shifts != 0 {
+                return Err(format!(
+                    "mask[{j}]={:#x} sets bits outside the {}-wide shift window",
+                    self.mask[j], self.n_shifts
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Fletcher-32 checksum over the canonical *used-slot* word stream
+    /// (header fields, used thresholds, then x0/y0/sign/mask for the
+    /// used segments).  Unused pad slots are excluded so two register
+    /// files that evaluate identically checksum identically.  Stored
+    /// in `UnitDescriptor` JSON and pinned per stream by the service
+    /// to detect register-file corruption.
+    pub fn fletcher32(&self) -> u32 {
+        let mut words: Vec<u32> = Vec::with_capacity(4 + 5 * MAX_SEGMENTS);
+        words.push(self.n_bits as u32);
+        words.push(self.n_segments as u32);
+        words.push(self.shift_lo as u32);
+        words.push(self.n_shifts as u32);
+        for &t in &self.thresholds[..self.n_segments - 1] {
+            words.push(t as u32);
+        }
+        for j in 0..self.n_segments {
+            words.push(self.x0[j] as u32);
+            words.push(self.y0[j] as u32);
+            words.push(self.sign[j] as u32);
+            words.push(self.mask[j]);
+        }
+        let (mut s1, mut s2) = (0u32, 0u32);
+        for w in words {
+            for half in [w & 0xffff, w >> 16] {
+                s1 = (s1 + half) % 65535;
+                s2 = (s2 + s1) % 65535;
+            }
+        }
+        (s2 << 16) | s1
+    }
 }
 
 #[cfg(test)]
@@ -232,5 +310,48 @@ mod tests {
     fn exponent_range_string() {
         let r = GrauRegisters::new(8, 4, 7, 8);
         assert_eq!(r.exponent_range(), "(2^-14 ~ 2^-7)");
+    }
+
+    #[test]
+    fn validate_accepts_fitted_shapes() {
+        assert_eq!(demo_regs().validate(), Ok(()));
+        assert_eq!(GrauRegisters::new(8, 1, 0, 4).validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_corruption() {
+        let mut r = demo_regs();
+        r.thresholds[1] = -400; // breaks monotonicity (t[0] = -300)
+        assert!(r.validate().unwrap_err().contains("monotone"));
+
+        let mut r = demo_regs();
+        r.sign[2] = 3;
+        assert!(r.validate().unwrap_err().contains("sign"));
+
+        let mut r = demo_regs();
+        r.mask[0] |= 1 << 10; // n_shifts = 4: bit 10 is outside the window
+        assert!(r.validate().unwrap_err().contains("shift window"));
+
+        let mut r = demo_regs();
+        r.shift_lo = 30; // 30 + 4 > 32
+        assert!(r.validate().unwrap_err().contains("datapath"));
+    }
+
+    #[test]
+    fn checksum_covers_used_slots_only() {
+        let r = demo_regs();
+        let base = r.fletcher32();
+        assert_eq!(base, r.clone().fletcher32(), "deterministic");
+
+        // Mutating a *used* slot changes the sum...
+        let mut m = r.clone();
+        m.y0[3] ^= 1;
+        assert_ne!(m.fletcher32(), base);
+
+        // ...mutating a pad slot beyond n_segments does not.
+        let mut p = r.clone();
+        p.mask[7] = 0xdead;
+        p.x0[7] = 42;
+        assert_eq!(p.fletcher32(), base);
     }
 }

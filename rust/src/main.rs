@@ -123,6 +123,13 @@ fn run() -> Result<()> {
             }
         }
         "serve" => {
+            // chaos drills: GRAU_FAULTS=seed:3,worker.eval.panic:0.02,...
+            // arms the seeded fault-injection plan for this process
+            let _faults = grau::util::fault::FaultPlan::from_env()?
+                .map(grau::util::fault::arm);
+            if _faults.is_some() {
+                println!("fault injection armed from GRAU_FAULTS");
+            }
             let backend = match args.get_or("backend", "functional") {
                 "cyclesim" => Backend::CycleSim,
                 "pjrt" => Backend::Pjrt,
@@ -188,13 +195,24 @@ fn run() -> Result<()> {
             let mut rng = Rng::new(1);
             let t0 = std::time::Instant::now();
             let mut pend = Vec::new();
+            // under injection some responses are typed faults — count
+            // them instead of aborting the drill
+            let mut faulted = 0u64;
             for i in 0..n_req {
                 let data: Vec<i32> =
                     (0..chunk).map(|_| rng.range_i64(-3000, 3000) as i32).collect();
-                pend.push(handles[i % handles.len()].submit(data)?);
+                match handles[i % handles.len()].submit(data) {
+                    Ok(p) => pend.push(p),
+                    // a quarantined stream rejects new submits; under an
+                    // armed plan that is an expected drill casualty
+                    Err(_) if _faults.is_some() => faulted += 1,
+                    Err(e) => return Err(e.into()),
+                }
             }
             for p in pend {
-                p.recv()?;
+                if p.recv().is_err() {
+                    faulted += 1;
+                }
             }
             let dt = t0.elapsed().as_secs_f64();
             let m = svc.shutdown();
@@ -219,6 +237,21 @@ fn run() -> Result<()> {
                 m.p999_latency_us(),
                 m.latency_us_max
             );
+            if faulted > 0
+                || m.faults_recovered + m.worker_panics + m.expired + m.flips_detected + m.quarantined
+                    > 0
+            {
+                println!(
+                    "fault drill: {} error responses; recovered {} (worker panics {}, \
+                     flips detected {}), expired {}, quarantined {}",
+                    faulted,
+                    m.faults_recovered,
+                    m.worker_panics,
+                    m.flips_detected,
+                    m.expired,
+                    m.quarantined
+                );
+            }
         }
         "explore" => {
             use grau::hw::dse::{ExploreGrid, Explorer, ExplorerOptions};

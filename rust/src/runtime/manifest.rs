@@ -232,9 +232,11 @@ impl DescriptorBank {
         Ok(bank)
     }
 
-    /// Write the bank to a JSON file.
+    /// Write the bank to a JSON file (atomically: staged in a
+    /// same-directory temp file and renamed into place, so a crash
+    /// mid-write can never leave a truncated bank on disk).
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())
+        crate::util::fsio::atomic_write(path, &self.to_json().to_string())
             .with_context(|| format!("write unit bank {path:?}"))
     }
 
@@ -242,6 +244,8 @@ impl DescriptorBank {
     /// one malformed entry fails the whole load with its key in the
     /// error chain).
     pub fn load(path: &Path) -> Result<DescriptorBank> {
+        crate::util::fault::fire("bank.load.err")
+            .with_context(|| format!("load unit bank {path:?}"))?;
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read unit bank {path:?}"))?;
         let j = Json::parse(&text).with_context(|| format!("parse unit bank {path:?}"))?;

@@ -1,0 +1,504 @@
+//! Deterministic fault injection for the service stack.
+//!
+//! A [`FaultPlan`] names *injection points* — stable string identifiers
+//! compiled into the worker loop, queue push/pop, unit reconfigure, and
+//! descriptor-bank load paths — and assigns each a firing probability
+//! drawn from a per-point PRNG stream seeded from `(plan seed, point
+//! name)`.  The same seed therefore produces the same fault schedule on
+//! every run, which is what lets `service_faults.rs` assert exact
+//! accounting under chaos.
+//!
+//! The point *name suffix* selects the fault kind (the naming
+//! convention documented in ARCHITECTURE.md §Fault tolerance):
+//!
+//! | suffix   | effect at the site                                   |
+//! |----------|------------------------------------------------------|
+//! | `.panic` | `panic_any(InjectedFault)` — exercises supervision   |
+//! | `.delay` | sleep `delay_ms` — exercises deadlines               |
+//! | `.err`   | return a spurious `Err` — exercises typed fallbacks  |
+//! | `.flip`  | flip one register-file bit — exercises integrity     |
+//!
+//! When no plan is armed every site is a single relaxed atomic load —
+//! the disarmed fault layer adds zero observable overhead.
+//!
+//! Arm programmatically ([`arm`], RAII-disarmed) or from the
+//! environment: `GRAU_FAULTS=seed:3,delay_ms:20,worker.eval.panic:0.02`
+//! with entries `name:probability[:max_fires]`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once, RwLock};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::hw::GrauRegisters;
+use crate::util::rng::Rng;
+use crate::util::sync::{lock_or_recover, read_or_recover, write_or_recover};
+
+/// Panic payload used by `.panic` points.  The filtering panic hook
+/// (installed on first [`arm`]) suppresses the default stderr report
+/// for this payload only, so seeded chaos runs don't spew backtraces
+/// while real panics still print.
+#[derive(Debug)]
+pub struct InjectedFault(pub String);
+
+/// What a point does when it fires — inferred from the name suffix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Panic,
+    Delay,
+    SpuriousErr,
+    BitFlip,
+}
+
+impl FaultKind {
+    fn from_name(name: &str) -> Option<FaultKind> {
+        if name.ends_with(".panic") {
+            Some(FaultKind::Panic)
+        } else if name.ends_with(".delay") {
+            Some(FaultKind::Delay)
+        } else if name.ends_with(".err") {
+            Some(FaultKind::SpuriousErr)
+        } else if name.ends_with(".flip") {
+            Some(FaultKind::BitFlip)
+        } else {
+            None
+        }
+    }
+}
+
+struct FaultPoint {
+    kind: FaultKind,
+    prob: f64,
+    /// Stop firing after this many hits (None = unbounded).
+    limit: Option<u64>,
+    fired: AtomicU64,
+    rng: Mutex<Rng>,
+}
+
+/// A seeded set of armed injection points.
+pub struct FaultPlan {
+    seed: u64,
+    delay_ms: u64,
+    points: HashMap<String, FaultPoint>,
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, delay_ms: 10, points: HashMap::new() }
+    }
+
+    /// Injected sleep length for `.delay` points (default 10 ms).
+    pub fn delay_ms(mut self, ms: u64) -> Self {
+        self.delay_ms = ms;
+        self
+    }
+
+    /// Add a point firing with probability `prob`, unbounded.
+    ///
+    /// Panics if the name carries no recognized kind suffix — a typo'd
+    /// point that silently never fires would make a chaos run
+    /// meaningless.
+    pub fn point(self, name: &str, prob: f64) -> Self {
+        self.point_limited(name, prob, None)
+    }
+
+    /// Add a point that stops firing after `limit` hits.
+    pub fn point_limited(mut self, name: &str, prob: f64, limit: Option<u64>) -> Self {
+        let kind = FaultKind::from_name(name).unwrap_or_else(|| {
+            panic!("fault point {name:?} has no .panic/.delay/.err/.flip suffix")
+        });
+        let stream = Rng::new(
+            self.seed
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add(fnv1a(name)),
+        );
+        self.points.insert(
+            name.to_string(),
+            FaultPoint {
+                kind,
+                prob: prob.clamp(0.0, 1.0),
+                limit,
+                fired: AtomicU64::new(0),
+                rng: Mutex::new(stream),
+            },
+        );
+        self
+    }
+
+    /// Parse `GRAU_FAULTS`-style specs:
+    /// `seed:3,delay_ms:20,worker.eval.panic:0.02,unit.reconfigure.flip:1:1`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut delay_ms = 10u64;
+        let mut entries: Vec<(String, f64, Option<u64>)> = Vec::new();
+        for raw in spec.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let mut parts = item.split(':');
+            let name = parts.next().unwrap_or("").trim();
+            let val = parts.next().map(str::trim);
+            let extra = parts.next().map(str::trim);
+            match name {
+                "seed" => {
+                    seed = val
+                        .and_then(|v| v.parse().ok())
+                        .ok_or_else(|| Error::msg(format!("bad seed in fault spec {item:?}")))?;
+                }
+                "delay_ms" => {
+                    delay_ms = val.and_then(|v| v.parse().ok()).ok_or_else(|| {
+                        Error::msg(format!("bad delay_ms in fault spec {item:?}"))
+                    })?;
+                }
+                _ => {
+                    if FaultKind::from_name(name).is_none() {
+                        return Err(Error::msg(format!(
+                            "fault point {name:?} has no .panic/.delay/.err/.flip suffix"
+                        )));
+                    }
+                    let prob: f64 = val.and_then(|v| v.parse().ok()).ok_or_else(|| {
+                        Error::msg(format!("bad probability in fault spec {item:?}"))
+                    })?;
+                    let limit = match extra {
+                        Some(e) => Some(e.parse().map_err(|_| {
+                            Error::msg(format!("bad fire limit in fault spec {item:?}"))
+                        })?),
+                        None => None,
+                    };
+                    entries.push((name.to_string(), prob, limit));
+                }
+            }
+        }
+        let mut plan = FaultPlan::new(seed).delay_ms(delay_ms);
+        for (name, prob, limit) in entries {
+            plan = plan.point_limited(&name, prob, limit);
+        }
+        Ok(plan)
+    }
+
+    /// Build from the `GRAU_FAULTS` environment variable; `Ok(None)`
+    /// when unset or empty.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("GRAU_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Should `name` fire now?  Deterministic per (seed, name, call
+    /// index); bumps the fired counter on a hit.
+    fn roll(&self, name: &str) -> Option<(FaultKind, u64)> {
+        let p = self.points.get(name)?;
+        if let Some(limit) = p.limit {
+            if p.fired.load(Ordering::Relaxed) >= limit {
+                return None;
+            }
+        }
+        let hit = p.prob >= 1.0 || lock_or_recover(&p.rng).uniform() < p.prob;
+        if !hit {
+            return None;
+        }
+        if let Some(limit) = p.limit {
+            // Claim a slot; back out on over-claim from a racing thread.
+            if p.fired.fetch_add(1, Ordering::Relaxed) >= limit {
+                p.fired.fetch_sub(1, Ordering::Relaxed);
+                return None;
+            }
+        } else {
+            p.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        Some((p.kind, self.delay_ms))
+    }
+
+    /// How many times `name` has fired under this plan.
+    pub fn fired(&self, name: &str) -> u64 {
+        self.points
+            .get(name)
+            .map(|p| p.fired.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Total fires across all points.
+    pub fn total_fired(&self) -> u64 {
+        self.points.values().map(|p| p.fired.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: RwLock<Option<Arc<FaultPlan>>> = RwLock::new(None);
+static HOOK: Once = Once::new();
+
+/// RAII guard returned by [`arm`]; dropping it disarms the plan.
+pub struct Armed {
+    plan: Arc<FaultPlan>,
+}
+
+impl Armed {
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// Arm `plan` globally.  Only one plan is active at a time; arming
+/// replaces any previous plan.  Installs (once) a panic hook that
+/// suppresses the default report for [`InjectedFault`] payloads.
+pub fn arm(plan: FaultPlan) -> Armed {
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedFault>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+    let plan = Arc::new(plan);
+    *write_or_recover(&PLAN) = Some(Arc::clone(&plan));
+    ARMED.store(true, Ordering::Release);
+    Armed { plan }
+}
+
+/// Disarm whatever plan is active (no-op when already disarmed).
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *write_or_recover(&PLAN) = None;
+}
+
+/// Fast disarmed check — one relaxed atomic load, the only cost a
+/// fault site pays in production.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// The currently armed plan, if any.
+pub fn active_plan() -> Option<Arc<FaultPlan>> {
+    if !armed() {
+        return None;
+    }
+    read_or_recover(&PLAN).clone()
+}
+
+/// Execute the injection point `name`.
+///
+/// Disarmed (the common case) this is a single atomic load returning
+/// `Ok(())`.  Armed, a hit performs the kind's effect: `.panic` points
+/// unwind with [`InjectedFault`], `.delay` points sleep, `.err` points
+/// return a spurious error for the caller to propagate.  `.flip`
+/// points are driven through [`flip_registers`] instead and are a
+/// no-op here.
+#[inline]
+pub fn fire(name: &str) -> Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    fire_slow(name)
+}
+
+#[cold]
+fn fire_slow(name: &str) -> Result<()> {
+    let Some(plan) = active_plan() else { return Ok(()) };
+    let Some((kind, delay_ms)) = plan.roll(name) else { return Ok(()) };
+    match kind {
+        FaultKind::Panic => {
+            std::panic::panic_any(InjectedFault(name.to_string()));
+        }
+        FaultKind::Delay => {
+            std::thread::sleep(Duration::from_millis(delay_ms));
+            Ok(())
+        }
+        FaultKind::SpuriousErr => Err(Error::msg(format!("injected fault at {name}"))),
+        FaultKind::BitFlip => Ok(()),
+    }
+}
+
+/// Execute a `.flip` point against a register file: on a hit, flips
+/// one deterministically chosen bit in a *used* slot (so the
+/// corruption is visible to the checksum, which covers used slots
+/// only) and returns `true`.
+pub fn flip_registers(name: &str, regs: &mut GrauRegisters) -> bool {
+    if !armed() {
+        return false;
+    }
+    let Some(plan) = active_plan() else { return false };
+    let Some((kind, _)) = plan.roll(name) else { return false };
+    if kind != FaultKind::BitFlip {
+        return false;
+    }
+    // Derive the target from the point's RNG stream so the flip site
+    // is deterministic per (seed, name, hit index).
+    let p = plan.points.get(name).expect("rolled point exists");
+    let mut rng = lock_or_recover(&p.rng);
+    let n = regs.n_segments;
+    let field = if n > 1 { rng.range_usize(0, 5) } else { 1 + rng.range_usize(0, 4) };
+    let bit = rng.range_usize(0, 31) as u32;
+    match field {
+        0 => {
+            let j = rng.range_usize(0, n - 1);
+            regs.thresholds[j] ^= 1i32 << bit;
+        }
+        1 => {
+            let j = rng.range_usize(0, n);
+            regs.x0[j] ^= 1i32 << bit;
+        }
+        2 => {
+            let j = rng.range_usize(0, n);
+            regs.y0[j] ^= 1i32 << bit;
+        }
+        3 => {
+            let j = rng.range_usize(0, n);
+            regs.sign[j] ^= 1i32 << bit;
+        }
+        _ => {
+            let j = rng.range_usize(0, n);
+            regs.mask[j] ^= 1u32 << bit;
+        }
+    }
+    true
+}
+
+/// Fires reported by the armed plan for `name` (0 when disarmed).
+pub fn fired(name: &str) -> u64 {
+    active_plan().map(|p| p.fired(name)).unwrap_or(0)
+}
+
+/// Total fires across all points of the armed plan.
+pub fn total_fired() -> u64 {
+    active_plan().map(|p| p.total_fired()).unwrap_or(0)
+}
+
+/// Injection-point site marker: `fault_point!("worker.eval.panic")?`
+/// expands to [`fire`] behind the disarmed fast path.
+#[macro_export]
+macro_rules! fault_point {
+    ($name:expr) => {
+        $crate::util::fault::fire($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // The armed plan is process-global; tests in this module serialize
+    // on a private mutex so `cargo test`'s parallel runner cannot
+    // interleave arms.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn suffix_selects_kind() {
+        assert_eq!(FaultKind::from_name("a.b.panic"), Some(FaultKind::Panic));
+        assert_eq!(FaultKind::from_name("a.delay"), Some(FaultKind::Delay));
+        assert_eq!(FaultKind::from_name("a.err"), Some(FaultKind::SpuriousErr));
+        assert_eq!(FaultKind::from_name("a.flip"), Some(FaultKind::BitFlip));
+        assert_eq!(FaultKind::from_name("a.nope"), None);
+    }
+
+    #[test]
+    fn parse_spec_roundtrip() {
+        let plan =
+            FaultPlan::parse("seed:3, delay_ms:20, worker.eval.panic:0.02, queue.pop.delay:1:4")
+                .unwrap();
+        assert_eq!(plan.seed(), 3);
+        assert_eq!(plan.delay_ms, 20);
+        assert_eq!(plan.points.len(), 2);
+        assert_eq!(plan.points["queue.pop.delay"].limit, Some(4));
+        assert!(FaultPlan::parse("bogus.point:0.5").is_err());
+        assert!(FaultPlan::parse("a.panic:notaprob").is_err());
+    }
+
+    #[test]
+    fn disarmed_is_inert() {
+        let _g = lock_or_recover(&GATE);
+        disarm();
+        assert!(!armed());
+        assert!(fire("worker.eval.panic").is_ok());
+        let mut regs = GrauRegisters::new(8, 2, 0, 4);
+        assert!(!flip_registers("unit.reconfigure.flip", &mut regs));
+        assert_eq!(total_fired(), 0);
+    }
+
+    #[test]
+    fn err_point_fires_deterministically() {
+        let _g = lock_or_recover(&GATE);
+        let armed_guard = arm(FaultPlan::new(7).point("bank.load.err", 1.0));
+        assert!(fire("bank.load.err").is_err());
+        assert!(fire("unregistered.err").is_ok());
+        assert_eq!(armed_guard.plan().fired("bank.load.err"), 1);
+        drop(armed_guard);
+        assert!(!armed());
+        assert!(fire("bank.load.err").is_ok());
+    }
+
+    #[test]
+    fn limit_caps_fires() {
+        let _g = lock_or_recover(&GATE);
+        let a = arm(FaultPlan::new(1).point_limited("x.err", 1.0, Some(2)));
+        assert!(fire("x.err").is_err());
+        assert!(fire("x.err").is_err());
+        assert!(fire("x.err").is_ok());
+        assert_eq!(a.plan().fired("x.err"), 2);
+    }
+
+    #[test]
+    fn panic_point_unwinds_with_typed_payload() {
+        let _g = lock_or_recover(&GATE);
+        let _a = arm(FaultPlan::new(2).point("w.panic", 1.0));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _ = fire("w.panic");
+        }));
+        let payload = r.expect_err("must unwind");
+        let f = payload.downcast_ref::<InjectedFault>().expect("typed payload");
+        assert_eq!(f.0, "w.panic");
+    }
+
+    #[test]
+    fn flips_hit_used_slots_and_change_checksum() {
+        let _g = lock_or_recover(&GATE);
+        let _a = arm(FaultPlan::new(5).point("u.flip", 1.0));
+        let mut regs = GrauRegisters::new(8, 4, 0, 8);
+        regs.thresholds[..3].copy_from_slice(&[-10, 0, 10]);
+        let before = regs.clone();
+        let sum_before = regs.fletcher32();
+        assert!(flip_registers("u.flip", &mut regs));
+        assert_ne!(regs, before);
+        assert_ne!(regs.fletcher32(), sum_before);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let _g = lock_or_recover(&GATE);
+        let run = |seed: u64| -> Vec<bool> {
+            let _a = arm(FaultPlan::new(seed).point("s.err", 0.5));
+            (0..64).map(|_| fire("s.err").is_err()).collect()
+        };
+        let a = run(9);
+        let b = run(9);
+        let c = run(10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().any(|&x| x));
+        assert!(a.iter().any(|&x| !x));
+    }
+}

@@ -1,0 +1,87 @@
+//! Durable file-system helpers.
+//!
+//! Artifact writes (descriptor banks, exported fronts) must never leave
+//! a half-written JSON file on disk: a reader that races a crash would
+//! load a truncated bank and serve garbage.  `atomic_write` stages the
+//! contents in a temporary file in the *same directory* (renames across
+//! filesystems are not atomic) and publishes it with `fs::rename`,
+//! which POSIX guarantees replaces the target atomically.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::{Context, Result};
+
+/// Write `contents` to `path` atomically: stage in a same-directory
+/// temp file, flush, then rename over the target.  On any error the
+/// temp file is removed and the previous contents of `path` (if any)
+/// are left untouched.
+pub fn atomic_write(path: &Path, contents: &str) -> Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("artifact");
+    let tmp_name = format!(".{}.tmp.{}", file_name, std::process::id());
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+
+    let stage = (|| -> Result<()> {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating temp file {}", tmp.display()))?;
+        f.write_all(contents.as_bytes())
+            .with_context(|| format!("writing temp file {}", tmp.display()))?;
+        f.sync_all()
+            .with_context(|| format!("syncing temp file {}", tmp.display()))?;
+        drop(f);
+        fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), path.display())
+        })?;
+        Ok(())
+    })();
+
+    if stage.is_err() {
+        let _ = fs::remove_file(&tmp);
+    }
+    stage
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = std::env::temp_dir().join(format!("grau-fsio-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bank.json");
+        atomic_write(&path, "first").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "first");
+        atomic_write(&path, "second").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "second");
+        // No temp droppings left behind.
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_write_preserves_original() {
+        let dir = std::env::temp_dir().join(format!("grau-fsio-keep-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bank.json");
+        atomic_write(&path, "original").unwrap();
+        // Writing into a missing directory fails before touching `path`.
+        let bad = dir.join("nope").join("bank.json");
+        assert!(atomic_write(&bad, "x").is_err());
+        assert_eq!(fs::read_to_string(&path).unwrap(), "original");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

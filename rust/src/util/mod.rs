@@ -4,15 +4,19 @@
 //! conveniences a networked project would pull in (serde, clap,
 //! criterion, rayon, rand) are implemented here: a JSON codec, a CLI
 //! parser, a deterministic PRNG, statistics helpers, synthetic dataset
-//! generators, a scoped thread pool and a criterion-style benchmark
-//! harness.  Error handling lives in the sibling
-//! [`error`](crate::error) module.
+//! generators, a scoped thread pool, a criterion-style benchmark
+//! harness, poison-tolerant locking helpers, atomic artifact writes,
+//! and a seeded fault-injection plan.  Error handling lives in the
+//! sibling [`error`](crate::error) module.
 
 pub mod bench;
 pub mod cli;
 pub mod dataset;
+pub mod fault;
+pub mod fsio;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 pub mod threadpool;

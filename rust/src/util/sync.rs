@@ -1,0 +1,89 @@
+//! Poison-tolerant locking helpers.
+//!
+//! A panicking worker must never wedge unrelated tenants: the standard
+//! library marks a `Mutex`/`RwLock` as *poisoned* when a holder panics,
+//! and every later `lock().unwrap()` then panics too, cascading one
+//! fault across the whole coordinator.  The data guarded by the
+//! coordinator's locks is always left in a consistent state between
+//! statements (queues, maps, counters — no multi-step invariants held
+//! across a panic point), so recovery is safe: take the guard out of
+//! the `PoisonError` and keep going.
+//!
+//! Every `lock().unwrap()` site in the service stack goes through these
+//! helpers so the policy lives in one place.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read_or_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write_or_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` that recovers the guard from poison.
+///
+/// Returns the re-acquired guard; the timed-out flag is dropped because
+/// every caller re-checks its wake condition in a loop anyway.
+pub fn wait_timeout_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Condvar, Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_after_panic() {
+        let m = Mutex::new(7_u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned());
+        let mut g = lock_or_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_panic() {
+        let l = RwLock::new(1_u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = l.write().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert_eq!(*read_or_recover(&l), 1);
+        *write_or_recover(&l) = 2;
+        assert_eq!(*read_or_recover(&l), 2);
+    }
+
+    #[test]
+    fn condvar_wait_recovers_guard() {
+        let m = Mutex::new(0_u32);
+        let cv = Condvar::new();
+        let g = lock_or_recover(&m);
+        let g = wait_timeout_or_recover(&cv, g, Duration::from_millis(1));
+        assert_eq!(*g, 0);
+    }
+}

@@ -6,6 +6,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+use crate::util::sync::{lock_or_recover, wait_timeout_or_recover};
+
 /// Run `f(&mut state, i)` for every `i in 0..n` across `threads` OS
 /// threads, where each worker thread owns one `state` value built by
 /// `init` at thread start.  This is the worker-local-arena primitive:
@@ -68,9 +70,9 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
     let pairs = std::sync::Mutex::new(Vec::with_capacity(n));
     parallel_for(n, threads, |i| {
         let v = f(i);
-        pairs.lock().unwrap().push((i, v));
+        lock_or_recover(&pairs).push((i, v));
     });
-    for (i, v) in pairs.into_inner().unwrap() {
+    for (i, v) in pairs.into_inner().unwrap_or_else(|e| e.into_inner()) {
         out[i] = Some(v);
     }
     out.into_iter().map(|o| o.unwrap()).collect()
@@ -121,7 +123,7 @@ impl<T> WorkQueues<T> {
     /// once a post-close scan finds every queue empty.
     pub fn push(&self, shard: usize, item: T) {
         let (lock, cv) = &self.shards[shard % self.shards.len()];
-        lock.lock().unwrap().push_back(item);
+        lock_or_recover(lock).push_back(item);
         cv.notify_one();
     }
 
@@ -133,14 +135,14 @@ impl<T> WorkQueues<T> {
         // 1. home queue
         {
             let (lock, _) = &self.shards[home];
-            if let Some(item) = lock.lock().unwrap().pop_front() {
+            if let Some(item) = lock_or_recover(lock).pop_front() {
                 return Pop::Item { item, stolen: false };
             }
         }
         // 2. steal scan
         for off in 1..n {
             let (lock, _) = &self.shards[(home + off) % n];
-            if let Some(item) = lock.lock().unwrap().pop_front() {
+            if let Some(item) = lock_or_recover(lock).pop_front() {
                 return Pop::Item { item, stolen: true };
             }
         }
@@ -150,8 +152,8 @@ impl<T> WorkQueues<T> {
         }
         // 4. park briefly on the home queue, then let caller retry
         let (lock, cv) = &self.shards[home];
-        let guard = lock.lock().unwrap();
-        let (mut guard, _timed_out) = cv.wait_timeout(guard, timeout).unwrap();
+        let guard = lock_or_recover(lock);
+        let mut guard = wait_timeout_or_recover(cv, guard, timeout);
         match guard.pop_front() {
             Some(item) => Pop::Item { item, stolen: false },
             None => Pop::Empty,
@@ -174,11 +176,11 @@ impl<T> WorkQueues<T> {
 
     /// Queued item count on one shard (diagnostic; racy by nature).
     pub fn len(&self, shard: usize) -> usize {
-        self.shards[shard % self.shards.len()].0.lock().unwrap().len()
+        lock_or_recover(&self.shards[shard % self.shards.len()].0).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.shards.iter().all(|(l, _)| l.lock().unwrap().is_empty())
+        self.shards.iter().all(|(l, _)| lock_or_recover(l).is_empty())
     }
 }
 

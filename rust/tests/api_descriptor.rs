@@ -170,6 +170,69 @@ fn malformed_and_wrong_version_descriptors_are_rejected() {
 }
 
 #[test]
+fn truncated_bank_file_is_rejected_and_saves_are_atomic() {
+    // a bank interrupted mid-write must never be accepted; the atomic
+    // (temp + rename) save path must leave neither droppings nor a
+    // half-replaced file behind
+    let mut rng = Rng::new(41);
+    let mut bank = DescriptorBank::new("atomic");
+    for i in 0..6 {
+        let regs = random_regs(&mut rng, -900, 900);
+        bank.insert(format!("u{i}"), UnitDescriptor::new(regs, ApproxKind::Apot));
+    }
+    let dir = std::env::temp_dir().join("grau_api_descriptor_atomic");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("bank.units.json");
+    bank.save(&path).expect("save bank");
+    // the staging temp was renamed away, not left beside the artifact
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+        .collect();
+    assert!(leftovers.is_empty(), "temp droppings: {leftovers:?}");
+
+    // simulate a crash mid-write: truncate the file at several points —
+    // every prefix must fail the load with a typed parse error
+    let full = std::fs::read_to_string(&path).unwrap();
+    for frac in [1, 3, 7] {
+        let cut = full.len() * frac / 8;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        assert!(
+            DescriptorBank::load(&path).is_err(),
+            "truncation at {cut}/{} bytes must be rejected",
+            full.len()
+        );
+    }
+
+    // re-saving over the damaged file atomically restores it whole
+    bank.save(&path).expect("re-save bank");
+    let loaded = DescriptorBank::load(&path).expect("reload");
+    assert_eq!(loaded, bank);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn on_disk_register_tampering_fails_the_checksum() {
+    // the descriptor carries a fletcher checksum over its used register
+    // slots: flipping a stored word on disk must be caught at load
+    let mut rng = Rng::new(42);
+    let d = UnitDescriptor::new(random_regs(&mut rng, -500, 500), ApproxKind::Apot);
+    let mut j = d.to_json();
+    if let Json::Obj(m) = &mut j {
+        if let Some(Json::Obj(r)) = m.get_mut("registers") {
+            if let Some(Json::Arr(y0)) = r.get_mut("y0") {
+                if let Some(Json::Num(v)) = y0.get_mut(0) {
+                    *v += 1.0;
+                }
+            }
+        }
+    }
+    let err = UnitDescriptor::parse(&j.to_string()).expect_err("tamper must fail");
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+}
+
+#[test]
 fn qnn_engine_runs_descriptor_banks_bit_exactly() {
     // acceptance path: fit every activation site of a synthetic QNN,
     // serialize the whole model as a descriptor bank through a file,

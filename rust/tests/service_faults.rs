@@ -1,0 +1,289 @@
+//! Chaos battery: the activation service under the seeded fault plan.
+//!
+//! Every test arms a deterministic [`FaultPlan`] and asserts the
+//! service's fault-tolerance contract: each submitted request gets
+//! exactly one response — a bit-exact payload or a *typed* error, never
+//! a hang and never a poisoned lock — counters reconcile with the
+//! plan's fired totals, and traffic after a fault is bit-exact with a
+//! fault-free run because quarantined units rebuild from their pinned
+//! registration.
+//!
+//! The armed plan is process-global, so the tests serialize on a
+//! private gate mutex.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use grau::act::{Activation, FoldedActivation};
+use grau::api::{RetryPolicy, ServiceBuilder, ServiceError};
+use grau::fit::pipeline::{fit_folded, FitOptions};
+use grau::fit::ApproxKind;
+use grau::hw::GrauRegisters;
+use grau::util::fault::{arm, FaultPlan};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    // a failed test poisons the gate; later tests must still run
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fitted(act: Activation) -> GrauRegisters {
+    let f = FoldedActivation::new(0.004, 0.0, act, 1.0 / 120.0, 8);
+    fit_folded(&f, -1000, 1000, FitOptions::default()).apot.regs
+}
+
+fn assert_bit_exact(regs: &GrauRegisters, input: &[i32], output: &[i32]) {
+    assert_eq!(input.len(), output.len());
+    for (x, y) in input.iter().zip(output) {
+        assert_eq!(*y, regs.eval(*x), "x={x}");
+    }
+}
+
+#[test]
+fn worker_panic_recovers_and_next_call_is_bit_exact() {
+    let _g = gate();
+    let guard = arm(FaultPlan::new(1).point_limited("worker.eval.panic", 1.0, Some(1)));
+    let svc = ServiceBuilder::new().workers(1).start();
+    let regs = fitted(Activation::Sigmoid);
+    let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let data: Vec<i32> = (-200..200).collect();
+
+    // the one armed panic lands on the first group: typed WorkerFault,
+    // nothing lost, nothing double-answered
+    let err = h.call(data.clone()).unwrap_err();
+    assert!(matches!(err, ServiceError::WorkerFault { .. }), "{err}");
+
+    // the unit was quarantined and rebuilds from the pinned
+    // registration: the very next call is bit-exact with fault-free
+    let resp = h.call(data.clone()).unwrap();
+    assert_bit_exact(&regs, &data, &resp.data);
+    assert_eq!(resp.stream_seq, 2, "seq 1 was consumed by the faulted request");
+
+    assert_eq!(guard.plan().fired("worker.eval.panic"), 1);
+    drop(h);
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.worker_panics, 1);
+    assert!(m.faults_recovered >= 1);
+    assert_eq!(m.quarantined, 0, "a single fault must not evict the stream");
+}
+
+#[test]
+fn second_fault_in_window_quarantines_the_stream() {
+    let _g = gate();
+    // the .delay point (fires first in the group) holds each group open
+    // for 30 ms so all three submissions are queued before the second
+    // panic evicts; max_batch(1) forces one request per group
+    let _guard = arm(
+        FaultPlan::new(2)
+            .delay_ms(30)
+            .point("worker.eval.delay", 1.0)
+            .point_limited("worker.eval.panic", 1.0, Some(2)),
+    );
+    let svc = ServiceBuilder::new()
+        .workers(1)
+        .max_batch(1)
+        .fault_window(Duration::from_secs(10))
+        .start();
+    let regs = fitted(Activation::Relu);
+    let h = svc.register(regs, ApproxKind::Apot).unwrap();
+    let a = h.submit(vec![1, 2, 3, 4]).unwrap();
+    let b = h.submit(vec![5, 6, 7, 8]).unwrap();
+    let c = h.submit(vec![9, 10, 11, 12]).unwrap();
+
+    let ea = a.recv().unwrap_err();
+    assert!(matches!(ea, ServiceError::WorkerFault { .. }), "{ea}");
+    // the second panic is the second fault inside the window: the
+    // stream is evicted and its still-queued mail answered Quarantined
+    let eb = b.recv().unwrap_err();
+    assert!(matches!(eb, ServiceError::WorkerFault { .. }), "{eb}");
+    let ec = c.recv().unwrap_err();
+    assert!(matches!(ec, ServiceError::Quarantined { .. }), "{ec}");
+    // the eviction is visible to later submissions
+    let late = h.call(vec![13]).unwrap_err();
+    assert!(matches!(late, ServiceError::UnknownStream(_)), "{late}");
+
+    drop(h);
+    let m = svc.shutdown();
+    assert_eq!(m.worker_panics, 2);
+    assert_eq!(m.quarantined, 1);
+    assert_eq!(m.requests, 4, "three drilled + one bounced, all answered");
+}
+
+#[test]
+fn flip_on_reconfigure_is_detected_and_rebuilt_bit_exact() {
+    let _g = gate();
+    let _guard = arm(FaultPlan::new(5).point_limited("unit.reconfigure.flip", 1.0, Some(1)));
+    let svc = ServiceBuilder::new().workers(1).start();
+    let regs = fitted(Activation::Silu);
+    let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    // the flip corrupts the register words crossing to the unit on the
+    // first (building) reconfiguration; the checksum pinned at
+    // registration catches it and the load repairs from the pristine
+    // registry copy — the response is already bit-exact
+    let data: Vec<i32> = (-500..500).collect();
+    let resp = h.call(data.clone()).unwrap();
+    assert_bit_exact(&regs, &data, &resp.data);
+    drop(h);
+    let m = svc.shutdown();
+    assert_eq!(m.flips_detected, 1);
+    assert!(m.faults_recovered >= 1);
+    assert_eq!(m.quarantined, 0);
+}
+
+#[test]
+fn queued_request_past_deadline_expires_at_dequeue() {
+    let _g = gate();
+    // every group sleeps 50 ms, so the second (single-request) group is
+    // still queued when its 20 ms deadline fires
+    let _guard = arm(FaultPlan::new(4).delay_ms(50).point("worker.eval.delay", 1.0));
+    let svc = ServiceBuilder::new().workers(1).max_batch(1).start();
+    let regs = fitted(Activation::Sigmoid);
+    let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let data: Vec<i32> = (0..32).collect();
+    let served = h.submit(data.clone()).unwrap();
+    let expired = h
+        .submit_with_deadline(data.clone(), Duration::from_millis(20))
+        .unwrap();
+    let resp = served.recv().unwrap();
+    assert_bit_exact(&regs, &data, &resp.data);
+    let err = expired.recv().unwrap_err();
+    assert!(
+        matches!(err, ServiceError::Expired { waited_us, .. } if waited_us >= 20_000),
+        "{err}"
+    );
+    drop(h);
+    let m = svc.shutdown();
+    assert_eq!(m.expired, 1);
+    assert_eq!(m.requests, 2, "the expired request still got its one response");
+}
+
+#[test]
+fn reconfigure_err_is_typed_and_retryable() {
+    let _g = gate();
+    let _guard = arm(FaultPlan::new(6).point_limited("unit.reconfigure.err", 1.0, Some(1)));
+    let svc = ServiceBuilder::new().workers(1).start();
+    let regs = fitted(Activation::Relu);
+    let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    // attempt 1 hits the injected reconfigure error (typed WorkerFault,
+    // transient); the bounded-backoff retry then succeeds bit-exactly
+    let data: Vec<i32> = (-100..100).collect();
+    let resp = h.call_retry(data.clone(), &RetryPolicy::default()).unwrap();
+    assert_bit_exact(&regs, &data, &resp.data);
+    drop(h);
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 2, "one faulted attempt + one retry");
+    assert!(m.faults_recovered >= 1);
+    assert_eq!(m.worker_panics, 0, "the .err path recovers without unwinding");
+}
+
+#[test]
+fn panic_storm_across_shards_reconciles_counters() {
+    let _g = gate();
+    let guard = arm(FaultPlan::new(9).point("worker.eval.panic", 0.25));
+    let svc = ServiceBuilder::new()
+        .workers(4)
+        .shards(4)
+        .max_batch(256)
+        // a zero-width window keeps streams alive through the storm so
+        // every error stays a retryable WorkerFault
+        .fault_window(Duration::ZERO)
+        .start();
+    let acts = [
+        Activation::Relu,
+        Activation::Sigmoid,
+        Activation::Silu,
+        Activation::Relu,
+    ];
+    let regs: Vec<GrauRegisters> = acts.iter().map(|&a| fitted(a)).collect();
+    let handles: Vec<_> = regs
+        .iter()
+        .map(|r| svc.register(r.clone(), ApproxKind::Apot).unwrap())
+        .collect();
+    let total = 200usize;
+    let mut pending = Vec::new();
+    for i in 0..total {
+        let si = i % handles.len();
+        let data: Vec<i32> = (0..64).map(|k| (i as i32 * 7 + k) % 4000 - 2000).collect();
+        let p = handles[si].submit(data.clone()).unwrap();
+        pending.push((si, data, p));
+    }
+    // exactly one outcome per request: bit-exact payload or typed fault
+    let (mut oks, mut faults) = (0u64, 0u64);
+    for (si, data, p) in pending {
+        match p.recv() {
+            Ok(resp) => {
+                assert_bit_exact(&regs[si], &data, &resp.data);
+                oks += 1;
+            }
+            Err(ServiceError::WorkerFault { .. }) => faults += 1,
+            Err(other) => panic!("unexpected error under panic storm: {other}"),
+        }
+    }
+    assert_eq!(oks + faults, total as u64);
+    let fired = guard.plan().fired("worker.eval.panic");
+    assert!(fired > 0, "a 25% storm over {total} requests must land hits");
+    drop(handles);
+    // clean shutdown drain with the plan still armed
+    let m = svc.shutdown();
+    assert_eq!(m.requests, total as u64);
+    assert_eq!(m.worker_panics, fired, "one caught unwind per fired panic");
+    assert_eq!(m.faults_recovered, fired);
+    assert!(faults >= fired, "each unwind faults its whole group");
+    drop(guard);
+
+    // disarmed replay of the same traffic is fault-free and bit-exact
+    let svc = ServiceBuilder::new().workers(4).shards(4).start();
+    let h = svc.register(regs[0].clone(), ApproxKind::Apot).unwrap();
+    let data: Vec<i32> = (-800..800).collect();
+    let resp = h.call(data.clone()).unwrap();
+    assert_bit_exact(&regs[0], &data, &resp.data);
+    drop(h);
+    let m = svc.shutdown();
+    assert_eq!(m.worker_panics, 0);
+    assert_eq!(m.faults_recovered, 0);
+}
+
+#[test]
+fn env_spec_drives_a_drill_end_to_end() {
+    let _g = gate();
+    std::env::set_var("GRAU_FAULTS", "seed:3,delay_ms:1,worker.eval.panic:1:1");
+    let plan = FaultPlan::from_env().unwrap().expect("spec set");
+    std::env::remove_var("GRAU_FAULTS");
+    assert_eq!(plan.seed(), 3);
+    let _guard = arm(plan);
+    let svc = ServiceBuilder::new().workers(1).start();
+    let regs = fitted(Activation::Sigmoid);
+    let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let err = h.call(vec![1, 2, 3]).unwrap_err();
+    assert!(matches!(err, ServiceError::WorkerFault { .. }), "{err}");
+    let resp = h.call(vec![1, 2, 3]).unwrap();
+    assert_bit_exact(&regs, &[1, 2, 3], &resp.data);
+    drop(h);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_queued_work_under_injection() {
+    let _g = gate();
+    let _guard = arm(
+        FaultPlan::new(11)
+            .delay_ms(2)
+            .point("queue.push.delay", 0.5)
+            .point("queue.pop.delay", 0.5),
+    );
+    let svc = ServiceBuilder::new().workers(2).start();
+    let regs = fitted(Activation::Relu);
+    let h = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let data: Vec<i32> = (0..50).collect();
+    let pending: Vec<_> = (0..40).map(|_| h.submit(data.clone()).unwrap()).collect();
+    // shutdown with injected queue jitter still drains every request
+    let m = svc.shutdown();
+    assert_eq!(m.requests, 40);
+    for p in pending {
+        let resp = p.recv().unwrap();
+        assert_bit_exact(&regs, &data, &resp.data);
+    }
+    drop(h);
+}

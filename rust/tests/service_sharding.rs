@@ -229,6 +229,81 @@ fn shedding_is_priority_ordered_and_typed() {
 }
 
 #[test]
+fn shedding_and_deadlines_compose_under_overload() {
+    // overload with both knobs armed: a stalled worker, a small shed
+    // limit, and zero-width per-call deadlines on the flood.  Every
+    // request must resolve with exactly one typed outcome — Ok,
+    // Rejected (shed), Busy (saturated), or Expired (deadline at
+    // dequeue) — nothing hangs, and the latency tail of the run stays
+    // bounded because expired requests never consume eval capacity.
+    let svc = ServiceBuilder::new()
+        .workers(1)
+        .shards(1)
+        .shed_limit(1_000)
+        .start();
+    let low = svc.tenant(TenantSpec::new("low").priority(0)).unwrap();
+    let regs = fitted(Activation::Sigmoid, false);
+    let anon = svc.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let hl = low.register(regs.clone(), ApproxKind::Apot).unwrap();
+    let (mut ok, mut rejected, mut busy, mut expired) = (0u64, 0u64, 0u64, 0u64);
+
+    // occupy the worker, then flood with already-dead deadlines until
+    // the shard saturates even for anonymous traffic
+    let stall = anon.submit(vec![0; 4_000_000]).unwrap();
+    let mut admitted = Vec::new();
+    loop {
+        match anon.submit_with_deadline(vec![0; 200], std::time::Duration::ZERO) {
+            Ok(p) => admitted.push(p),
+            Err(ServiceError::Busy { .. }) => {
+                busy += 1;
+                break;
+            }
+            Err(e) => panic!("anonymous overload must be Busy, got {e}"),
+        }
+        assert!(admitted.len() < 100_000, "service never saturated");
+    }
+    // the low-priority tenant is shed below the full watermark
+    match hl.submit(vec![7]) {
+        Err(ServiceError::Rejected { .. }) => rejected += 1,
+        other => panic!("low priority must be Rejected, got {other:?}"),
+    }
+    // resolve everything: the stall completes, every admitted flood
+    // request expires at dequeue (its deadline predates any service)
+    assert!(stall.recv().unwrap().error.is_none());
+    ok += 1;
+    let n_admitted = admitted.len() as u64;
+    for p in admitted {
+        match p.recv() {
+            Err(ServiceError::Expired { .. }) => expired += 1,
+            other => panic!("zero deadline must expire, got {other:?}"),
+        }
+    }
+    // the service is healthy after the storm
+    let data: Vec<i32> = (-50..50).collect();
+    let resp = anon.call(data.clone()).unwrap();
+    for (x, y) in data.iter().zip(&resp.data) {
+        assert_eq!(*y, regs.eval(*x));
+    }
+    ok += 1;
+
+    assert_eq!(expired, n_admitted, "every admitted flood request expired");
+    assert!(busy >= 1 && rejected >= 1 && ok == 2);
+    drop((anon, hl));
+    let m = svc.shutdown();
+    assert_eq!(m.expired, n_admitted);
+    assert!(m.shed >= 2, "shed {}", m.shed);
+    // worker responses = 2 served + every expired flood request; the
+    // shed/busy submissions never reached a worker
+    assert_eq!(m.requests, 2 + n_admitted);
+    // expiry keeps the tail bounded: nothing waited the whole drain
+    assert!(
+        m.p99_latency_us() < 60_000_000,
+        "p99 {} µs",
+        m.p99_latency_us()
+    );
+}
+
+#[test]
 fn shutdown_drains_in_flight_across_shards() {
     let svc = ServiceBuilder::new()
         .workers(4)
