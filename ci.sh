@@ -42,6 +42,13 @@ cargo test --release --test service_sharding
 step "fault drill (cargo test --test service_faults)"
 cargo test --release --test service_faults
 
+# Sequence-workload parity: GRU + transformer batched paths bit-equal to
+# their naive oracles across all activation modes, descriptor bank round
+# trips, zero-alloc steady state.  Run by name with output visible — it
+# is the acceptance gate for the qnn::seq subsystem.
+step "sequence parity battery (cargo test --test seq_parity)"
+cargo test --release --test seq_parity
+
 # Second pass with the std::arch lane kernel compiled in, so both
 # GrauPlan::eval_into paths stay green.  The AVX2 kernel is runtime-
 # detected, but there is no point building the feature on a host whose
@@ -95,6 +102,16 @@ else
     printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; chaos smoke skipped\n'
 fi
 
+# Sequence bench smoke: GRU + transformer on tiny shapes; the bench
+# itself asserts naive-vs-batched bit-exactness and the zero-alloc
+# contract, and writes smoke_-tagged rows to BENCH_seq.json.
+step "seq bench smoke (GRAU_BENCH_SMOKE=1 cargo bench --bench perf_seq)"
+if cargo bench --help >/dev/null 2>&1; then
+    GRAU_BENCH_SMOKE=1 cargo bench --bench perf_seq
+else
+    printf 'ci.sh: WARNING: cargo bench unavailable in this toolchain; smoke skipped\n'
+fi
+
 # DSE bench smoke: tiny grid through all four explorer configurations
 # (naive / +cache / +parallel / +prune), asserting identical fronts and
 # counter reconciliation.  Assert-only — smoke never writes
@@ -136,6 +153,32 @@ grep -q 'fault injection armed' "$EXPLORE_DIR/drill.out" || {
     printf 'ci.sh: ERROR: serve did not arm the GRAU_FAULTS plan\n'; exit 1; }
 grep -q 'fault drill:' "$EXPLORE_DIR/drill.out" || {
     printf 'ci.sh: ERROR: serve reported no fault-drill summary\n'; exit 1; }
+
+# Table VII smoke: the sequence-workload experiment is fully synthetic
+# (qnn::synth builds the GRU and transformer), so it runs with no
+# artifacts; grep the table title to prove the comparison rendered.
+step "grau seq tiny-shape smoke (Table 7)"
+cargo run --release -- seq --quick | tee "$EXPLORE_DIR/seq.out"
+grep -q 'Table 7' "$EXPLORE_DIR/seq.out" || {
+    printf 'ci.sh: ERROR: grau seq printed no Table 7\n'; exit 1; }
+
+# CLI argument-validation drill: unknown --fitter and --backend used to
+# fall through to silent defaults (Greedy / Functional); both must now
+# bail with the valid choices before touching artifacts or starting a
+# service.  (No pipelines on the failing commands — set -o pipefail.)
+step "CLI rejects unknown --fitter/--backend (regression drill)"
+if cargo run --release -- eval --config t1_mlp_full8 --fitter bogus \
+    >/dev/null 2>"$EXPLORE_DIR/badfitter.err"; then
+    printf 'ci.sh: ERROR: unknown --fitter was silently accepted\n'; exit 1
+fi
+grep -q 'unknown --fitter' "$EXPLORE_DIR/badfitter.err" || {
+    printf 'ci.sh: ERROR: --fitter bail message missing\n'; exit 1; }
+if cargo run --release -- serve --backend bogus --requests 1 \
+    >/dev/null 2>"$EXPLORE_DIR/badbackend.err"; then
+    printf 'ci.sh: ERROR: unknown --backend was silently accepted\n'; exit 1
+fi
+grep -q 'unknown --backend' "$EXPLORE_DIR/badbackend.err" || {
+    printf 'ci.sh: ERROR: --backend bail message missing\n'; exit 1; }
 
 # Facade smoke: run the migrated examples on tiny inputs so regressions
 # in the grau::api surface (builder, stream handles, descriptors) fail

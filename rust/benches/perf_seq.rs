@@ -1,0 +1,176 @@
+//! §Perf sequence-workload bench: the GRU cell and the transformer
+//! block from `qnn::seq`, in Grau (APoT plan-unit) mode — the naive
+//! scalar oracle vs the batched scratch-arena path whose gate planes
+//! run through the `GrauPlan::eval_into` lane kernel.
+//!
+//! Bit-exactness between the two paths and the zero-steady-state-
+//! allocation contract are asserted on the bench workload itself, so
+//! the numbers can never come from a diverged or allocating path.
+//!
+//! Machine-readable output: rows are written to `BENCH_seq.json`
+//! (`[{bench, ns_per_elem, speedup}, ...]`, speedup = naive over
+//! batched) so CHANGES.md bench deltas can be recorded mechanically —
+//! see docs/EXPERIMENTS.md §Perf.
+//!
+//! `GRAU_BENCH_SMOKE=1` shrinks shapes and timings and prefixes row
+//! tags with `smoke_` — the CI smoke gate that keeps this
+//! `harness = false` target from rotting.
+
+use grau::fit::pipeline::{FitCache, FitOptions};
+use grau::fit::ApproxKind;
+use grau::qnn::seq::{self, GruScratch, TfScratch};
+use grau::qnn::synth;
+use grau::util::bench::{bench_header, Bencher};
+use grau::util::json::{arr, num, obj, s as jstr, Json};
+
+type BenchRow = (String, f64, f64);
+
+fn main() {
+    let smoke = std::env::var_os("GRAU_BENCH_SMOKE").is_some();
+    bench_header("perf_seq", "EXPERIMENTS.md §Perf — sequence workloads on fitted GRAU units");
+    if smoke {
+        println!("(GRAU_BENCH_SMOKE set: tiny shapes, short timings, smoke_ row tags)");
+    }
+    let mut rows = gru_block(smoke);
+    rows.extend(tf_block(smoke));
+    write_seq_json(&rows);
+}
+
+fn bench_opts(smoke: bool) -> (usize, u64) {
+    if smoke {
+        (3, 20)
+    } else {
+        (10, 300)
+    }
+}
+
+/// GRU: calibrate → per-gate APoT fit → Grau mode, then naive vs the
+/// batched plane path over a multi-timestep batch.
+fn gru_block(smoke: bool) -> Vec<BenchRow> {
+    let tag = if smoke { "smoke_" } else { "" };
+    let (samples_n, mt) = bench_opts(smoke);
+    let (i_dim, h_dim) = if smoke { (4usize, 6usize) } else { (16, 32) };
+    let (t_len, batch) = if smoke { (4usize, 2usize) } else { (16, 8) };
+
+    let exact = synth::gru_seq(i_dim, h_dim, 31);
+    let xs = synth::seq_inputs(t_len * batch * i_dim, 8, 32);
+    let h0 = synth::seq_inputs(batch * h_dim, 8, 33);
+    let cache = FitCache::new();
+    let ranges = exact.calibrate(&xs, t_len, batch, &h0);
+    let opts = FitOptions {
+        samples: if smoke { 300 } else { 800 },
+        ..Default::default()
+    };
+    let fits = seq::fit_seq_units(exact.folds(), &ranges, opts, &cache);
+    let gru = exact
+        .with_mode(seq::grau_mode(&fits, ApproxKind::Apot))
+        .expect("gru grau mode");
+
+    // per pass: every gate evaluates t*b*h pre-activations
+    let elems = (t_len * batch * h_dim) as u64;
+    println!("\nperf: GRU cell {i_dim}->{h_dim}, T={t_len} B={batch} (APoT plan units per gate)");
+    let rep_naive = Bencher::new("gru forward naive (scalar oracle)")
+        .elements(elems)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| gru.forward_naive(&xs, t_len, batch, &h0, None)[0]);
+    let mut scratch = GruScratch::new();
+    let rep_batch = Bencher::new("gru forward_into (plane path, lane kernel)")
+        .elements(elems)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| gru.forward_into(&xs, t_len, batch, &h0, &mut scratch)[0]);
+    let speedup = rep_naive.mean_ns / rep_batch.mean_ns;
+    println!("  batched speedup over naive: {speedup:.2}x");
+
+    // bit-exactness + zero steady-state allocation on this workload
+    let want = gru.forward_naive(&xs, t_len, batch, &h0, None);
+    let got = gru.forward_into(&xs, t_len, batch, &h0, &mut scratch).to_vec();
+    assert_eq!(got, want, "gru batched path diverges from the naive oracle");
+    let warm = scratch.alloc_events();
+    assert!(warm > 0, "scratch never grew — alloc accounting broken");
+    for _ in 0..5 {
+        gru.forward_into(&xs, t_len, batch, &h0, &mut scratch);
+    }
+    assert_eq!(scratch.alloc_events(), warm, "gru steady-state passes allocated");
+
+    vec![(
+        format!("{tag}gru_forward_into"),
+        rep_batch.mean_ns / elems as f64,
+        speedup,
+    )]
+}
+
+/// Transformer block: calibrate → exp/GELU APoT fits → Grau mode,
+/// naive vs the batched score/FFN plane path.
+fn tf_block(smoke: bool) -> Vec<BenchRow> {
+    let tag = if smoke { "smoke_" } else { "" };
+    let (samples_n, mt) = bench_opts(smoke);
+    let (d_model, d_k, d_ff) = if smoke { (8usize, 4usize, 12usize) } else { (32, 8, 64) };
+    let (batch, t_len) = if smoke { (2usize, 4usize) } else { (4, 16) };
+
+    let exact = synth::transformer_seq(d_model, d_k, d_ff, 41);
+    let xs = synth::seq_inputs(batch * t_len * d_model, 8, 42);
+    let cache = FitCache::new();
+    let ranges = exact.calibrate(&xs, batch, t_len);
+    let opts = FitOptions {
+        samples: if smoke { 300 } else { 800 },
+        ..Default::default()
+    };
+    let fits = seq::fit_seq_units(exact.folds(), &ranges, opts, &cache);
+    let tf = exact
+        .with_mode(seq::grau_mode(&fits, ApproxKind::Apot))
+        .expect("transformer grau mode");
+
+    let elems = (batch * t_len * d_model) as u64;
+    println!(
+        "\nperf: transformer block d={d_model} dk={d_k} dff={d_ff}, T={t_len} B={batch} \
+         (APoT plan units for exp + GELU)"
+    );
+    let rep_naive = Bencher::new("transformer forward naive (scalar oracle)")
+        .elements(elems)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| tf.forward_naive(&xs, batch, t_len, None)[0]);
+    let mut scratch = TfScratch::new();
+    let rep_batch = Bencher::new("transformer forward_into (plane path, lane kernel)")
+        .elements(elems)
+        .samples(samples_n)
+        .min_time_ms(mt)
+        .run(|| tf.forward_into(&xs, batch, t_len, &mut scratch)[0]);
+    let speedup = rep_naive.mean_ns / rep_batch.mean_ns;
+    println!("  batched speedup over naive: {speedup:.2}x");
+
+    let want = tf.forward_naive(&xs, batch, t_len, None);
+    let got = tf.forward_into(&xs, batch, t_len, &mut scratch).to_vec();
+    assert_eq!(got, want, "transformer batched path diverges from the naive oracle");
+    let warm = scratch.alloc_events();
+    assert!(warm > 0, "scratch never grew — alloc accounting broken");
+    for _ in 0..5 {
+        tf.forward_into(&xs, batch, t_len, &mut scratch);
+    }
+    assert_eq!(scratch.alloc_events(), warm, "transformer steady-state passes allocated");
+
+    vec![(
+        format!("{tag}transformer_forward_into"),
+        rep_batch.mean_ns / elems as f64,
+        speedup,
+    )]
+}
+
+/// `BENCH_seq.json` — regenerated per run (like BENCH_qnn.json, unlike
+/// the committed BENCH_plan.json baseline); speedup is naive over
+/// batched on identical outputs.
+fn write_seq_json(rows: &[BenchRow]) {
+    let doc: Json = arr(rows.iter().map(|(name, nspe, sp)| {
+        obj(vec![
+            ("bench", jstr(name)),
+            ("ns_per_elem", num(*nspe)),
+            ("speedup", num(*sp)),
+        ])
+    }));
+    match std::fs::write("BENCH_seq.json", format!("{doc}\n")) {
+        Ok(()) => println!("\nwrote BENCH_seq.json ({} rows)", rows.len()),
+        Err(e) => println!("\nWARNING: could not write BENCH_seq.json: {e}"),
+    }
+}

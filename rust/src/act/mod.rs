@@ -13,7 +13,9 @@ pub mod folded;
 pub use folded::FoldedActivation;
 
 /// The nonlinear activations the paper evaluates (plus a few extras from
-/// its related-work section, used in the ablation benches).
+/// its related-work section, used in the ablation benches, and the
+/// sequence-workload nonlinearities `qnn::seq` fits: GELU for
+/// transformer FFN epilogues and Exp for the softmax numerator).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Activation {
     Relu,
@@ -21,6 +23,8 @@ pub enum Activation {
     Silu,
     Tanh,
     Softsign,
+    Gelu,
+    Exp,
     Identity,
 }
 
@@ -32,14 +36,20 @@ impl Activation {
             Activation::Silu => z / (1.0 + (-z).exp()),
             Activation::Tanh => z.tanh(),
             Activation::Softsign => z / (1.0 + z.abs()),
+            // the tanh form (Hendrycks & Gimpel) — std has no erf, and
+            // this is the variant deployed quantized models fold anyway
+            Activation::Gelu => {
+                0.5 * z * (1.0 + ((2.0 / std::f64::consts::PI).sqrt() * (z + 0.044715 * z * z * z)).tanh())
+            }
+            Activation::Exp => z.exp(),
             Activation::Identity => z,
         }
     }
 
-    /// Monotonically increasing on all of R?  (SiLU is not — the property
-    /// behind the paper's Figure 1 MT failure.)
+    /// Monotonically increasing on all of R?  (SiLU and GELU are not —
+    /// the property behind the paper's Figure 1 MT failure.)
     pub fn monotone(self) -> bool {
-        !matches!(self, Activation::Silu)
+        !matches!(self, Activation::Silu | Activation::Gelu)
     }
 
     pub fn parse(name: &str) -> Option<Activation> {
@@ -49,6 +59,8 @@ impl Activation {
             "silu" => Activation::Silu,
             "tanh" => Activation::Tanh,
             "softsign" => Activation::Softsign,
+            "gelu" => Activation::Gelu,
+            "exp" => Activation::Exp,
             "none" | "identity" => Activation::Identity,
             _ => return None,
         })
@@ -61,6 +73,8 @@ impl Activation {
             Activation::Silu => "silu",
             Activation::Tanh => "tanh",
             Activation::Softsign => "softsign",
+            Activation::Gelu => "gelu",
+            Activation::Exp => "exp",
             Activation::Identity => "identity",
         }
     }
@@ -98,6 +112,46 @@ mod tests {
         assert!(b < a && b < c);
         assert!(!Activation::Silu.monotone());
         assert!(Activation::Sigmoid.monotone());
+    }
+
+    #[test]
+    fn gelu_and_exp_values() {
+        assert_eq!(Activation::Gelu.eval(0.0), 0.0);
+        // tanh-form GELU reference points (Hendrycks & Gimpel)
+        assert!((Activation::Gelu.eval(1.0) - 0.8412).abs() < 1e-3);
+        assert!((Activation::Gelu.eval(2.0) - 1.9546).abs() < 1e-3);
+        assert!(Activation::Gelu.eval(-6.0).abs() < 1e-6); // far-left tail dies
+        assert!((Activation::Exp.eval(0.0) - 1.0).abs() < 1e-12);
+        assert!((Activation::Exp.eval(1.0) - std::f64::consts::E).abs() < 1e-12);
+        assert!(Activation::Exp.eval(-20.0) > 0.0);
+    }
+
+    #[test]
+    fn gelu_is_non_monotone_exp_is_monotone() {
+        // GELU has a minimum near z = -0.75 (value ≈ -0.17)
+        let a = Activation::Gelu.eval(-3.0);
+        let b = Activation::Gelu.eval(-0.75);
+        let c = Activation::Gelu.eval(0.0);
+        assert!(b < a && b < c);
+        assert!(b < -0.16 && b > -0.18);
+        assert!(!Activation::Gelu.monotone());
+        assert!(Activation::Exp.monotone());
+        let mut last = Activation::Exp.eval(-8.0);
+        for i in -79..80 {
+            let v = Activation::Exp.eval(i as f64 / 10.0);
+            assert!(v > last);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn gelu_exp_parse_name_round_trip() {
+        for act in [Activation::Gelu, Activation::Exp] {
+            assert_eq!(Activation::parse(act.name()), Some(act));
+        }
+        assert_eq!(Activation::parse("gelu"), Some(Activation::Gelu));
+        assert_eq!(Activation::parse("exp"), Some(Activation::Exp));
+        assert_eq!(Activation::parse("expp"), None);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod table3;
 pub mod table4;
 pub mod table5;
 pub mod table6;
+pub mod table7;
 
 use std::path::{Path, PathBuf};
 

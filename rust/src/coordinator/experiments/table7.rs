@@ -1,0 +1,152 @@
+//! Table VII: sequence workloads (GRU cell, transformer block) on
+//! per-function fitted GRAU units — per-gate fit RMSE, end-task
+//! fidelity vs. the exact integer oracle, and `hw::cost` LUT/depth for
+//! every Exact / PWLF / PoT-PWLF / APoT-PWLF mode.  Entirely
+//! synthetic: `qnn::synth` builds the workloads, so no external
+//! artifacts are needed (`grau seq`).
+
+use std::sync::Arc;
+
+use crate::coordinator::experiments::{acc, Ctx};
+use crate::error::Result;
+use crate::fit::pipeline::{FitCache, FitOptions, FitResult};
+use crate::fit::ApproxKind;
+use crate::hw::cost::{estimate, UnitKind};
+use crate::hw::GrauRegisters;
+use crate::qnn::seq::{self, SeqActMode};
+use crate::qnn::synth;
+use crate::util::table::Table;
+
+/// Fraction of elementwise-identical integer outputs.
+fn fidelity(a: &[i32], b: &[i32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let hits = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    hits as f64 / a.len().max(1) as f64
+}
+
+fn cost_cells(regs: &GrauRegisters, kind: ApproxKind) -> (String, String) {
+    let c = estimate(UnitKind::GrauPipelined {
+        kind,
+        segments: regs.n_segments as u32,
+        exponents: regs.n_shifts as u32,
+    });
+    (c.lut.to_string(), c.depth_8bit.to_string())
+}
+
+/// One workload's rows: the reference mode plus every approximation
+/// family, each compared end-to-end against the exact outputs.
+#[allow(clippy::too_many_arguments)]
+fn push_rows(
+    t: &mut Table,
+    workload: &str,
+    funcs: &[&str],
+    fits: &[Arc<FitResult>],
+    exact_out: &[i32],
+    mut run_mode: impl FnMut(SeqActMode) -> Result<Vec<i32>>,
+) -> Result<()> {
+    for name in funcs {
+        t.row(vec![
+            workload.into(),
+            (*name).into(),
+            "Exact".into(),
+            "-".into(),
+            acc(1.0),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    let pwlf_out = run_mode(seq::pwlf_mode(fits))?;
+    let pwlf_fid = fidelity(exact_out, &pwlf_out);
+    for (fi, name) in funcs.iter().enumerate() {
+        t.row(vec![
+            workload.into(),
+            (*name).into(),
+            "PWLF".into(),
+            format!("{:.2}", fits[fi].rmse(ApproxKind::Pwlf)),
+            acc(pwlf_fid),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    for kind in [ApproxKind::Pot, ApproxKind::Apot] {
+        let out = run_mode(seq::grau_mode(fits, kind))?;
+        let fid = fidelity(exact_out, &out);
+        for (fi, name) in funcs.iter().enumerate() {
+            let (lut, depth) = cost_cells(fits[fi].registers(kind), kind);
+            t.row(vec![
+                workload.into(),
+                (*name).into(),
+                kind.name().into(),
+                format!("{:.2}", fits[fi].rmse(kind)),
+                acc(fid),
+                lut,
+                depth,
+            ]);
+        }
+    }
+    Ok(())
+}
+
+pub fn run(ctx: &Ctx) -> Result<String> {
+    let mut t = Table::new(
+        "Table 7 — sequence workloads: per-function fit RMSE, end-task fidelity, hw cost",
+        &[
+            "Workload",
+            "Function",
+            "Mode",
+            "RMSE (LSB)",
+            "End-task match",
+            "LUT",
+            "Depth@8b",
+        ],
+    );
+    let cache = FitCache::new();
+    let opts = FitOptions {
+        samples: if ctx.quick { 400 } else { 1000 },
+        ..Default::default()
+    };
+
+    // --- GRU cell ------------------------------------------------------
+    let (i_dim, h_dim) = if ctx.quick { (4, 6) } else { (8, 16) };
+    let (t_len, batch) = if ctx.quick { (4, 2) } else { (8, 4) };
+    let gru = synth::gru_seq(i_dim, h_dim, 17);
+    let xs = synth::seq_inputs(t_len * batch * i_dim, 8, 18);
+    let h0 = synth::seq_inputs(batch * h_dim, 8, 19);
+    let ranges = gru.calibrate(&xs, t_len, batch, &h0);
+    let fits = seq::fit_seq_units(gru.folds(), &ranges, opts, &cache);
+    let exact = gru.forward_naive(&xs, t_len, batch, &h0, None);
+    push_rows(&mut t, "gru", &seq::GRU_GATES, &fits, &exact, |mode| {
+        Ok(gru.with_mode(mode)?.forward_naive(&xs, t_len, batch, &h0, None))
+    })?;
+
+    // --- transformer block --------------------------------------------
+    let (d_model, d_k, d_ff) = if ctx.quick { (8, 4, 12) } else { (16, 8, 32) };
+    let (tf_batch, tf_t) = if ctx.quick { (2, 4) } else { (4, 8) };
+    let tf = synth::transformer_seq(d_model, d_k, d_ff, 23);
+    let txs = synth::seq_inputs(tf_batch * tf_t * d_model, 8, 24);
+    let tranges = tf.calibrate(&txs, tf_batch, tf_t);
+    let tfits = seq::fit_seq_units(tf.folds(), &tranges, opts, &cache);
+    let texact = tf.forward_naive(&txs, tf_batch, tf_t, None);
+    push_rows(&mut t, "transformer", &seq::TRANSFORMER_FUNCS, &tfits, &texact, |mode| {
+        Ok(tf.with_mode(mode)?.forward_naive(&txs, tf_batch, tf_t, None))
+    })?;
+
+    let mut out = t.to_string();
+    out.push_str(&format!(
+        "\nfits: {} computed, {} cache hits; gru {}x{} T={} B={}; transformer d={} dk={} dff={} T={} B={}\n",
+        cache.misses(),
+        cache.hits(),
+        i_dim,
+        h_dim,
+        t_len,
+        batch,
+        d_model,
+        d_k,
+        d_ff,
+        tf_t,
+        tf_batch,
+    ));
+    println!("{out}");
+    ctx.write_result("table7.md", &out)?;
+    Ok(out)
+}

@@ -411,6 +411,31 @@ mod tests {
     }
 
     #[test]
+    fn gelu_fit_is_bounded() {
+        // fig1-style bound for the seq FFN epilogue: GELU (non-monotone
+        // like SiLU) must land on PoT/APoT with usable error before
+        // qnn::seq consumes it
+        let r = fit_folded(&folded(Activation::Gelu), -1000, 1000, FitOptions::default());
+        assert!(r.rmse_pwlf <= r.rmse_apot + 1e-9);
+        assert!(r.rmse_apot <= r.rmse_pot + 1e-9);
+        assert!(r.rmse_apot < 10.0, "gelu apot rmse {}", r.rmse_apot);
+        assert!(r.rmse_pot < 16.0, "gelu pot rmse {}", r.rmse_pot);
+    }
+
+    #[test]
+    fn exp_fit_is_tight_on_softmax_range() {
+        // exp is only ever evaluated at delta <= 0 (integer
+        // max-subtraction), so fit the one-sided window the seq
+        // softmax calibrates; exp(0) must hit integer 1.0 exactly
+        let f = FoldedActivation::new(0.004, 0.0, Activation::Exp, 1.0 / 127.0, 8);
+        assert_eq!(f.eval(0), 127);
+        let r = fit_folded(&f, -1500, 0, FitOptions::default());
+        assert!(r.rmse_apot < 5.0, "exp apot rmse {}", r.rmse_apot);
+        let rate = mismatch_rate(&r.apot.regs, &f, -1500, 0, 1500);
+        assert!(rate < 0.5, "exp mismatch {rate}");
+    }
+
+    #[test]
     fn fitted_descriptor_round_trips_bit_exactly() {
         let r = fit_folded(&folded(Activation::Silu), -1000, 1000, FitOptions::default());
         let d = r.descriptor(ApproxKind::Apot, "silu");

@@ -6,10 +6,12 @@
 //! grau eval   --config ...          (original vs PWLF/PoT/APoT accuracy)
 //! grau serve  [--workers 4] [--shards N] [--shed-limit ELEMS]
 //!             [--backend functional|cyclesim|pjrt] [--requests N]
-//! grau explore [--model gap|residual] [--bits 8] [--segments 4,6,8]
-//!              [--exponents 8,16] [--kinds apot] [--export-banks DIR]
+//! grau explore [--model gap|residual|gru|transformer] [--bits 8]
+//!              [--segments 4,6,8] [--exponents 8,16] [--kinds apot]
+//!              [--export-banks DIR]
 //! grau hw-report                    (Table VI)
-//! grau table1|table3|table4|table5|table6|fig1|fig2 [--quick]
+//! grau seq                          (Table VII — sequence workloads)
+//! grau table1|table3|table4|table5|table6|table7|fig1|fig2 [--quick]
 //! grau e2e                          (full pipeline on CNV-mixed)
 //! grau list                         (available artifact configs)
 //! ```
@@ -76,15 +78,18 @@ fn run() -> Result<()> {
             );
         }
         "fit" | "eval" => {
+            // parse before touching artifacts so a bad flag fails fast
+            let fitter = match args.get_or("fitter", "greedy") {
+                "greedy" => Fitter::Greedy,
+                "lsq" => Fitter::Lsq,
+                other => bail!("unknown --fitter {other:?} (greedy|lsq)"),
+            };
             let ctx = Ctx::new(&artifacts_dir(&args))?;
             let config = args.get("config").context("--config required")?;
             let tr = train_config(&ctx.rt, &ctx.artifacts, config, ctx.steps_for(config), true, true)?;
             let splits = dataset_for(config);
             let opts = SweepOptions {
-                fitter: match args.get_or("fitter", "greedy") {
-                    "lsq" => Fitter::Lsq,
-                    _ => Fitter::Greedy,
-                },
+                fitter,
                 segments: args.get_usize("segments", 6),
                 n_shifts: args.get_usize("shifts", 8) as u8,
                 eval_samples: args.get_usize("eval-samples", 500),
@@ -131,9 +136,10 @@ fn run() -> Result<()> {
                 println!("fault injection armed from GRAU_FAULTS");
             }
             let backend = match args.get_or("backend", "functional") {
+                "functional" => Backend::Functional,
                 "cyclesim" => Backend::CycleSim,
                 "pjrt" => Backend::Pjrt,
-                _ => Backend::Functional,
+                other => bail!("unknown --backend {other:?} (functional|cyclesim|pjrt)"),
             };
             let mut builder = ServiceBuilder::new()
                 .workers(args.get_usize("workers", 4))
@@ -262,7 +268,11 @@ fn run() -> Result<()> {
             let (graph, bundle) = match args.get_or("model", "gap") {
                 "residual" => synth::residual_qnn(size, 3, 8, 8, seed),
                 "gap" => synth::gap_qnn(size, 3, 8, seed),
-                other => bail!("unknown --model {other:?} (gap|residual)"),
+                // sequence-workload proxies: the GRU gate stack and the
+                // transformer FFN as per-site searchable linear layers
+                "gru" => synth::gru_qnn(size, 8, seed),
+                "transformer" => synth::transformer_qnn(size, 12, seed),
+                other => bail!("unknown --model {other:?} (gap|residual|gru|transformer)"),
             };
             // synth models are 10-class heads over [size, size, 3] images
             let data = teacher_images(args.get_usize("data", 256), size, 3, 10, seed + 1);
@@ -328,6 +338,9 @@ fn run() -> Result<()> {
             let ctx = Ctx::new(&artifacts_dir(&args))?;
             experiments::table6::run(&ctx)?;
         }
+        "seq" | "table7" => {
+            experiments::table7::run(&Ctx::new(&artifacts_dir(&args))?)?;
+        }
         "table1" => {
             experiments::table1::run(&Ctx::new(&artifacts_dir(&args))?)?;
         }
@@ -368,7 +381,7 @@ grau — GRAU reproduction launcher
                              --export-units FILE writes the demo bank;
                              --shards N / --shed-limit ELEMS pick the
                              shard-queue topology and overload policy)
-  explore [--model gap|residual] [--size S] [--seed N]
+  explore [--model gap|residual|gru|transformer] [--size S] [--seed N]
                             parallel mixed-precision design-space search
                             (--bits/--segments/--exponents/--kinds comma
                              lists pick the per-layer axes; --threads N;
@@ -376,6 +389,9 @@ grau — GRAU reproduction launcher
                              --no-prune / --no-memoize disable the
                              bound pruner / fit cache; --export-banks DIR
                              writes one descriptor bank per front point)
-  table1|table3|table4|table5|table6|fig1|fig2 [--quick]
+  seq                       Table VII: GRU + transformer blocks on
+                            per-gate fitted units (synthetic, no
+                            artifacts; alias of table7)
+  table1|table3|table4|table5|table6|table7|fig1|fig2 [--quick]
   hw-report                 alias of table6
 flags: --artifacts DIR --steps N --segments S --shifts E --quick";

@@ -16,14 +16,22 @@
 //!
 //! Graph structure comes from the artifact manifest (the same IR the JAX
 //! model was built from), weights from the AOT `export` computation.
+//!
+//! Beyond the CNN graph engine, [`seq`] carries the *sequence*
+//! workloads (a GRU cell and a transformer block) whose gate stacks —
+//! sigmoid/tanh, GELU, exp-for-softmax — run through per-function
+//! fitted GRAU units with the same Exact/Pwlf/Grau/descriptor mode
+//! axis.
 
 pub mod engine;
 pub mod graph;
+pub mod seq;
 pub mod synth;
 pub mod tensor;
 pub mod weights;
 
 pub use engine::{ActMode, Engine, EvalResult};
 pub use graph::{GraphOp, ModelGraph, OpKind};
+pub use seq::{GruModel, GruScratch, GruSpec, SeqActMode, TfScratch, TransformerModel, TransformerSpec};
 pub use tensor::Scratch;
 pub use weights::ExportBundle;

@@ -1,0 +1,1078 @@
+//! `qnn::seq` — quantized *sequence* workloads on per-function fitted
+//! GRAU units: a GRU cell and a transformer block whose nonlinearities
+//! each run through one [`FunctionalUnit`] fitted over a calibrated
+//! pre-activation range.
+//!
+//! The CNN engine (`qnn::engine`) put a fitted unit behind every conv
+//! epilogue; the canonical consumers of cheap reconfigurable
+//! activations are *gate stacks* — sigmoid/tanh inside a recurrent
+//! cell, GELU and exp-for-softmax inside a transformer block.  This
+//! module opens that workload axis while reusing the rest of the
+//! stack unchanged: fits flow through `fit::pipeline` (same
+//! `FitCache`/descriptor path), unit-mode evaluation dispatches
+//! through `hw::unit` (so the batched planes take the
+//! `GrauPlan::eval_into` lane kernel via `eval_slice`), and every
+//! fitted gate ships as a [`UnitDescriptor`] loadable by the service.
+//!
+//! Dataflow, GRU cell (all-integer; one fitted unit per gate):
+//!
+//! ```text
+//!   q_z = Wxz·x_t + Whz·h  + b_z   --sigmoid-->  z   (unit 0)
+//!   q_r = Wxr·x_t + Whr·h  + b_r   --sigmoid-->  r   (unit 1)
+//!   q_n = Wxn·x_t + r⊙(Whn·h) + b_n --tanh---->  n   (unit 2)
+//!   h'  = clamp(q16((qmax − z)·n·m_n + z·h·m_h))     (Q16 blend)
+//! ```
+//!
+//! The hidden state is requantized back to the `n_bits` integer grid
+//! every timestep (the Q16 blend), so arbitrarily long sequences stay
+//! in the integer domain — no float sneaks in between timesteps.
+//!
+//! Dataflow, transformer block (exp-for-softmax + GELU FFN):
+//!
+//! ```text
+//!   qp/kp/vp = clamp(q16(W{q,k,v}·x_t · m))          (Q16 requant)
+//!   s[t,u]   = Σ_k qp[t,k]·kp[u,k]                   (i32 scores)
+//!   δ[t,u]   = s[t,u] − max_u s[t,u]   (≤ 0, integer max-subtraction)
+//!   w[t,u]   = exp-unit(δ[t,u])                      (unit 0)
+//!   attn     = round(Σ_u w·vp / max(1, Σ_u w))       (reciprocal-sum
+//!   res1     = clamp(x + attn)                        renormalization)
+//!   f1       = gelu-unit(clamp32(W1·res1 + b1))      (unit 1)
+//!   out      = clamp(res1 + q16(W2·f1 · m_down))
+//! ```
+//!
+//! The softmax never forms a float: the row max is subtracted in the
+//! integer domain (so every exp input is ≤ 0 and the fitted range is
+//! one-sided), the fitted unit produces integer weights in
+//! `[0, qmax]`, and the normalization is an integer divide by the
+//! weight sum, rounded half away from zero.
+//!
+//! Both workloads carry a float-free naive oracle (`forward_naive`, in
+//! the `qnn_parity` style) that the batched scratch-arena path
+//! (`forward_into`) is held bit-for-bit equal to across every
+//! activation mode — see `rust/tests/seq_parity.rs`.  Steady-state
+//! `forward_into` performs no heap allocation (same contract as
+//! `Engine::forward_into`; asserted by the parity suite and the
+//! `perf_seq` bench).
+
+use std::sync::Arc;
+
+use crate::act::{qrange, Activation, FoldedActivation};
+use crate::api::descriptor::UnitDescriptor;
+use crate::error::{ensure, Context, Result};
+use crate::fit::pipeline::{bucket_range, FitCache, FitOptions, FitResult};
+use crate::fit::{ApproxKind, Pwlf};
+use crate::hw::unit::{build_functional_unit, FunctionalUnit, UnitKind};
+use crate::hw::GrauRegisters;
+use crate::qnn::tensor::Scratch;
+
+/// Function names of the three GRU gates, in fit-vector order (the
+/// descriptor-bank keys the table-7 experiment and `grau explore` use).
+pub const GRU_GATES: [&str; 3] = ["z.sigmoid", "r.sigmoid", "n.tanh"];
+
+/// Function names of the transformer block's two fitted nonlinearities.
+pub const TRANSFORMER_FUNCS: [&str; 2] = ["attn.exp", "ffn.gelu"];
+
+/// Which implementation every fitted function of a sequence model uses
+/// (the `qnn::engine::ActMode` analogue, indexed per *function* instead
+/// of per site/channel: gate `g` of the GRU uses entry `g`).
+pub enum SeqActMode {
+    /// the folded float black box (the oracle the fits approximate)
+    Exact,
+    /// float-slope piecewise linear, one curve per function
+    Pwlf(Vec<Pwlf>),
+    /// bit-exact PoT/APoT register files, one per function
+    Grau(Vec<GrauRegisters>),
+    /// units rebuilt from serialized [`UnitDescriptor`]s — the
+    /// fit → JSON bank → engine deployment path
+    Descriptors(Vec<UnitDescriptor>),
+}
+
+impl SeqActMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeqActMode::Exact => "exact",
+            SeqActMode::Pwlf(_) => "pwlf",
+            SeqActMode::Grau(_) => "grau",
+            SeqActMode::Descriptors(_) => "descriptor",
+        }
+    }
+}
+
+/// The per-function activation bank: the folded black boxes plus the
+/// mode-dependent unit objects, built once at model construction (like
+/// `Engine::new`) so the forward passes only dispatch.
+struct FuncBank {
+    folds: Vec<FoldedActivation>,
+    mode: SeqActMode,
+    /// `[function]` trait objects for the unit-backed modes (empty for
+    /// `Exact`/`Pwlf`, which evaluate their float forms directly)
+    units: Vec<Box<dyn FunctionalUnit + Send + Sync>>,
+}
+
+impl FuncBank {
+    fn new(folds: Vec<FoldedActivation>, mode: SeqActMode) -> Result<FuncBank> {
+        let n = folds.len();
+        let units: Vec<Box<dyn FunctionalUnit + Send + Sync>> = match &mode {
+            SeqActMode::Exact => Vec::new(),
+            SeqActMode::Pwlf(curves) => {
+                ensure!(
+                    curves.len() == n,
+                    "pwlf mode carries {} curves for {} functions",
+                    curves.len(),
+                    n
+                );
+                Vec::new()
+            }
+            SeqActMode::Grau(regs) => {
+                ensure!(
+                    regs.len() == n,
+                    "grau mode carries {} register files for {} functions",
+                    regs.len(),
+                    n
+                );
+                regs.iter()
+                    .map(|r| {
+                        // the plan backend ignores the approximation
+                        // family (the masks already encode it)
+                        build_functional_unit(UnitKind::Plan, r, ApproxKind::Apot)
+                            .expect("plan units accept every register file")
+                    })
+                    .collect()
+            }
+            SeqActMode::Descriptors(ds) => {
+                ensure!(
+                    ds.len() == n,
+                    "descriptor mode carries {} descriptors for {} functions",
+                    ds.len(),
+                    n
+                );
+                let mut row = Vec::with_capacity(n);
+                for (fi, d) in ds.iter().enumerate() {
+                    row.push(
+                        d.build_functional()
+                            .with_context(|| format!("descriptor unit for function {fi}"))?,
+                    );
+                }
+                row
+            }
+        };
+        Ok(FuncBank { folds, mode, units })
+    }
+
+    /// Evaluate one pre-activation through function `fi`.
+    #[inline]
+    fn eval_one(&self, fi: usize, x: i32) -> i32 {
+        match &self.mode {
+            SeqActMode::Exact => self.folds[fi].eval(x as i64),
+            SeqActMode::Pwlf(curves) => curves[fi].eval(x as i64),
+            _ => self.units[fi].eval_ref(x),
+        }
+    }
+
+    /// Evaluate a whole contiguous plane through function `fi`
+    /// (`out.len() == xs.len()`).  Unit modes take `eval_slice`, so
+    /// plan-backed units run the batched `GrauPlan::eval_into` lane
+    /// kernel; the float modes loop their scalar forms, which keeps
+    /// the plane path elementwise-identical to [`FuncBank::eval_one`].
+    fn eval_plane(&self, fi: usize, xs: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(xs.len(), out.len());
+        match &self.mode {
+            SeqActMode::Exact => {
+                let f = &self.folds[fi];
+                for (o, &x) in out.iter_mut().zip(xs) {
+                    *o = f.eval(x as i64);
+                }
+            }
+            SeqActMode::Pwlf(curves) => {
+                let p = &curves[fi];
+                for (o, &x) in out.iter_mut().zip(xs) {
+                    *o = p.eval(x as i64);
+                }
+            }
+            _ => self.units[fi].eval_slice(xs, out),
+        }
+    }
+}
+
+/// Round a Q16 fixed-point product back to the integer grid
+/// (round-half-up; arithmetic shift keeps it exact for negatives).
+#[inline]
+pub fn q16_round(v: i64) -> i64 {
+    (v + 32768) >> 16
+}
+
+/// Integer division rounded half away from zero, `d > 0` — the
+/// softmax reciprocal-sum renormalization step.
+#[inline]
+pub fn div_round(n: i64, d: i64) -> i64 {
+    debug_assert!(d > 0);
+    if n >= 0 {
+        (2 * n + d) / (2 * d)
+    } else {
+        -((2 * (-n) + d) / (2 * d))
+    }
+}
+
+/// Saturate an i64 pre-activation into the i32 domain the units accept.
+#[inline]
+fn pre(q: i64) -> i32 {
+    q.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Clamp a value onto the `n_bits` quantized grid.
+#[inline]
+fn clamp_q(v: i64, n_bits: u8) -> i32 {
+    let (qmin, qmax) = qrange(n_bits);
+    v.clamp(qmin as i64, qmax as i64) as i32
+}
+
+/// Record `q` into per-function range slot `fi`, when calibrating.
+#[inline]
+fn record(ranges: &mut Option<&mut [(i64, i64)]>, fi: usize, q: i64) {
+    if let Some(rs) = ranges.as_deref_mut() {
+        let r = &mut rs[fi];
+        r.0 = r.0.min(q);
+        r.1 = r.1.max(q);
+    }
+}
+
+/// Fresh calibration accumulator for `n` functions.
+pub fn empty_ranges(n: usize) -> Vec<(i64, i64)> {
+    vec![(i64::MAX, i64::MIN); n]
+}
+
+// ---------------------------------------------------------------------------
+// GRU
+// ---------------------------------------------------------------------------
+
+/// Static shape and scale parameters of one quantized GRU cell.
+///
+/// The three gates share one integer pre-activation convention: gate
+/// `g`'s real pre-activation is `a_gate[g] * q` where `q` is the raw
+/// integer MAC (plus integer bias), so each gate's folded black box is
+/// `F(q) = quantize(act(a_gate[g]·q) / s)` — exactly the shape
+/// `fit::pipeline` fits.  Gates z/r quantize sigmoid with scale
+/// `1/qmax` (so integer `qmax` is exactly 1.0 and `qmax − z` is
+/// exactly `1 − z`); the candidate quantizes tanh with `s_cand` and
+/// the hidden state lives on the `s_h` grid.
+#[derive(Clone, Debug)]
+pub struct GruSpec {
+    pub input_dim: usize,
+    pub hidden_dim: usize,
+    pub n_bits: u8,
+    /// per-gate pre-activation step (z, r, n order)
+    pub a_gate: [f64; 3],
+    /// candidate (tanh) output scale
+    pub s_cand: f64,
+    /// hidden-state scale
+    pub s_h: f64,
+}
+
+impl GruSpec {
+    /// Gate (sigmoid) output scale: integer `qmax` == real 1.0.
+    pub fn s_gate(&self) -> f64 {
+        let (_, qmax) = qrange(self.n_bits);
+        1.0 / qmax as f64
+    }
+
+    /// The folded black box of gate `g` (z=0, r=1, n=2) — what the
+    /// fitting pipeline samples and the `Exact` mode replays.
+    pub fn fold(&self, gate: usize) -> FoldedActivation {
+        match gate {
+            0 => FoldedActivation::new(self.a_gate[0], 0.0, Activation::Sigmoid, self.s_gate(), self.n_bits),
+            1 => FoldedActivation::new(self.a_gate[1], 0.0, Activation::Sigmoid, self.s_gate(), self.n_bits),
+            2 => FoldedActivation::new(self.a_gate[2], 0.0, Activation::Tanh, self.s_cand, self.n_bits),
+            _ => panic!("GRU has 3 gates, asked for {gate}"),
+        }
+    }
+}
+
+/// The per-thread scratch arena of [`GruModel::forward_into`]: every
+/// per-timestep plane plus the ping-ponged hidden state.  Buffers grow
+/// on the first pass and are reused verbatim afterwards
+/// ([`GruScratch::alloc_events`] counts growth, like `qnn::Scratch`).
+#[derive(Default)]
+pub struct GruScratch {
+    q: Vec<i32>,
+    z: Vec<i32>,
+    r: Vec<i32>,
+    n: Vec<i32>,
+    machn: Vec<i32>,
+    h: Vec<i32>,
+    h_next: Vec<i32>,
+    allocs: u64,
+}
+
+impl GruScratch {
+    pub fn new() -> GruScratch {
+        GruScratch::default()
+    }
+
+    /// Buffer-growth events so far (constant once shapes are warm).
+    pub fn alloc_events(&self) -> u64 {
+        self.allocs
+    }
+}
+
+/// A quantized GRU cell with one fitted activation unit per gate.
+pub struct GruModel {
+    pub spec: GruSpec,
+    /// input-to-hidden weights, `[hidden][input]` row-major (z, r, n)
+    wx: [Vec<i32>; 3],
+    /// hidden-to-hidden weights, `[hidden][hidden]` row-major
+    wh: [Vec<i32>; 3],
+    /// integer gate biases, in pre-activation LSBs
+    bq: [Vec<i64>; 3],
+    bank: FuncBank,
+    /// Q16 multiplier of the `(qmax − z)·n` blend term:
+    /// `s_cand / (qmax·s_h)` in Q16
+    m_blend_n: i64,
+    /// Q16 multiplier of the `z·h` blend term: `1/qmax` in Q16
+    m_blend_h: i64,
+}
+
+impl GruModel {
+    pub fn new(
+        spec: GruSpec,
+        wx: [Vec<i32>; 3],
+        wh: [Vec<i32>; 3],
+        bq: [Vec<i64>; 3],
+        mode: SeqActMode,
+    ) -> Result<GruModel> {
+        ensure!(spec.input_dim > 0 && spec.hidden_dim > 0, "empty GRU dims");
+        for g in 0..3 {
+            ensure!(
+                wx[g].len() == spec.hidden_dim * spec.input_dim,
+                "wx[{g}] has {} weights, want {}",
+                wx[g].len(),
+                spec.hidden_dim * spec.input_dim
+            );
+            ensure!(
+                wh[g].len() == spec.hidden_dim * spec.hidden_dim,
+                "wh[{g}] has {} weights, want {}",
+                wh[g].len(),
+                spec.hidden_dim * spec.hidden_dim
+            );
+            ensure!(
+                bq[g].len() == spec.hidden_dim,
+                "bq[{g}] has {} biases, want {}",
+                bq[g].len(),
+                spec.hidden_dim
+            );
+        }
+        let folds = (0..3).map(|g| spec.fold(g)).collect();
+        let bank = FuncBank::new(folds, mode).context("build GRU gate units")?;
+        let (_, qmax) = qrange(spec.n_bits);
+        let m_blend_n = (spec.s_cand / (qmax as f64 * spec.s_h) * 65536.0).round() as i64;
+        let m_blend_h = (65536.0 / qmax as f64).round() as i64;
+        Ok(GruModel {
+            spec,
+            wx,
+            wh,
+            bq,
+            bank,
+            m_blend_n,
+            m_blend_h,
+        })
+    }
+
+    /// The same weights under a different activation mode (units are
+    /// rebuilt at construction, so swapping in place is not offered —
+    /// mirrors `qnn::Engine`).
+    pub fn with_mode(&self, mode: SeqActMode) -> Result<GruModel> {
+        GruModel::new(
+            self.spec.clone(),
+            self.wx.clone(),
+            self.wh.clone(),
+            self.bq.clone(),
+            mode,
+        )
+    }
+
+    /// The per-gate folded black boxes, in [`GRU_GATES`] order.
+    pub fn folds(&self) -> &[FoldedActivation] {
+        &self.bank.folds
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        self.bank.mode.name()
+    }
+
+    /// Naive oracle: scalar arithmetic, own buffers, one sample at a
+    /// time — the reference `forward_into` is held bit-for-bit equal
+    /// to.  `xs` is time-major `[t][b][input]`, `h0` is `[b][hidden]`;
+    /// returns the final hidden state `[b][hidden]`.  When `ranges` is
+    /// provided (3 slots, see [`empty_ranges`]) the observed per-gate
+    /// pre-activation extents are folded in.
+    pub fn forward_naive(
+        &self,
+        xs: &[i32],
+        t_len: usize,
+        batch: usize,
+        h0: &[i32],
+        mut ranges: Option<&mut [(i64, i64)]>,
+    ) -> Vec<i32> {
+        let (i_dim, h_dim) = (self.spec.input_dim, self.spec.hidden_dim);
+        assert_eq!(xs.len(), t_len * batch * i_dim, "xs is [t][b][input]");
+        assert_eq!(h0.len(), batch * h_dim, "h0 is [b][hidden]");
+        let (qmin, qmax) = qrange(self.spec.n_bits);
+        let mut h = h0.to_vec();
+        let mut z = vec![0i32; h_dim];
+        let mut r = vec![0i32; h_dim];
+        let mut n = vec![0i32; h_dim];
+        for t in 0..t_len {
+            for b in 0..batch {
+                let x = &xs[(t * batch + b) * i_dim..][..i_dim];
+                let h_row = &h[b * h_dim..][..h_dim];
+                for g in 0..2 {
+                    let dst = if g == 0 { &mut z } else { &mut r };
+                    for u in 0..h_dim {
+                        let mut macx = 0i32;
+                        for (i, &xv) in x.iter().enumerate() {
+                            macx += self.wx[g][u * i_dim + i] * xv;
+                        }
+                        let mut mach = 0i32;
+                        for (v, &hv) in h_row.iter().enumerate() {
+                            mach += self.wh[g][u * h_dim + v] * hv;
+                        }
+                        let q = pre(macx as i64 + mach as i64 + self.bq[g][u]);
+                        record(&mut ranges, g, q as i64);
+                        dst[u] = self.bank.eval_one(g, q);
+                    }
+                }
+                for u in 0..h_dim {
+                    let mut macxn = 0i32;
+                    for (i, &xv) in x.iter().enumerate() {
+                        macxn += self.wx[2][u * i_dim + i] * xv;
+                    }
+                    let mut machn = 0i32;
+                    for (v, &hv) in h_row.iter().enumerate() {
+                        machn += self.wh[2][u * h_dim + v] * hv;
+                    }
+                    let q = pre(macxn as i64 + r[u] as i64 * machn as i64 + self.bq[2][u]);
+                    record(&mut ranges, 2, q as i64);
+                    n[u] = self.bank.eval_one(2, q);
+                }
+                let h_row = &mut h[b * h_dim..][..h_dim];
+                for u in 0..h_dim {
+                    let acc = (qmax as i64 - z[u] as i64) * n[u] as i64 * self.m_blend_n
+                        + z[u] as i64 * h_row[u] as i64 * self.m_blend_h;
+                    h_row[u] = q16_round(acc).clamp(qmin as i64, qmax as i64) as i32;
+                }
+            }
+        }
+        h
+    }
+
+    /// Batched lockstep path: every (batch, hidden) pre-activation of a
+    /// gate is assembled into one contiguous plane and evaluated with a
+    /// single [`FuncBank::eval_plane`] call (the `GrauPlan::eval_into`
+    /// lane kernel in unit modes).  All buffers live in `scratch`;
+    /// steady-state passes perform no heap allocation.  Returns the
+    /// final hidden state `[b][hidden]`, borrowed from the arena.
+    pub fn forward_into<'s>(
+        &self,
+        xs: &[i32],
+        t_len: usize,
+        batch: usize,
+        h0: &[i32],
+        scratch: &'s mut GruScratch,
+    ) -> &'s [i32] {
+        let (i_dim, h_dim) = (self.spec.input_dim, self.spec.hidden_dim);
+        assert_eq!(xs.len(), t_len * batch * i_dim, "xs is [t][b][input]");
+        assert_eq!(h0.len(), batch * h_dim, "h0 is [b][hidden]");
+        let (qmin, qmax) = qrange(self.spec.n_bits);
+        let plane = batch * h_dim;
+        Scratch::ensure_i32_overwrite(&mut scratch.q, plane, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.z, plane, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.r, plane, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.n, plane, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.machn, plane, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.h, plane, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.h_next, plane, &mut scratch.allocs);
+        scratch.h.copy_from_slice(h0);
+
+        for t in 0..t_len {
+            let xt = &xs[t * batch * i_dim..][..batch * i_dim];
+            // z and r gates: fill the pre-activation plane, then one
+            // plane evaluation per gate
+            for g in 0..2 {
+                for b in 0..batch {
+                    let x = &xt[b * i_dim..][..i_dim];
+                    let h_row = &scratch.h[b * h_dim..][..h_dim];
+                    let q_row = &mut scratch.q[b * h_dim..][..h_dim];
+                    for u in 0..h_dim {
+                        let mut macx = 0i32;
+                        for (i, &xv) in x.iter().enumerate() {
+                            macx += self.wx[g][u * i_dim + i] * xv;
+                        }
+                        let mut mach = 0i32;
+                        for (v, &hv) in h_row.iter().enumerate() {
+                            mach += self.wh[g][u * h_dim + v] * hv;
+                        }
+                        q_row[u] = pre(macx as i64 + mach as i64 + self.bq[g][u]);
+                    }
+                }
+                let dst = if g == 0 { &mut scratch.z } else { &mut scratch.r };
+                self.bank.eval_plane(g, &scratch.q, dst);
+            }
+            // candidate: Whn·h plane first, then q = Wxn·x + r⊙machn + b
+            for b in 0..batch {
+                let x = &xt[b * i_dim..][..i_dim];
+                let h_row = &scratch.h[b * h_dim..][..h_dim];
+                let m_row = &mut scratch.machn[b * h_dim..][..h_dim];
+                for u in 0..h_dim {
+                    let mut machn = 0i32;
+                    for (v, &hv) in h_row.iter().enumerate() {
+                        machn += self.wh[2][u * h_dim + v] * hv;
+                    }
+                    m_row[u] = machn;
+                }
+                let r_row = &scratch.r[b * h_dim..][..h_dim];
+                let q_row = &mut scratch.q[b * h_dim..][..h_dim];
+                for u in 0..h_dim {
+                    let mut macxn = 0i32;
+                    for (i, &xv) in x.iter().enumerate() {
+                        macxn += self.wx[2][u * i_dim + i] * xv;
+                    }
+                    q_row[u] =
+                        pre(macxn as i64 + r_row[u] as i64 * m_row[u] as i64 + self.bq[2][u]);
+                }
+            }
+            self.bank.eval_plane(2, &scratch.q, &mut scratch.n);
+            // Q16 blend, requantized onto the s_h grid
+            for idx in 0..plane {
+                let acc = (qmax as i64 - scratch.z[idx] as i64)
+                    * scratch.n[idx] as i64
+                    * self.m_blend_n
+                    + scratch.z[idx] as i64 * scratch.h[idx] as i64 * self.m_blend_h;
+                scratch.h_next[idx] = q16_round(acc).clamp(qmin as i64, qmax as i64) as i32;
+            }
+            std::mem::swap(&mut scratch.h, &mut scratch.h_next);
+        }
+        &scratch.h
+    }
+
+    /// Observed per-gate pre-activation ranges over a calibration set
+    /// (the ranges `fit_seq_units` fits over), via the naive oracle.
+    pub fn calibrate(&self, xs: &[i32], t_len: usize, batch: usize, h0: &[i32]) -> Vec<(i64, i64)> {
+        let mut ranges = empty_ranges(3);
+        self.forward_naive(xs, t_len, batch, h0, Some(&mut ranges));
+        ranges
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer block
+// ---------------------------------------------------------------------------
+
+/// Static shape and scale parameters of one quantized transformer
+/// block (single-head attention + GELU FFN, residuals around both).
+#[derive(Clone, Debug)]
+pub struct TransformerSpec {
+    pub d_model: usize,
+    pub d_k: usize,
+    pub d_ff: usize,
+    pub n_bits: u8,
+    /// Q16 requant multiplier of the q/k projections
+    pub m_qk: i64,
+    /// Q16 requant multiplier of the v projection (targets the token
+    /// grid so the residual add is plain integer addition)
+    pub m_v: i64,
+    /// Q16 requant multiplier of the FFN down projection
+    pub m_down: i64,
+    /// softmax-exp pre-activation step: weight = exp(a_exp · δ)
+    pub a_exp: f64,
+    /// FFN pre-activation step: f_real = gelu(a_gelu · q)
+    pub a_gelu: f64,
+    /// FFN hidden (GELU output) scale
+    pub s_f: f64,
+}
+
+impl TransformerSpec {
+    /// Softmax weight scale: integer `qmax` == real weight 1.0
+    /// (`exp(0)` at the row max).
+    pub fn s_w(&self) -> f64 {
+        let (_, qmax) = qrange(self.n_bits);
+        1.0 / qmax as f64
+    }
+
+    /// The folded black box of fitted function `i` (0 = attn.exp,
+    /// 1 = ffn.gelu), in [`TRANSFORMER_FUNCS`] order.
+    pub fn fold(&self, i: usize) -> FoldedActivation {
+        match i {
+            0 => FoldedActivation::new(self.a_exp, 0.0, Activation::Exp, self.s_w(), self.n_bits),
+            1 => FoldedActivation::new(self.a_gelu, 0.0, Activation::Gelu, self.s_f, self.n_bits),
+            _ => panic!("transformer block has 2 fitted functions, asked for {i}"),
+        }
+    }
+}
+
+/// Scratch arena of [`TransformerModel::forward_into`] — one buffer
+/// per block intermediate, reused across sequences and calls.
+#[derive(Default)]
+pub struct TfScratch {
+    qp: Vec<i32>,
+    kp: Vec<i32>,
+    vp: Vec<i32>,
+    scores: Vec<i32>,
+    wts: Vec<i32>,
+    res1: Vec<i32>,
+    q1: Vec<i32>,
+    f1: Vec<i32>,
+    out: Vec<i32>,
+    allocs: u64,
+}
+
+impl TfScratch {
+    pub fn new() -> TfScratch {
+        TfScratch::default()
+    }
+
+    /// Buffer-growth events so far (constant once shapes are warm).
+    pub fn alloc_events(&self) -> u64 {
+        self.allocs
+    }
+}
+
+/// A quantized single-head transformer block with fitted exp and GELU
+/// units.
+pub struct TransformerModel {
+    pub spec: TransformerSpec,
+    /// `[d_k][d_model]` row-major
+    wq: Vec<i32>,
+    wk: Vec<i32>,
+    /// `[d_model][d_model]`
+    wv: Vec<i32>,
+    /// FFN up: `[d_ff][d_model]`, integer bias in pre-activation LSBs
+    w1: Vec<i32>,
+    b1: Vec<i64>,
+    /// FFN down: `[d_model][d_ff]`
+    w2: Vec<i32>,
+    bank: FuncBank,
+}
+
+impl TransformerModel {
+    pub fn new(
+        spec: TransformerSpec,
+        wq: Vec<i32>,
+        wk: Vec<i32>,
+        wv: Vec<i32>,
+        w1: Vec<i32>,
+        b1: Vec<i64>,
+        w2: Vec<i32>,
+        mode: SeqActMode,
+    ) -> Result<TransformerModel> {
+        ensure!(
+            spec.d_model > 0 && spec.d_k > 0 && spec.d_ff > 0,
+            "empty transformer dims"
+        );
+        let (d, dk, df) = (spec.d_model, spec.d_k, spec.d_ff);
+        ensure!(wq.len() == dk * d, "wq has {} weights, want {}", wq.len(), dk * d);
+        ensure!(wk.len() == dk * d, "wk has {} weights, want {}", wk.len(), dk * d);
+        ensure!(wv.len() == d * d, "wv has {} weights, want {}", wv.len(), d * d);
+        ensure!(w1.len() == df * d, "w1 has {} weights, want {}", w1.len(), df * d);
+        ensure!(b1.len() == df, "b1 has {} biases, want {df}", b1.len());
+        ensure!(w2.len() == d * df, "w2 has {} weights, want {}", w2.len(), d * df);
+        let folds = (0..2).map(|i| spec.fold(i)).collect();
+        let bank = FuncBank::new(folds, mode).context("build transformer units")?;
+        Ok(TransformerModel {
+            spec,
+            wq,
+            wk,
+            wv,
+            w1,
+            b1,
+            w2,
+            bank,
+        })
+    }
+
+    /// The same weights under a different activation mode.
+    pub fn with_mode(&self, mode: SeqActMode) -> Result<TransformerModel> {
+        TransformerModel::new(
+            self.spec.clone(),
+            self.wq.clone(),
+            self.wk.clone(),
+            self.wv.clone(),
+            self.w1.clone(),
+            self.b1.clone(),
+            self.w2.clone(),
+            mode,
+        )
+    }
+
+    /// The fitted-function black boxes, in [`TRANSFORMER_FUNCS`] order.
+    pub fn folds(&self) -> &[FoldedActivation] {
+        &self.bank.folds
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        self.bank.mode.name()
+    }
+
+    /// Naive oracle: per-sequence scalar arithmetic with own buffers.
+    /// `xs` is `[b][t][d_model]`; returns the block output in the same
+    /// layout.  `ranges` (2 slots) collects exp/gelu pre-activation
+    /// extents when calibrating.
+    pub fn forward_naive(
+        &self,
+        xs: &[i32],
+        batch: usize,
+        t_len: usize,
+        mut ranges: Option<&mut [(i64, i64)]>,
+    ) -> Vec<i32> {
+        let sp = &self.spec;
+        let (d, dk, df) = (sp.d_model, sp.d_k, sp.d_ff);
+        assert_eq!(xs.len(), batch * t_len * d, "xs is [b][t][d_model]");
+        let mut out = vec![0i32; xs.len()];
+        for b in 0..batch {
+            let x = &xs[b * t_len * d..][..t_len * d];
+            // projections, requantized onto the token grid
+            let mut qp = vec![0i32; t_len * dk];
+            let mut kp = vec![0i32; t_len * dk];
+            let mut vp = vec![0i32; t_len * d];
+            for t in 0..t_len {
+                for k in 0..dk {
+                    let mut mq = 0i32;
+                    let mut mk = 0i32;
+                    for c in 0..d {
+                        mq += self.wq[k * d + c] * x[t * d + c];
+                        mk += self.wk[k * d + c] * x[t * d + c];
+                    }
+                    qp[t * dk + k] = clamp_q(q16_round(mq as i64 * sp.m_qk), sp.n_bits);
+                    kp[t * dk + k] = clamp_q(q16_round(mk as i64 * sp.m_qk), sp.n_bits);
+                }
+                for c in 0..d {
+                    let mut mv = 0i32;
+                    for c2 in 0..d {
+                        mv += self.wv[c * d + c2] * x[t * d + c2];
+                    }
+                    vp[t * d + c] = clamp_q(q16_round(mv as i64 * sp.m_v), sp.n_bits);
+                }
+            }
+            // attention with integer max-subtraction softmax
+            let mut res1 = vec![0i32; t_len * d];
+            let mut scores = vec![0i32; t_len];
+            let mut wts = vec![0i32; t_len];
+            for t in 0..t_len {
+                for (u, slot) in scores.iter_mut().enumerate() {
+                    let mut s_acc = 0i32;
+                    for k in 0..dk {
+                        s_acc += qp[t * dk + k] * kp[u * dk + k];
+                    }
+                    *slot = s_acc;
+                }
+                let rowmax = *scores.iter().max().expect("t_len > 0");
+                let mut wsum = 0i64;
+                for u in 0..t_len {
+                    let delta = scores[u] - rowmax;
+                    record(&mut ranges, 0, delta as i64);
+                    wts[u] = self.bank.eval_one(0, delta);
+                    wsum += wts[u] as i64;
+                }
+                for c in 0..d {
+                    let mut acc = 0i64;
+                    for u in 0..t_len {
+                        acc += wts[u] as i64 * vp[u * d + c] as i64;
+                    }
+                    let attn = div_round(acc, wsum.max(1));
+                    res1[t * d + c] = clamp_q(x[t * d + c] as i64 + attn, sp.n_bits);
+                }
+            }
+            // GELU FFN with residual
+            let mut f1 = vec![0i32; df];
+            for t in 0..t_len {
+                for (fch, slot) in f1.iter_mut().enumerate() {
+                    let mut m = 0i32;
+                    for c in 0..d {
+                        m += self.w1[fch * d + c] * res1[t * d + c];
+                    }
+                    let q1 = pre(m as i64 + self.b1[fch]);
+                    record(&mut ranges, 1, q1 as i64);
+                    *slot = self.bank.eval_one(1, q1);
+                }
+                for c in 0..d {
+                    let mut m2 = 0i32;
+                    for (fch, &fv) in f1.iter().enumerate() {
+                        m2 += self.w2[c * df + fch] * fv;
+                    }
+                    let down = q16_round(m2 as i64 * sp.m_down);
+                    out[(b * t_len + t) * d + c] = clamp_q(res1[t * d + c] as i64 + down, sp.n_bits);
+                }
+            }
+        }
+        out
+    }
+
+    /// Batched scratch-arena path: the whole `T×T` score plane goes
+    /// through one exp plane evaluation per sequence and the `T×d_ff`
+    /// FFN pre-activations through one GELU plane evaluation, both via
+    /// [`FuncBank::eval_plane`] (the lane kernel in unit modes).
+    /// Steady-state passes perform no heap allocation.  Returns
+    /// `[b][t][d_model]`, borrowed from the arena.
+    pub fn forward_into<'s>(
+        &self,
+        xs: &[i32],
+        batch: usize,
+        t_len: usize,
+        scratch: &'s mut TfScratch,
+    ) -> &'s [i32] {
+        let sp = &self.spec;
+        let (d, dk, df) = (sp.d_model, sp.d_k, sp.d_ff);
+        assert_eq!(xs.len(), batch * t_len * d, "xs is [b][t][d_model]");
+        Scratch::ensure_i32_overwrite(&mut scratch.qp, t_len * dk, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.kp, t_len * dk, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.vp, t_len * d, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.scores, t_len * t_len, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.wts, t_len * t_len, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.res1, t_len * d, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.q1, t_len * df, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.f1, t_len * df, &mut scratch.allocs);
+        Scratch::ensure_i32_overwrite(&mut scratch.out, batch * t_len * d, &mut scratch.allocs);
+
+        for b in 0..batch {
+            let x = &xs[b * t_len * d..][..t_len * d];
+            for t in 0..t_len {
+                for k in 0..dk {
+                    let mut mq = 0i32;
+                    let mut mk = 0i32;
+                    for c in 0..d {
+                        mq += self.wq[k * d + c] * x[t * d + c];
+                        mk += self.wk[k * d + c] * x[t * d + c];
+                    }
+                    scratch.qp[t * dk + k] = clamp_q(q16_round(mq as i64 * sp.m_qk), sp.n_bits);
+                    scratch.kp[t * dk + k] = clamp_q(q16_round(mk as i64 * sp.m_qk), sp.n_bits);
+                }
+                for c in 0..d {
+                    let mut mv = 0i32;
+                    for c2 in 0..d {
+                        mv += self.wv[c * d + c2] * x[t * d + c2];
+                    }
+                    scratch.vp[t * d + c] = clamp_q(q16_round(mv as i64 * sp.m_v), sp.n_bits);
+                }
+            }
+            // full score plane, row-max subtracted in place
+            for t in 0..t_len {
+                let row = &mut scratch.scores[t * t_len..][..t_len];
+                for (u, slot) in row.iter_mut().enumerate() {
+                    let mut s_acc = 0i32;
+                    for k in 0..dk {
+                        s_acc += scratch.qp[t * dk + k] * scratch.kp[u * dk + k];
+                    }
+                    *slot = s_acc;
+                }
+                let rowmax = *row.iter().max().expect("t_len > 0");
+                for slot in row.iter_mut() {
+                    *slot -= rowmax;
+                }
+            }
+            // one exp plane evaluation covers every attention weight
+            self.bank.eval_plane(0, &scratch.scores, &mut scratch.wts);
+            for t in 0..t_len {
+                let w_row = &scratch.wts[t * t_len..][..t_len];
+                let wsum: i64 = w_row.iter().map(|&w| w as i64).sum();
+                let denom = wsum.max(1);
+                for c in 0..d {
+                    let mut acc = 0i64;
+                    for (u, &w) in w_row.iter().enumerate() {
+                        acc += w as i64 * scratch.vp[u * d + c] as i64;
+                    }
+                    let attn = div_round(acc, denom);
+                    scratch.res1[t * d + c] = clamp_q(x[t * d + c] as i64 + attn, sp.n_bits);
+                }
+            }
+            // FFN pre-activation plane, one GELU plane evaluation
+            for t in 0..t_len {
+                let q_row = &mut scratch.q1[t * df..][..df];
+                for (fch, slot) in q_row.iter_mut().enumerate() {
+                    let mut m = 0i32;
+                    for c in 0..d {
+                        m += self.w1[fch * d + c] * scratch.res1[t * d + c];
+                    }
+                    *slot = pre(m as i64 + self.b1[fch]);
+                }
+            }
+            self.bank.eval_plane(1, &scratch.q1, &mut scratch.f1);
+            for t in 0..t_len {
+                let f_row = &scratch.f1[t * df..][..df];
+                for c in 0..d {
+                    let mut m2 = 0i32;
+                    for (fch, &fv) in f_row.iter().enumerate() {
+                        m2 += self.w2[c * df + fch] * fv;
+                    }
+                    let down = q16_round(m2 as i64 * sp.m_down);
+                    scratch.out[(b * t_len + t) * d + c] =
+                        clamp_q(scratch.res1[t * d + c] as i64 + down, sp.n_bits);
+                }
+            }
+        }
+        &scratch.out
+    }
+
+    /// Observed exp/gelu pre-activation ranges over a calibration set.
+    pub fn calibrate(&self, xs: &[i32], batch: usize, t_len: usize) -> Vec<(i64, i64)> {
+        let mut ranges = empty_ranges(2);
+        self.forward_naive(xs, batch, t_len, Some(&mut ranges));
+        ranges
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fitting glue
+// ---------------------------------------------------------------------------
+
+/// Widen a calibrated range into something fittable: never-observed
+/// functions get a default window, degenerate single-point ranges are
+/// widened, and the result is canonicalized through [`bucket_range`]
+/// so equal workloads share `FitCache` entries (the `hw::dse` idiom).
+pub fn fit_range(lo: i64, hi: i64) -> (i64, i64) {
+    let (lo, hi) = if lo > hi {
+        (-1000, 1000)
+    } else if lo == hi {
+        (lo - 500, hi + 500)
+    } else {
+        (lo, hi)
+    };
+    bucket_range(lo, hi)
+}
+
+/// Fit every function of a sequence model over its calibrated range,
+/// through the memoized [`FitCache`] (so repeated table/bench runs and
+/// equal gates pay each fit once).
+pub fn fit_seq_units(
+    folds: &[FoldedActivation],
+    ranges: &[(i64, i64)],
+    opts: FitOptions,
+    cache: &FitCache,
+) -> Vec<Arc<FitResult>> {
+    assert_eq!(folds.len(), ranges.len());
+    folds
+        .iter()
+        .zip(ranges)
+        .map(|(f, &(lo, hi))| {
+            let (lo, hi) = fit_range(lo, hi);
+            cache.fit_folded(f, lo, hi, opts)
+        })
+        .collect()
+}
+
+/// Float-slope PWLF mode from fitted results.
+pub fn pwlf_mode(fits: &[Arc<FitResult>]) -> SeqActMode {
+    SeqActMode::Pwlf(fits.iter().map(|f| f.pwlf.clone()).collect())
+}
+
+/// Register-file (hardware) mode from fitted results.
+pub fn grau_mode(fits: &[Arc<FitResult>], kind: ApproxKind) -> SeqActMode {
+    SeqActMode::Grau(fits.iter().map(|f| f.registers(kind).clone()).collect())
+}
+
+/// Descriptor mode from fitted results — each function becomes a
+/// provenance-carrying [`UnitDescriptor`] (`names` in fit order, e.g.
+/// [`GRU_GATES`]), the artifact the service and descriptor banks load.
+pub fn descriptor_mode(fits: &[Arc<FitResult>], kind: ApproxKind, names: &[&str]) -> SeqActMode {
+    assert_eq!(fits.len(), names.len());
+    SeqActMode::Descriptors(
+        fits.iter()
+            .zip(names)
+            .map(|(f, name)| f.descriptor(kind, name))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::synth;
+
+    #[test]
+    fn q16_round_is_round_half_up() {
+        assert_eq!(q16_round(0), 0);
+        assert_eq!(q16_round(65536), 1);
+        assert_eq!(q16_round(32768), 1); // half rounds up
+        assert_eq!(q16_round(32767), 0);
+        assert_eq!(q16_round(-32768), 0); // -0.5 rounds up to 0
+        assert_eq!(q16_round(-32769), -1);
+        assert_eq!(q16_round(-65536), -1);
+    }
+
+    #[test]
+    fn div_round_is_half_away_from_zero() {
+        assert_eq!(div_round(7, 2), 4);
+        assert_eq!(div_round(-7, 2), -4);
+        assert_eq!(div_round(6, 4), 2);
+        assert_eq!(div_round(-6, 4), -2);
+        assert_eq!(div_round(5, 5), 1);
+        assert_eq!(div_round(0, 9), 0);
+    }
+
+    #[test]
+    fn bank_rejects_mismatched_mode_arity() {
+        let gru = synth::gru_seq(4, 4, 1);
+        // 2 curves for 3 gates must fail
+        let bad = SeqActMode::Pwlf(vec![]);
+        assert!(gru.with_mode(bad).is_err());
+        let bad = SeqActMode::Grau(vec![]);
+        assert!(gru.with_mode(bad).is_err());
+    }
+
+    #[test]
+    fn gru_outputs_stay_on_the_grid_and_are_deterministic() {
+        let gru = synth::gru_seq(4, 6, 7);
+        let (t_len, batch) = (5, 3);
+        let xs = synth::seq_inputs(t_len * batch * 4, 8, 11);
+        let h0 = synth::seq_inputs(batch * 6, 8, 12);
+        let a = gru.forward_naive(&xs, t_len, batch, &h0, None);
+        let b = gru.forward_naive(&xs, t_len, batch, &h0, None);
+        assert_eq!(a, b);
+        let (qmin, qmax) = qrange(8);
+        assert!(a.iter().all(|&v| v >= qmin && v <= qmax));
+        // the state must actually move
+        assert_ne!(a, h0);
+    }
+
+    #[test]
+    fn transformer_attention_of_identical_tokens_is_near_identity() {
+        // with every token equal, softmax weights are uniform and the
+        // attention readout equals the (requantized) v projection, so
+        // out = clamp(res1 + ffn) stays finite and deterministic
+        let tf = synth::transformer_seq(8, 4, 12, 3);
+        let token = synth::seq_inputs(8, 8, 5);
+        let t_len = 4;
+        let mut xs = Vec::new();
+        for _ in 0..t_len {
+            xs.extend_from_slice(&token);
+        }
+        let out = tf.forward_naive(&xs, 1, t_len, None);
+        // every row attends identically -> identical outputs per token
+        for t in 1..t_len {
+            assert_eq!(out[..8], out[t * 8..][..8], "token {t}");
+        }
+    }
+
+    #[test]
+    fn calibrated_exp_range_is_one_sided() {
+        let tf = synth::transformer_seq(8, 4, 12, 9);
+        let xs = synth::seq_inputs(2 * 5 * 8, 8, 6);
+        let ranges = tf.calibrate(&xs, 2, 5);
+        assert_eq!(ranges.len(), 2);
+        // max-subtraction guarantees delta <= 0 with 0 attained (row max)
+        assert!(ranges[0].0 <= 0);
+        assert_eq!(ranges[0].1, 0);
+        // gelu range was actually observed
+        assert!(ranges[1].0 <= ranges[1].1);
+    }
+
+    #[test]
+    fn fit_range_fallbacks() {
+        // never-observed: default window
+        let (lo, hi) = fit_range(i64::MAX, i64::MIN);
+        assert!(lo <= -1000 && hi >= 1000);
+        // degenerate: widened
+        let (lo, hi) = fit_range(42, 42);
+        assert!(lo < 42 && hi > 42);
+        // ordinary ranges are contained
+        let (lo, hi) = fit_range(-300, 900);
+        assert!(lo <= -300 && hi >= 900);
+    }
+}

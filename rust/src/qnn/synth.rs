@@ -5,7 +5,9 @@
 //! bench's bit-exactness gate and the parity property tests exercise
 //! the same model shapes by construction.
 
+use crate::act::qrange;
 use crate::qnn::graph::ModelGraph;
+use crate::qnn::seq::{GruModel, GruSpec, SeqActMode, TransformerModel, TransformerSpec};
 use crate::qnn::weights::{ExportArray, ExportBundle};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -89,6 +91,172 @@ pub fn gap_qnn(s: usize, c0: usize, c1: usize, seed: u64) -> (ModelGraph, Export
     (graph, bundle)
 }
 
+fn rand_i32(rng: &mut Rng, n: usize, lo: i64, hi: i64) -> Vec<i32> {
+    (0..n).map(|_| rng.range_i64(lo, hi) as i32).collect()
+}
+
+fn rand_bias(rng: &mut Rng, n: usize) -> Vec<i64> {
+    (0..n).map(|_| rng.range_i64(-2048, 2048)).collect()
+}
+
+/// Seeded-random quantized activations on the `n_bits` grid — the
+/// input/initial-state generator for the sequence workloads.
+pub fn seq_inputs(n: usize, n_bits: u8, seed: u64) -> Vec<i32> {
+    let (qmin, qmax) = qrange(n_bits);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| rng.range_i64(qmin as i64, qmax as i64 + 1) as i32)
+        .collect()
+}
+
+/// Deterministic quantized GRU cell in `Exact` mode (8-bit grid).
+/// Gate pre-activation steps are sized so the folded sigmoids/tanh see
+/// a few units of real input at the observed MAC extents — the same
+/// "scales fixed, weights seeded-random" convention as the CNN
+/// factories above.
+pub fn gru_seq(input_dim: usize, hidden_dim: usize, seed: u64) -> GruModel {
+    let (_, qmax) = qrange(8);
+    let mut rng = Rng::new(seed);
+    let wx = [
+        rand_i32(&mut rng, hidden_dim * input_dim, -32, 32),
+        rand_i32(&mut rng, hidden_dim * input_dim, -32, 32),
+        rand_i32(&mut rng, hidden_dim * input_dim, -32, 32),
+    ];
+    let wh = [
+        rand_i32(&mut rng, hidden_dim * hidden_dim, -32, 32),
+        rand_i32(&mut rng, hidden_dim * hidden_dim, -32, 32),
+        rand_i32(&mut rng, hidden_dim * hidden_dim, -32, 32),
+    ];
+    let bq = [
+        rand_bias(&mut rng, hidden_dim),
+        rand_bias(&mut rng, hidden_dim),
+        rand_bias(&mut rng, hidden_dim),
+    ];
+    // worst-case |MAC| of the z/r gates: every operand at its rail
+    let span = (input_dim + hidden_dim) as f64 * 31.0 * 127.0 + 2048.0;
+    let a_zr = 32.0 / span;
+    // the candidate's hidden term carries the extra r factor (≤ qmax)
+    let span_n =
+        input_dim as f64 * 31.0 * 127.0 + 127.0 * hidden_dim as f64 * 31.0 * 127.0 + 2048.0;
+    let a_n = 48.0 / span_n;
+    let spec = GruSpec {
+        input_dim,
+        hidden_dim,
+        n_bits: 8,
+        a_gate: [a_zr, a_zr, a_n],
+        s_cand: 1.0 / qmax as f64,
+        s_h: 1.0 / qmax as f64,
+    };
+    GruModel::new(spec, wx, wh, bq, SeqActMode::Exact).expect("synth GRU")
+}
+
+/// Deterministic quantized single-head transformer block in `Exact`
+/// mode (8-bit grid): Q16 requant multipliers sized from the expected
+/// MAC spread so projections, scores, and the FFN all stay on-grid.
+pub fn transformer_seq(d_model: usize, d_k: usize, d_ff: usize, seed: u64) -> TransformerModel {
+    let mut rng = Rng::new(seed);
+    let wq = rand_i32(&mut rng, d_k * d_model, -32, 32);
+    let wk = rand_i32(&mut rng, d_k * d_model, -32, 32);
+    let wv = rand_i32(&mut rng, d_model * d_model, -32, 32);
+    let w1 = rand_i32(&mut rng, d_ff * d_model, -32, 32);
+    let b1 = rand_bias(&mut rng, d_ff);
+    let w2 = rand_i32(&mut rng, d_model * d_ff, -32, 32);
+    // expected MAC spread: uniform[-32,32) weights (σ≈18.5) times
+    // full-rail activations (σ≈73) accumulated over the fan-in
+    let mac_std = (d_model as f64).sqrt() * 18.5 * 73.0;
+    let m_qk = ((48.0 / mac_std) * 65536.0).round().max(1.0) as i64;
+    let m_v = m_qk;
+    let score_std = (d_k as f64).sqrt() * 48.0 * 48.0;
+    let a_exp = 2.0 / score_std;
+    let a_gelu = 2.0 / mac_std;
+    let s_f = 4.0 / 127.0;
+    let mac2_std = (d_ff as f64).sqrt() * 18.5 * 73.0;
+    let m_down = ((32.0 / mac2_std) * 65536.0).round().max(1.0) as i64;
+    let spec = TransformerSpec {
+        d_model,
+        d_k,
+        d_ff,
+        n_bits: 8,
+        m_qk,
+        m_v,
+        m_down,
+        a_exp,
+        a_gelu,
+        s_f,
+    };
+    TransformerModel::new(spec, wq, wk, wv, w1, b1, w2, SeqActMode::Exact)
+        .expect("synth transformer")
+}
+
+/// Per-gate *proxy graph* for the DSE explorer: the explorer searches
+/// `qnn::graph` models, so this exposes the GRU's gate nonlinearities
+/// (sigmoid, sigmoid, tanh) as three stacked linear activation sites
+/// over a flattened input — same fitted functions, per-site searchable
+/// precision.  `grau explore --model gru` builds this.
+pub fn gru_qnn(s: usize, hidden: usize, seed: u64) -> (ModelGraph, ExportBundle) {
+    let manifest = format!(
+        r#"{{"model": {{"name": "synth_gru", "n_classes": 10, "ops": [
+        {{"kind":"input","name":"in","shape":[{s},{s},3]}},
+        {{"kind":"flatten","name":"fl","lhs":-1}},
+        {{"kind":"linear","name":"zgate","out_ch":{hidden},"w_bits":8,"a_bits":8,"act":"sigmoid","bn":true,"lhs":-1}},
+        {{"kind":"linear","name":"rgate","out_ch":{hidden},"w_bits":8,"a_bits":8,"act":"sigmoid","bn":true,"lhs":-1}},
+        {{"kind":"linear","name":"cand","out_ch":{hidden},"w_bits":8,"a_bits":8,"act":"tanh","bn":true,"lhs":-1}},
+        {{"kind":"linear","name":"head","out_ch":10,"w_bits":8,"a_bits":8,"act":"none","bn":false,"lhs":-1}}
+    ]}}}}"#
+    );
+    let graph = ModelGraph::from_manifest(&Json::parse(&manifest).expect("synth manifest"))
+        .expect("synth graph");
+    let mut rng = Rng::new(seed);
+    let mut bundle = ExportBundle::default();
+    put(&mut bundle, "in_step", vec![], vec![0.05]);
+    let flat = s * s * 3;
+    for (name, cin, cout) in [("zgate", flat, hidden), ("rgate", hidden, hidden), ("cand", hidden, hidden)] {
+        put(&mut bundle, &format!("{name}/w_int"), vec![cin, cout], rand_w(&mut rng, cin * cout));
+        put(&mut bundle, &format!("{name}/a"), vec![cout], vec![0.002; cout]);
+        let b: Vec<f32> = (0..cout).map(|_| rng.normal_f32() * 0.1).collect();
+        put(&mut bundle, &format!("{name}/b"), vec![cout], b);
+        put(&mut bundle, &format!("{name}/s_out"), vec![], vec![0.05]);
+    }
+    put(&mut bundle, "head/w_int", vec![hidden, 10], rand_w(&mut rng, hidden * 10));
+    put(&mut bundle, "head/a", vec![10], vec![0.01; 10]);
+    put(&mut bundle, "head/b", vec![10], vec![0.0; 10]);
+    put(&mut bundle, "head/s_out", vec![], vec![1.0]);
+    (graph, bundle)
+}
+
+/// Transformer-FFN proxy graph for the explorer: GELU up/down
+/// projections as linear activation sites.  `grau explore --model
+/// transformer` builds this.
+pub fn transformer_qnn(s: usize, d_ff: usize, seed: u64) -> (ModelGraph, ExportBundle) {
+    let manifest = format!(
+        r#"{{"model": {{"name": "synth_transformer", "n_classes": 10, "ops": [
+        {{"kind":"input","name":"in","shape":[{s},{s},3]}},
+        {{"kind":"flatten","name":"fl","lhs":-1}},
+        {{"kind":"linear","name":"ffn_up","out_ch":{d_ff},"w_bits":8,"a_bits":8,"act":"gelu","bn":true,"lhs":-1}},
+        {{"kind":"linear","name":"ffn_down","out_ch":32,"w_bits":8,"a_bits":8,"act":"gelu","bn":true,"lhs":-1}},
+        {{"kind":"linear","name":"head","out_ch":10,"w_bits":8,"a_bits":8,"act":"none","bn":false,"lhs":-1}}
+    ]}}}}"#
+    );
+    let graph = ModelGraph::from_manifest(&Json::parse(&manifest).expect("synth manifest"))
+        .expect("synth graph");
+    let mut rng = Rng::new(seed);
+    let mut bundle = ExportBundle::default();
+    put(&mut bundle, "in_step", vec![], vec![0.05]);
+    let flat = s * s * 3;
+    for (name, cin, cout) in [("ffn_up", flat, d_ff), ("ffn_down", d_ff, 32)] {
+        put(&mut bundle, &format!("{name}/w_int"), vec![cin, cout], rand_w(&mut rng, cin * cout));
+        put(&mut bundle, &format!("{name}/a"), vec![cout], vec![0.002; cout]);
+        let b: Vec<f32> = (0..cout).map(|_| rng.normal_f32() * 0.1).collect();
+        put(&mut bundle, &format!("{name}/b"), vec![cout], b);
+        put(&mut bundle, &format!("{name}/s_out"), vec![], vec![0.05]);
+    }
+    put(&mut bundle, "head/w_int", vec![32, 10], rand_w(&mut rng, 32 * 10));
+    put(&mut bundle, "head/a", vec![10], vec![0.01; 10]);
+    put(&mut bundle, "head/b", vec![10], vec![0.0; 10]);
+    put(&mut bundle, "head/s_out", vec![], vec![1.0]);
+    (graph, bundle)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +279,38 @@ mod tests {
         assert_eq!(
             a.arrays.get("b0/w_int").unwrap().data,
             b.arrays.get("b0/w_int").unwrap().data
+        );
+    }
+
+    #[test]
+    fn seq_proxy_graphs_are_valid() {
+        let (g, b) = gru_qnn(5, 8, 3);
+        validate_bundle(&g, &b).unwrap();
+        assert_eq!(g.activation_sites().len(), 3); // zgate, rgate, cand
+        let (g, b) = transformer_qnn(5, 12, 4);
+        validate_bundle(&g, &b).unwrap();
+        assert_eq!(g.activation_sites().len(), 2); // ffn_up, ffn_down
+    }
+
+    #[test]
+    fn seq_factories_are_deterministic_and_on_grid() {
+        let xs = seq_inputs(64, 8, 5);
+        assert_eq!(xs, seq_inputs(64, 8, 5));
+        assert!(xs.iter().all(|&v| (-128..=127).contains(&v)));
+        let g1 = gru_seq(4, 6, 2);
+        let g2 = gru_seq(4, 6, 2);
+        let h0 = seq_inputs(2 * 6, 8, 7);
+        let x = seq_inputs(3 * 2 * 4, 8, 8);
+        assert_eq!(
+            g1.forward_naive(&x, 3, 2, &h0, None),
+            g2.forward_naive(&x, 3, 2, &h0, None)
+        );
+        let t1 = transformer_seq(8, 4, 12, 2);
+        let t2 = transformer_seq(8, 4, 12, 2);
+        let tx = seq_inputs(2 * 3 * 8, 8, 9);
+        assert_eq!(
+            t1.forward_naive(&tx, 2, 3, None),
+            t2.forward_naive(&tx, 2, 3, None)
         );
     }
 }

@@ -1,0 +1,199 @@
+//! Bit-exactness of the `qnn::seq` batched plane paths against their
+//! float-free naive oracles, across the whole activation-mode axis.
+//!
+//! Properties (hand-rolled generators, deterministic seeds — proptest
+//! is not vendored offline):
+//!
+//! * GRU `forward_into` equals `forward_naive` bit-for-bit over
+//!   randomized (input_dim, hidden_dim, T, batch, seed) in Exact,
+//!   Pwlf, and both Grau unit families;
+//! * transformer `forward_into` equals `forward_naive` the same way
+//!   over randomized (d_model, d_k, d_ff, T, batch, seed);
+//! * per-gate descriptors round-trip fit → `DescriptorBank` JSON file
+//!   → rebuilt units with identical outputs to the in-process register
+//!   files, provenance intact;
+//! * the scratch arenas perform zero allocation in steady state.
+
+use grau::api::DescriptorBank;
+use grau::fit::pipeline::{FitCache, FitOptions};
+use grau::fit::ApproxKind;
+use grau::qnn::seq::{self, GruScratch, SeqActMode, TfScratch, GRU_GATES, TRANSFORMER_FUNCS};
+use grau::qnn::synth;
+use grau::util::rng::Rng;
+
+fn fit_opts() -> FitOptions {
+    FitOptions {
+        samples: 250,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_gru_modes_match_naive() {
+    let mut rng = Rng::new(0x5E901);
+    let cache = FitCache::new();
+    for case in 0..6u64 {
+        let i_dim = rng.range_usize(1, 6);
+        let h_dim = rng.range_usize(1, 8);
+        let t_len = rng.range_usize(1, 6);
+        let batch = rng.range_usize(1, 4);
+        let exact = synth::gru_seq(i_dim, h_dim, 100 + case);
+        let xs = synth::seq_inputs(t_len * batch * i_dim, 8, 200 + case);
+        let h0 = synth::seq_inputs(batch * h_dim, 8, 300 + case);
+        let ranges = exact.calibrate(&xs, t_len, batch, &h0);
+        let fits = seq::fit_seq_units(exact.folds(), &ranges, fit_opts(), &cache);
+        let modes = [
+            SeqActMode::Exact,
+            seq::pwlf_mode(&fits),
+            seq::grau_mode(&fits, ApproxKind::Pot),
+            seq::grau_mode(&fits, ApproxKind::Apot),
+        ];
+        for mode in modes {
+            let name = mode.name();
+            let m = exact.with_mode(mode).unwrap();
+            let naive = m.forward_naive(&xs, t_len, batch, &h0, None);
+            let mut scratch = GruScratch::new();
+            let got = m.forward_into(&xs, t_len, batch, &h0, &mut scratch);
+            assert_eq!(
+                got,
+                &naive[..],
+                "case {case} mode {name}: i={i_dim} h={h_dim} t={t_len} b={batch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_transformer_modes_match_naive() {
+    let mut rng = Rng::new(0x7F203);
+    let cache = FitCache::new();
+    for case in 0..6u64 {
+        let d_model = rng.range_usize(2, 10);
+        let d_k = rng.range_usize(1, 5);
+        let d_ff = rng.range_usize(2, 12);
+        let t_len = rng.range_usize(1, 6);
+        let batch = rng.range_usize(1, 4);
+        let exact = synth::transformer_seq(d_model, d_k, d_ff, 400 + case);
+        let xs = synth::seq_inputs(batch * t_len * d_model, 8, 500 + case);
+        let ranges = exact.calibrate(&xs, batch, t_len);
+        let fits = seq::fit_seq_units(exact.folds(), &ranges, fit_opts(), &cache);
+        let modes = [
+            SeqActMode::Exact,
+            seq::pwlf_mode(&fits),
+            seq::grau_mode(&fits, ApproxKind::Pot),
+            seq::grau_mode(&fits, ApproxKind::Apot),
+        ];
+        for mode in modes {
+            let name = mode.name();
+            let m = exact.with_mode(mode).unwrap();
+            let naive = m.forward_naive(&xs, batch, t_len, None);
+            let mut scratch = TfScratch::new();
+            let got = m.forward_into(&xs, batch, t_len, &mut scratch);
+            assert_eq!(
+                got,
+                &naive[..],
+                "case {case} mode {name}: d={d_model} dk={d_k} dff={d_ff} t={t_len} b={batch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn per_gate_descriptors_round_trip_through_bank_bit_exactly() {
+    let cache = FitCache::new();
+
+    // GRU: fit -> descriptors -> JSON bank on disk -> rebuilt units
+    let gru = synth::gru_seq(4, 6, 21);
+    let (t_len, batch) = (5, 2);
+    let xs = synth::seq_inputs(t_len * batch * 4, 8, 22);
+    let h0 = synth::seq_inputs(batch * 6, 8, 23);
+    let ranges = gru.calibrate(&xs, t_len, batch, &h0);
+    let fits = seq::fit_seq_units(gru.folds(), &ranges, fit_opts(), &cache);
+    let direct = gru
+        .with_mode(seq::grau_mode(&fits, ApproxKind::Apot))
+        .unwrap()
+        .forward_naive(&xs, t_len, batch, &h0, None);
+    let mut bank = DescriptorBank::new("seq-gru");
+    match seq::descriptor_mode(&fits, ApproxKind::Apot, &GRU_GATES) {
+        SeqActMode::Descriptors(ds) => {
+            for (name, d) in GRU_GATES.iter().zip(ds) {
+                bank.insert(*name, d);
+            }
+        }
+        _ => unreachable!(),
+    }
+    let path = std::env::temp_dir().join("grau_seq_gru.units.json");
+    bank.save(&path).unwrap();
+    let loaded = DescriptorBank::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    for name in GRU_GATES {
+        let d = loaded.get(name).unwrap();
+        assert_eq!(d.provenance.as_ref().unwrap().function, name);
+        assert_eq!(d.provenance.as_ref().unwrap().source, "fit::pipeline");
+    }
+    let ds: Vec<_> = GRU_GATES.iter().map(|n| loaded.get(n).unwrap().clone()).collect();
+    let via_bank = gru
+        .with_mode(SeqActMode::Descriptors(ds))
+        .unwrap()
+        .forward_naive(&xs, t_len, batch, &h0, None);
+    assert_eq!(via_bank, direct, "gru bank round trip diverged");
+
+    // transformer: same path for exp + gelu
+    let tf = synth::transformer_seq(8, 4, 12, 25);
+    let (tb, tt) = (2, 4);
+    let txs = synth::seq_inputs(tb * tt * 8, 8, 26);
+    let tranges = tf.calibrate(&txs, tb, tt);
+    let tfits = seq::fit_seq_units(tf.folds(), &tranges, fit_opts(), &cache);
+    let tdirect = tf
+        .with_mode(seq::grau_mode(&tfits, ApproxKind::Apot))
+        .unwrap()
+        .forward_naive(&txs, tb, tt, None);
+    let mut tbank = DescriptorBank::new("seq-transformer");
+    match seq::descriptor_mode(&tfits, ApproxKind::Apot, &TRANSFORMER_FUNCS) {
+        SeqActMode::Descriptors(ds) => {
+            for (name, d) in TRANSFORMER_FUNCS.iter().zip(ds) {
+                tbank.insert(*name, d);
+            }
+        }
+        _ => unreachable!(),
+    }
+    let tpath = std::env::temp_dir().join("grau_seq_transformer.units.json");
+    tbank.save(&tpath).unwrap();
+    let tloaded = DescriptorBank::load(&tpath).unwrap();
+    std::fs::remove_file(&tpath).ok();
+    let tds: Vec<_> = TRANSFORMER_FUNCS.iter().map(|n| tloaded.get(n).unwrap().clone()).collect();
+    let via_tbank = tf
+        .with_mode(SeqActMode::Descriptors(tds))
+        .unwrap()
+        .forward_naive(&txs, tb, tt, None);
+    assert_eq!(via_tbank, tdirect, "transformer bank round trip diverged");
+}
+
+#[test]
+fn seq_scratch_is_zero_alloc_in_steady_state() {
+    let (t_len, batch) = (4, 3);
+    let gru = synth::gru_seq(5, 7, 9);
+    let xs = synth::seq_inputs(t_len * batch * 5, 8, 10);
+    let h0 = synth::seq_inputs(batch * 7, 8, 11);
+    let mut scratch = GruScratch::new();
+    let warm_out = gru.forward_into(&xs, t_len, batch, &h0, &mut scratch).to_vec();
+    let warm = scratch.alloc_events();
+    assert!(warm > 0, "gru scratch never grew — alloc accounting broken");
+    for _ in 0..10 {
+        let out = gru.forward_into(&xs, t_len, batch, &h0, &mut scratch);
+        assert_eq!(out, &warm_out[..]);
+    }
+    assert_eq!(scratch.alloc_events(), warm, "gru steady-state pass allocated");
+
+    let tf = synth::transformer_seq(8, 4, 12, 13);
+    let txs = synth::seq_inputs(batch * t_len * 8, 8, 14);
+    let mut tscratch = TfScratch::new();
+    let twarm_out = tf.forward_into(&txs, batch, t_len, &mut tscratch).to_vec();
+    let twarm = tscratch.alloc_events();
+    assert!(twarm > 0, "tf scratch never grew — alloc accounting broken");
+    for _ in 0..10 {
+        let out = tf.forward_into(&txs, batch, t_len, &mut tscratch);
+        assert_eq!(out, &twarm_out[..]);
+    }
+    assert_eq!(tscratch.alloc_events(), twarm, "transformer steady-state pass allocated");
+}
